@@ -1,0 +1,75 @@
+//! Model comparison: the paper's core experiment as a library call —
+//! run the two-pass convolution under all three execution models and
+//! print per-model timing plus the empty-task overhead split (the
+//! paper's Table 2 methodology), then the simulated Xeon Phi rendition
+//! next to it.
+//!
+//! Run: `cargo run --offline --release --example model_comparison -- [--sizes 288,576]`
+
+use anyhow::Result;
+
+use phi_conv::config::{standard_cli, RunConfig};
+use phi_conv::conv::{Algorithm, Variant};
+use phi_conv::harness;
+use phi_conv::image::synth_image;
+use phi_conv::metrics::{time_reps, Table};
+use phi_conv::models::{
+    convolve_parallel, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+
+fn main() -> Result<()> {
+    let cli = standard_cli("model_comparison", "three execution models head-to-head")
+        .parse(std::env::args().skip(1))?;
+    let cfg = RunConfig::resolve(&cli)?;
+    let k = phi_conv::image::gaussian_kernel(cfg.kernel_width, cfg.sigma);
+
+    let openmp = OpenMpModel::new(cfg.threads);
+    let opencl = OpenClModel::new(cfg.threads, 16);
+    let gprm = GprmModel::new(cfg.threads, cfg.cutoff);
+    let models: [&dyn ExecutionModel; 3] = [&openmp, &opencl, &gprm];
+
+    let mut t = Table::new(
+        format!("measured on host ({} threads, cutoff {})", cfg.threads, cfg.cutoff),
+        &["Image Size", "Model", "two-pass SIMD ms", "empty-dispatch ms", "compute ms"],
+    );
+    for &size in &cfg.sizes {
+        let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+        for m in models {
+            let total = time_reps(
+                || {
+                    convolve_parallel(m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+                        .unwrap();
+                },
+                cfg.warmup,
+                cfg.reps,
+            )
+            .median();
+            // paper Table 2 methodology: measure empty dispatches of the
+            // same shape, subtract
+            let dispatches = 2 * cfg.planes;
+            let overhead = m.overhead_probe(size, 10).median() * dispatches as f64;
+            t.row(vec![
+                format!("{size}x{size}"),
+                m.name().to_string(),
+                format!("{total:.2}"),
+                format!("{overhead:.3}"),
+                format!("{:.2}", total - overhead),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+
+    println!("…and the simulated Xeon Phi rendition (paper values alongside):");
+    for t in harness::simulated("table2")? {
+        println!("{}", t.to_text());
+    }
+
+    // the paper's cutoff lever: GPRM overhead scales with task count
+    let mut t = Table::new("GPRM cutoff ablation (measured empty dispatches)", &["cutoff", "dispatch ms"]);
+    for cutoff in [1usize, 10, 100, 480, 1000] {
+        let m = gprm.with_cutoff(cutoff);
+        t.row(vec![cutoff.to_string(), format!("{:.4}", m.overhead_probe(1 << 16, 10).median())]);
+    }
+    println!("{}", t.to_text());
+    Ok(())
+}

@@ -1,0 +1,29 @@
+// §Perf probe (kept as a repeatable tool): hot-path timings per layer
+use phi_conv::conv::{convolve_image_into, Algorithm, Variant, Workspace};
+use phi_conv::image::{gaussian_kernel, synth_image, Pattern};
+use phi_conv::metrics::time_reps;
+use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
+fn main() {
+    let k = gaussian_kernel(5, 1.0);
+    let img = synth_image(3, 576, 576, Pattern::Noise, 1);
+    for (name, alg, v) in [
+        ("twopass simd", Algorithm::TwoPass, Variant::Simd),
+        ("twopass scalar", Algorithm::TwoPass, Variant::Scalar),
+        ("singlepass simd", Algorithm::SinglePassNoCopy, Variant::Simd),
+        ("singlepass+cb simd", Algorithm::SinglePassCopyBack, Variant::Simd),
+        ("naive", Algorithm::SinglePassCopyBack, Variant::Naive),
+    ] {
+        let mut ws = Workspace::new();
+        let s = time_reps(|| { convolve_image_into(&mut ws, &img, &k, alg, v).unwrap(); }, 3, 12);
+        let mpx = (3 * 576 * 576) as f64 / s.median() / 1e3;
+        println!("native {name:22} {:7.3} ms ({mpx:4.0} Mpx/s)", s.median());
+    }
+    if let Ok(pool) = EnginePool::open(default_artifacts_dir()) {
+        for (name, n) in [("twopass_p3_576", 576usize), ("singlepass_p3_576", 576)] {
+            let img = synth_image(3, n, n, Pattern::Noise, 1);
+            let e = pool.engine(name).unwrap();
+            let s = time_reps(|| { e.run(&[&img.data, &k]).unwrap(); }, 2, 6);
+            println!("PJRT   {name:22} {:7.3} ms ({:4.0} Mpx/s)", s.median(), (3*n*n) as f64/s.median()/1e3);
+        }
+    }
+}

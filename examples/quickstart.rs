@@ -1,0 +1,67 @@
+//! Quickstart: convolve one 3-plane image with the public API.
+//!
+//! Shows the three entry points a user starts with:
+//!   1. sequential native engines   (`conv::convolve_image`)
+//!   2. a parallel execution model  (`models::convolve_parallel`)
+//!   3. the AOT/PJRT path           (`runtime::EnginePool`)
+//!
+//! Run: `cargo run --offline --release --example quickstart`
+
+use anyhow::Result;
+
+use phi_conv::conv::{convolve_image, Algorithm, Variant};
+use phi_conv::image::{gaussian_kernel, synth_image, write_pgm, Pattern};
+use phi_conv::models::{convolve_parallel, ExecutionModel, Layout, OpenMpModel};
+use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
+
+fn main() -> Result<()> {
+    let size = 288;
+    let img = synth_image(3, size, size, Pattern::Disc, 7);
+    let k = gaussian_kernel(5, 1.0);
+    println!("input: 3 planes of {size}x{size} f32 ('disc' pattern)");
+
+    // 1. sequential two-pass (the paper's Opt-4 rung)
+    let t0 = std::time::Instant::now();
+    let blurred = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd)?;
+    println!("sequential two-pass SIMD: {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    // 2. the same under an OpenMP-style execution model
+    let model = OpenMpModel::new(phi_conv::config::default_threads());
+    let t0 = std::time::Instant::now();
+    let parallel =
+        convolve_parallel(&model, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)?;
+    println!(
+        "parallel  two-pass SIMD: {:.2} ms ({} workers) — identical pixels: {}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        model.workers(),
+        parallel == blurred
+    );
+
+    // 3. the AOT Pallas artifact through PJRT (Python never runs here)
+    match EnginePool::open(default_artifacts_dir()) {
+        Ok(pool) => {
+            let engine = pool.engine(&format!("twopass_p3_{size}"))?;
+            println!("PJRT: compiled {} in {:.0} ms", engine.name, engine.compile_time_ms);
+            let t0 = std::time::Instant::now();
+            let out = engine.run1(&[&img.data, &k])?;
+            let max_diff = out
+                .iter()
+                .zip(&blurred.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            println!(
+                "PJRT two-pass: {:.2} ms — max diff vs native {max_diff:.2e}",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            assert!(max_diff < 1e-4, "PJRT and native must agree");
+        }
+        Err(e) => println!("PJRT path skipped ({e}); run `make artifacts`"),
+    }
+
+    // write before/after for eyeballing
+    let dir = std::env::temp_dir();
+    write_pgm(dir.join("phi_conv_input.pgm"), &img, 0)?;
+    write_pgm(dir.join("phi_conv_blurred.pgm"), &blurred, 0)?;
+    println!("wrote {}/phi_conv_{{input,blurred}}.pgm", dir.display());
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Stereo-matching front end — the workload the paper's kernels came
+//! from ("the image convolution algorithms are taken from the real code
+//! used in a stereo matching algorithm. Image convolution and scaling
+//! take up most of the cycles").
+//!
+//! Pipeline:
+//!   1. synthesise a stereo pair (right = left shifted by a known
+//!      disparity, plus noise);
+//!   2. Gaussian-pyramid both images — through the AOT PJRT `pyramid`
+//!      artifact when available, native two-pass otherwise (conv +
+//!      2× decimation, the paper's hot loop);
+//!   3. block-match at the coarsest level to recover the disparity.
+//!
+//! The recovered disparity matching the planted one is the end-to-end
+//! correctness signal. Run:
+//! `cargo run --offline --release --example stereo_pipeline`
+
+use anyhow::Result;
+
+use phi_conv::conv::{convolve_image, Algorithm, Variant};
+use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
+use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
+
+const SIZE: usize = 288; // pyramid artifact exists at the top size; native path used here
+const LEVELS: usize = 3;
+const TRUE_DISPARITY: usize = 12;
+
+fn main() -> Result<()> {
+    // --- 1. synthetic stereo pair ---------------------------------------
+    let left = synth_image(3, SIZE, SIZE, Pattern::Disc, 3);
+    let mut right = PlanarImage::zeros(3, SIZE, SIZE);
+    for p in 0..3 {
+        for i in 0..SIZE {
+            for j in 0..SIZE {
+                let src_j = (j + TRUE_DISPARITY).min(SIZE - 1);
+                right.set(p, i, j, left.get(p, i, src_j));
+            }
+        }
+    }
+    println!("stereo pair: {SIZE}x{SIZE}, planted disparity {TRUE_DISPARITY}px");
+
+    // --- 2. Gaussian pyramids --------------------------------------------
+    let k = gaussian_kernel(5, 1.0);
+    let lp = pyramid(&left, &k)?;
+    let rp = pyramid(&right, &k)?;
+    for (i, lvl) in lp.iter().enumerate() {
+        println!("  level {i}: {}x{}", lvl.rows, lvl.cols);
+    }
+
+    // --- 3. coarse block matching ----------------------------------------
+    // at level 2 the disparity shrinks by 4×
+    let coarse = &lp[LEVELS - 1];
+    let coarse_r = &rp[LEVELS - 1];
+    let est = match_disparity(coarse, coarse_r, 8);
+    let est_full = est * (1 << (LEVELS - 1));
+    println!("estimated disparity: {est} at level {} = {est_full}px full-res", LEVELS - 1);
+    let err = (est_full as i64 - TRUE_DISPARITY as i64).abs();
+    println!("error vs planted: {err}px");
+    assert!(err <= 4, "coarse disparity should land within one coarse pixel");
+    println!("stereo front-end OK");
+    Ok(())
+}
+
+/// Blur + decimate pyramid. Uses the PJRT pyramid artifact when this
+/// size has one; falls back to the native two-pass engines.
+fn pyramid(img: &PlanarImage, k: &[f32]) -> Result<Vec<PlanarImage>> {
+    if let Ok(pool) = EnginePool::open(default_artifacts_dir()) {
+        let name = format!("pyramid_{}", img.rows);
+        if pool.manifest().get(&name).is_ok() {
+            let engine = pool.engine(&name)?;
+            let outs = engine.run(&[&img.data, k])?;
+            println!("  (pyramid via PJRT artifact {name})");
+            let mut levels = Vec::new();
+            let mut n = img.rows;
+            for o in outs {
+                levels.push(PlanarImage::from_vec(img.planes, n, n, o)?);
+                n /= 2;
+            }
+            return Ok(levels);
+        }
+    }
+    // native fallback: conv + 2× decimation per level
+    let mut levels = vec![img.clone()];
+    for _ in 1..LEVELS {
+        let cur = levels.last().unwrap();
+        let blurred = convolve_image(cur.clone(), k, Algorithm::TwoPass, Variant::Simd)?;
+        let (r2, c2) = (cur.rows / 2, cur.cols / 2);
+        let mut next = PlanarImage::zeros(cur.planes, r2, c2);
+        for p in 0..cur.planes {
+            for i in 0..r2 {
+                for j in 0..c2 {
+                    next.set(p, i, j, blurred.get(p, 2 * i, 2 * j));
+                }
+            }
+        }
+        levels.push(next);
+    }
+    Ok(levels)
+}
+
+/// 1-D SAD block matching over plane 0: mean best horizontal shift.
+fn match_disparity(left: &PlanarImage, right: &PlanarImage, max_d: usize) -> usize {
+    let (rows, cols) = (left.rows, left.cols);
+    let block = 8;
+    let mut votes = vec![0usize; max_d + 1];
+    let mut i = block;
+    while i + block < rows {
+        let mut j = block;
+        while j + block + max_d < cols {
+            let mut best = (f32::MAX, 0usize);
+            for d in 0..=max_d {
+                let mut sad = 0f32;
+                for bi in 0..block {
+                    for bj in 0..block {
+                        let l = left.get(0, i + bi, j + bj + d);
+                        let r = right.get(0, i + bi, j + bj);
+                        sad += (l - r).abs();
+                    }
+                }
+                if sad < best.0 {
+                    best = (sad, d);
+                }
+            }
+            votes[best.1] += 1;
+            j += block;
+        }
+        i += block;
+    }
+    votes.iter().enumerate().max_by_key(|(_, &v)| v).map(|(d, _)| d).unwrap_or(0)
+}

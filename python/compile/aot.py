@@ -1,0 +1,251 @@
+"""AOT compiler: lower every L2 graph to HLO text + a JSON manifest.
+
+This is the only bridge between the Python build path and the Rust runtime
+(DESIGN.md section 2). Each entry point in ``model.py`` is jitted, lowered
+to StableHLO, converted to an XlaComputation and dumped as HLO **text**:
+the image's xla_extension 0.5.1 rejects serialized HloModuleProto from
+jax>=0.5 (64-bit instruction ids), while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records, for every artifact, the input/output
+shapes and dtypes plus a role tag so the Rust artifact registry
+(rust/src/runtime/manifest.rs) can load and validate them without
+hard-coding shapes.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sizes 288,576,1152]
+                          [--tile-rows 64] [--planes 3] [--width 5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclass
+class Entry:
+    """One AOT artifact: a jax callable and its example input specs."""
+
+    name: str
+    fn: Callable
+    in_specs: list[jax.ShapeDtypeStruct]
+    role: str  # "full" | "agg" | "tile" | "pyramid" | "ablation"
+    algorithm: str  # "twopass" | "singlepass"
+    variant: str
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        return jax.jit(self.fn).lower(*self.in_specs)
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries(
+    sizes: list[int], planes: int, width: int, tile_rows: int, ablation_size: int
+) -> list[Entry]:
+    """The full artifact set for one configuration."""
+    h = width // 2
+    k = f32(width)
+    entries: list[Entry] = []
+
+    for n in sizes:
+        entries += [
+            # Full-image two-pass ships the *gridded* lowering (disjoint-axis
+            # BlockSpecs). §Perf iteration 2 (EXPERIMENTS.md) compared the
+            # fused whole-plane kernel through CPU PJRT: the difference was
+            # within run-to-run noise (<5 %), so the gridded shape — the one
+            # that scales past VMEM on a real TPU — stays the default; the
+            # fused kernel remains an ablation artifact.
+            Entry(
+                f"twopass_p{planes}_{n}",
+                lambda img, kk: model.conv_image_twopass(img, kk),
+                [f32(planes, n, n), k],
+                "full",
+                "twopass",
+                "gridded",
+                {"rows": n, "cols": n, "planes": planes},
+            ),
+            Entry(
+                f"singlepass_p{planes}_{n}",
+                lambda img, kk: model.conv_image_singlepass(img, kk),
+                [f32(planes, n, n), k],
+                "full",
+                "singlepass",
+                "gridded",
+                {"rows": n, "cols": n, "planes": planes},
+            ),
+            Entry(
+                f"twopass_agg_{n}",
+                lambda img, kk: model.conv_image_twopass_agglomerated(img, kk),
+                [f32(planes, n, n), k],
+                "agg",
+                "twopass",
+                "gridded",
+                {"rows": n, "cols": n, "planes": planes},
+            ),
+            # Row-band tile kernels: what the execution models dispatch.
+            Entry(
+                f"horiz_tile_{tile_rows}x{n}",
+                model.horiz_tile,
+                [f32(tile_rows, n), k],
+                "tile",
+                "twopass",
+                "horiz",
+                {"tile_rows": tile_rows, "cols": n, "halo": 0},
+            ),
+            Entry(
+                f"vert_tile_{tile_rows}x{n}",
+                model.vert_tile,
+                [f32(tile_rows + 2 * h, n), k],
+                "tile",
+                "twopass",
+                "vert",
+                {"tile_rows": tile_rows, "cols": n, "halo": h},
+            ),
+            Entry(
+                f"single_tile_{tile_rows}x{n}",
+                model.single_tile,
+                [f32(tile_rows + 2 * h, n), k],
+                "tile",
+                "singlepass",
+                "whole",
+                {"tile_rows": tile_rows, "cols": n, "halo": h},
+            ),
+        ]
+
+    # Ablation rungs of the optimisation ladder, lowered at one small size
+    # so Rust integration tests can cross-validate every variant via PJRT.
+    n = ablation_size
+    for variant in ("naive", "fused"):
+        entries.append(
+            Entry(
+                f"twopass_{variant}_{n}",
+                lambda img, kk, v=variant: model.conv_image_twopass(img, kk, variant=v),
+                [f32(planes, n, n), k],
+                "ablation",
+                "twopass",
+                variant,
+                {"rows": n, "cols": n, "planes": planes},
+            )
+        )
+    for variant in ("naive", "whole"):
+        entries.append(
+            Entry(
+                f"singlepass_{variant}_{n}",
+                lambda img, kk, v=variant: model.conv_image_singlepass(
+                    img, kk, variant=v
+                ),
+                [f32(planes, n, n), k],
+                "ablation",
+                "singlepass",
+                variant,
+                {"rows": n, "cols": n, "planes": planes},
+            )
+        )
+
+    # Stereo front end: Gaussian pyramid at the largest size.
+    nmax = max(sizes)
+    entries.append(
+        Entry(
+            f"pyramid_{nmax}",
+            lambda img, kk: model.gaussian_pyramid(img, kk, levels=3),
+            [f32(planes, nmax, nmax), k],
+            "pyramid",
+            "twopass",
+            "gridded",
+            {"rows": nmax, "cols": nmax, "planes": planes, "levels": 3},
+        )
+    )
+    return entries
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def emit(entries: list[Entry], out_dir: str, width: int) -> dict:
+    """Lower every entry, write <name>.hlo.txt, return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "kernel_width": width,
+        "gaussian_sigma": 1.0,
+        "artifacts": [],
+    }
+    for e in entries:
+        lowered = e.lower()
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(e.fn, *e.in_specs)
+        outs = jax.tree_util.tree_leaves(out_shapes)
+        manifest["artifacts"].append(
+            {
+                "name": e.name,
+                "file": fname,
+                "role": e.role,
+                "algorithm": e.algorithm,
+                "variant": e.variant,
+                "inputs": [_spec_json(s) for s in e.in_specs],
+                "outputs": [_spec_json(s) for s in outs],
+                "meta": e.meta,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        )
+        print(f"  {e.name:32s} -> {fname} ({len(text)//1024} KiB)")
+    # Reference Gaussian kernel values so Rust can verify its own generator.
+    manifest["kernel_values"] = [
+        float(x) for x in ref.gaussian_kernel(width, 1.0).tolist()
+    ]
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--sizes", default="288,576,1152")
+    p.add_argument("--tile-rows", type=int, default=64)
+    p.add_argument("--planes", type=int, default=3)
+    p.add_argument("--width", type=int, default=5)
+    p.add_argument("--ablation-size", type=int, default=288)
+    args = p.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")]
+    entries = build_entries(
+        sizes, args.planes, args.width, args.tile_rows, args.ablation_size
+    )
+    print(f"lowering {len(entries)} artifacts to {args.out_dir}")
+    m = emit(entries, args.out_dir, args.width)
+    total = sum(a["bytes"] for a in m["artifacts"])
+    print(f"wrote {len(m['artifacts'])} artifacts, {total//1024} KiB total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp oracles for the phi-conv reproduction."""
+
+from . import ref, singlepass, twopass  # noqa: F401

@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracles for the convolution kernels.
+
+These implement, in the simplest possible slicing form, the exact semantics
+fixed in DESIGN.md section 4 (the paper's algorithms from Listings 1 & 2):
+
+* ``single-pass``  -- direct WxW convolution: every interior pixel is the
+  25-tap (for W=5) weighted sum of its neighbourhood; border pixels pass
+  through unchanged.
+* ``two-pass``     -- separable convolution: a horizontal 1-D pass writes
+  the interior of an auxiliary array B (B equals the source elsewhere),
+  then a vertical 1-D pass over B writes the interior of the output.
+
+Every Pallas kernel variant and every native Rust engine is tested against
+these oracles; the oracles themselves are validated against a brute-force
+python-loop implementation in the test-suite.
+
+All functions operate on a single plane ``a`` of shape (R, C), f32, with a
+separable kernel vector ``k`` of odd width W (paper: W=5, Gaussian).
+``h = W // 2`` is the halo.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gaussian_kernel(width: int = 5, sigma: float = 1.0) -> jnp.ndarray:
+    """Normalised 1-D Gaussian convolution vector of odd ``width``.
+
+    The paper uses a separable Gaussian 5x5 kernel; K[i][j] = k[i]*k[j].
+    """
+    if width % 2 != 1:
+        raise ValueError(f"kernel width must be odd, got {width}")
+    h = width // 2
+    x = np.arange(-h, h + 1, dtype=np.float64)
+    k = np.exp(-(x**2) / (2.0 * sigma**2))
+    k /= k.sum()
+    return jnp.asarray(k, dtype=jnp.float32)
+
+
+def outer_kernel(k: jnp.ndarray) -> jnp.ndarray:
+    """K[i][j] = k[i] * k[j] -- the 2-D kernel of a separable vector."""
+    return k[:, None] * k[None, :]
+
+
+# ---------------------------------------------------------------------------
+# "valid" building blocks: convolution restricted to fully-covered outputs
+# ---------------------------------------------------------------------------
+
+
+def horiz_valid(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Horizontal 1-D convolution, valid columns only: (R, C) -> (R, C-2h)."""
+    w = k.shape[0]
+    c = a.shape[1]
+    return sum(a[:, v : c - (w - 1) + v] * k[v] for v in range(w))
+
+
+def vert_valid(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Vertical 1-D convolution, valid rows only: (R, C) -> (R-2h, C)."""
+    w = k.shape[0]
+    r = a.shape[0]
+    return sum(a[u : r - (w - 1) + u, :] * k[u] for u in range(w))
+
+
+def singlepass_valid(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Direct WxW convolution, valid region only: (R, C) -> (R-2h, C-2h)."""
+    w = k.shape[0]
+    r, c = a.shape
+    kk = outer_kernel(k)
+    return sum(
+        a[u : r - (w - 1) + u, v : c - (w - 1) + v] * kk[u, v]
+        for u in range(w)
+        for v in range(w)
+    )
+
+
+# ---------------------------------------------------------------------------
+# full-plane oracles with the paper's border semantics
+# ---------------------------------------------------------------------------
+
+
+def singlepass_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Single-pass convolution of one plane; border rows/cols = source.
+
+    This is the no-copy-back output B of the paper's section 7. The
+    copy-back variant produces the same pixels (B is copied over A), so the
+    oracle is shared; copy-back only matters for *timing*.
+    """
+    h = k.shape[0] // 2
+    return a.at[h:-h, h:-h].set(singlepass_valid(a, k))
+
+
+def twopass_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Two-pass separable convolution of one plane (paper Listing 1).
+
+    Pass 1 (horizontal) writes only the interior of B; B equals A on the
+    border band, exactly as the paper's loops ``for i in 2..rows-2``.
+    Pass 2 (vertical) reads B -- including the horizontally-unfiltered
+    border rows -- and writes the interior of the output.
+    """
+    h = k.shape[0] // 2
+    b = a.at[h:-h, h:-h].set(horiz_valid(a, k)[h:-h, :])
+    return a.at[h:-h, h:-h].set(vert_valid(b, k)[:, h:-h])
+
+
+# ---------------------------------------------------------------------------
+# multi-plane / layout helpers (mirror rust/src/image + models/agglomerate)
+# ---------------------------------------------------------------------------
+
+
+def per_plane(fn, img: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Apply a single-plane oracle to every plane of ``img`` (P, R, C)."""
+    return jnp.stack([fn(img[p], k) for p in range(img.shape[0])], axis=0)
+
+
+def agglomerate(img: jnp.ndarray) -> jnp.ndarray:
+    """(P, R, C) -> (R, P*C): the paper's 3RxC task-agglomeration layout.
+
+    "images with the width of 3 times the width of the original images,
+    meaning that each row includes information for all 3 colour planes."
+    """
+    return jnp.concatenate([img[p] for p in range(img.shape[0])], axis=1)
+
+
+def deagglomerate(wide: jnp.ndarray, planes: int) -> jnp.ndarray:
+    """(R, P*C) -> (P, R, C): inverse of :func:`agglomerate`."""
+    c = wide.shape[1] // planes
+    return jnp.stack([wide[:, p * c : (p + 1) * c] for p in range(planes)], 0)
+
+
+def deep_interior(a: jnp.ndarray, k_width: int = 5) -> jnp.ndarray:
+    """Region where single-pass and two-pass agree exactly.
+
+    Two-pass reads horizontally-unfiltered rows within ``h`` of the border
+    band, so equality only holds 2h pixels in (DESIGN.md section 4).
+    """
+    d = 2 * (k_width // 2)
+    return a[..., d:-d, d:-d]

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels for the single-pass (direct WxW) convolution.
+
+The single-pass algorithm convolves both axes at once, so -- unlike the
+two-pass kernels in ``twopass.py`` -- no grid axis is orthogonal to the
+convolution: every row band needs a 2h-row halo from its neighbours.
+Pallas ``BlockSpec`` index maps address ``index * block_shape`` offsets and
+cannot express overlapping tiles, so the gridded variant keeps the input in
+``pl.ANY`` memory space (no automatic HBM->VMEM copy) and each program
+instance explicitly loads its haloed slab with a dynamic row slice. This is
+the TPU analogue of the paper's threads reading their neighbours' boundary
+rows through the shared L2/GDDR5.
+
+Variants (all tested against ``ref.singlepass_valid``):
+
+* ``singlepass_valid_gridded``  -- grid over output row bands, ANY-space
+  input + explicit halo load; the production variant.
+* ``singlepass_valid_whole``    -- single grid step over the whole plane;
+  perf-ablation subject and fallback for tiny planes.
+* ``singlepass_valid_naive``    -- 25-tap ``fori_loop`` accumulation,
+  mirroring the paper's non-unrolled naive code (Opt-0 rung).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 16
+
+
+def _unrolled_taps(slab, k_ref, width: int, out_rows: int, out_cols: int):
+    """Fully-unrolled W*W-tap weighted sum (the paper's Eq. 3 / Opt-1)."""
+    acc = None
+    for u in range(width):
+        for v in range(width):
+            term = slab[u : u + out_rows, v : v + out_cols] * (k_ref[u] * k_ref[v])
+            acc = term if acc is None else acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# gridded variant: ANY-space input, explicit halo loads
+# ---------------------------------------------------------------------------
+
+
+def _gridded_kernel(a_ref, k_ref, o_ref, *, width: int, block_rows: int, cols: int):
+    i = pl.program_id(0)
+    # Haloed slab: block_rows output rows need block_rows + 2h input rows.
+    slab = a_ref[pl.ds(i * block_rows, block_rows + width - 1), :]
+    o_ref[...] = _unrolled_taps(slab, k_ref, width, block_rows, cols - (width - 1))
+
+
+def singlepass_valid_gridded(
+    a: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Direct convolution, valid region: (R, C) -> (R-2h, C-2h)."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    out_rows = r - (width - 1)
+    # Pad so the output row count divides the band size; pad rows of the
+    # *input* feed only garbage output rows which are cropped below.
+    pad = (-out_rows) % block_rows
+    ap = jnp.pad(a, ((0, pad), (0, 0))) if pad else a
+    out = pl.pallas_call(
+        functools.partial(
+            _gridded_kernel, width=width, block_rows=block_rows, cols=c
+        ),
+        grid=((out_rows + pad) // block_rows,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((width,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c - (width - 1)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows + pad, c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(ap, k)
+    return out[:out_rows, :]
+
+
+# ---------------------------------------------------------------------------
+# whole-array variant (single grid step)
+# ---------------------------------------------------------------------------
+
+
+def _whole_kernel(a_ref, k_ref, o_ref, *, width: int, rows: int, cols: int):
+    x = a_ref[...]
+    o_ref[...] = _unrolled_taps(
+        x, k_ref, width, rows - (width - 1), cols - (width - 1)
+    )
+
+
+def singlepass_valid_whole(
+    a: jnp.ndarray, k: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Direct convolution in one grid step: (R, C) -> (R-2h, C-2h)."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    return pl.pallas_call(
+        functools.partial(_whole_kernel, width=width, rows=r, cols=c),
+        out_shape=jax.ShapeDtypeStruct((r - (width - 1), c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(a, k)
+
+
+# ---------------------------------------------------------------------------
+# naive variant: looped taps (the ladder's Opt-0 structural analogue)
+# ---------------------------------------------------------------------------
+
+
+def _naive_kernel(a_ref, k_ref, o_ref, *, width: int, rows: int, cols: int):
+    """W*W fori_loop of dynamic slices -- deliberately un-unrolled.
+
+    Structurally mirrors the paper's naive 4-nested-loop code compiled with
+    ``-no-vec``: the tap loop is a real (lowered) loop, not W*W fused
+    vector statements.
+    """
+    x = a_ref[...]
+    out_rows = rows - (width - 1)
+    out_cols = cols - (width - 1)
+
+    def body(t, acc):
+        u, v = t // width, t % width
+        sl = jax.lax.dynamic_slice(x, (u, v), (out_rows, out_cols))
+        return acc + sl * (k_ref[u] * k_ref[v])
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, width * width, body, jnp.zeros((out_rows, out_cols), x.dtype)
+    )
+
+
+def singlepass_valid_naive(
+    a: jnp.ndarray, k: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Naive looped direct convolution: (R, C) -> (R-2h, C-2h)."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    return pl.pallas_call(
+        functools.partial(_naive_kernel, width=width, rows=r, cols=c),
+        out_shape=jax.ShapeDtypeStruct((r - (width - 1), c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(a, k)

@@ -1,0 +1,234 @@
+"""L1 Pallas kernels for the two-pass separable convolution.
+
+Hardware adaptation (DESIGN.md section 3): the paper parallelises the outer
+row loop with ``#pragma omp parallel for`` and vectorises the inner column
+loop with ``#pragma simd`` on the Xeon Phi's 512-bit VPU. On a TPU-shaped
+target the same structure becomes:
+
+* the **grid** plays the role of the parallel outer loop -- one program
+  instance per row band (horizontal pass) / column band (vertical pass);
+* the unrolled 5-term expression over **whole-row slices** plays the role
+  of the SIMD inner loop: the column dimension is vectorised across the
+  VPU lanes by construction, no pragma needed;
+* ``BlockSpec`` plays the role of the threadblock/L2-tile mapping: it
+  names the HBM->VMEM slab each instance owns.
+
+The crucial trick is choosing the grid axis *orthogonal to the convolution
+axis* of each pass: the horizontal pass grids over row bands and the
+vertical pass grids over column bands, so every BlockSpec tile is disjoint
+and no halo exchange is needed at all. (The single-pass kernel cannot do
+this -- it convolves both axes -- which is why it needs an ANY-memory-space
+input and explicit halo loads; see ``singlepass.py``.)
+
+All kernels compute the *valid* region only; the border-band semantics of
+the paper (border pixels pass through) are stitched in L2 (``model.py``)
+so the kernels stay pure vector arithmetic, exactly like the paper's inner
+loops which also never touch the border.
+
+Kernels are built per (shape, width) at AOT time, run with
+``interpret=True`` (the CPU PJRT client cannot execute Mosaic
+custom-calls), and lowered into the surrounding jax graph's HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default band sizes. 16 rows x C f32: for the paper's largest image
+# (C=8748) that is a 16*8752*4 B ~ 560 KB input slab -- comfortably inside
+# a TPU core's ~16 MB VMEM with double buffering (DESIGN.md section 9).
+DEFAULT_BLOCK_ROWS = 16
+DEFAULT_BLOCK_COLS = 128
+
+
+def _pad_to_multiple(a: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` of ``a`` up to the next multiple of ``multiple``."""
+    n = a.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+# ---------------------------------------------------------------------------
+# horizontal pass: grid over disjoint row bands
+# ---------------------------------------------------------------------------
+
+
+def _horiz_kernel(a_ref, k_ref, o_ref, *, width: int, cols: int):
+    """One row band: o[(br, C-2h)] = sum_v a[:, v:...] * k[v], unrolled."""
+    x = a_ref[...]
+    valid = cols - (width - 1)
+    # Unrolled: python-level sum of `width` shifted whole-row slices. This
+    # is the Pallas analogue of the paper's hand-unrolled 5-term expression
+    # (Opt-1) *and* its #pragma simd (Opt-2) at once: each term is a full
+    # vector operation over the lanes of the column dimension.
+    acc = x[:, 0:valid] * k_ref[0]
+    for v in range(1, width):
+        acc = acc + x[:, v : valid + v] * k_ref[v]
+    o_ref[...] = acc
+
+
+def horiz_pass_valid(
+    a: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Horizontal 1-D convolution, valid columns: (R, C) -> (R, C-2h).
+
+    Grids over row bands of ``block_rows``; R is padded up to a multiple
+    and the pad rows cropped from the result (they are garbage, never
+    read by the caller).
+    """
+    r, c = a.shape
+    width = int(k.shape[0])
+    ap = _pad_to_multiple(a, 0, block_rows)
+    rp = ap.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_horiz_kernel, width=width, cols=c),
+        grid=(rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((width,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c - (width - 1)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(ap, k)
+    return out[:r, :]
+
+
+# ---------------------------------------------------------------------------
+# vertical pass: grid over disjoint column bands
+# ---------------------------------------------------------------------------
+
+
+def _vert_kernel(a_ref, k_ref, o_ref, *, width: int, rows: int):
+    """One column band: o[(R-2h, bc)] = sum_u a[u:..., :] * k[u], unrolled."""
+    x = a_ref[...]
+    valid = rows - (width - 1)
+    acc = x[0:valid, :] * k_ref[0]
+    for u in range(1, width):
+        acc = acc + x[u : valid + u, :] * k_ref[u]
+    o_ref[...] = acc
+
+
+def vert_pass_valid(
+    a: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Vertical 1-D convolution, valid rows: (R, C) -> (R-2h, C)."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    ap = _pad_to_multiple(a, 1, block_cols)
+    cp = ap.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_vert_kernel, width=width, rows=r),
+        grid=(cp // block_cols,),
+        in_specs=[
+            pl.BlockSpec((r, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((width,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r - (width - 1), block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r - (width - 1), cp), a.dtype),
+        interpret=interpret,
+    )(ap, k)
+    return out[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# fused whole-array variant (perf-ablation subject; no grid)
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(a_ref, k_ref, o_ref, *, width: int, rows: int, cols: int):
+    """Both passes in one kernel instance over the whole plane.
+
+    Computes the final interior directly, reproducing the paper's border
+    semantics internally: the vertical pass reads the horizontally
+    *unfiltered* source in the border rows (DESIGN.md section 4).
+    """
+    h = width // 2
+    x = a_ref[...]
+    vc = cols - (width - 1)
+    # horizontal valid over ALL rows
+    hz = x[:, 0:vc] * k_ref[0]
+    for v in range(1, width):
+        hz = hz + x[:, v : vc + v] * k_ref[v]
+    # b = source with interior rows replaced by the horizontal result
+    b = jnp.concatenate([x[:h, h : cols - h], hz[h : rows - h, :], x[rows - h :, h : cols - h]], axis=0)
+    # vertical valid over the interior columns
+    vr = rows - (width - 1)
+    vt = b[0:vr, :] * k_ref[0]
+    for u in range(1, width):
+        vt = vt + b[u : vr + u, :] * k_ref[u]
+    o_ref[...] = vt
+
+
+def twopass_valid_fused(
+    a: jnp.ndarray, k: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Fused two-pass interior: (R, C) -> (R-2h, C-2h), single grid step."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, width=width, rows=r, cols=c),
+        out_shape=jax.ShapeDtypeStruct((r - (width - 1), c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(a, k)
+
+
+# ---------------------------------------------------------------------------
+# naive (non-unrolled) variant -- the ladder's Opt-3-without-unroll analogue
+# ---------------------------------------------------------------------------
+
+
+def _horiz_kernel_naive(a_ref, k_ref, o_ref, *, width: int, cols: int):
+    """fori_loop over kernel taps: the structural analogue of the paper's
+    *non*-unrolled loop, kept for the optimisation-ladder ablation."""
+    x = a_ref[...]
+    valid = cols - (width - 1)
+
+    def body(v, acc):
+        return acc + jax.lax.dynamic_slice_in_dim(x, v, valid, axis=1) * k_ref[v]
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, width, body, jnp.zeros((x.shape[0], valid), x.dtype)
+    )
+
+
+def horiz_pass_valid_naive(
+    a: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Naive-loop horizontal pass (same numerics, looped taps)."""
+    r, c = a.shape
+    width = int(k.shape[0])
+    ap = _pad_to_multiple(a, 0, block_rows)
+    rp = ap.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_horiz_kernel_naive, width=width, cols=c),
+        grid=(rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((width,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c - (width - 1)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c - (width - 1)), a.dtype),
+        interpret=interpret,
+    )(ap, k)
+    return out[:r, :]

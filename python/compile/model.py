@@ -1,0 +1,158 @@
+"""L2: jax compute graphs for the phi-conv reproduction.
+
+This layer composes the L1 Pallas kernels (``kernels/``) into the whole
+operations the paper times -- full 3-plane image convolutions under both
+algorithms, the 3RxC task-agglomerated layout, the row-band tile kernels
+the Rust coordinator schedules, and the Gaussian-pyramid graph for the
+stereo-matching example that motivates the paper.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text artifacts which the Rust runtime loads through PJRT. Python never
+runs on the request path.
+
+Border semantics are stitched here (kernels compute valid regions only);
+see DESIGN.md section 4 and ``kernels/ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import singlepass as sp
+from .kernels import twopass as tp
+
+Variant = str  # "gridded" | "whole" | "naive" | "fused"
+
+
+# ---------------------------------------------------------------------------
+# single-plane full convolutions (valid kernels + border stitching)
+# ---------------------------------------------------------------------------
+
+
+def twopass_plane(
+    a: jnp.ndarray, k: jnp.ndarray, *, variant: Variant = "gridded"
+) -> jnp.ndarray:
+    """Two-pass separable convolution of one (R, C) plane, paper semantics.
+
+    variant:
+      * ``gridded`` -- horizontal pass grids over row bands, vertical pass
+        over column bands (production; disjoint BlockSpecs, no halo).
+      * ``fused``   -- both passes in one whole-plane kernel instance.
+      * ``naive``   -- looped-tap horizontal pass (ladder ablation rung).
+    """
+    h = int(k.shape[0]) // 2
+    if variant == "fused":
+        interior = tp.twopass_valid_fused(a, k)
+        return a.at[h:-h, h:-h].set(interior)
+    horiz = tp.horiz_pass_valid_naive if variant == "naive" else tp.horiz_pass_valid
+    b = a.at[h:-h, h:-h].set(horiz(a, k)[h:-h, :])
+    return a.at[h:-h, h:-h].set(tp.vert_pass_valid(b, k)[:, h:-h])
+
+
+def singlepass_plane(
+    a: jnp.ndarray, k: jnp.ndarray, *, variant: Variant = "gridded"
+) -> jnp.ndarray:
+    """Single-pass direct convolution of one (R, C) plane, paper semantics.
+
+    Produces the no-copy-back output (section 7 of the paper); the
+    copy-back variant has identical pixels and is a timing-only distinction
+    modelled in L3.
+    """
+    h = int(k.shape[0]) // 2
+    fn = {
+        "gridded": sp.singlepass_valid_gridded,
+        "whole": sp.singlepass_valid_whole,
+        "naive": sp.singlepass_valid_naive,
+    }[variant]
+    return a.at[h:-h, h:-h].set(fn(a, k))
+
+
+# ---------------------------------------------------------------------------
+# multi-plane images (P, R, C) -- the paper's 3 colour planes
+# ---------------------------------------------------------------------------
+
+
+def _per_plane(fn: Callable, img: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    # planes is small and static (3): unrolled python loop, one kernel
+    # instantiation per plane, exactly like the paper's `conv` wrapper that
+    # calls twoPassConv per planeId (Listing 1).
+    return jnp.stack([fn(img[p], k) for p in range(img.shape[0])], axis=0)
+
+
+def conv_image_twopass(
+    img: jnp.ndarray, k: jnp.ndarray, *, variant: Variant = "gridded"
+) -> jnp.ndarray:
+    """(P, R, C) two-pass convolution, plane-sequential (the RxC layout)."""
+    return _per_plane(functools.partial(twopass_plane, variant=variant), img, k)
+
+
+def conv_image_singlepass(
+    img: jnp.ndarray, k: jnp.ndarray, *, variant: Variant = "gridded"
+) -> jnp.ndarray:
+    """(P, R, C) single-pass convolution, plane-sequential."""
+    return _per_plane(functools.partial(singlepass_plane, variant=variant), img, k)
+
+
+def conv_image_twopass_agglomerated(
+    img: jnp.ndarray, k: jnp.ndarray, *, variant: Variant = "gridded"
+) -> jnp.ndarray:
+    """Two-pass in the paper's 3RxC task-agglomeration layout.
+
+    Planes are concatenated along columns ((P,R,C) -> (R, P*C)) so one
+    parallel sweep covers all planes; task size triples, per-task overhead
+    amortises to a third (paper section 6, Fig. 3). The horizontal pass
+    smears 2h columns across plane seams -- the paper accepts the same
+    artefact ("what happens at the far edges are ignored"); tests therefore
+    compare agglomerated output away from seams only.
+    """
+    planes = img.shape[0]
+    wide = jnp.concatenate([img[p] for p in range(planes)], axis=1)
+    out = twopass_plane(wide, k, variant=variant)
+    c = img.shape[2]
+    return jnp.stack([out[:, p * c : (p + 1) * c] for p in range(planes)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# row-band tile kernels -- what the Rust execution models schedule via PJRT
+# ---------------------------------------------------------------------------
+
+
+def horiz_tile(slab: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """(T, C) row band -> (T, C-2h) horizontally-convolved band."""
+    return tp.horiz_pass_valid(slab, k)
+
+
+def vert_tile(slab: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """(T+2h, C) haloed band -> (T, C) vertically-convolved band."""
+    return tp.vert_pass_valid(slab, k)
+
+
+def single_tile(slab: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """(T+2h, C) haloed band -> (T, C-2h) directly-convolved band."""
+    return sp.singlepass_valid_whole(slab, k)
+
+
+# ---------------------------------------------------------------------------
+# stereo-matching front end: Gaussian pyramid (the paper's motivating app)
+# ---------------------------------------------------------------------------
+
+
+def gaussian_pyramid(
+    img: jnp.ndarray, k: jnp.ndarray, *, levels: int = 3
+) -> tuple[jnp.ndarray, ...]:
+    """Blur + 2x decimate ``levels-1`` times: the conv+scale hot loop of the
+    stereo matcher the paper's kernels were taken from.
+
+    Returns ``levels`` images: (P,R,C), (P,R/2,C/2), ...
+    """
+    out = [img]
+    cur = img
+    for _ in range(levels - 1):
+        blurred = conv_image_twopass(cur, k)
+        cur = blurred[:, ::2, ::2]
+        out.append(cur)
+    return tuple(out)

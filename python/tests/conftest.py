@@ -1,0 +1,64 @@
+"""Shared fixtures for the phi-conv Python test suite."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="session")
+def rng() -> np.random.Generator:
+    return np.random.default_rng(20170710)
+
+
+@pytest.fixture(scope="session")
+def k5() -> jnp.ndarray:
+    """The paper's kernel: width-5 Gaussian, sigma=1, normalised."""
+    return ref.gaussian_kernel(5, 1.0)
+
+
+@pytest.fixture()
+def plane(rng) -> jnp.ndarray:
+    """One 40x36 f32 plane of Gaussian noise (non-square on purpose)."""
+    return jnp.asarray(rng.standard_normal((40, 36)), jnp.float32)
+
+
+@pytest.fixture()
+def image(rng) -> jnp.ndarray:
+    """A 3-plane 40x36 image."""
+    return jnp.asarray(rng.standard_normal((3, 40, 36)), jnp.float32)
+
+
+def brute_force_singlepass(a: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Triple-checked python-loop oracle for the oracle (O(R*C*W*W))."""
+    w = len(k)
+    h = w // 2
+    r, c = a.shape
+    out = a.copy()
+    for i in range(h, r - h):
+        for j in range(h, c - h):
+            s = 0.0
+            for u in range(w):
+                for v in range(w):
+                    s += a[i + u - h, j + v - h] * k[u] * k[v]
+            out[i, j] = s
+    return out
+
+
+def brute_force_twopass(a: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Python-loop two-pass with the paper's border semantics."""
+    w = len(k)
+    h = w // 2
+    r, c = a.shape
+    b = a.copy()
+    for i in range(h, r - h):
+        for j in range(h, c - h):
+            b[i, j] = sum(a[i, j + v - h] * k[v] for v in range(w))
+    out = a.copy()
+    for i in range(h, r - h):
+        for j in range(h, c - h):
+            out[i, j] = sum(b[i + u - h, j] * k[u] for u in range(w))
+    return out

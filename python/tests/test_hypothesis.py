@@ -1,0 +1,133 @@
+"""Hypothesis sweeps: shapes, dtypes, widths, block sizes against ref.py
+(system requirement: hypothesis sweeps the Pallas kernel's shapes/dtypes
+and assert_allclose against ref.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import singlepass as sp
+from compile.kernels import twopass as tp
+
+# Interpret-mode Pallas is slow-ish; keep example counts modest but real.
+COMMON = dict(max_examples=25, deadline=None)
+
+
+def _plane(rows: int, cols: int, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+
+
+@st.composite
+def plane_and_kernel(draw, min_side=8, max_side=96):
+    width = draw(st.sampled_from([3, 5, 7]))
+    rows = draw(st.integers(min_side, max_side))
+    cols = draw(st.integers(min_side, max_side))
+    # interior must be non-empty
+    rows = max(rows, width + 1)
+    cols = max(cols, width + 1)
+    sigma = draw(st.floats(0.5, 3.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return _plane(rows, cols, seed), ref.gaussian_kernel(width, sigma)
+
+
+@given(pk=plane_and_kernel())
+@settings(**COMMON)
+def test_horiz_pass_any_shape(pk):
+    a, k = pk
+    np.testing.assert_allclose(
+        np.asarray(tp.horiz_pass_valid(a, k)),
+        np.asarray(ref.horiz_valid(a, k)),
+        atol=1e-5,
+    )
+
+
+@given(pk=plane_and_kernel())
+@settings(**COMMON)
+def test_vert_pass_any_shape(pk):
+    a, k = pk
+    np.testing.assert_allclose(
+        np.asarray(tp.vert_pass_valid(a, k)),
+        np.asarray(ref.vert_valid(a, k)),
+        atol=1e-5,
+    )
+
+
+@given(pk=plane_and_kernel(max_side=64), br=st.sampled_from([1, 3, 8, 16]))
+@settings(**COMMON)
+def test_singlepass_gridded_any_shape_any_block(pk, br):
+    a, k = pk
+    np.testing.assert_allclose(
+        np.asarray(sp.singlepass_valid_gridded(a, k, block_rows=br)),
+        np.asarray(ref.singlepass_valid(a, k)),
+        atol=1e-5,
+    )
+
+
+@given(pk=plane_and_kernel(max_side=48))
+@settings(**COMMON)
+def test_full_plane_semantics_any_shape(pk):
+    """twopass_plane / singlepass_plane == ref with border passthrough."""
+    a, k = pk
+    np.testing.assert_allclose(
+        np.asarray(model.twopass_plane(a, k)),
+        np.asarray(ref.twopass_ref(a, k)),
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(model.singlepass_plane(a, k, variant="whole")),
+        np.asarray(ref.singlepass_ref(a, k)),
+        atol=1e-5,
+    )
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.integers(12, 48),
+    cols=st.integers(12, 48),
+)
+@settings(**COMMON)
+def test_deep_interior_agreement_property(seed, rows, cols):
+    """For every shape: single-pass == two-pass on the deep interior, and
+    the kernels inherit it (the separability invariant end-to-end)."""
+    a = _plane(rows, cols, seed)
+    k = ref.gaussian_kernel(5, 1.0)
+    spo = ref.singlepass_ref(a, k)
+    tpo = ref.twopass_ref(a, k)
+    np.testing.assert_allclose(
+        np.asarray(ref.deep_interior(spo)),
+        np.asarray(ref.deep_interior(tpo)),
+        atol=1e-4,
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1), planes=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_agglomeration_property(seed, planes):
+    """Agglomerated == per-plane away from the 2h seam bands, any P."""
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.standard_normal((planes, 24, 20)), jnp.float32)
+    k = ref.gaussian_kernel(5, 1.0)
+    agg = np.asarray(model.conv_image_twopass_agglomerated(img, k))
+    per = np.asarray(model.conv_image_twopass(img, k))
+    np.testing.assert_allclose(agg[:, :, 4:-4], per[:, :, 4:-4], atol=1e-5)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([4, 6, 9, 12, 18]),
+)
+@settings(max_examples=15, deadline=None)
+def test_tile_stitching_property(seed, tile):
+    """Any tile height that divides the valid rows stitches losslessly --
+    the invariant the Rust execution models rely on."""
+    a = _plane(40, 32, seed)  # 36 valid rows: divisible by all sampled tiles
+    k = ref.gaussian_kernel(5, 1.0)
+    bands = [
+        np.asarray(model.single_tile(a[i : i + tile + 4, :], k))
+        for i in range(0, 36, tile)
+    ]
+    got = np.concatenate(bands, axis=0)
+    np.testing.assert_allclose(got, np.asarray(ref.singlepass_valid(a, k)), atol=1e-5)

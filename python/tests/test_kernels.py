@@ -1,0 +1,153 @@
+"""Pallas kernel variants vs the pure-jnp oracles -- the CORE correctness
+signal of the L1 layer (system README: kernel-vs-ref allclose)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels import singlepass as sp
+from compile.kernels import twopass as tp
+
+
+ATOL = 1e-5
+
+
+class TestHorizPass:
+    def test_matches_ref(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(tp.horiz_pass_valid(plane, k5)),
+            np.asarray(ref.horiz_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_naive_variant_matches(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(tp.horiz_pass_valid_naive(plane, k5)),
+            np.asarray(ref.horiz_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    @pytest.mark.parametrize("block_rows", [1, 4, 16, 64])
+    def test_block_rows_invariance(self, plane, k5, block_rows):
+        """Any row-band size gives identical pixels (padding is cropped)."""
+        np.testing.assert_allclose(
+            np.asarray(tp.horiz_pass_valid(plane, k5, block_rows=block_rows)),
+            np.asarray(ref.horiz_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_rows_not_multiple_of_block(self, rng, k5):
+        """41 rows with block 16 forces the pad+crop path."""
+        a = jnp.asarray(rng.standard_normal((41, 30)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(tp.horiz_pass_valid(a, k5, block_rows=16)),
+            np.asarray(ref.horiz_valid(a, k5)),
+            atol=ATOL,
+        )
+
+
+class TestVertPass:
+    def test_matches_ref(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(tp.vert_pass_valid(plane, k5)),
+            np.asarray(ref.vert_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    @pytest.mark.parametrize("block_cols", [1, 8, 32, 128])
+    def test_block_cols_invariance(self, plane, k5, block_cols):
+        np.testing.assert_allclose(
+            np.asarray(tp.vert_pass_valid(plane, k5, block_cols=block_cols)),
+            np.asarray(ref.vert_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_cols_not_multiple_of_block(self, rng, k5):
+        a = jnp.asarray(rng.standard_normal((30, 41)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(tp.vert_pass_valid(a, k5, block_cols=16)),
+            np.asarray(ref.vert_valid(a, k5)),
+            atol=ATOL,
+        )
+
+
+class TestFusedTwoPass:
+    def test_matches_composed_ref(self, plane, k5):
+        """Fused kernel == the full twopass_ref interior."""
+        got = np.asarray(tp.twopass_valid_fused(plane, k5))
+        want = np.asarray(ref.twopass_ref(plane, k5))[2:-2, 2:-2]
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+class TestSinglePass:
+    def test_gridded_matches_ref(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(sp.singlepass_valid_gridded(plane, k5)),
+            np.asarray(ref.singlepass_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_whole_matches_ref(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(sp.singlepass_valid_whole(plane, k5)),
+            np.asarray(ref.singlepass_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_naive_matches_ref(self, plane, k5):
+        np.testing.assert_allclose(
+            np.asarray(sp.singlepass_valid_naive(plane, k5)),
+            np.asarray(ref.singlepass_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    @pytest.mark.parametrize("block_rows", [1, 4, 9, 16])
+    def test_gridded_block_invariance(self, plane, k5, block_rows):
+        np.testing.assert_allclose(
+            np.asarray(sp.singlepass_valid_gridded(plane, k5, block_rows=block_rows)),
+            np.asarray(ref.singlepass_valid(plane, k5)),
+            atol=ATOL,
+        )
+
+    def test_gridded_odd_rows(self, rng, k5):
+        """Output rows (R-4) not divisible by the band -> pad+crop path."""
+        a = jnp.asarray(rng.standard_normal((37, 29)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(sp.singlepass_valid_gridded(a, k5, block_rows=16)),
+            np.asarray(ref.singlepass_valid(a, k5)),
+            atol=ATOL,
+        )
+
+    def test_variants_bitwise_comparable(self, plane, k5):
+        """All unrolled variants share the tap order, so they agree far
+        tighter than ATOL (same-summation-order determinism)."""
+        g = np.asarray(sp.singlepass_valid_gridded(plane, k5))
+        w = np.asarray(sp.singlepass_valid_whole(plane, k5))
+        np.testing.assert_allclose(g, w, atol=1e-7)
+
+
+@pytest.mark.parametrize("width", [3, 5, 7])
+def test_kernel_width_generality(rng, width):
+    """The kernels are width-generic even though the paper fixes W=5."""
+    k = ref.gaussian_kernel(width, 1.0)
+    a = jnp.asarray(rng.standard_normal((32, 28)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(tp.horiz_pass_valid(a, k)),
+        np.asarray(ref.horiz_valid(a, k)),
+        atol=ATOL,
+    )
+    np.testing.assert_allclose(
+        np.asarray(sp.singlepass_valid_whole(a, k)),
+        np.asarray(ref.singlepass_valid(a, k)),
+        atol=ATOL,
+    )
+
+
+def test_minimum_viable_plane(k5):
+    """Smallest plane with a non-empty interior: 6x6 (one valid pixel... a
+    2x2 valid block for W=5 needs R=C=6)."""
+    a = jnp.asarray(np.arange(36, dtype=np.float32).reshape(6, 6))
+    got = np.asarray(sp.singlepass_valid_whole(a, k5))
+    assert got.shape == (2, 2)
+    np.testing.assert_allclose(got, np.asarray(ref.singlepass_valid(a, k5)), atol=ATOL)

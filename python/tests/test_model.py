@@ -1,0 +1,115 @@
+"""L2 graphs (model.py) vs oracles: plane composition, agglomeration,
+tiles, pyramid -- and the executable round-trip of the AOT artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+ATOL = 1e-5
+
+
+class TestFullImages:
+    @pytest.mark.parametrize("variant", ["gridded", "fused", "naive"])
+    def test_twopass_variants(self, image, k5, variant):
+        got = np.asarray(model.conv_image_twopass(image, k5, variant=variant))
+        want = np.asarray(ref.per_plane(ref.twopass_ref, image, k5))
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    @pytest.mark.parametrize("variant", ["gridded", "whole", "naive"])
+    def test_singlepass_variants(self, image, k5, variant):
+        got = np.asarray(model.conv_image_singlepass(image, k5, variant=variant))
+        want = np.asarray(ref.per_plane(ref.singlepass_ref, image, k5))
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_jit_matches_eager(self, image, k5):
+        eager = model.conv_image_twopass(image, k5)
+        jitted = jax.jit(lambda i, k: model.conv_image_twopass(i, k))(image, k5)
+        np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), atol=1e-6)
+
+    def test_output_shape_preserved(self, image, k5):
+        assert model.conv_image_twopass(image, k5).shape == image.shape
+        assert model.conv_image_singlepass(image, k5).shape == image.shape
+
+
+class TestAgglomeration:
+    def test_matches_per_plane_away_from_seams(self, image, k5):
+        """3RxC output == RxC output except the 2h-column seam bands (the
+        paper accepts the seam artefact; DESIGN.md section 4)."""
+        agg = np.asarray(model.conv_image_twopass_agglomerated(image, k5))
+        per = np.asarray(model.conv_image_twopass(image, k5))
+        np.testing.assert_allclose(agg[:, :, 4:-4], per[:, :, 4:-4], atol=ATOL)
+
+    def test_shape_roundtrip(self, image, k5):
+        agg = model.conv_image_twopass_agglomerated(image, k5)
+        assert agg.shape == image.shape
+
+    def test_interior_plane_seams_differ(self, image, k5):
+        """The seam bands must actually differ -- guards against silently
+        implementing per-plane under the agglomerated name.
+
+        In the 3RxC layout plane 1's columns 0..2h-1 are *interior* of the
+        wide image (convolved, reading plane 0 pixels across the seam),
+        whereas per-plane they are border pass-through."""
+        agg = np.asarray(model.conv_image_twopass_agglomerated(image, k5))
+        per = np.asarray(model.conv_image_twopass(image, k5))
+        assert not np.allclose(agg[1, 4:-4, 0:2], per[1, 4:-4, 0:2], atol=1e-6)
+        # plane 0's right seam likewise reads plane 1 pixels
+        assert not np.allclose(agg[0, 4:-4, -2:], per[0, 4:-4, -2:], atol=1e-6)
+
+
+class TestTiles:
+    """The row-band tile contracts used by the Rust execution models:
+    stitching convolved tiles reproduces the full-plane result."""
+
+    def test_horiz_tile_stitching(self, plane, k5):
+        r = plane.shape[0]
+        t = 8
+        bands = [model.horiz_tile(plane[i : i + t, :], k5) for i in range(0, r, t)]
+        got = np.asarray(jnp.concatenate(bands, axis=0))
+        np.testing.assert_allclose(got, np.asarray(ref.horiz_valid(plane, k5)), atol=ATOL)
+
+    def test_vert_tile_stitching(self, plane, k5):
+        """Haloed vertical tiles: band i covers output rows [i*t, i*t+t)."""
+        r = plane.shape[0]
+        t = 9  # (40-4)/9 = 4 bands
+        bands = [
+            model.vert_tile(plane[i : i + t + 4, :], k5) for i in range(0, r - 4, t)
+        ]
+        got = np.asarray(jnp.concatenate(bands, axis=0))
+        np.testing.assert_allclose(got, np.asarray(ref.vert_valid(plane, k5)), atol=ATOL)
+
+    def test_single_tile_stitching(self, plane, k5):
+        r = plane.shape[0]
+        t = 12  # (40-4)/12 = 3 bands
+        bands = [
+            model.single_tile(plane[i : i + t + 4, :], k5) for i in range(0, r - 4, t)
+        ]
+        got = np.asarray(jnp.concatenate(bands, axis=0))
+        np.testing.assert_allclose(
+            got, np.asarray(ref.singlepass_valid(plane, k5)), atol=ATOL
+        )
+
+
+class TestPyramid:
+    def test_levels_and_shapes(self, image, k5):
+        p = model.gaussian_pyramid(image, k5, levels=3)
+        assert len(p) == 3
+        assert p[0].shape == (3, 40, 36)
+        assert p[1].shape == (3, 20, 18)
+        assert p[2].shape == (3, 10, 9)
+
+    def test_level1_is_blur_then_decimate(self, image, k5):
+        p = model.gaussian_pyramid(image, k5, levels=2)
+        want = model.conv_image_twopass(image, k5)[:, ::2, ::2]
+        np.testing.assert_allclose(np.asarray(p[1]), np.asarray(want), atol=1e-6)
+
+    def test_pyramid_preserves_mean_roughly(self, k5):
+        """Blur preserves mean; decimation of a smooth field keeps it close."""
+        a = jnp.ones((3, 64, 64), jnp.float32) * 7.5
+        p = model.gaussian_pyramid(a, k5, levels=3)
+        for lvl in p:
+            np.testing.assert_allclose(np.asarray(lvl), 7.5, atol=1e-4)

@@ -1,0 +1,144 @@
+"""The oracles themselves, validated against brute-force python loops.
+
+Everything else in the project (Pallas kernels, HLO artifacts, native Rust
+engines) is tested against ``kernels/ref.py``; this file anchors ref.py to
+an implementation simple enough to audit by eye.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from .conftest import brute_force_singlepass, brute_force_twopass
+
+
+def test_gaussian_kernel_normalised(k5):
+    assert np.isclose(float(jnp.sum(k5)), 1.0, atol=1e-6)
+
+
+def test_gaussian_kernel_symmetric(k5):
+    k = np.asarray(k5)
+    assert np.allclose(k, k[::-1])
+
+
+def test_gaussian_kernel_peak_centre(k5):
+    k = np.asarray(k5)
+    assert np.argmax(k) == 2
+
+
+@pytest.mark.parametrize("width", [3, 5, 7, 9])
+def test_gaussian_kernel_widths(width):
+    k = ref.gaussian_kernel(width, 1.0)
+    assert k.shape == (width,)
+    assert np.isclose(float(jnp.sum(k)), 1.0, atol=1e-6)
+
+
+def test_gaussian_kernel_rejects_even_width():
+    with pytest.raises(ValueError):
+        ref.gaussian_kernel(4, 1.0)
+
+
+def test_outer_kernel_separable(k5):
+    kk = np.asarray(ref.outer_kernel(k5))
+    k = np.asarray(k5)
+    for i in range(5):
+        for j in range(5):
+            assert np.isclose(kk[i, j], k[i] * k[j])
+
+
+def test_singlepass_ref_vs_brute_force(plane, k5):
+    got = np.asarray(ref.singlepass_ref(plane, k5))
+    want = brute_force_singlepass(np.asarray(plane), np.asarray(k5))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_twopass_ref_vs_brute_force(plane, k5):
+    got = np.asarray(ref.twopass_ref(plane, k5))
+    want = brute_force_twopass(np.asarray(plane), np.asarray(k5))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_border_passthrough_singlepass(plane, k5):
+    out = np.asarray(ref.singlepass_ref(plane, k5))
+    a = np.asarray(plane)
+    np.testing.assert_array_equal(out[:2, :], a[:2, :])
+    np.testing.assert_array_equal(out[-2:, :], a[-2:, :])
+    np.testing.assert_array_equal(out[:, :2], a[:, :2])
+    np.testing.assert_array_equal(out[:, -2:], a[:, -2:])
+
+
+def test_border_passthrough_twopass(plane, k5):
+    out = np.asarray(ref.twopass_ref(plane, k5))
+    a = np.asarray(plane)
+    np.testing.assert_array_equal(out[:2, :], a[:2, :])
+    np.testing.assert_array_equal(out[-2:, :], a[-2:, :])
+    np.testing.assert_array_equal(out[:, :2], a[:, :2])
+    np.testing.assert_array_equal(out[:, -2:], a[:, -2:])
+
+
+def test_deep_interior_agreement(plane, k5):
+    """Single-pass and two-pass agree 2h pixels in (DESIGN.md section 4)."""
+    sp = ref.singlepass_ref(plane, k5)
+    tp = ref.twopass_ref(plane, k5)
+    np.testing.assert_allclose(
+        np.asarray(ref.deep_interior(sp)),
+        np.asarray(ref.deep_interior(tp)),
+        atol=1e-4,
+    )
+
+
+def test_near_border_band_differs(plane, k5):
+    """Rows 2..4 genuinely differ between the algorithms -- the paper's
+    two-pass reads horizontally-unfiltered border rows there. Guards
+    against an oracle 'fix' that would silently change the semantics."""
+    sp = np.asarray(ref.singlepass_ref(plane, k5))
+    tp = np.asarray(ref.twopass_ref(plane, k5))
+    assert not np.allclose(sp[2:4, 2:-2], tp[2:4, 2:-2], atol=1e-6)
+
+
+def test_constant_image_is_fixed_point(k5):
+    """A normalised kernel leaves a constant image unchanged."""
+    a = jnp.full((24, 24), 3.25, jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref.twopass_ref(a, k5)), 3.25, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.singlepass_ref(a, k5)), 3.25, atol=1e-5)
+
+
+def test_smoothing_reduces_variance(plane, k5):
+    """Gaussian blur must reduce interior variance of a noise image."""
+    out = np.asarray(ref.twopass_ref(plane, k5))
+    a = np.asarray(plane)
+    assert out[4:-4, 4:-4].var() < a[4:-4, 4:-4].var() * 0.5
+
+
+def test_agglomerate_roundtrip(image):
+    wide = ref.agglomerate(image)
+    assert wide.shape == (40, 3 * 36)
+    back = ref.deagglomerate(wide, 3)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(image))
+
+
+def test_per_plane_matches_manual(image, k5):
+    out = ref.per_plane(ref.twopass_ref, image, k5)
+    for p in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out[p]), np.asarray(ref.twopass_ref(image[p], k5)), atol=1e-6
+        )
+
+
+def test_linearity(plane, k5):
+    """Convolution is linear: conv(a+b) == conv(a)+conv(b)."""
+    b = plane[::-1, :]
+    lhs = np.asarray(ref.singlepass_valid(plane + b, k5))
+    rhs = np.asarray(ref.singlepass_valid(plane, k5)) + np.asarray(
+        ref.singlepass_valid(b, k5)
+    )
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+def test_valid_region_separability(plane, k5):
+    """On the fully-valid region, horiz(vert(a)) == singlepass(a): the
+    separable identity the two-pass algorithm exploits."""
+    hv = ref.vert_valid(ref.horiz_valid(plane, k5), k5)
+    sp = ref.singlepass_valid(plane, k5)
+    np.testing.assert_allclose(np.asarray(hv), np.asarray(sp), atol=1e-4)

@@ -1,0 +1,55 @@
+//! Bench: the PJRT request path — artifact compile times and per-request
+//! execution latency of the full-image / agglomerated / tile graphs.
+//!
+//! Not a paper exhibit; this is the §Perf subject for the runtime layer
+//! (EXPERIMENTS.md §Perf). `cargo bench --bench runtime_pjrt`.
+
+use phi_conv::image::{synth_image, Pattern};
+use phi_conv::metrics::{time_reps, Table};
+use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
+
+fn main() {
+    let reps: usize =
+        std::env::var("PHI_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let pool = match EnginePool::open(default_artifacts_dir()) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("skipping runtime_pjrt bench: {e}");
+            return;
+        }
+    };
+    let k = pool.manifest().kernel_values.clone();
+
+    let mut t = Table::new(
+        "PJRT runtime: compile + execute per artifact",
+        &["Artifact", "compile ms", "exec p50 ms", "Mpx/s"],
+    );
+    let entries: Vec<_> = pool
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| matches!(a.role.as_str(), "full" | "agg" | "tile"))
+        .map(|a| (a.name.clone(), a.inputs[0].shape.clone()))
+        .collect();
+    for (name, shape) in entries {
+        let engine = pool.engine(&name).unwrap();
+        let elements: usize = shape.iter().product();
+        // synthetic input of the right total element count
+        let img = synth_image(1, 1, elements, Pattern::Noise, 42);
+        let samples = time_reps(
+            || {
+                engine.run(&[&img.data, &k]).unwrap();
+            },
+            2,
+            reps,
+        );
+        let p50 = samples.median();
+        t.row(vec![
+            name.clone(),
+            format!("{:.1}", engine.compile_time_ms),
+            format!("{p50:.3}"),
+            format!("{:.1}", elements as f64 / p50 / 1e3),
+        ]);
+    }
+    println!("{}", t.to_text());
+}

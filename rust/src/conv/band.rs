@@ -1,0 +1,421 @@
+//! Row-band convolution primitives — the inner loops of every rung of the
+//! paper's optimisation ladder.
+//!
+//! Every function computes output rows `[r0, r1) ∩ [h, rows−h)` of one
+//! plane. The destination is passed as `dst_band`, a mutable slice
+//! covering exactly rows `[r0, r1)` (`(r1−r0)·cols` elements): parallel
+//! callers hand each worker a *disjoint* sub-slice of the output plane,
+//! which keeps the data-parallel sweep sound without aliased `&mut`.
+//! Sequential callers pass the whole plane with `r0=0, r1=rows`.
+//!
+//! Bands self-clamp to the interior, so callers may pass raw partitions
+//! of `[0, rows)`; the execution models' invariant is only "cover
+//! `[0, rows)` disjointly", which the property tests check.
+//!
+//! `scalar` variants are per-pixel indexed arithmetic (the paper's
+//! `-no-vec` shape); `simd` variants are whole-row slice/window sweeps
+//! (the `#pragma simd` shape — see `conv/mod.rs` for the mapping
+//! rationale). Tap summation order matches the Pallas kernels (u outer,
+//! v inner) so PJRT and native outputs agree to float-associativity
+//! tolerance.
+
+use super::HALO;
+
+#[inline]
+fn band_range(rows: usize, h: usize, r0: usize, r1: usize) -> (usize, usize) {
+    (r0.max(h), r1.min(rows.saturating_sub(h)))
+}
+
+#[inline(always)]
+fn dot5(w: &[f32], k: &[f32]) -> f32 {
+    w[0] * k[0] + w[1] * k[1] + w[2] * k[2] + w[3] * k[3] + w[4] * k[4]
+}
+
+// ---------------------------------------------------------------------------
+// Opt-0: naive single-pass — generic width, 4 nested loops, per-pixel
+// ---------------------------------------------------------------------------
+
+/// The paper's naive code: 2 image loops × 2 kernel loops, indexed loads,
+/// accumulation in a scalar. Generic over odd kernel width.
+pub fn singlepass_naive_band(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = width / 2;
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            for u in 0..width {
+                for v in 0..width {
+                    s += src[(i + u - h) * cols + (j + v - h)] * k2d[u * width + v];
+                }
+            }
+            out[j] = s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Opt-1/2: unrolled single-pass (W=5), scalar and simd shapes
+// ---------------------------------------------------------------------------
+
+/// Opt-1: hand-unrolled 25-term expression per pixel, indexed loads (the
+/// paper's Eq. 3), one pixel at a time.
+pub fn singlepass_band_scalar(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32; 25],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            // u-outer / v-inner, all 25 terms written out via the 5-term
+            // row sub-expressions (paper Eq. 3 shape).
+            for u in 0..5usize {
+                let base = (i + u - h) * cols + j - h;
+                s += src[base] * k2d[u * 5]
+                    + src[base + 1] * k2d[u * 5 + 1]
+                    + src[base + 2] * k2d[u * 5 + 2]
+                    + src[base + 3] * k2d[u * 5 + 3]
+                    + src[base + 4] * k2d[u * 5 + 4];
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Opt-2: the SIMD shape — for each of the 5 source rows, sweep a
+/// 5-window dot product across the whole output row (vectorisable), and
+/// accumulate rows into the destination slice.
+pub fn singlepass_band_simd(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32; 25],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        // u = 0 initialises, u = 1..5 accumulate (tap order = Pallas).
+        let row0 = &src[(i - h) * cols..(i - h) * cols + cols];
+        for (o, win) in out.iter_mut().zip(row0.windows(5)) {
+            *o = dot5(win, &k2d[0..5]);
+        }
+        for u in 1..5usize {
+            let row = &src[(i + u - h) * cols..(i + u - h) * cols + cols];
+            let ku = &k2d[u * 5..u * 5 + 5];
+            for (o, win) in out.iter_mut().zip(row.windows(5)) {
+                *o += dot5(win, ku);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Opt-3/4: two-pass (W=5), scalar and simd shapes
+// ---------------------------------------------------------------------------
+
+/// Horizontal pass, scalar shape: `dst[i][j] = Σ_v src[i][j−2+v]·k[v]`
+/// for interior i, j (paper Listing 1, first loop nest).
+pub fn horiz_band_scalar(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let base = i * cols + j - h;
+            out[j] = src[base] * k[0]
+                + src[base + 1] * k[1]
+                + src[base + 2] * k[2]
+                + src[base + 3] * k[3]
+                + src[base + 4] * k[4];
+        }
+    }
+}
+
+/// Horizontal pass, SIMD shape: one 5-window sweep per row.
+pub fn horiz_band_simd(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let row = &src[i * cols..(i + 1) * cols];
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        for (o, win) in out.iter_mut().zip(row.windows(5)) {
+            *o = dot5(win, k);
+        }
+    }
+}
+
+/// Vertical pass, scalar shape: `dst[i][j] = Σ_u src[i−2+u][j]·k[u]`
+/// for interior i, j (paper Listing 1, second loop nest).
+pub fn vert_band_scalar(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            out[j] = src[(i - 2) * cols + j] * k[0]
+                + src[(i - 1) * cols + j] * k[1]
+                + src[i * cols + j] * k[2]
+                + src[(i + 1) * cols + j] * k[3]
+                + src[(i + 2) * cols + j] * k[4];
+        }
+    }
+}
+
+/// Vertical pass, SIMD shape: five aligned row-slice FMAs per output row —
+/// columns are contiguous so this vectorises trivially.
+pub fn vert_band_simd(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let (s0, s1, s2, s3, s4) = (
+            &src[(i - 2) * cols + h..(i - 2) * cols + h + w],
+            &src[(i - 1) * cols + h..(i - 1) * cols + h + w],
+            &src[i * cols + h..i * cols + h + w],
+            &src[(i + 1) * cols + h..(i + 1) * cols + h + w],
+            &src[(i + 2) * cols + h..(i + 2) * cols + h + w],
+        );
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        for jj in 0..w {
+            out[jj] = s0[jj] * k[0] + s1[jj] * k[1] + s2[jj] * k[2] + s3[jj] * k[3] + s4[jj] * k[4];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// copy-back (the single-pass algorithm's extra pass, paper section 7)
+// ---------------------------------------------------------------------------
+
+/// Scalar copy-back: per-pixel indexed assignment of rows `[r0, r1)`.
+pub fn copy_back_band_scalar(src: &[f32], dst_band: &mut [f32], cols: usize, r0: usize, r1: usize) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    for i in r0..r1 {
+        for j in 0..cols {
+            dst_band[(i - r0) * cols + j] = src[i * cols + j];
+        }
+    }
+}
+
+/// SIMD copy-back: one block `copy_from_slice` (memcpy).
+pub fn copy_back_band_simd(src: &[f32], dst_band: &mut [f32], cols: usize, r0: usize, r1: usize) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    dst_band.copy_from_slice(&src[r0 * cols..r1 * cols]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{gaussian_kernel, gaussian_kernel2d};
+    use crate::util::prng::Prng;
+
+    const R: usize = 24;
+    const C: usize = 20;
+
+    fn noise(seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..R * C).map(|_| p.normal()).collect()
+    }
+
+    fn k5() -> ([f32; 5], [f32; 25]) {
+        let k = gaussian_kernel(5, 1.0);
+        let k2 = gaussian_kernel2d(&k);
+        (k.try_into().unwrap(), k2.try_into().unwrap())
+    }
+
+    /// brute-force oracle for single-pass interior
+    fn oracle_singlepass(src: &[f32], k2d: &[f32; 25]) -> Vec<f32> {
+        let mut out = src.to_vec();
+        for i in 2..R - 2 {
+            for j in 2..C - 2 {
+                let mut s = 0.0;
+                for u in 0..5 {
+                    for v in 0..5 {
+                        s += src[(i + u - 2) * C + j + v - 2] * k2d[u * 5 + v];
+                    }
+                }
+                out[i * C + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_simd_naive_all_agree() {
+        let src = noise(1);
+        let (_k, k2) = k5();
+        let want = oracle_singlepass(&src, &k2);
+
+        let mut d1 = src.clone();
+        singlepass_naive_band(&src, &mut d1, R, C, &k2, 5, 0, R);
+        let mut d2 = src.clone();
+        singlepass_band_scalar(&src, &mut d2, R, C, &k2, 0, R);
+        let mut d3 = src.clone();
+        singlepass_band_simd(&src, &mut d3, R, C, &k2, 0, R);
+
+        for (name, d) in [("naive", &d1), ("scalar", &d2), ("simd", &d3)] {
+            for (g, w) in d.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{name}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn horiz_scalar_simd_agree() {
+        let src = noise(2);
+        let (k, _) = k5();
+        let mut a = src.clone();
+        horiz_band_scalar(&src, &mut a, R, C, &k, 0, R);
+        let mut b = src.clone();
+        horiz_band_simd(&src, &mut b, R, C, &k, 0, R);
+        assert_eq!(a, b, "identical tap order ⇒ bitwise equal");
+    }
+
+    #[test]
+    fn vert_scalar_simd_agree() {
+        let src = noise(3);
+        let (k, _) = k5();
+        let mut a = src.clone();
+        vert_band_scalar(&src, &mut a, R, C, &k, 0, R);
+        let mut b = src.clone();
+        vert_band_simd(&src, &mut b, R, C, &k, 0, R);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bands_clamp_to_interior() {
+        let src = noise(4);
+        let (k, _) = k5();
+        let mut d = src.clone();
+        horiz_band_simd(&src, &mut d, R, C, &k, 0, R);
+        // rows 0..2 and R-2..R untouched
+        for j in 0..C {
+            assert_eq!(d[j], src[j]);
+            assert_eq!(d[(R - 1) * C + j], src[(R - 1) * C + j]);
+        }
+        // border columns untouched too
+        for i in 0..R {
+            assert_eq!(d[i * C], src[i * C]);
+            assert_eq!(d[i * C + C - 1], src[i * C + C - 1]);
+        }
+    }
+
+    #[test]
+    fn banded_partition_equals_full_sweep() {
+        let src = noise(5);
+        let (_, k2) = k5();
+        let mut full = src.clone();
+        singlepass_band_simd(&src, &mut full, R, C, &k2, 0, R);
+        // disjoint banded sub-slices, exactly how the models call it
+        let mut parts = src.clone();
+        {
+            let (b0, rest) = parts.split_at_mut(7 * C);
+            let (b1, b2) = rest.split_at_mut((15 - 7) * C);
+            singlepass_band_simd(&src, b0, R, C, &k2, 0, 7);
+            singlepass_band_simd(&src, b1, R, C, &k2, 7, 15);
+            singlepass_band_simd(&src, b2, R, C, &k2, 15, R);
+        }
+        assert_eq!(full, parts);
+    }
+
+    #[test]
+    fn empty_band_is_noop() {
+        let src = noise(6);
+        let (k, _) = k5();
+        let mut d: Vec<f32> = vec![];
+        horiz_band_simd(&src, &mut d, R, C, &k, 10, 10);
+        // band entirely inside the top border: values untouched
+        let mut d2 = vec![9f32; 2 * C];
+        vert_band_scalar(&src, &mut d2, R, C, &k, 0, 2);
+        assert!(d2.iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn copy_back_variants_agree() {
+        let src = noise(7);
+        let mut a = vec![0f32; (17 - 3) * C];
+        let mut b = vec![0f32; (17 - 3) * C];
+        copy_back_band_scalar(&src, &mut a, C, 3, 17);
+        copy_back_band_simd(&src, &mut b, C, 3, 17);
+        assert_eq!(a, b);
+        assert_eq!(a[0], src[3 * C]);
+    }
+
+    #[test]
+    fn naive_generic_width3() {
+        // width-3 box kernel sanity: interior = local mean of ones = 1
+        let src = vec![1.0f32; R * C];
+        let k2 = vec![1.0 / 9.0; 9];
+        let mut d = src.clone();
+        singlepass_naive_band(&src, &mut d, R, C, &k2, 3, 0, R);
+        for i in 1..R - 1 {
+            for j in 1..C - 1 {
+                assert!((d[i * C + j] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+}

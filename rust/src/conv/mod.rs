@@ -1,0 +1,41 @@
+//! Native convolution engines: the paper's optimisation ladder.
+//!
+//! The paper walks a naive single-pass convolution through loop
+//! unrolling, SIMD vectorisation and an algorithmic switch to the
+//! separable two-pass form (section 5.2, Figure 1/4). These engines
+//! mirror each rung in Rust:
+//!
+//! | rung  | paper                              | here                          |
+//! |-------|------------------------------------|-------------------------------|
+//! | Opt-0 | naive 4-loop, `-no-vec`            | [`band::singlepass_naive_band`] |
+//! | Opt-1 | unrolled 25-term, `-no-vec`        | [`band::singlepass_band`] (scalar) |
+//! | Opt-2 | + `#pragma simd`                   | [`band::singlepass_band`] (simd) |
+//! | Opt-3 | two-pass unrolled, `-no-vec`       | [`band::horiz_band`]/[`band::vert_band`] (scalar) |
+//! | Opt-4 | + `#pragma simd`                   | same (simd)                   |
+//!
+//! *Vectorisation analogue.* `-no-vec` vs `#pragma simd` on the Xeon Phi
+//! toggles use of the 512-bit VPU. Here the split is structural: `scalar`
+//! variants compute one pixel at a time through index arithmetic (the
+//! compiler is told nothing about independence), while `simd` variants
+//! express each output row as five shifted whole-row slice operations —
+//! the shape LLVM reliably auto-vectorises (and exactly the shape of the
+//! Pallas kernels, which keeps Rust↔PJRT numerics aligned). The measured
+//! scalar/simd ratio on the host plays the role of the paper's
+//! no-vec/SIMD columns in Table 1.
+//!
+//! All engines work on *row bands* `[r0, r1)` so the execution models in
+//! [`crate::models`] can parallelise the outer loop exactly like
+//! `#pragma omp parallel for` / GPRM's `par_cont_for` / OpenCL NDRange
+//! partitioning do in the paper.
+
+pub mod band;
+pub mod plane;
+
+pub use plane::{convolve_image, convolve_image_into, convolve_plane, Algorithm, Variant, Workspace};
+
+/// Halo of the paper's 5-wide kernel.
+pub const HALO: usize = 2;
+
+/// Fixed kernel width of the unrolled engines (the paper hand-unrolls
+/// W=5; the generic-width naive engine accepts any odd width).
+pub const WIDTH: usize = 5;

@@ -1,0 +1,342 @@
+//! Whole-plane / whole-image sequential drivers over the band primitives.
+//!
+//! These are the "sequential code" of the paper's speedup denominators:
+//! every parallel execution model must produce pixel-identical output to
+//! these drivers (integration tests enforce it).
+
+use anyhow::{bail, Result};
+
+use crate::image::{gaussian_kernel2d, PlanarImage};
+
+use super::band;
+
+/// Which algorithm (paper sections 5.1 / 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// naive or unrolled direct convolution, then copy B back over A.
+    SinglePassCopyBack,
+    /// direct convolution into B, no copy-back (section 7).
+    SinglePassNoCopy,
+    /// separable horizontal+vertical passes; result lands in A.
+    TwoPass,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "singlepass" | "singlepass-copyback" => Algorithm::SinglePassCopyBack,
+            "singlepass-nocopy" => Algorithm::SinglePassNoCopy,
+            "twopass" => Algorithm::TwoPass,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algorithm::SinglePassCopyBack => "singlepass",
+            Algorithm::SinglePassNoCopy => "singlepass-nocopy",
+            Algorithm::TwoPass => "twopass",
+        }
+    }
+}
+
+/// Which rung of the ladder (paper section 5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// 4 nested loops, per-pixel (Opt-0 shape). Single-pass only.
+    Naive,
+    /// unrolled taps, per-pixel indexed arithmetic (`-no-vec` shape).
+    Scalar,
+    /// unrolled taps, whole-row slice sweeps (`#pragma simd` shape).
+    Simd,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "naive" => Variant::Naive,
+            "scalar" | "no-vec" => Variant::Scalar,
+            "simd" => Variant::Simd,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Scalar => "no-vec",
+            Variant::Simd => "simd",
+        }
+    }
+}
+
+/// Convolve one plane `a` (in place, paper semantics) using scratch `b`.
+///
+/// * `TwoPass`: horizontal a→b, vertical b→a; result in `a`.
+/// * `SinglePassNoCopy`: direct a→b; result in `b` (`b` must start as a
+///   copy of `a` so its border band carries the pass-through pixels).
+/// * `SinglePassCopyBack`: direct a→b then copy b→a; result in `a`.
+pub fn convolve_plane(
+    a: &mut [f32],
+    b: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+) -> Result<()> {
+    if k.len() != 5 && variant != Variant::Naive {
+        bail!("unrolled engines are specialised to width 5, got {}", k.len());
+    }
+    if a.len() != rows * cols || b.len() != rows * cols {
+        bail!("plane buffers must be rows*cols");
+    }
+    let k2d = gaussian_kernel2d(k);
+    match (algorithm, variant) {
+        (Algorithm::TwoPass, Variant::Naive) => {
+            bail!("the paper's naive rung is single-pass only (Opt-0)")
+        }
+        (Algorithm::TwoPass, Variant::Scalar) => {
+            band::horiz_band_scalar(a, b, rows, cols, five(k), 0, rows);
+            band::vert_band_scalar(b, a, rows, cols, five(k), 0, rows);
+        }
+        (Algorithm::TwoPass, Variant::Simd) => {
+            band::horiz_band_simd(a, b, rows, cols, five(k), 0, rows);
+            band::vert_band_simd(b, a, rows, cols, five(k), 0, rows);
+        }
+        (alg, variant) => {
+            match variant {
+                Variant::Naive => band::singlepass_naive_band(a, b, rows, cols, &k2d, k.len(), 0, rows),
+                Variant::Scalar => {
+                    band::singlepass_band_scalar(a, b, rows, cols, k2d25(&k2d), 0, rows)
+                }
+                Variant::Simd => band::singlepass_band_simd(a, b, rows, cols, k2d25(&k2d), 0, rows),
+            }
+            if alg == Algorithm::SinglePassCopyBack {
+                match variant {
+                    Variant::Simd => band::copy_back_band_simd(b, a, cols, 0, rows),
+                    _ => band::copy_back_band_scalar(b, a, cols, 0, rows),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn five(k: &[f32]) -> &[f32; 5] {
+    k.try_into().expect("width-5 kernel")
+}
+
+fn k2d25(k2d: &[f32]) -> &[f32; 25] {
+    k2d.try_into().expect("5x5 kernel")
+}
+
+/// Reusable buffers for repeated convolutions (perf pass, EXPERIMENTS.md
+/// §Perf iteration 1): a fresh `Vec` per call costs an allocation plus
+/// first-touch page faults — ~2.5 ms at 576²×3, more than the convolution
+/// itself. The paper's benchmark loop convolves the same arrays 1000
+/// times in place; `Workspace` restores that pattern.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    /// wide buffers for the 3R×C agglomerated layout
+    pub wide_a: Vec<f32>,
+    pub wide_b: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fill `a` and `b` for a convolution, reusing capacity.
+    ///
+    /// `a` is a full copy. `b` nominally "starts as a copy of A"
+    /// (DESIGN.md §4), but only its border band is ever *read* before
+    /// being written — the vertical pass reads B's top/bottom `h` rows,
+    /// and the single-pass result's pass-through pixels are B's border
+    /// ring — so only the border ring is copied (§Perf iteration 3:
+    /// ~19 % off the two-pass sequential path at 576²).
+    pub fn load(&mut self, img: &PlanarImage) {
+        self.a.clear();
+        self.a.extend_from_slice(&img.data);
+        let n = img.data.len();
+        self.b.resize(n, 0.0);
+        let h = crate::conv::HALO;
+        let (rows, cols) = (img.rows, img.cols);
+        if rows <= 2 * h || cols <= 2 * h {
+            self.b.copy_from_slice(&img.data);
+            return;
+        }
+        let plane_len = rows * cols;
+        for p in 0..img.planes {
+            let src = &img.data[p * plane_len..(p + 1) * plane_len];
+            let dst = &mut self.b[p * plane_len..(p + 1) * plane_len];
+            // top and bottom h rows
+            dst[..h * cols].copy_from_slice(&src[..h * cols]);
+            dst[(rows - h) * cols..].copy_from_slice(&src[(rows - h) * cols..]);
+            // left and right h columns of the interior rows
+            for i in h..rows - h {
+                dst[i * cols..i * cols + h].copy_from_slice(&src[i * cols..i * cols + h]);
+                dst[(i + 1) * cols - h..(i + 1) * cols]
+                    .copy_from_slice(&src[(i + 1) * cols - h..(i + 1) * cols]);
+            }
+        }
+    }
+}
+
+/// Convolve an image using caller-owned buffers; returns the slice (in
+/// the workspace) holding the result. No allocation after the first call
+/// at a given size.
+pub fn convolve_image_into<'ws>(
+    ws: &'ws mut Workspace,
+    img: &PlanarImage,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+) -> Result<&'ws [f32]> {
+    ws.load(img);
+    let (rows, cols) = (img.rows, img.cols);
+    let plane_len = rows * cols;
+    for p in 0..img.planes {
+        let a = &mut ws.a[p * plane_len..(p + 1) * plane_len];
+        let b = &mut ws.b[p * plane_len..(p + 1) * plane_len];
+        convolve_plane(a, b, rows, cols, k, algorithm, variant)?;
+    }
+    Ok(match algorithm {
+        Algorithm::SinglePassNoCopy => &ws.b,
+        _ => &ws.a,
+    })
+}
+
+/// Convolve every plane of an image sequentially (the paper's `conv`
+/// wrapper, Listing 1). Returns the convolved image; `img` is consumed as
+/// the working buffer.
+pub fn convolve_image(
+    mut img: PlanarImage,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+) -> Result<PlanarImage> {
+    let (rows, cols) = (img.rows, img.cols);
+    let mut scratch_img = img.clone(); // B starts as a copy of A (DESIGN.md §4)
+    for p in 0..img.planes {
+        let a = img.plane_mut(p);
+        let b = scratch_img.plane_mut(p);
+        convolve_plane(a, b, rows, cols, k, algorithm, variant)?;
+    }
+    Ok(match algorithm {
+        Algorithm::SinglePassNoCopy => scratch_img, // result lives in B
+        _ => img,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{gaussian_kernel, synth_image, Pattern};
+
+    fn setup() -> (PlanarImage, Vec<f32>) {
+        (synth_image(3, 24, 20, Pattern::Noise, 11), gaussian_kernel(5, 1.0))
+    }
+
+    #[test]
+    fn all_singlepass_variants_identical_pixels() {
+        let (img, k) = setup();
+        let cb = convolve_image(img.clone(), &k, Algorithm::SinglePassCopyBack, Variant::Simd).unwrap();
+        let nc = convolve_image(img.clone(), &k, Algorithm::SinglePassNoCopy, Variant::Simd).unwrap();
+        let nv = convolve_image(img.clone(), &k, Algorithm::SinglePassCopyBack, Variant::Scalar).unwrap();
+        let na = convolve_image(img.clone(), &k, Algorithm::SinglePassCopyBack, Variant::Naive).unwrap();
+        assert_eq!(cb, nc, "copy-back only changes where the result lives");
+        assert!(cb.max_abs_diff(&nv) < 1e-6);
+        assert!(cb.max_abs_diff(&na) < 1e-5);
+    }
+
+    #[test]
+    fn twopass_variants_identical_pixels() {
+        let (img, k) = setup();
+        let a = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let b = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Scalar).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deep_interior_agreement_between_algorithms() {
+        let (img, k) = setup();
+        let sp = convolve_image(img.clone(), &k, Algorithm::SinglePassNoCopy, Variant::Simd).unwrap();
+        let tp = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        assert!(sp.max_abs_diff_deep(&tp, 2) < 1e-4);
+        // ...but they genuinely differ near the border band
+        assert!(sp.max_abs_diff(&tp) > 1e-4);
+    }
+
+    #[test]
+    fn border_passthrough() {
+        let (img, k) = setup();
+        for alg in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy, Algorithm::TwoPass] {
+            let out = convolve_image(img.clone(), &k, alg, Variant::Simd).unwrap();
+            for p in 0..3 {
+                for j in 0..img.cols {
+                    assert_eq!(out.get(p, 0, j), img.get(p, 0, j), "{alg:?}");
+                    assert_eq!(out.get(p, 1, j), img.get(p, 1, j));
+                    assert_eq!(out.get(p, img.rows - 1, j), img.get(p, img.rows - 1, j));
+                }
+                for i in 0..img.rows {
+                    assert_eq!(out.get(p, i, 0), img.get(p, i, 0));
+                    assert_eq!(out.get(p, i, img.cols - 1), img.get(p, i, img.cols - 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_image_fixed_point() {
+        let img = synth_image(1, 16, 16, Pattern::Constant, 0);
+        let k = gaussian_kernel(5, 1.0);
+        for alg in [Algorithm::SinglePassNoCopy, Algorithm::TwoPass] {
+            let out = convolve_image(img.clone(), &k, alg, Variant::Simd).unwrap();
+            for &v in &out.data {
+                assert!((v - 0.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn ramp_invariance() {
+        // Gaussian of a horizontal ramp = same ramp on the interior.
+        let img = synth_image(1, 16, 32, Pattern::RampX, 0);
+        let k = gaussian_kernel(5, 1.0);
+        let out = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        for i in 2..14 {
+            for j in 2..30 {
+                assert!((out.get(0, i, j) - j as f32).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_twopass_rejected() {
+        let (img, k) = setup();
+        assert!(convolve_image(img, &k, Algorithm::TwoPass, Variant::Naive).is_err());
+    }
+
+    #[test]
+    fn width5_enforced_for_unrolled() {
+        let (img, _) = setup();
+        let k3 = gaussian_kernel(3, 1.0);
+        assert!(convolve_image(img.clone(), &k3, Algorithm::TwoPass, Variant::Simd).is_err());
+        // but the naive generic engine accepts width 3
+        assert!(convolve_image(img, &k3, Algorithm::SinglePassCopyBack, Variant::Naive).is_ok());
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for a in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy, Algorithm::TwoPass] {
+            assert_eq!(Algorithm::parse(a.label()), Some(a));
+        }
+        for v in [Variant::Naive, Variant::Scalar, Variant::Simd] {
+            assert_eq!(Variant::parse(v.label()), Some(v));
+        }
+    }
+}

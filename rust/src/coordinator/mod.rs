@@ -1,0 +1,25 @@
+//! L3 coordinator: request router + batcher serving convolution jobs.
+//!
+//! The serving loop a downstream user would deploy: requests (images +
+//! algorithm choice) enter a queue; executor threads drain it and run
+//! each request on a backend —
+//!
+//! * **native** engines under any of the three execution models, or
+//! * the **PJRT** path: the AOT-compiled Pallas artifacts loaded by
+//!   [`crate::runtime`] (Python never runs here; artifacts were lowered
+//!   at build time).
+//!
+//! Routing encodes the paper's own conclusion as policy
+//! ([`RoutePolicy::PaperAdaptive`]): OpenMP-style scheduling for small
+//! images, GPRM-style with 3R×C task agglomeration for large ones
+//! ("in terms of performance, OpenMP is the winning model, except for
+//! very large images where GPRM shows better performance after using
+//! task agglomeration").
+
+mod request;
+mod router;
+mod server;
+
+pub use request::{ConvRequest, ConvResponse};
+pub use router::{Backend, RoutePolicy};
+pub use server::{Coordinator, CoordinatorStats};

@@ -1,0 +1,104 @@
+//! Request/response types of the serving API.
+
+use crate::conv::{Algorithm, Variant};
+use crate::image::PlanarImage;
+use crate::models::Layout;
+
+use super::router::Backend;
+
+/// One convolution job.
+#[derive(Debug, Clone)]
+pub struct ConvRequest {
+    pub id: u64,
+    pub image: PlanarImage,
+    pub algorithm: Algorithm,
+    pub variant: Variant,
+    /// `None` → the coordinator's routing policy decides.
+    pub backend: Option<Backend>,
+    /// `None` → policy decides (paper-adaptive picks 3R×C for large).
+    pub layout: Option<Layout>,
+}
+
+impl ConvRequest {
+    /// A default request: two-pass SIMD, routing left to policy.
+    pub fn new(id: u64, image: PlanarImage) -> Self {
+        Self {
+            id,
+            image,
+            algorithm: Algorithm::TwoPass,
+            variant: Variant::Simd,
+            backend: None,
+            layout: None,
+        }
+    }
+
+    pub fn with_algorithm(mut self, a: Algorithm) -> Self {
+        self.algorithm = a;
+        self
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_backend(mut self, b: Backend) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    pub fn with_layout(mut self, l: Layout) -> Self {
+        self.layout = Some(l);
+        self
+    }
+}
+
+/// The served result.
+#[derive(Debug)]
+pub struct ConvResponse {
+    pub id: u64,
+    pub image: PlanarImage,
+    /// which backend actually ran it
+    pub backend: Backend,
+    pub layout: Layout,
+    /// time spent waiting in the queue
+    pub queue_ms: f64,
+    /// time spent convolving
+    pub service_ms: f64,
+}
+
+impl ConvResponse {
+    pub fn latency_ms(&self) -> f64 {
+        self.queue_ms + self.service_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{synth_image, Pattern};
+
+    #[test]
+    fn builder_chain() {
+        let img = synth_image(3, 16, 16, Pattern::Noise, 0);
+        let r = ConvRequest::new(7, img)
+            .with_algorithm(Algorithm::SinglePassNoCopy)
+            .with_variant(Variant::Scalar)
+            .with_backend(Backend::NativeOpenMp)
+            .with_layout(Layout::Agglomerated);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
+        assert_eq!(r.variant, Variant::Scalar);
+        assert_eq!(r.backend, Some(Backend::NativeOpenMp));
+        assert_eq!(r.layout, Some(Layout::Agglomerated));
+    }
+
+    #[test]
+    fn defaults_leave_routing_to_policy() {
+        let img = synth_image(3, 16, 16, Pattern::Noise, 0);
+        let r = ConvRequest::new(1, img);
+        assert!(r.backend.is_none());
+        assert!(r.layout.is_none());
+        assert_eq!(r.algorithm, Algorithm::TwoPass);
+    }
+}

@@ -1,0 +1,122 @@
+//! Routing policy: which backend + layout serves a request.
+
+use crate::models::Layout;
+
+/// An executable backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// native engines under OpenMP-style static fork-join
+    NativeOpenMp,
+    /// native engines under OpenCL-style NDRange work-groups
+    NativeOpenCl,
+    /// native engines under GPRM-style task scheduling
+    NativeGprm,
+    /// the AOT Pallas artifact through PJRT (full-image graphs)
+    Pjrt,
+}
+
+impl Backend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::NativeOpenMp => "openmp",
+            Backend::NativeOpenCl => "opencl",
+            Backend::NativeGprm => "gprm",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "openmp" => Backend::NativeOpenMp,
+            "opencl" => Backend::NativeOpenCl,
+            "gprm" => Backend::NativeGprm,
+            "pjrt" => Backend::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// How unrouted requests are assigned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// everything to one backend
+    Fixed(Backend),
+    /// cycle through the three native models (load comparison runs)
+    RoundRobin,
+    /// the paper's conclusion as policy: OpenMP R×C below the size
+    /// threshold, GPRM 3R×C at/above it (section 9: "OpenMP is the
+    /// winning model, except for very large images where GPRM shows
+    /// better performance after using task agglomeration").
+    PaperAdaptive {
+        /// row count at/above which GPRM+agglomeration wins
+        large_threshold: usize,
+    },
+}
+
+impl RoutePolicy {
+    /// Default adaptive threshold: the paper's crossover is at its
+    /// largest image (8748); scaled to host measurement sizes we use the
+    /// top artifact size.
+    pub fn paper_default() -> Self {
+        RoutePolicy::PaperAdaptive { large_threshold: 1152 }
+    }
+
+    /// Decide (backend, layout) for a request of `rows` rows, given how
+    /// many requests were routed before it (for round-robin).
+    pub fn route(&self, rows: usize, seq: u64) -> (Backend, Layout) {
+        match *self {
+            RoutePolicy::Fixed(b) => (b, Layout::PerPlane),
+            RoutePolicy::RoundRobin => {
+                let b = match seq % 3 {
+                    0 => Backend::NativeOpenMp,
+                    1 => Backend::NativeOpenCl,
+                    _ => Backend::NativeGprm,
+                };
+                (b, Layout::PerPlane)
+            }
+            RoutePolicy::PaperAdaptive { large_threshold } => {
+                if rows >= large_threshold {
+                    (Backend::NativeGprm, Layout::Agglomerated)
+                } else {
+                    (Backend::NativeOpenMp, Layout::PerPlane)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_routes_everything() {
+        let p = RoutePolicy::Fixed(Backend::Pjrt);
+        assert_eq!(p.route(64, 0), (Backend::Pjrt, Layout::PerPlane));
+        assert_eq!(p.route(8748, 9), (Backend::Pjrt, Layout::PerPlane));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = RoutePolicy::RoundRobin;
+        assert_eq!(p.route(64, 0).0, Backend::NativeOpenMp);
+        assert_eq!(p.route(64, 1).0, Backend::NativeOpenCl);
+        assert_eq!(p.route(64, 2).0, Backend::NativeGprm);
+        assert_eq!(p.route(64, 3).0, Backend::NativeOpenMp);
+    }
+
+    #[test]
+    fn paper_adaptive_crossover() {
+        let p = RoutePolicy::PaperAdaptive { large_threshold: 1000 };
+        assert_eq!(p.route(999, 0), (Backend::NativeOpenMp, Layout::PerPlane));
+        assert_eq!(p.route(1000, 0), (Backend::NativeGprm, Layout::Agglomerated));
+    }
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [Backend::NativeOpenMp, Backend::NativeOpenCl, Backend::NativeGprm, Backend::Pjrt] {
+            assert_eq!(Backend::parse(b.label()), Some(b));
+        }
+        assert_eq!(Backend::parse("bogus"), None);
+    }
+}

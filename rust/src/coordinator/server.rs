@@ -1,0 +1,355 @@
+//! The coordinator itself: queue, executor threads, metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::conv::Algorithm;
+use crate::image::PlanarImage;
+use crate::metrics::SampleSet;
+use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
+use crate::runtime::{Manifest, PjrtHandle};
+
+use super::request::{ConvRequest, ConvResponse};
+use super::router::{Backend, RoutePolicy};
+
+struct Job {
+    req: ConvRequest,
+    enqueued: Instant,
+    reply: Sender<Result<ConvResponse>>,
+}
+
+/// Per-backend serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CoordinatorStats {
+    pub served: u64,
+    pub errors: u64,
+    pub pjrt_fallbacks: u64,
+    pub service_ms: HashMap<&'static str, SampleSet>,
+    pub queue_ms: SampleSet,
+}
+
+struct Inner {
+    policy: RoutePolicy,
+    openmp: OpenMpModel,
+    opencl: OpenClModel,
+    gprm: GprmModel,
+    kernel: Vec<f32>,
+    /// manifest (shape lookups, caller side) + execution handle (actor)
+    pjrt: Option<(Manifest, PjrtHandle)>,
+    stats: Mutex<CoordinatorStats>,
+    seq: AtomicU64,
+}
+
+/// The serving loop (see module docs).
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    tx: Option<Sender<Job>>,
+    executors: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build from a run config. `with_pjrt` loads the artifact pool (set
+    /// false for native-only serving, e.g. when artifacts aren't built).
+    pub fn new(cfg: &RunConfig, policy: RoutePolicy, executors: usize, with_pjrt: bool) -> Result<Self> {
+        let pjrt = if with_pjrt {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let handle = PjrtHandle::spawn(&cfg.artifacts_dir).context("starting PJRT actor")?;
+            Some((manifest, handle))
+        } else {
+            None
+        };
+        let inner = Arc::new(Inner {
+            policy,
+            openmp: OpenMpModel::new(cfg.threads),
+            opencl: OpenClModel::new(cfg.threads, 16),
+            gprm: GprmModel::new(cfg.threads, cfg.cutoff),
+            kernel: crate::image::gaussian_kernel(cfg.kernel_width, cfg.sigma),
+            pjrt,
+            stats: Mutex::new(CoordinatorStats::default()),
+            seq: AtomicU64::new(0),
+        });
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let executors = (0..executors.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("phi-conv-executor-{i}"))
+                    .spawn(move || executor_loop(inner, rx))
+                    .expect("spawn executor")
+            })
+            .collect();
+        Ok(Self { inner, tx: Some(tx), executors })
+    }
+
+    /// Enqueue a request; the receiver yields the response when served.
+    pub fn submit(&self, req: ConvRequest) -> Receiver<Result<ConvResponse>> {
+        let (reply, rx) = channel();
+        let job = Job { req, enqueued: Instant::now(), reply };
+        self.tx.as_ref().expect("coordinator live").send(job).expect("executors alive");
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn serve(&self, req: ConvRequest) -> Result<ConvResponse> {
+        self.submit(req).recv().context("coordinator dropped reply")?
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        self.inner.stats.lock().unwrap().clone()
+    }
+
+    /// True when the PJRT backend is loaded.
+    pub fn has_pjrt(&self) -> bool {
+        self.inner.pjrt.is_some()
+    }
+
+    /// Pre-compile the full-image artifacts for the given sizes so the
+    /// first PJRT-routed request doesn't pay compile latency. Returns
+    /// (artifact, compile ms) pairs.
+    pub fn warm_pjrt(&self, planes: usize, sizes: &[usize]) -> Result<Vec<(String, f64)>> {
+        let (manifest, handle) = match &self.inner.pjrt {
+            Some(p) => p,
+            None => return Ok(vec![]),
+        };
+        let mut names = Vec::new();
+        for &n in sizes {
+            for name in [
+                format!("twopass_p{planes}_{n}"),
+                format!("singlepass_p{planes}_{n}"),
+                format!("twopass_agg_{n}"),
+            ] {
+                if manifest.get(&name).is_ok() {
+                    names.push(name);
+                }
+            }
+        }
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let times = handle.warm(&refs)?;
+        Ok(names.into_iter().zip(times).collect())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; executors drain and exit
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(inner: Arc<Inner>, rx: Arc<Mutex<Receiver<Job>>>) {
+    // per-executor reusable buffers (§Perf iteration 1: no per-request
+    // image allocations on the native path)
+    let mut ws = crate::conv::Workspace::new();
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // queue closed
+        };
+        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+        let result = serve_one(&inner, &mut ws, job.req, queue_ms);
+        let mut st = inner.stats.lock().unwrap();
+        match &result {
+            Ok(resp) => {
+                st.served += 1;
+                st.queue_ms.push(resp.queue_ms);
+                st.service_ms
+                    .entry(resp.backend.label())
+                    .or_default()
+                    .push(resp.service_ms);
+            }
+            Err(_) => st.errors += 1,
+        }
+        drop(st);
+        let _ = job.reply.send(result); // receiver may have gone away
+    }
+}
+
+fn serve_one(
+    inner: &Inner,
+    ws: &mut crate::conv::Workspace,
+    req: ConvRequest,
+    queue_ms: f64,
+) -> Result<ConvResponse> {
+    let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+    let (mut backend, mut layout) = match (req.backend, req.layout) {
+        (Some(b), Some(l)) => (b, l),
+        (Some(b), None) => (b, inner.policy.route(req.image.rows, seq).1),
+        (None, Some(l)) => (inner.policy.route(req.image.rows, seq).0, l),
+        (None, None) => inner.policy.route(req.image.rows, seq),
+    };
+
+    // PJRT can only serve shapes it has artifacts for; fall back to the
+    // adaptive native choice otherwise.
+    if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
+        inner.stats.lock().unwrap().pjrt_fallbacks += 1;
+        let (b, l) = RoutePolicy::paper_default().route(req.image.rows, seq);
+        backend = b;
+        layout = l;
+    }
+
+    let t0 = Instant::now();
+    let image = match backend {
+        Backend::Pjrt => run_pjrt(inner, &req, layout)?,
+        Backend::NativeOpenMp | Backend::NativeOpenCl | Backend::NativeGprm => {
+            let model: &dyn crate::models::ExecutionModel = match backend {
+                Backend::NativeOpenMp => &inner.openmp,
+                Backend::NativeOpenCl => &inner.opencl,
+                _ => &inner.gprm,
+            };
+            let out = crate::models::convolve_parallel_into(
+                ws,
+                model,
+                &req.image,
+                &inner.kernel,
+                req.algorithm,
+                req.variant,
+                layout,
+            )?;
+            match layout {
+                Layout::PerPlane => PlanarImage::from_vec(
+                    req.image.planes,
+                    req.image.rows,
+                    req.image.cols,
+                    out.to_vec(),
+                )?,
+                Layout::Agglomerated => PlanarImage::from_agglomerated(
+                    req.image.planes,
+                    req.image.rows,
+                    req.image.cols,
+                    out,
+                )?,
+            }
+        }
+    };
+    let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(ConvResponse { id: req.id, image, backend, layout, queue_ms, service_ms })
+}
+
+fn pjrt_artifact_name(req: &ConvRequest, layout: Layout) -> Option<String> {
+    if req.image.rows != req.image.cols {
+        return None; // full-image artifacts are square
+    }
+    let n = req.image.rows;
+    Some(match (layout, req.algorithm) {
+        (Layout::Agglomerated, Algorithm::TwoPass) => format!("twopass_agg_{n}"),
+        (Layout::Agglomerated, _) => return None,
+        (_, Algorithm::TwoPass) => format!("twopass_p{}_{n}", req.image.planes),
+        // copy-back and no-copy have identical pixels; one artifact serves both
+        (_, Algorithm::SinglePassCopyBack | Algorithm::SinglePassNoCopy) => {
+            format!("singlepass_p{}_{n}", req.image.planes)
+        }
+    })
+}
+
+fn pjrt_can_serve(inner: &Inner, req: &ConvRequest, layout: Layout) -> bool {
+    match (&inner.pjrt, pjrt_artifact_name(req, layout)) {
+        (Some((manifest, _)), Some(name)) => manifest.get(&name).is_ok(),
+        _ => false,
+    }
+}
+
+fn run_pjrt(inner: &Inner, req: &ConvRequest, layout: Layout) -> Result<PlanarImage> {
+    let (_, handle) = inner.pjrt.as_ref().context("PJRT backend not loaded")?;
+    let name = pjrt_artifact_name(req, layout).context("no artifact for this request shape")?;
+    let out = handle.run1(&name, vec![req.image.data.clone(), inner.kernel.clone()])?;
+    PlanarImage::from_vec(req.image.planes, req.image.rows, req.image.cols, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{convolve_image, Variant};
+    use crate::image::{synth_image, Pattern};
+
+    fn cfg() -> RunConfig {
+        RunConfig { threads: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn serves_native_request_correctly() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 2, false).unwrap();
+        let img = synth_image(3, 32, 28, Pattern::Noise, 1);
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert_eq!(resp.image, want);
+        assert_eq!(resp.backend, Backend::NativeOpenMp);
+        assert!(resp.service_ms >= 0.0);
+    }
+
+    #[test]
+    fn round_robin_spreads_backends() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::RoundRobin, 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 2);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..6 {
+            let resp = c.serve(ConvRequest::new(i, img.clone())).unwrap();
+            seen.insert(resp.backend);
+        }
+        assert_eq!(seen.len(), 3, "all three native backends used");
+        let st = c.stats();
+        assert_eq!(st.served, 6);
+        assert_eq!(st.errors, 0);
+    }
+
+    #[test]
+    fn adaptive_policy_routes_by_size() {
+        let c = Coordinator::new(
+            &cfg(),
+            RoutePolicy::PaperAdaptive { large_threshold: 30 },
+            1,
+            false,
+        )
+        .unwrap();
+        let small = synth_image(3, 24, 24, Pattern::Noise, 3);
+        let large = synth_image(3, 40, 40, Pattern::Noise, 4);
+        let r1 = c.serve(ConvRequest::new(1, small)).unwrap();
+        assert_eq!((r1.backend, r1.layout), (Backend::NativeOpenMp, Layout::PerPlane));
+        let r2 = c.serve(ConvRequest::new(2, large)).unwrap();
+        assert_eq!((r2.backend, r2.layout), (Backend::NativeGprm, Layout::Agglomerated));
+    }
+
+    #[test]
+    fn explicit_backend_respected() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 5);
+        let resp = c
+            .serve(ConvRequest::new(1, img).with_backend(Backend::NativeGprm))
+            .unwrap();
+        assert_eq!(resp.backend, Backend::NativeGprm);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_served() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::RoundRobin, 3, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 6);
+        let receivers: Vec<_> = (0..20)
+            .map(|i| c.submit(ConvRequest::new(i, img.clone())))
+            .collect();
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(c.stats().served, 20);
+    }
+
+    #[test]
+    fn pjrt_fallback_when_no_artifact_shape() {
+        // 24x24 has no artifact; explicit Pjrt backend must fall back, not fail
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::Pjrt), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 7);
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert_ne!(resp.backend, Backend::Pjrt);
+        assert_eq!(c.stats().pjrt_fallbacks, 1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Measured exhibits: the same tables as `sim_tables`, but measured on
+//! the host with the native engines and real execution models.
+//!
+//! Sizes are the scaled-down artifact set (default 288/576/1152) so a
+//! full sweep finishes in seconds; the claims being validated are the
+//! *relative* ones (orderings, crossovers, vectorisation gains, overhead
+//! amortisation) — DESIGN.md §2 "dual measurement strategy".
+
+use crate::config::RunConfig;
+use crate::conv::{Algorithm, Variant};
+use crate::image::{gaussian_kernel, synth_image, PlanarImage};
+use crate::metrics::{time_reps, Table};
+use crate::models::{
+    convolve_parallel_into, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+
+/// Shared context: models are built once (pools are persistent).
+pub struct Measured {
+    pub cfg: RunConfig,
+    pub kernel: Vec<f32>,
+    pub openmp: OpenMpModel,
+    pub opencl: OpenClModel,
+    pub gprm: GprmModel,
+}
+
+impl Measured {
+    pub fn new(cfg: &RunConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            kernel: gaussian_kernel(cfg.kernel_width, cfg.sigma),
+            openmp: OpenMpModel::new(cfg.threads),
+            opencl: OpenClModel::new(cfg.threads, 16),
+            gprm: GprmModel::new(cfg.threads, cfg.cutoff),
+        }
+    }
+
+    fn image(&self, size: usize) -> PlanarImage {
+        synth_image(self.cfg.planes, size, size, self.cfg.pattern, self.cfg.seed)
+    }
+
+    /// median ms of one parallel convolution (workspace-reusing, like the
+    /// paper's 1000-rep loop over the same arrays — §Perf iteration 1)
+    fn par_ms(
+        &self,
+        model: &dyn ExecutionModel,
+        img: &PlanarImage,
+        alg: Algorithm,
+        variant: Variant,
+        layout: Layout,
+    ) -> f64 {
+        let mut ws = crate::conv::Workspace::new();
+        time_reps(
+            || {
+                convolve_parallel_into(&mut ws, model, img, &self.kernel, alg, variant, layout)
+                    .unwrap();
+            },
+            self.cfg.warmup,
+            self.cfg.reps,
+        )
+        .median()
+    }
+
+    /// median ms of one sequential convolution (workspace-reusing)
+    fn seq_ms(&self, img: &PlanarImage, alg: Algorithm, variant: Variant) -> f64 {
+        let mut ws = crate::conv::Workspace::new();
+        time_reps(
+            || {
+                crate::conv::convolve_image_into(&mut ws, img, &self.kernel, alg, variant).unwrap();
+            },
+            self.cfg.warmup,
+            self.cfg.reps,
+        )
+        .median()
+    }
+
+    /// Table 1 measured: vectorisation effect on the parallel two-pass.
+    pub fn table1(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Table 1 (measured, host, {} threads): parallel two-pass ms/image (SIMD gain)",
+                self.cfg.threads
+            ),
+            &["Image Size", "OpenMP no-vec", "OpenCL no-vec", "GPRM no-vec", "OpenMP SIMD", "OpenCL SIMD", "GPRM SIMD"],
+        );
+        for &size in &self.cfg.sizes {
+            let img = self.image(size);
+            let models: [&dyn ExecutionModel; 3] = [&self.openmp, &self.opencl, &self.gprm];
+            let novec: Vec<f64> = models
+                .iter()
+                .map(|m| self.par_ms(*m, &img, Algorithm::TwoPass, Variant::Scalar, Layout::PerPlane))
+                .collect();
+            let simd: Vec<f64> = models
+                .iter()
+                .map(|m| self.par_ms(*m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane))
+                .collect();
+            t.row(vec![
+                format!("{size}x{size}"),
+                format!("{:.2}", novec[0]),
+                format!("{:.2}", novec[1]),
+                format!("{:.2}", novec[2]),
+                format!("{:.2} ({:.1}x)", simd[0], novec[0] / simd[0]),
+                format!("{:.2} ({:.1}x)", simd[1], novec[1] / simd[1]),
+                format!("{:.2} ({:.1}x)", simd[2], novec[2] / simd[2]),
+            ]);
+        }
+        t
+    }
+
+    /// Table 2 measured: totals + empty-dispatch overhead split (the
+    /// paper's empty-task methodology, applied for real).
+    pub fn table2(&self) -> Table {
+        let mut t = Table::new(
+            "Table 2 (measured): per-image ms and dispatch-overhead split",
+            &["Image Size", "OpenMP", "OpenCL", "GPRM-total", "OpenCL-compute", "GPRM-compute", "GPRM-overhead"],
+        );
+        for &size in &self.cfg.sizes {
+            let img = self.image(size);
+            let omp = self.par_ms(&self.openmp, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            let ocl = self.par_ms(&self.opencl, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            let gprm = self.par_ms(&self.gprm, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            // empty-task probes: same dispatch count as the real run
+            let dispatches = 2 * self.cfg.planes;
+            let ocl_ov = self.opencl.overhead_probe(size, 10).median() * dispatches as f64;
+            let gprm_ov = self.gprm.overhead_probe(size, 10).median() * dispatches as f64;
+            t.row(vec![
+                format!("{size}x{size}"),
+                format!("{omp:.2}"),
+                format!("{ocl:.2}"),
+                format!("{gprm:.2}"),
+                format!("{:.2}", ocl - ocl_ov),
+                format!("{:.2}", gprm - gprm_ov),
+                format!("{gprm_ov:.3}"),
+            ]);
+        }
+        t
+    }
+
+    /// Figure 1 measured: the ladder with copy-back baseline.
+    pub fn fig1(&self) -> Table {
+        self.ladder(Algorithm::SinglePassCopyBack, "Figure 1 (measured): ladder, copy-back baseline")
+    }
+
+    /// Figure 4 measured: no-copy ladder + GPRM 3R×C + ratio checks.
+    pub fn fig4(&self) -> Table {
+        let mut t = self.ladder(Algorithm::SinglePassNoCopy, "Figure 4 (measured): ladder, no-copy baseline");
+        let size = *self.cfg.sizes.last().unwrap();
+        let img = self.image(size);
+        let base = self.seq_ms(&img, Algorithm::SinglePassNoCopy, Variant::Naive);
+        let g_nv = self.par_ms(&self.gprm, &img, Algorithm::SinglePassNoCopy, Variant::Scalar, Layout::Agglomerated);
+        let g_s = self.par_ms(&self.gprm, &img, Algorithm::SinglePassNoCopy, Variant::Simd, Layout::Agglomerated);
+        let o_s = self.par_ms(&self.opencl, &img, Algorithm::SinglePassNoCopy, Variant::Simd, Layout::PerPlane);
+        let o_tp = self.par_ms(&self.opencl, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+        t.row(vec![format!("Par-5 single-pass GPRM 3RxC no-vec @{size}"), format!("{:.1}x", base / g_nv), "-".into()]);
+        t.row(vec![format!("Par-6 single-pass GPRM 3RxC SIMD @{size}"), format!("{:.1}x", base / g_s), "-".into()]);
+        t.row(vec![format!("Par-7 single-pass OpenCL SIMD @{size}"), format!("{:.1}x", base / o_s), "-".into()]);
+        t.row(vec![format!("Par-8 two-pass OpenCL SIMD @{size}"), format!("{:.1}x", base / o_tp), "-".into()]);
+        t
+    }
+
+    fn ladder(&self, base_alg: Algorithm, title: &str) -> Table {
+        let mut t = Table::new(title, &["Stage", "Speedup (measured)", "ms"]);
+        // the section 5.2 averages use the largest images; host uses the
+        // configured top size to keep runtime bounded
+        let size = *self.cfg.sizes.last().unwrap();
+        let img = self.image(size);
+        let base = self.seq_ms(&img, base_alg, Variant::Naive);
+        let mut push = |label: String, ms: f64| {
+            t.row(vec![label, format!("{:.1}x", base / ms), format!("{ms:.2}")]);
+        };
+        push("Opt-0 naive single-pass no-vec".into(), base);
+        push("Opt-1 single-pass unrolled no-vec".into(), self.seq_ms(&img, base_alg, Variant::Scalar));
+        push("Opt-2 single-pass unrolled SIMD".into(), self.seq_ms(&img, base_alg, Variant::Simd));
+        push("Opt-3 two-pass unrolled no-vec".into(), self.seq_ms(&img, Algorithm::TwoPass, Variant::Scalar));
+        push("Opt-4 two-pass unrolled SIMD".into(), self.seq_ms(&img, Algorithm::TwoPass, Variant::Simd));
+        push(
+            "Par-1 single-pass unrolled no-vec (OpenMP)".into(),
+            self.par_ms(&self.openmp, &img, base_alg, Variant::Scalar, Layout::PerPlane),
+        );
+        push(
+            "Par-2 single-pass unrolled SIMD (OpenMP)".into(),
+            self.par_ms(&self.openmp, &img, base_alg, Variant::Simd, Layout::PerPlane),
+        );
+        push(
+            "Par-3 two-pass unrolled no-vec (OpenMP)".into(),
+            self.par_ms(&self.openmp, &img, Algorithm::TwoPass, Variant::Scalar, Layout::PerPlane),
+        );
+        push(
+            "Par-4 two-pass unrolled SIMD (OpenMP)".into(),
+            self.par_ms(&self.openmp, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane),
+        );
+        t
+    }
+
+    /// Figures 2/3 measured: speedup of parallel vectorised two-pass over
+    /// the sequential Opt-4, per layout.
+    pub fn fig23(&self, layout: Layout) -> Table {
+        let mut t = Table::new(
+            format!("Figure {} (measured): two-pass SIMD speedup vs Opt-4 sequential, {}",
+                if layout == Layout::PerPlane { 2 } else { 3 }, layout.label()),
+            &["Image Size", "OpenMP", "OpenCL", "GPRM"],
+        );
+        for &size in &self.cfg.sizes {
+            let img = self.image(size);
+            let seq = self.seq_ms(&img, Algorithm::TwoPass, Variant::Simd);
+            let models: [&dyn ExecutionModel; 3] = [&self.openmp, &self.opencl, &self.gprm];
+            let cells: Vec<String> = models
+                .iter()
+                .map(|m| {
+                    let ms = self.par_ms(*m, &img, Algorithm::TwoPass, Variant::Simd, layout);
+                    format!("{:.1}x", seq / ms)
+                })
+                .collect();
+            let mut row = vec![format!("{size}x{size}")];
+            row.extend(cells);
+            t.row(row);
+        }
+        t
+    }
+
+    /// Ablations over the design choices DESIGN.md calls out: GPRM
+    /// cutoff, GPRM steal policy, OpenMP schedule, OpenCL local size.
+    pub fn ablations(&self) -> Vec<Table> {
+        use crate::models::{Schedule, StealPolicy};
+        let size = *self.cfg.sizes.last().unwrap();
+        let img = self.image(size);
+        let mut out = Vec::new();
+
+        // GPRM cutoff sweep: the paper's "magic number 100" choice
+        let mut t = Table::new(
+            format!("Ablation: GPRM cutoff (two-pass SIMD @{size}, {} threads)", self.cfg.threads),
+            &["cutoff", "total ms", "empty-dispatch ms"],
+        );
+        for cutoff in [1usize, 10, 50, 100, 240, 480, 1000] {
+            let m = self.gprm.with_cutoff(cutoff);
+            let total = self.par_ms(&m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            let ov = m.overhead_probe(size, 8).median();
+            t.row(vec![cutoff.to_string(), format!("{total:.2}"), format!("{ov:.4}")]);
+        }
+        out.push(t);
+
+        // GPRM steal policy
+        let mut t = Table::new(
+            format!("Ablation: GPRM steal policy (two-pass SIMD @{size})"),
+            &["policy", "total ms"],
+        );
+        for (label, policy) in [("ring", StealPolicy::Ring), ("random", StealPolicy::Random)] {
+            let m = crate::models::GprmModel::with_policy(self.cfg.threads, self.cfg.cutoff, policy);
+            let total = self.par_ms(&m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            t.row(vec![label.into(), format!("{total:.2}")]);
+        }
+        out.push(t);
+
+        // OpenMP schedule
+        let mut t = Table::new(
+            format!("Ablation: OpenMP schedule (two-pass SIMD @{size})"),
+            &["schedule", "total ms"],
+        );
+        for schedule in [Schedule::Static, Schedule::Dynamic(1), Schedule::Dynamic(16), Schedule::Guided(1)] {
+            let m = OpenMpModel::with_schedule(self.cfg.threads, schedule);
+            let total = self.par_ms(&m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            t.row(vec![schedule.label(), format!("{total:.2}")]);
+        }
+        out.push(t);
+
+        // OpenCL local size (the paper's nths=16 finding)
+        let mut t = Table::new(
+            format!("Ablation: OpenCL local size (two-pass SIMD @{size})"),
+            &["local size", "total ms"],
+        );
+        for local in [1usize, 4, 16, 64, 256] {
+            let m = crate::models::OpenClModel::new(self.cfg.threads, local);
+            let total = self.par_ms(&m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            t.row(vec![local.to_string(), format!("{total:.2}")]);
+        }
+        out.push(t);
+        out
+    }
+
+    /// Thread sweep (section 7 note): single-pass-nocopy SIMD OpenMP.
+    pub fn threads_sweep(&self, counts: &[usize]) -> Table {
+        let mut header: Vec<String> = vec!["Image Size".into()];
+        header.extend(counts.iter().map(|c| format!("{c} thr")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("Thread sweep (measured): single-pass-nocopy SIMD OpenMP, ms", &header_refs);
+        for &size in &self.cfg.sizes {
+            let img = self.image(size);
+            let mut row = vec![format!("{size}x{size}")];
+            for &c in counts {
+                let m = OpenMpModel::new(c);
+                row.push(format!(
+                    "{:.2}",
+                    self.par_ms(&m, &img, Algorithm::SinglePassNoCopy, Variant::Simd, Layout::PerPlane)
+                ));
+            }
+            t.row(row);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> RunConfig {
+        RunConfig {
+            sizes: vec![64, 96],
+            reps: 2,
+            warmup: 1,
+            threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn measured_tables_render() {
+        let m = Measured::new(&tiny_cfg());
+        for t in [m.table1(), m.table2(), m.fig23(Layout::PerPlane)] {
+            assert!(t.n_rows() >= 2);
+            assert!(t.to_text().len() > 50);
+        }
+    }
+
+    #[test]
+    fn measured_ladders_render() {
+        let m = Measured::new(&tiny_cfg());
+        assert_eq!(m.fig1().n_rows(), 9);
+        assert_eq!(m.fig4().n_rows(), 13);
+    }
+
+    #[test]
+    fn threads_sweep_renders() {
+        let m = Measured::new(&tiny_cfg());
+        let t = m.threads_sweep(&[1, 2, 4]);
+        assert_eq!(t.n_rows(), 2);
+    }
+}

@@ -1,0 +1,78 @@
+//! Bench harness: one generator per paper exhibit (DESIGN.md §6).
+//!
+//! Each exhibit exists twice:
+//! * **simulated** ([`sim_tables`]) — the phisim cost model at the
+//!   paper's sizes, printed side-by-side with the paper's values;
+//! * **measured** ([`measured`]) — real host runs of the native engines
+//!   under the three execution models at the scaled sizes.
+//!
+//! `phi-conv bench-table <exhibit> [--measured]` is the CLI entry;
+//! `cargo bench` runs the same generators under `rust/benches/`.
+
+pub mod measured;
+pub mod paper;
+pub mod sim_tables;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::metrics::Table;
+use crate::models::Layout;
+
+/// All exhibit names.
+pub const EXHIBITS: [&str; 9] =
+    ["fig1", "fig2", "fig3", "fig4", "table1", "table2", "threads", "ablations", "all"];
+
+/// Generate the simulated rendition of an exhibit.
+pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
+    Ok(match exhibit {
+        "fig1" => vec![sim_tables::fig1()],
+        "fig2" => vec![sim_tables::fig2()],
+        "fig3" => vec![sim_tables::fig3()],
+        "fig4" => vec![sim_tables::fig4()],
+        "table1" => vec![sim_tables::table1()],
+        "table2" => vec![sim_tables::table2()],
+        "threads" => vec![sim_tables::threads_sweep()],
+        // ablations are host-measured only (cutoff is already a sim knob)
+        "ablations" => vec![sim_tables::threads_sweep()],
+        "all" => vec![
+            sim_tables::fig1(),
+            sim_tables::table1(),
+            sim_tables::table2(),
+            sim_tables::fig2(),
+            sim_tables::fig3(),
+            sim_tables::fig4(),
+            sim_tables::threads_sweep(),
+        ],
+        other => bail!("unknown exhibit {other:?}; expected one of {EXHIBITS:?}"),
+    })
+}
+
+/// Generate the measured rendition of an exhibit on this host.
+pub fn run_measured(exhibit: &str, cfg: &RunConfig) -> Result<Vec<Table>> {
+    let m = measured::Measured::new(cfg);
+    Ok(match exhibit {
+        "fig1" => vec![m.fig1()],
+        "fig2" => vec![m.fig23(Layout::PerPlane)],
+        "fig3" => vec![m.fig23(Layout::Agglomerated)],
+        "fig4" => vec![m.fig4()],
+        "table1" => vec![m.table1()],
+        "table2" => vec![m.table2()],
+        "threads" => {
+            let max = cfg.threads;
+            let counts: Vec<usize> =
+                [1, 2, max / 2, max, max * 2].into_iter().filter(|&c| c >= 1).collect();
+            vec![m.threads_sweep(&counts)]
+        }
+        "ablations" => m.ablations(),
+        "all" => vec![
+            m.fig1(),
+            m.table1(),
+            m.table2(),
+            m.fig23(Layout::PerPlane),
+            m.fig23(Layout::Agglomerated),
+            m.fig4(),
+        ],
+        other => bail!("unknown exhibit {other:?}; expected one of {EXHIBITS:?}"),
+    })
+}

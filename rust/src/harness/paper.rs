@@ -1,0 +1,119 @@
+//! The paper's published numbers, embedded verbatim so every harness
+//! table can print *simulated/measured vs paper* side by side.
+//!
+//! Source: Tousimojarad, Vanderbauwhede, Cockshott — "2D Image
+//! Convolution using Three Parallel Programming Models on the Xeon Phi"
+//! (2017), Tables 1–2 and the speedups quoted in sections 5.2 / 7.
+
+/// The six image sizes of the test set (section 4).
+pub const SIZES: [usize; 6] = [1152, 1728, 2592, 3888, 5832, 8748];
+
+/// The three largest sizes (used by the section 5.2 / 7 averages).
+pub const LARGE_SIZES: [usize; 3] = [3888, 5832, 8748];
+
+/// Table 1: parallel two-pass per-image ms — `(size, omp_novec,
+/// ocl_novec, gprm_novec, omp_simd, ocl_simd, gprm_simd)`.
+pub const TABLE1: [(usize, f64, f64, f64, f64, f64, f64); 6] = [
+    (1152, 3.9, 5.4, 27.2, 0.8, 2.0, 26.1),
+    (1728, 8.5, 12.3, 32.8, 2.0, 3.8, 26.6),
+    (2592, 16.7, 26.9, 40.5, 4.1, 7.8, 27.8),
+    (3888, 39.9, 61.6, 60.4, 8.8, 16.5, 32.5),
+    (5832, 86.7, 146.2, 105.8, 19.6, 38.1, 36.8),
+    (8748, 195.4, 334.0, 216.9, 59.2, 91.5, 60.1),
+];
+
+/// Table 2: running time per image (ms) — `(size, omp, ocl, gprm_total,
+/// ocl_compute, gprm_compute)`.
+pub const TABLE2: [(usize, f64, f64, f64, f64, f64); 6] = [
+    (1152, 0.8, 2.0, 26.1, 1.8, 0.6),
+    (1728, 2.0, 3.8, 26.6, 3.6, 1.1),
+    (2592, 4.1, 7.8, 27.8, 7.5, 2.3),
+    (3888, 8.8, 16.5, 32.5, 16.2, 7.0),
+    (5832, 19.6, 38.1, 36.8, 37.7, 11.3),
+    (8748, 59.2, 91.5, 60.1, 91.0, 34.6),
+];
+
+/// GPRM's measured constant communication overhead (ms/image, R×C).
+pub const GPRM_OVERHEAD_RXC_MS: f64 = 25.5;
+/// …and after 3R×C task agglomeration.
+pub const GPRM_OVERHEAD_AGG_MS: f64 = 8.5;
+/// OpenCL empty-kernel overhead band (ms/image).
+pub const OCL_OVERHEAD_MS: (f64, f64) = (0.25, 0.4);
+
+/// Figure 1 ladder: average speedups over the naive single-pass
+/// *with copy-back* baseline (three largest images, section 5.2).
+pub const FIG1_LADDER: [(&str, f64); 9] = [
+    ("Opt-0 naive single-pass no-vec", 1.0),
+    ("Opt-1 single-pass unrolled no-vec", 2.5),
+    ("Opt-2 single-pass unrolled SIMD", 22.0),
+    ("Opt-3 two-pass unrolled no-vec", 5.5),
+    ("Opt-4 two-pass unrolled SIMD", 47.1),
+    ("Par-1 single-pass unrolled no-vec 100thr", 191.1),
+    ("Par-2 single-pass unrolled SIMD 100thr", 1268.8),
+    ("Par-3 two-pass unrolled no-vec 100thr", 393.7),
+    ("Par-4 two-pass unrolled SIMD 100thr", 1611.7),
+];
+
+/// Section 7 headline claims for the no-copy-back study (Figure 4).
+pub struct Fig4Claims {
+    /// sequential optimised two-pass vs single-pass-nocopy average gain
+    pub seq_twopass_gain: f64,
+    /// parallel optimised single-pass-nocopy vs two-pass average gain
+    pub par_singlepass_gain: f64,
+    /// SIMD gain of parallel single-pass over its no-vec version
+    pub par_sp_simd_gain: f64,
+    /// SIMD gain of parallel two-pass over its no-vec version
+    pub par_tp_simd_gain: f64,
+    /// GPRM 3R×C single-pass-nocopy speedup over baseline at 8748²
+    pub gprm_8748_speedup: f64,
+    /// best observed speedup (OpenMP, 5832²)
+    pub best_speedup: f64,
+    /// with 120 threads
+    pub best_speedup_120thr: f64,
+}
+
+pub const FIG4: Fig4Claims = Fig4Claims {
+    seq_twopass_gain: 1.6,
+    par_singlepass_gain: 1.2,
+    par_sp_simd_gain: 9.4,
+    par_tp_simd_gain: 4.1,
+    gprm_8748_speedup: 1850.0,
+    best_speedup: 1970.0,
+    best_speedup_120thr: 2160.0,
+};
+
+/// The paper's "magic numbers".
+pub const OMP_THREADS: usize = 100;
+pub const GPRM_CUTOFF: usize = 100;
+pub const OCL_NGROUPS: usize = 236;
+pub const OCL_NTHS: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_cover_all_sizes() {
+        assert_eq!(TABLE1.map(|r| r.0), SIZES);
+        assert_eq!(TABLE2.map(|r| r.0), SIZES);
+    }
+
+    #[test]
+    fn table2_total_equals_compute_plus_overhead() {
+        // the paper derives GPRM-compute = total − 25.5 ms
+        for (_, _, _, gprm_total, _, gprm_compute) in TABLE2 {
+            assert!((gprm_total - gprm_compute - GPRM_OVERHEAD_RXC_MS).abs() < 0.11);
+        }
+    }
+
+    #[test]
+    fn table1_simd_columns_match_table2() {
+        for ((_, _, _, _, omp_s, ocl_s, gprm_s), (_, omp2, ocl2, gprm2, _, _)) in
+            TABLE1.iter().zip(TABLE2.iter())
+        {
+            assert_eq!(omp_s, omp2);
+            assert_eq!(ocl_s, ocl2);
+            assert_eq!(gprm_s, gprm2);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Simulated exhibits: regenerate every table/figure of the paper from
+//! the phisim cost model, printing paper values alongside for the delta.
+
+use crate::conv::{Algorithm, Variant};
+use crate::metrics::Table;
+use crate::models::Layout;
+use crate::phisim::{simulate, Calibration, Estimate, PhiMachine, SimRun, SimWorkload};
+
+use super::paper;
+
+fn sim(w: &SimWorkload, run: &SimRun) -> Estimate {
+    simulate(&PhiMachine::default(), &Calibration::default(), w, run)
+}
+
+fn tp(size: usize, variant: Variant) -> SimWorkload {
+    SimWorkload::paper(size, Algorithm::TwoPass, variant)
+}
+
+fn fmt(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}")
+    } else if v >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Table 1: effect of vectorisation on parallel two-pass (ms), simulated
+/// vs paper, 3 models × 6 sizes × {no-vec, SIMD}.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 (simulated Xeon Phi): vectorisation effect on parallel two-pass, ms/image [sim | paper]",
+        &[
+            "Image Size",
+            "OpenMP no-vec",
+            "OpenCL no-vec",
+            "GPRM no-vec",
+            "OpenMP SIMD",
+            "OpenCL SIMD",
+            "GPRM SIMD",
+        ],
+    );
+    for (size, p_omp_nv, p_ocl_nv, p_gprm_nv, p_omp_s, p_ocl_s, p_gprm_s) in paper::TABLE1 {
+        let omp = SimRun::openmp(paper::OMP_THREADS);
+        let ocl = SimRun::opencl();
+        let gprm = SimRun::gprm(paper::GPRM_CUTOFF, Layout::PerPlane);
+        let cell = |v: f64, p: f64| format!("{} | {}", fmt(v), fmt(p));
+        t.row(vec![
+            format!("{size}x{size}"),
+            cell(sim(&tp(size, Variant::Scalar), &omp).total_ms(), p_omp_nv),
+            cell(sim(&tp(size, Variant::Scalar), &ocl).total_ms(), p_ocl_nv),
+            cell(sim(&tp(size, Variant::Scalar), &gprm).total_ms(), p_gprm_nv),
+            cell(sim(&tp(size, Variant::Simd), &omp).total_ms(), p_omp_s),
+            cell(sim(&tp(size, Variant::Simd), &ocl).total_ms(), p_ocl_s),
+            cell(sim(&tp(size, Variant::Simd), &gprm).total_ms(), p_gprm_s),
+        ]);
+    }
+    t
+}
+
+/// Table 2: per-image ms with the compute/overhead split.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2 (simulated): running time per image, ms [sim | paper]",
+        &["Image Size", "OpenMP", "OpenCL", "GPRM-total", "OpenCL-compute", "GPRM-compute"],
+    );
+    for (size, p_omp, p_ocl, p_gt, p_oc, p_gc) in paper::TABLE2 {
+        let w = tp(size, Variant::Simd);
+        let omp = sim(&w, &SimRun::openmp(paper::OMP_THREADS));
+        let ocl = sim(&w, &SimRun::opencl());
+        let gprm = sim(&w, &SimRun::gprm(paper::GPRM_CUTOFF, Layout::PerPlane));
+        let cell = |v: f64, p: f64| format!("{} | {}", fmt(v), fmt(p));
+        t.row(vec![
+            format!("{size}x{size}"),
+            cell(omp.total_ms(), p_omp),
+            cell(ocl.total_ms(), p_ocl),
+            cell(gprm.total_ms(), p_gt),
+            // the paper's "compute" = total − measured empty-task overhead
+            cell(ocl.total_ms() - ocl.overhead_ms, p_oc),
+            cell(gprm.total_ms() - gprm.overhead_ms, p_gc),
+        ]);
+    }
+    t
+}
+
+/// Figure 1: the optimisation ladder, speedups over naive single-pass
+/// with copy-back (average of the three largest images).
+pub fn fig1() -> Table {
+    ladder(Algorithm::SinglePassCopyBack, "Figure 1 (simulated): naive → parallelised-optimised speedups [sim | paper]", true)
+}
+
+/// Figure 4: the ladder with the no-copy-back single-pass baseline, plus
+/// the GPRM 3R×C and OpenCL rungs.
+pub fn fig4() -> Table {
+    let mut t = ladder(
+        Algorithm::SinglePassNoCopy,
+        "Figure 4 (simulated): ladder without copy-back [sim | paper where quoted]",
+        false,
+    );
+    // Par-5/6: GPRM 3R×C single-pass; Par-7/8: OpenCL single/two-pass.
+    let base = avg_large(|size| {
+        sim(&SimWorkload::paper(size, Algorithm::SinglePassNoCopy, Variant::Naive), &SimRun::sequential()).total_ms()
+    });
+    let gprm_run = SimRun::gprm(paper::GPRM_CUTOFF, Layout::Agglomerated);
+    let rows: Vec<(&str, Algorithm, Variant, SimRun, Option<f64>)> = vec![
+        ("Par-5 single-pass GPRM 3RxC no-vec", Algorithm::SinglePassNoCopy, Variant::Scalar, gprm_run, None),
+        ("Par-6 single-pass GPRM 3RxC SIMD", Algorithm::SinglePassNoCopy, Variant::Simd, gprm_run, Some(paper::FIG4.gprm_8748_speedup)),
+        ("Par-7 single-pass OpenCL SIMD", Algorithm::SinglePassNoCopy, Variant::Simd, SimRun::opencl(), None),
+        ("Par-8 two-pass OpenCL SIMD", Algorithm::TwoPass, Variant::Simd, SimRun::opencl(), None),
+    ];
+    for (label, alg, variant, run, paper_val) in rows {
+        let ms = avg_large(|size| sim(&SimWorkload::paper(size, alg, variant), &run).total_ms());
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}x", base / ms),
+            paper_val.map(|p| format!("{p:.0}x @8748")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+fn avg_large(f: impl Fn(usize) -> f64) -> f64 {
+    let s: f64 = paper::LARGE_SIZES.iter().map(|&n| f(n)).sum();
+    s / paper::LARGE_SIZES.len() as f64
+}
+
+fn ladder(base_alg: Algorithm, title: &str, with_paper: bool) -> Table {
+    let mut t = Table::new(title, &["Stage", "Speedup (sim)", "Paper"]);
+    let base = avg_large(|size| {
+        sim(&SimWorkload::paper(size, base_alg, Variant::Naive), &SimRun::sequential()).total_ms()
+    });
+    let omp = SimRun::openmp(paper::OMP_THREADS);
+    let rungs: Vec<(&str, Algorithm, Variant, SimRun)> = vec![
+        ("Opt-0 naive single-pass no-vec", base_alg, Variant::Naive, SimRun::sequential()),
+        ("Opt-1 single-pass unrolled no-vec", base_alg, Variant::Scalar, SimRun::sequential()),
+        ("Opt-2 single-pass unrolled SIMD", base_alg, Variant::Simd, SimRun::sequential()),
+        ("Opt-3 two-pass unrolled no-vec", Algorithm::TwoPass, Variant::Scalar, SimRun::sequential()),
+        ("Opt-4 two-pass unrolled SIMD", Algorithm::TwoPass, Variant::Simd, SimRun::sequential()),
+        ("Par-1 single-pass unrolled no-vec 100thr", base_alg, Variant::Scalar, omp),
+        ("Par-2 single-pass unrolled SIMD 100thr", base_alg, Variant::Simd, omp),
+        ("Par-3 two-pass unrolled no-vec 100thr", Algorithm::TwoPass, Variant::Scalar, omp),
+        ("Par-4 two-pass unrolled SIMD 100thr", Algorithm::TwoPass, Variant::Simd, omp),
+    ];
+    for (i, (label, alg, variant, run)) in rungs.into_iter().enumerate() {
+        let ms = avg_large(|size| sim(&SimWorkload::paper(size, alg, variant), &run).total_ms());
+        let paper_col = if with_paper {
+            format!("{:.1}x", paper::FIG1_LADDER[i].1)
+        } else {
+            "-".into()
+        };
+        t.row(vec![label.to_string(), format!("{:.1}x", base / ms), paper_col]);
+    }
+    t
+}
+
+/// Figure 2: speedup of the parallel vectorised two-pass over Opt-4
+/// sequential, R×C layout. Paper reference points derived from Table 1.
+pub fn fig2() -> Table {
+    fig23(Layout::PerPlane, "Figure 2 (simulated): speedup of vectorised two-pass vs Opt-4, RxC")
+}
+
+/// Figure 3: same with 3R×C task agglomeration.
+pub fn fig3() -> Table {
+    fig23(Layout::Agglomerated, "Figure 3 (simulated): speedup of vectorised two-pass vs Opt-4, 3RxC")
+}
+
+fn fig23(layout: Layout, title: &str) -> Table {
+    let mut t = Table::new(title, &["Image Size", "OpenMP", "OpenCL", "GPRM", "GPRM (paper, RxC)"]);
+    for (size, .., p_gprm_simd) in paper::TABLE1 {
+        let w = tp(size, Variant::Simd);
+        let seq = sim(&w, &SimRun::sequential()).total_ms();
+        let omp = sim(&w, &SimRun::openmp(paper::OMP_THREADS)).total_ms();
+        let ocl = sim(&w, &SimRun::opencl()).total_ms();
+        let gprm = sim(&w, &SimRun::gprm(paper::GPRM_CUTOFF, layout)).total_ms();
+        // paper reference: Opt-4 sequential isn't tabulated; report the
+        // paper's GPRM ms converted to a speedup using our simulated
+        // sequential time (the GPRM column is the exhibit's subject).
+        t.row(vec![
+            format!("{size}x{size}"),
+            format!("{:.1}x", seq / omp),
+            format!("{:.1}x", seq / ocl),
+            format!("{:.1}x", seq / gprm),
+            format!("{:.1}x", seq / p_gprm_simd),
+        ]);
+    }
+    t
+}
+
+/// The section-7 thread-tuning note: OpenMP single-pass sweep over
+/// thread counts (the 120-thread +10–15 % claim).
+pub fn threads_sweep() -> Table {
+    let mut t = Table::new(
+        "Thread sweep (simulated): single-pass-nocopy SIMD OpenMP, ms/image",
+        &["Image Size", "60 thr", "100 thr", "120 thr", "180 thr", "240 thr"],
+    );
+    for size in [3888usize, 5832, 8748] {
+        let w = SimWorkload::paper(size, Algorithm::SinglePassNoCopy, Variant::Simd);
+        let cells: Vec<String> = [60usize, 100, 120, 180, 240]
+            .iter()
+            .map(|&thr| fmt(sim(&w, &SimRun::openmp(thr)).total_ms()))
+            .collect();
+        let mut row = vec![format!("{size}x{size}")];
+        row.extend(cells);
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_exhibits_render() {
+        for t in [table1(), table2(), fig1(), fig2(), fig3(), fig4(), threads_sweep()] {
+            let txt = t.to_text();
+            assert!(txt.len() > 100);
+            assert!(t.n_rows() >= 3);
+        }
+    }
+
+    #[test]
+    fn table1_sim_within_2x_of_paper_everywhere() {
+        // parse-free re-check against the cost model directly
+        for (size, p1, p2, p3, p4, p5, p6) in paper::TABLE1 {
+            let omp = SimRun::openmp(paper::OMP_THREADS);
+            let ocl = SimRun::opencl();
+            let gprm = SimRun::gprm(paper::GPRM_CUTOFF, Layout::PerPlane);
+            let checks = [
+                (sim(&tp(size, Variant::Scalar), &omp).total_ms(), p1, "omp novec"),
+                (sim(&tp(size, Variant::Scalar), &ocl).total_ms(), p2, "ocl novec"),
+                (sim(&tp(size, Variant::Scalar), &gprm).total_ms(), p3, "gprm novec"),
+                (sim(&tp(size, Variant::Simd), &omp).total_ms(), p4, "omp simd"),
+                (sim(&tp(size, Variant::Simd), &ocl).total_ms(), p5, "ocl simd"),
+                (sim(&tp(size, Variant::Simd), &gprm).total_ms(), p6, "gprm simd"),
+            ];
+            for (got, want, what) in checks {
+                let r = got / want;
+                assert!(
+                    (0.4..2.5).contains(&r),
+                    "{size} {what}: sim {got:.2} vs paper {want} (x{r:.2})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_ladder_order_preserved() {
+        // Paper ordering between rungs: Opt0 < Opt1 < Opt3 < Opt2 < Opt4
+        // in speedup terms: 1 < 2.5 < 5.5 < 22 < 47.1; and Par-1 < Par-3,
+        // Par-2 < Par-4 (copy-back world).
+        let speed = |alg, v, run: SimRun| {
+            let base = avg_large(|s| {
+                sim(&SimWorkload::paper(s, Algorithm::SinglePassCopyBack, Variant::Naive), &SimRun::sequential()).total_ms()
+            });
+            base / avg_large(|s| sim(&SimWorkload::paper(s, alg, v), &run).total_ms())
+        };
+        let seq = SimRun::sequential();
+        let omp = SimRun::openmp(100);
+        let o1 = speed(Algorithm::SinglePassCopyBack, Variant::Scalar, seq);
+        let o2 = speed(Algorithm::SinglePassCopyBack, Variant::Simd, seq);
+        let o3 = speed(Algorithm::TwoPass, Variant::Scalar, seq);
+        let o4 = speed(Algorithm::TwoPass, Variant::Simd, seq);
+        let p1 = speed(Algorithm::SinglePassCopyBack, Variant::Scalar, omp);
+        let p3 = speed(Algorithm::TwoPass, Variant::Scalar, omp);
+        let p2 = speed(Algorithm::SinglePassCopyBack, Variant::Simd, omp);
+        let p4 = speed(Algorithm::TwoPass, Variant::Simd, omp);
+        assert!(1.0 < o1 && o1 < o3 && o3 < o2 && o2 < o4, "{o1:.1} {o3:.1} {o2:.1} {o4:.1}");
+        assert!(p1 < p3, "copy-back parallel: two-pass beats single-pass");
+        assert!(p2 < p4, "{p2:.0} vs {p4:.0}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Separable Gaussian kernel construction.
+//!
+//! Must match `python/compile/kernels/ref.py::gaussian_kernel` bit-for-bit
+//! after the f64→f32 cast: the manifest ships the Python values and the
+//! tests cross-check (`runtime::manifest` carries `kernel_values`).
+
+/// The paper's kernel width.
+pub const KERNEL_WIDTH: usize = 5;
+
+/// Normalised 1-D Gaussian vector of odd `width` (computed in f64, cast
+/// to f32 at the end, same as the Python reference).
+pub fn gaussian_kernel(width: usize, sigma: f64) -> Vec<f32> {
+    assert!(width % 2 == 1, "kernel width must be odd, got {width}");
+    let h = (width / 2) as i64;
+    let mut k: Vec<f64> = (-h..=h)
+        .map(|x| (-((x * x) as f64) / (2.0 * sigma * sigma)).exp())
+        .collect();
+    let s: f64 = k.iter().sum();
+    for v in &mut k {
+        *v /= s;
+    }
+    k.into_iter().map(|v| v as f32).collect()
+}
+
+/// K[i][j] = k[i]·k[j]: the 2-D kernel of a separable vector, row-major.
+pub fn gaussian_kernel2d(k: &[f32]) -> Vec<f32> {
+    let w = k.len();
+    let mut kk = vec![0f32; w * w];
+    for i in 0..w {
+        for j in 0..w {
+            kk[i * w + j] = k[i] * k[j];
+        }
+    }
+    kk
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalised_and_symmetric() {
+        for width in [3usize, 5, 7, 9] {
+            let k = gaussian_kernel(width, 1.0);
+            let s: f32 = k.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "width {width}: sum {s}");
+            for i in 0..width {
+                assert_eq!(k[i], k[width - 1 - i], "width {width} not symmetric");
+            }
+            // peak at centre
+            let mx = k.iter().cloned().fold(f32::MIN, f32::max);
+            assert_eq!(k[width / 2], mx);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "odd")]
+    fn rejects_even_width() {
+        gaussian_kernel(4, 1.0);
+    }
+
+    #[test]
+    fn known_values_width5_sigma1() {
+        // Same constants the Python oracle produces (f64 math, f32 cast).
+        let k = gaussian_kernel(5, 1.0);
+        let want = [0.05448868, 0.24420135, 0.40261996, 0.24420135, 0.05448868];
+        for (g, w) in k.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn kernel2d_is_outer_product() {
+        let k = gaussian_kernel(5, 1.0);
+        let kk = gaussian_kernel2d(&k);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(kk[i * 5 + j], k[i] * k[j]);
+            }
+        }
+        let s: f32 = kk.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn wider_sigma_flatter_kernel() {
+        let narrow = gaussian_kernel(5, 0.5);
+        let wide = gaussian_kernel(5, 3.0);
+        assert!(narrow[2] > wide[2]);
+        assert!(narrow[0] < wide[0]);
+    }
+}

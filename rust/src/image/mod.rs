@@ -1,0 +1,26 @@
+//! Image substrate: planar f32 images, Gaussian kernels, synthetic
+//! generators and PGM/PPM I/O.
+//!
+//! The paper's workload is "3 colour planes" of square images from
+//! 1152×1152 to 8748×8748, convolved by a separable 5×5 Gaussian. The
+//! stereo rig that produced the original images is not available
+//! (DESIGN.md §1), so [`synth`] provides deterministic synthetic planes
+//! that exercise the identical code paths — the algorithm is
+//! data-independent and memory-fetch bound.
+
+mod kernel;
+mod pgm;
+mod planar;
+mod synth;
+
+pub use kernel::{gaussian_kernel, gaussian_kernel2d, KERNEL_WIDTH};
+pub use pgm::{read_pgm, write_pgm, write_ppm};
+pub use planar::PlanarImage;
+pub use synth::{synth_image, synth_plane, Pattern};
+
+/// The six square sizes of the paper's test set (section 4).
+pub const PAPER_SIZES: [usize; 6] = [1152, 1728, 2592, 3888, 5832, 8748];
+
+/// The sizes at which full-image PJRT artifacts are built by default and
+/// which the scaled-down host measurements use.
+pub const ARTIFACT_SIZES: [usize; 3] = [288, 576, 1152];

@@ -1,0 +1,169 @@
+//! Minimal binary PGM (P5) / PPM (P6) I/O.
+//!
+//! Enough to exchange images with standard tools for eyeballing results;
+//! 8-bit depth, f32 pixels clamped/scaled to [0, 255].
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::planar::PlanarImage;
+
+fn scale_to_u8(v: f32, lo: f32, hi: f32) -> u8 {
+    if hi <= lo {
+        return 0;
+    }
+    (((v - lo) / (hi - lo)).clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+fn min_max(data: &[f32]) -> (f32, f32) {
+    data.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)))
+}
+
+/// Write one plane as binary PGM, auto-scaling to 8-bit.
+pub fn write_pgm(path: impl AsRef<Path>, img: &PlanarImage, plane: usize) -> Result<()> {
+    let data = img.plane(plane);
+    let (lo, hi) = min_max(data);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.cols, img.rows)?;
+    let bytes: Vec<u8> = data.iter().map(|&v| scale_to_u8(v, lo, hi)).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Write a 3-plane image as binary PPM (plane 0→R, 1→G, 2→B), auto-scaled.
+pub fn write_ppm(path: impl AsRef<Path>, img: &PlanarImage) -> Result<()> {
+    if img.planes < 3 {
+        bail!("PPM needs 3 planes, image has {}", img.planes);
+    }
+    let (lo, hi) = min_max(&img.data);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{} {}\n255\n", img.cols, img.rows)?;
+    let mut bytes = Vec::with_capacity(img.rows * img.cols * 3);
+    for i in 0..img.rows {
+        for j in 0..img.cols {
+            for p in 0..3 {
+                bytes.push(scale_to_u8(img.get(p, i, j), lo, hi));
+            }
+        }
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read a binary PGM (P5) into a 1-plane image with pixels in [0, 1].
+pub fn read_pgm(path: impl AsRef<Path>) -> Result<PlanarImage> {
+    let mut raw = Vec::new();
+    std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?
+        .read_to_end(&mut raw)?;
+    let mut pos = 0usize;
+
+    let mut token = |raw: &[u8]| -> Result<String> {
+        // skip whitespace and `#` comment lines
+        loop {
+            while pos < raw.len() && raw[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < raw.len() && raw[pos] == b'#' {
+                while pos < raw.len() && raw[pos] != b'\n' {
+                    pos += 1;
+                }
+                continue;
+            }
+            break;
+        }
+        let start = pos;
+        while pos < raw.len() && !raw[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if start == pos {
+            bail!("truncated PGM header");
+        }
+        Ok(std::str::from_utf8(&raw[start..pos])?.to_string())
+    };
+
+    let magic = token(&raw)?;
+    if magic != "P5" {
+        bail!("unsupported magic {magic:?} (only binary PGM P5)");
+    }
+    let cols: usize = token(&raw)?.parse()?;
+    let rows: usize = token(&raw)?.parse()?;
+    let maxval: usize = token(&raw)?.parse()?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported maxval {maxval}");
+    }
+    pos += 1; // single whitespace after maxval
+    if raw.len() < pos + rows * cols {
+        bail!("PGM pixel data truncated: want {} bytes", rows * cols);
+    }
+    let data: Vec<f32> = raw[pos..pos + rows * cols]
+        .iter()
+        .map(|&b| b as f32 / maxval as f32)
+        .collect();
+    PlanarImage::from_vec(1, rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{synth_image, Pattern};
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = synth_image(1, 24, 32, Pattern::Disc, 0);
+        let dir = std::env::temp_dir().join("phi_conv_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("disc.pgm");
+        write_pgm(&path, &img, 0).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(back.rows, 24);
+        assert_eq!(back.cols, 32);
+        // disc is 0/1-valued: survives 8-bit quantisation exactly
+        for (a, b) in img.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1.0 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn ppm_writes(/* smoke: header + size */) {
+        let img = synth_image(3, 8, 9, Pattern::Noise, 3);
+        let dir = std::env::temp_dir().join("phi_conv_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rgb.ppm");
+        write_ppm(&path, &img).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert!(raw.starts_with(b"P6\n9 8\n255\n"));
+        assert_eq!(raw.len(), "P6\n9 8\n255\n".len() + 8 * 9 * 3);
+    }
+
+    #[test]
+    fn ppm_needs_three_planes() {
+        let img = synth_image(1, 8, 8, Pattern::Noise, 0);
+        let path = std::env::temp_dir().join("phi_conv_nope.ppm");
+        assert!(write_ppm(path, &img).is_err());
+    }
+
+    #[test]
+    fn pgm_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("phi_conv_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pgm");
+        std::fs::write(&path, b"P2\n2 2\n255\n0 0 0 0").unwrap();
+        assert!(read_pgm(&path).is_err());
+    }
+
+    #[test]
+    fn pgm_handles_comments() {
+        let dir = std::env::temp_dir().join("phi_conv_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comment.pgm");
+        let mut bytes = b"P5\n# a comment\n2 2\n255\n".to_vec();
+        bytes.extend_from_slice(&[0, 128, 255, 64]);
+        std::fs::write(&path, &bytes).unwrap();
+        let img = read_pgm(&path).unwrap();
+        assert_eq!(img.rows, 2);
+        assert!((img.get(0, 0, 1) - 128.0 / 255.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,170 @@
+//! `PlanarImage`: the paper's `float ***A` — P planes of R×C f32 pixels —
+//! as one contiguous buffer with plane views.
+
+use anyhow::{bail, Result};
+
+/// A planar (plane-major) f32 image: `data[p*R*C + i*C + j]`.
+///
+/// Contiguous storage keeps the PJRT handoff zero-copy-shaped (the
+/// artifacts take `(P, R, C)` tensors in exactly this layout) and makes
+/// the agglomerated 3R×C view a cheap re-indexing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanarImage {
+    pub planes: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl PlanarImage {
+    /// Zero-filled image.
+    pub fn zeros(planes: usize, rows: usize, cols: usize) -> Self {
+        Self { planes, rows, cols, data: vec![0.0; planes * rows * cols] }
+    }
+
+    /// Wrap an existing buffer (must match `planes*rows*cols`).
+    pub fn from_vec(planes: usize, rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != planes * rows * cols {
+            bail!(
+                "buffer has {} elements, {}x{}x{} needs {}",
+                data.len(),
+                planes,
+                rows,
+                cols,
+                planes * rows * cols
+            );
+        }
+        Ok(Self { planes, rows, cols, data })
+    }
+
+    pub fn plane_len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Immutable view of one plane.
+    pub fn plane(&self, p: usize) -> &[f32] {
+        let n = self.plane_len();
+        &self.data[p * n..(p + 1) * n]
+    }
+
+    /// Mutable view of one plane.
+    pub fn plane_mut(&mut self, p: usize) -> &mut [f32] {
+        let n = self.plane_len();
+        &mut self.data[p * n..(p + 1) * n]
+    }
+
+    pub fn get(&self, p: usize, i: usize, j: usize) -> f32 {
+        self.data[p * self.plane_len() + i * self.cols + j]
+    }
+
+    pub fn set(&mut self, p: usize, i: usize, j: usize, v: f32) {
+        let n = self.plane_len();
+        self.data[p * n + i * self.cols + j] = v;
+    }
+
+    /// The paper's 3R×C task-agglomeration layout: planes concatenated
+    /// along columns, `wide[i][p*C + j] = img[p][i][j]`.
+    pub fn agglomerate(&self) -> Vec<f32> {
+        let (p_, r, c) = (self.planes, self.rows, self.cols);
+        let wc = p_ * c;
+        let mut wide = vec![0f32; r * wc];
+        for p in 0..p_ {
+            let plane = self.plane(p);
+            for i in 0..r {
+                wide[i * wc + p * c..i * wc + p * c + c]
+                    .copy_from_slice(&plane[i * c..(i + 1) * c]);
+            }
+        }
+        wide
+    }
+
+    /// Inverse of [`agglomerate`]: scatter a (R, P·C) buffer back to planes.
+    pub fn from_agglomerated(planes: usize, rows: usize, cols: usize, wide: &[f32]) -> Result<Self> {
+        if wide.len() != planes * rows * cols {
+            bail!("agglomerated buffer wrong size");
+        }
+        let wc = planes * cols;
+        let mut img = Self::zeros(planes, rows, cols);
+        for p in 0..planes {
+            for i in 0..rows {
+                let src = &wide[i * wc + p * cols..i * wc + p * cols + cols];
+                let n = img.plane_len();
+                img.data[p * n + i * cols..p * n + (i + 1) * cols].copy_from_slice(src);
+            }
+        }
+        Ok(img)
+    }
+
+    /// Max |a−b| over all pixels (for oracle comparisons).
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Max |a−b| restricted to the deep interior `[d, n-d)` of every
+    /// plane, where single-pass and two-pass provably agree (d = 2h).
+    pub fn max_abs_diff_deep(&self, other: &Self, halo: usize) -> f32 {
+        let d = 2 * halo;
+        let mut m = 0f32;
+        for p in 0..self.planes {
+            let (a, b) = (self.plane(p), other.plane(p));
+            for i in d..self.rows - d {
+                for j in d..self.cols - d {
+                    m = m.max((a[i * self.cols + j] - b[i * self.cols + j]).abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_views() {
+        let mut img = PlanarImage::zeros(3, 4, 5);
+        img.set(2, 3, 4, 7.5);
+        assert_eq!(img.get(2, 3, 4), 7.5);
+        assert_eq!(img.plane(2)[3 * 5 + 4], 7.5);
+        assert_eq!(img.data[2 * 20 + 3 * 5 + 4], 7.5);
+        img.plane_mut(0)[0] = 1.0;
+        assert_eq!(img.get(0, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(PlanarImage::from_vec(1, 2, 2, vec![0.0; 3]).is_err());
+        assert!(PlanarImage::from_vec(1, 2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn agglomerate_roundtrip() {
+        let mut img = PlanarImage::zeros(3, 4, 5);
+        for (i, v) in img.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let wide = img.agglomerate();
+        assert_eq!(wide.len(), 4 * 15);
+        // wide[i][p*C+j] == img[p][i][j]
+        assert_eq!(wide[0 * 15 + 1 * 5 + 3], img.get(1, 0, 3));
+        assert_eq!(wide[3 * 15 + 2 * 5 + 0], img.get(2, 3, 0));
+        let back = PlanarImage::from_agglomerated(3, 4, 5, &wide).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = PlanarImage::zeros(1, 12, 12);
+        let mut b = PlanarImage::zeros(1, 12, 12);
+        b.set(0, 0, 0, 2.0); // border pixel: outside the deep interior
+        b.set(0, 6, 6, 0.5); // deep interior pixel ([4,8) x [4,8))
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+        assert_eq!(a.max_abs_diff_deep(&b, 2), 0.5);
+    }
+}

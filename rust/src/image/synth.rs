@@ -1,0 +1,157 @@
+//! Deterministic synthetic image generators.
+//!
+//! Stand-ins for the paper's stereo-camera frames (DESIGN.md §1): the
+//! convolution is data-independent, so any plane content exercises the
+//! same code paths; patterns with known analytic responses (ramps,
+//! constants) double as numeric probes.
+
+use crate::util::prng::Prng;
+
+use super::planar::PlanarImage;
+
+/// Available synthetic patterns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// `v = j` — horizontal linear ramp; Gaussian-invariant on the
+    /// interior (blur of a ramp is the ramp), a strong analytic check.
+    RampX,
+    /// `v = i + j` — diagonal ramp, same invariance both axes.
+    RampXY,
+    /// 8×8 checkerboard of 0/1 — maximal high-frequency content.
+    Checker,
+    /// Standard-normal noise (seeded) — the benchmark default.
+    Noise,
+    /// Filled disc of 1.0 on 0.0 — an edge-rich natural-ish shape.
+    Disc,
+    /// Constant 0.5 — fixed point of any normalised kernel.
+    Constant,
+}
+
+impl Pattern {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ramp-x" => Pattern::RampX,
+            "ramp-xy" => Pattern::RampXY,
+            "checker" => Pattern::Checker,
+            "noise" => Pattern::Noise,
+            "disc" => Pattern::Disc,
+            "constant" => Pattern::Constant,
+            _ => return None,
+        })
+    }
+}
+
+/// Fill one plane. `seed` feeds the PRNG (noise) and phase-shifts the
+/// deterministic patterns so planes differ.
+pub fn synth_plane(rows: usize, cols: usize, pattern: Pattern, seed: u64) -> Vec<f32> {
+    let mut v = vec![0f32; rows * cols];
+    match pattern {
+        Pattern::RampX => {
+            for i in 0..rows {
+                for j in 0..cols {
+                    v[i * cols + j] = j as f32 + seed as f32;
+                }
+            }
+        }
+        Pattern::RampXY => {
+            for i in 0..rows {
+                for j in 0..cols {
+                    v[i * cols + j] = (i + j) as f32 + seed as f32;
+                }
+            }
+        }
+        Pattern::Checker => {
+            for i in 0..rows {
+                for j in 0..cols {
+                    v[i * cols + j] = (((i / 8) + (j / 8) + seed as usize) % 2) as f32;
+                }
+            }
+        }
+        Pattern::Noise => {
+            let mut rng = Prng::new(seed);
+            for x in &mut v {
+                *x = rng.normal();
+            }
+        }
+        Pattern::Disc => {
+            let (cy, cx) = (rows as f32 / 2.0, cols as f32 / 2.0);
+            let r2 = (rows.min(cols) as f32 / 3.0).powi(2);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let d2 = (i as f32 - cy).powi(2) + (j as f32 - cx).powi(2);
+                    v[i * cols + j] = if d2 < r2 { 1.0 } else { 0.0 };
+                }
+            }
+        }
+        Pattern::Constant => {
+            v.fill(0.5);
+        }
+    }
+    v
+}
+
+/// Build a multi-plane image; plane p uses `seed + p` so planes differ.
+pub fn synth_image(planes: usize, rows: usize, cols: usize, pattern: Pattern, seed: u64) -> PlanarImage {
+    let mut img = PlanarImage::zeros(planes, rows, cols);
+    for p in 0..planes {
+        let plane = synth_plane(rows, cols, pattern, seed + p as u64);
+        img.plane_mut(p).copy_from_slice(&plane);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = synth_image(3, 16, 16, Pattern::Noise, 7);
+        let b = synth_image(3, 16, 16, Pattern::Noise, 7);
+        assert_eq!(a, b);
+        let c = synth_image(3, 16, 16, Pattern::Noise, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn planes_differ() {
+        let img = synth_image(3, 16, 16, Pattern::Noise, 1);
+        assert_ne!(img.plane(0), img.plane(1));
+    }
+
+    #[test]
+    fn ramp_values() {
+        let img = synth_image(1, 4, 6, Pattern::RampX, 0);
+        assert_eq!(img.get(0, 0, 0), 0.0);
+        assert_eq!(img.get(0, 3, 5), 5.0);
+        let img = synth_image(1, 4, 6, Pattern::RampXY, 0);
+        assert_eq!(img.get(0, 3, 5), 8.0);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let img = synth_image(2, 8, 8, Pattern::Constant, 0);
+        assert!(img.data.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn checker_has_both_values() {
+        let img = synth_image(1, 32, 32, Pattern::Checker, 0);
+        assert!(img.data.iter().any(|&v| v == 0.0));
+        assert!(img.data.iter().any(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn disc_inside_outside() {
+        let img = synth_image(1, 60, 60, Pattern::Disc, 0);
+        assert_eq!(img.get(0, 30, 30), 1.0);
+        assert_eq!(img.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(Pattern::parse("noise"), Some(Pattern::Noise));
+        assert_eq!(Pattern::parse("ramp-x"), Some(Pattern::RampX));
+        assert_eq!(Pattern::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,49 @@
+//! # phi-conv
+//!
+//! Reproduction of *"2D Image Convolution using Three Parallel Programming
+//! Models on the Xeon Phi"* (Tousimojarad, Vanderbauwhede, Cockshott, 2017)
+//! as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper benchmarks separable 5×5 Gaussian convolution under three
+//! parallel programming models — OpenMP, OpenCL and GPRM — on a 60-core
+//! Intel Xeon Phi 5110P. This crate rebuilds every piece of that study:
+//!
+//! * [`image`] — planar f32 images, synthetic generators, PGM/PPM I/O and
+//!   Gaussian kernel construction (the data substrate).
+//! * [`conv`] — native convolution engines mirroring the paper's
+//!   optimisation ladder: naive, unrolled, SIMD-shaped, two-pass,
+//!   single-pass-no-copy (the algorithm substrate).
+//! * [`models`] — the paper's three parallel programming models as
+//!   pluggable execution engines over a shared worker-pool substrate:
+//!   OpenMP-style fork-join static chunking, OpenCL-style NDRange
+//!   work-groups, and GPRM-style task graphs with cutoff + stealing +
+//!   task agglomeration.
+//! * [`phisim`] — a calibrated analytic timing model of the Xeon Phi
+//!   5110P that regenerates the paper's Tables 1–2 and Figures 1–4
+//!   (the hardware substitute; DESIGN.md §1).
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
+//!   produced by the Python/Pallas build path and executes them on the
+//!   request path with no Python anywhere.
+//! * [`coordinator`] — request router + batcher serving convolution jobs
+//!   through any execution model (the L3 serving loop).
+//! * [`metrics`] — timing statistics and paper-style table rendering.
+//! * [`harness`] — one generator per paper exhibit (fig1…fig4, table1,
+//!   table2) in both *simulated* (phisim) and *measured* (host) modes.
+//! * [`config`] — TOML + CLI configuration for all of the above.
+//! * [`util`] — in-tree infrastructure substrates (JSON, TOML, CLI, PRNG);
+//!   the offline build has no access to crates.io beyond the vendored
+//!   `xla` closure, so these are built from scratch (DESIGN.md §1).
+
+pub mod config;
+pub mod conv;
+pub mod coordinator;
+pub mod harness;
+pub mod image;
+pub mod metrics;
+pub mod models;
+pub mod phisim;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

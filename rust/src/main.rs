@@ -1,0 +1,225 @@
+//! phi-conv CLI: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate     regenerate a paper exhibit from the Xeon Phi cost model
+//!   measure      run the same exhibit measured on this host
+//!   validate     cross-check PJRT artifacts vs the native engines
+//!   serve        start the coordinator and push a synthetic workload
+//!   info         artifact manifest + configuration summary
+//!
+//! Examples:
+//!   phi-conv simulate --exhibit all
+//!   phi-conv measure --exhibit table1 --sizes 288,576 --reps 5
+//!   phi-conv validate
+//!   phi-conv serve --requests 40 --executors 2
+//!   phi-conv info
+
+use anyhow::{bail, Context, Result};
+
+use phi_conv::config::{standard_cli, RunConfig};
+use phi_conv::conv::{convolve_image, Algorithm, Variant};
+use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
+use phi_conv::harness;
+use phi_conv::image::synth_image;
+use phi_conv::metrics::SampleSet;
+use phi_conv::runtime::Manifest;
+use phi_conv::util::prng::Prng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = standard_cli("phi-conv", "2D image convolution under three parallel execution models (Tousimojarad et al. 2017 reproduction)")
+        .opt("exhibit", "all", "fig1|fig2|fig3|fig4|table1|table2|threads|all")
+        .opt("format", "text", "text|markdown|csv")
+        .opt("requests", "24", "serve: number of requests")
+        .opt("executors", "2", "serve: executor threads")
+        .opt("policy", "adaptive", "serve: adaptive|round-robin|openmp|opencl|gprm|pjrt")
+        .flag("no-pjrt", "serve: skip the PJRT backend")
+        .parse(args)?;
+
+    let cfg = RunConfig::resolve(&cli)?;
+    let command = cli.positionals().first().map(|s| s.as_str()).unwrap_or("help");
+
+    match command {
+        "simulate" => {
+            for t in harness::simulated(cli.str_of("exhibit")?)? {
+                print_table(&t, cli.str_of("format")?);
+            }
+        }
+        "measure" => {
+            eprintln!(
+                "measuring on host: sizes {:?}, {} threads, {} reps",
+                cfg.sizes, cfg.threads, cfg.reps
+            );
+            for t in harness::run_measured(cli.str_of("exhibit")?, &cfg)? {
+                print_table(&t, cli.str_of("format")?);
+            }
+        }
+        "validate" => validate(&cfg)?,
+        "serve" => serve(
+            &cfg,
+            cli.usize_of("requests")?,
+            cli.usize_of("executors")?,
+            cli.str_of("policy")?,
+            !cli.is_set("no-pjrt"),
+        )?,
+        "info" => info(&cfg)?,
+        _ => {
+            println!("usage: phi-conv <simulate|measure|validate|serve|info> [options]");
+            println!("       phi-conv --help        for the option list");
+        }
+    }
+    Ok(())
+}
+
+fn print_table(t: &phi_conv::metrics::Table, format: &str) {
+    match format {
+        "markdown" => println!("{}", t.to_markdown()),
+        "csv" => println!("{}", t.to_csv()),
+        _ => println!("{}", t.to_text()),
+    }
+}
+
+/// Cross-check every full/agg/ablation artifact against the native
+/// engines at its own shape.
+fn validate(cfg: &RunConfig) -> Result<()> {
+    use phi_conv::runtime::EnginePool;
+
+    let pool = EnginePool::open(&cfg.artifacts_dir)?;
+    let manifest = pool.manifest().clone();
+    let k = phi_conv::image::gaussian_kernel(manifest.kernel_width, manifest.gaussian_sigma);
+
+    // kernel values must match the Python reference bit-for-bit
+    for (a, b) in k.iter().zip(&manifest.kernel_values) {
+        anyhow::ensure!((a - b).abs() < 1e-7, "kernel generator mismatch: {a} vs {b}");
+    }
+    println!("kernel generator matches Python reference ✓");
+
+    let mut checked = 0;
+    for entry in manifest.artifacts.iter() {
+        let (alg, layout_agg) = match (entry.role.as_str(), entry.algorithm.as_str()) {
+            ("full" | "ablation", "twopass") => (Algorithm::TwoPass, false),
+            ("full" | "ablation", "singlepass") => (Algorithm::SinglePassNoCopy, false),
+            ("agg", "twopass") => (Algorithm::TwoPass, true),
+            _ => continue, // tiles & pyramid validated in integration tests
+        };
+        let rows = entry.meta_usize("rows").context("rows meta")?;
+        let cols = entry.meta_usize("cols").context("cols meta")?;
+        let planes = entry.meta_usize("planes").context("planes meta")?;
+        if rows > 1152 {
+            continue; // keep validate fast
+        }
+        let img = synth_image(planes, rows, cols, cfg.pattern, cfg.seed);
+        let engine = pool.engine(&entry.name)?;
+        let got = engine.run1(&[&img.data, &k])?;
+        let want = if layout_agg {
+            let m = phi_conv::models::OpenMpModel::new(cfg.threads);
+            phi_conv::models::convolve_parallel(
+                &m,
+                &img,
+                &k,
+                alg,
+                Variant::Simd,
+                phi_conv::models::Layout::Agglomerated,
+            )?
+        } else {
+            convolve_image(img.clone(), &k, alg, Variant::Simd)?
+        };
+        let max_diff = got
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        anyhow::ensure!(
+            max_diff < 1e-4,
+            "{}: PJRT vs native max diff {max_diff}",
+            entry.name
+        );
+        println!("{:32} PJRT == native (max diff {max_diff:.2e}) ✓", entry.name);
+        checked += 1;
+    }
+    println!("validated {checked} artifacts against native engines");
+    Ok(())
+}
+
+/// Serving demo: synthetic request mix through the coordinator.
+fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_pjrt: bool) -> Result<()> {
+    let policy = match policy {
+        "adaptive" => RoutePolicy::paper_default(),
+        "round-robin" => RoutePolicy::RoundRobin,
+        other => match Backend::parse(other) {
+            Some(b) => RoutePolicy::Fixed(b),
+            None => bail!("unknown policy {other:?}"),
+        },
+    };
+    let coord = Coordinator::new(cfg, policy, executors, with_pjrt)?;
+    println!(
+        "coordinator up: {} executors, policy {policy:?}, pjrt={}",
+        executors,
+        coord.has_pjrt()
+    );
+
+    let mut rng = Prng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut latencies = SampleSet::new();
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| {
+            let size = *rng.pick(&cfg.sizes);
+            let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed + i as u64);
+            coord.submit(ConvRequest::new(i as u64, img))
+        })
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv().context("coordinator dropped")??;
+        latencies.push(resp.latency_ms());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.stats();
+    println!(
+        "served {} requests in {:.2}s ({:.1} req/s)",
+        stats.served,
+        wall,
+        stats.served as f64 / wall
+    );
+    println!("latency: {}", latencies.summary());
+    for (backend, set) in &stats.service_ms {
+        println!("  {backend:8} n={:3}  service {}", set.len(), set.summary());
+    }
+    if stats.pjrt_fallbacks > 0 {
+        println!("  ({} requests fell back from PJRT)", stats.pjrt_fallbacks);
+    }
+    Ok(())
+}
+
+fn info(cfg: &RunConfig) -> Result<()> {
+    println!("phi-conv configuration:");
+    println!("  sizes      {:?}", cfg.sizes);
+    println!("  planes     {}", cfg.planes);
+    println!("  kernel     width {} sigma {}", cfg.kernel_width, cfg.sigma);
+    println!("  threads    {}", cfg.threads);
+    println!("  cutoff     {}", cfg.cutoff);
+    println!("  artifacts  {}", cfg.artifacts_dir.display());
+    match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!("manifest: {} artifacts", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:32} {:9} {:11} in={:?} out={:?}",
+                    a.name,
+                    a.role,
+                    a.variant,
+                    a.inputs.iter().map(|s| &s.shape).collect::<Vec<_>>(),
+                    a.outputs.iter().map(|s| &s.shape).collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => println!("manifest: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

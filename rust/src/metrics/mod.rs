@@ -1,0 +1,7 @@
+//! Timing statistics and paper-style table rendering.
+
+mod stats;
+mod table;
+
+pub use stats::{time_reps, SampleSet, Stopwatch};
+pub use table::{ms, speedup, Table};

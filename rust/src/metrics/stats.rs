@@ -1,0 +1,191 @@
+//! Sample collection + robust summary statistics for benchmark timing.
+
+use std::time::Instant;
+
+/// A set of f64 samples (milliseconds by convention).
+#[derive(Debug, Clone, Default)]
+pub struct SampleSet {
+    samples: Vec<f64>,
+}
+
+impl SampleSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_vec(samples: Vec<f64>) -> Self {
+        Self { samples }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Percentile by linear interpolation on the sorted samples,
+    /// `q ∈ [0, 100]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Benchmark headline number: the median is robust to OS noise spikes
+    /// in a way the mean is not.
+    pub fn headline_ms(&self) -> f64 {
+        self.median()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} min={:.3} p50={:.3} mean={:.3} p95={:.3} max={:.3} (ms)",
+            self.len(),
+            self.min(),
+            self.median(),
+            self.mean(),
+            self.percentile(95.0),
+            self.max()
+        )
+    }
+}
+
+/// Measure a closure `reps` times (after `warmup` unrecorded runs) and
+/// collect per-run milliseconds.
+pub fn time_reps<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> SampleSet {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut set = SampleSet::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        set.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    set
+}
+
+/// Simple running stopwatch for coordinator latency accounting.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let s = SampleSet::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = SampleSet::from_vec(vec![0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert_eq!(s.percentile(25.0), 2.5);
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let s = SampleSet::from_vec(vec![1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(s.median(), 1.0);
+        assert!(s.mean() > 20.0);
+    }
+
+    #[test]
+    fn empty_set_is_nan() {
+        let s = SampleSet::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = SampleSet::from_vec(vec![7.0]);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let mut n = 0;
+        let s = time_reps(|| n += 1, 2, 5);
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+        assert!(s.min() >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let w = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(w.ms() >= 1.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Aligned-text / markdown / CSV table renderer for the bench harness.
+//!
+//! The harness prints the same rows the paper's tables and figures report
+//! (DESIGN.md §6); this renderer keeps those dumps readable in a terminal
+//! and paste-able into EXPERIMENTS.md.
+
+/// A simple row-oriented table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Column widths for aligned text output.
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Terminal rendering: title, rule, aligned columns.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut s = format!("── {} ──\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        s.push_str(&line(&self.header, &w));
+        s.push('\n');
+        s.push_str(&"─".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&line(row, &w));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// GitHub-flavoured markdown (pasted into EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("**{}**\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+
+    /// CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format milliseconds like the paper's tables (one decimal place).
+pub fn ms(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+/// Format a speedup factor like the paper ("4.9×").
+pub fn speedup(v: f64) -> String {
+    format!("{v:.1}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Table 1", &["Image Size", "OpenMP", "GPRM"]);
+        t.row(vec!["1152x1152".into(), "3.9".into(), "27.2".into()]);
+        t.row(vec!["8748x8748".into(), "195.4".into(), "216.9".into()]);
+        t
+    }
+
+    #[test]
+    fn text_alignment() {
+        let txt = sample().to_text();
+        assert!(txt.contains("Table 1"));
+        let lines: Vec<&str> = txt.lines().collect();
+        // header + rule + 2 rows + title line
+        assert_eq!(lines.len(), 5);
+        // right-aligned numbers share the column end
+        assert!(lines[3].ends_with("27.2"));
+        assert!(lines[4].ends_with("216.9"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("| Image Size | OpenMP | GPRM |"));
+        assert!(md.contains("|---|---|---|"));
+        assert!(md.contains("| 8748x8748 | 195.4 | 216.9 |"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(3.94), "3.9");
+        assert_eq!(speedup(4.87), "4.9×");
+    }
+}

@@ -1,0 +1,396 @@
+//! Parallel convolution driver: execution model × algorithm × variant ×
+//! layout.
+//!
+//! This is the paper's benchmark inner loop: the outer row loop of each
+//! pass is handed to an [`ExecutionModel`], the inner loops are the
+//! [`crate::conv::band`] primitives. The `Layout` axis reproduces the
+//! task-agglomeration study (paper section 6, Fig. 2 vs Fig. 3):
+//!
+//! * [`Layout::PerPlane`] — "R×C": each colour plane is a separate
+//!   parallel sweep (3 sequential dispatches per pass), the paper's
+//!   baseline layout;
+//! * [`Layout::Agglomerated`] — "3R×C": planes are concatenated along
+//!   columns, so one dispatch covers all planes; task size triples and
+//!   per-dispatch overhead amortises to a third — the fix that lets GPRM
+//!   win the largest image.
+
+use anyhow::{bail, Result};
+
+use crate::conv::{band, Algorithm, Variant};
+use crate::image::{gaussian_kernel2d, PlanarImage};
+
+use super::pool::RowBands;
+use super::ExecutionModel;
+
+/// Parallelisation layout (paper Figs. 2/3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// R×C: per-plane sweeps, planes sequential.
+    PerPlane,
+    /// 3R×C: planes folded into one wide sweep (task agglomeration).
+    Agglomerated,
+}
+
+impl Layout {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "rxc" | "per-plane" => Layout::PerPlane,
+            "3rxc" | "agglomerated" => Layout::Agglomerated,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Layout::PerPlane => "RxC",
+            Layout::Agglomerated => "3RxC",
+        }
+    }
+}
+
+/// One parallel pass: `model.dispatch` over the rows, each worker writing
+/// its disjoint band of `dst`.
+fn parallel_pass(
+    model: &dyn ExecutionModel,
+    rows: usize,
+    cols: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    pass: &(dyn Fn(&[f32], &mut [f32], usize, usize) + Sync),
+) {
+    let bands = RowBands::new(dst, rows, cols);
+    model.dispatch(rows, &|r0, r1| {
+        // SAFETY: execution models dispatch disjoint covers of [0, rows)
+        // (property-tested), so bands never overlap.
+        let band = unsafe { bands.band(r0, r1) };
+        pass(src, band, r0, r1);
+    });
+}
+
+/// Convolve one plane in parallel. `a` is the source/result buffer, `b`
+/// the scratch; semantics identical to [`crate::conv::convolve_plane`].
+#[allow(clippy::too_many_arguments)]
+pub fn convolve_plane_parallel(
+    model: &dyn ExecutionModel,
+    a: &mut [f32],
+    b: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+) -> Result<()> {
+    if k.len() != 5 && variant != Variant::Naive {
+        bail!("unrolled engines are specialised to width 5, got {}", k.len());
+    }
+    let k2d = gaussian_kernel2d(k);
+    let k5: &[f32; 5] = if k.len() == 5 { k.try_into().unwrap() } else { &[0.0; 5] };
+    let k25: &[f32; 25] = if k.len() == 5 { k2d.as_slice().try_into().unwrap() } else { &[0.0; 25] };
+
+    match algorithm {
+        Algorithm::TwoPass => {
+            // horizontal a→b, barrier, vertical b→a (the paper's two
+            // `#pragma omp parallel for` regions / GPRM's `seq` phases).
+            match variant {
+                Variant::Naive => bail!("the paper's naive rung is single-pass only"),
+                Variant::Scalar => {
+                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
+                        band::horiz_band_scalar(s, d, rows, cols, k5, r0, r1)
+                    });
+                    parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
+                        band::vert_band_scalar(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+                Variant::Simd => {
+                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
+                        band::horiz_band_simd(s, d, rows, cols, k5, r0, r1)
+                    });
+                    parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
+                        band::vert_band_simd(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+            }
+        }
+        Algorithm::SinglePassCopyBack | Algorithm::SinglePassNoCopy => {
+            let width = k.len();
+            match variant {
+                Variant::Naive => {
+                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
+                        band::singlepass_naive_band(s, d, rows, cols, &k2d, width, r0, r1)
+                    });
+                }
+                Variant::Scalar => {
+                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
+                        band::singlepass_band_scalar(s, d, rows, cols, k25, r0, r1)
+                    });
+                }
+                Variant::Simd => {
+                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
+                        band::singlepass_band_simd(s, d, rows, cols, k25, r0, r1)
+                    });
+                }
+            }
+            if algorithm == Algorithm::SinglePassCopyBack {
+                // the copy-back is parallelised + vectorised too (paper
+                // Par-2: "both convolution computation and the copy-back").
+                match variant {
+                    Variant::Simd => parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
+                        band::copy_back_band_simd(s, d, cols, r0, r1)
+                    }),
+                    _ => parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
+                        band::copy_back_band_scalar(s, d, cols, r0, r1)
+                    }),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parallel convolution into caller-owned buffers (perf pass,
+/// EXPERIMENTS.md §Perf iteration 1: avoids the two per-call image
+/// allocations + first-touch faults). Returns the workspace slice
+/// holding the result — plane-major `(P,R,C)` for `PerPlane`, wide
+/// `(R, P·C)` for `Agglomerated`.
+pub fn convolve_parallel_into<'ws>(
+    ws: &'ws mut crate::conv::Workspace,
+    model: &dyn ExecutionModel,
+    img: &PlanarImage,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+    layout: Layout,
+) -> Result<&'ws [f32]> {
+    match layout {
+        Layout::PerPlane => {
+            ws.load(img);
+            let (rows, cols) = (img.rows, img.cols);
+            let plane_len = rows * cols;
+            for p in 0..img.planes {
+                let a = &mut ws.a[p * plane_len..(p + 1) * plane_len];
+                let b = &mut ws.b[p * plane_len..(p + 1) * plane_len];
+                convolve_plane_parallel(model, a, b, rows, cols, k, algorithm, variant)?;
+            }
+            Ok(match algorithm {
+                Algorithm::SinglePassNoCopy => &ws.b,
+                _ => &ws.a,
+            })
+        }
+        Layout::Agglomerated => {
+            let (rows, cols) = (img.rows, img.planes * img.cols);
+            // agglomerate into the wide buffers without reallocating
+            ws.wide_a.clear();
+            let wc = cols;
+            for i in 0..rows {
+                for p in 0..img.planes {
+                    let plane = img.plane(p);
+                    ws.wide_a.extend_from_slice(&plane[i * img.cols..(i + 1) * img.cols]);
+                }
+            }
+            debug_assert_eq!(ws.wide_a.len(), rows * wc);
+            ws.wide_b.clear();
+            ws.wide_b.extend_from_slice(&ws.wide_a);
+            convolve_plane_parallel(
+                model,
+                &mut ws.wide_a,
+                &mut ws.wide_b,
+                rows,
+                cols,
+                k,
+                algorithm,
+                variant,
+            )?;
+            Ok(match algorithm {
+                Algorithm::SinglePassNoCopy => &ws.wide_b,
+                _ => &ws.wide_a,
+            })
+        }
+    }
+}
+
+/// Convolve a whole image in parallel under a layout. Returns the
+/// convolved image; pixels are identical to the sequential
+/// [`crate::conv::convolve_image`] for `PerPlane`, and identical away
+/// from plane seams for `Agglomerated` (DESIGN.md §4).
+pub fn convolve_parallel(
+    model: &dyn ExecutionModel,
+    img: &PlanarImage,
+    k: &[f32],
+    algorithm: Algorithm,
+    variant: Variant,
+    layout: Layout,
+) -> Result<PlanarImage> {
+    match layout {
+        Layout::PerPlane => {
+            let mut a_img = img.clone();
+            let mut b_img = img.clone(); // B starts as a copy of A (DESIGN.md §4)
+            let (rows, cols) = (img.rows, img.cols);
+            for p in 0..img.planes {
+                let a = a_img.plane_mut(p);
+                // disjoint planes: borrow b plane via split or clone view
+                let b = b_img.plane_mut(p);
+                convolve_plane_parallel(model, a, b, rows, cols, k, algorithm, variant)?;
+            }
+            Ok(match algorithm {
+                Algorithm::SinglePassNoCopy => b_img,
+                _ => a_img,
+            })
+        }
+        Layout::Agglomerated => {
+            let (rows, cols) = (img.rows, img.planes * img.cols);
+            let mut a = img.agglomerate();
+            let mut b = a.clone();
+            convolve_plane_parallel(model, &mut a, &mut b, rows, cols, k, algorithm, variant)?;
+            let result = match algorithm {
+                Algorithm::SinglePassNoCopy => b,
+                _ => a,
+            };
+            PlanarImage::from_agglomerated(img.planes, img.rows, img.cols, &result)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::convolve_image;
+    use crate::image::{gaussian_kernel, synth_image, Pattern};
+    use crate::models::{GprmModel, OpenClModel, OpenMpModel};
+
+    fn models() -> Vec<Box<dyn ExecutionModel>> {
+        vec![
+            Box::new(OpenMpModel::new(4)),
+            Box::new(OpenClModel::new(4, 3)),
+            Box::new(GprmModel::new(4, 13)),
+        ]
+    }
+
+    #[test]
+    fn all_models_match_sequential_all_algorithms() {
+        let img = synth_image(3, 40, 36, Pattern::Noise, 5);
+        let k = gaussian_kernel(5, 1.0);
+        for alg in [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+            for variant in [Variant::Scalar, Variant::Simd] {
+                let want = convolve_image(img.clone(), &k, alg, variant).unwrap();
+                for m in models() {
+                    let got =
+                        convolve_parallel(m.as_ref(), &img, &k, alg, variant, Layout::PerPlane)
+                            .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{} {alg:?} {variant:?} differs from sequential",
+                        m.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_variant_parallel_matches() {
+        let img = synth_image(3, 30, 28, Pattern::Noise, 6);
+        let k = gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::SinglePassCopyBack, Variant::Naive).unwrap();
+        let m = OpenMpModel::new(3);
+        let got = convolve_parallel(&m, &img, &k, Algorithm::SinglePassCopyBack, Variant::Naive, Layout::PerPlane).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn agglomerated_matches_away_from_seams() {
+        let img = synth_image(3, 40, 36, Pattern::Noise, 7);
+        let k = gaussian_kernel(5, 1.0);
+        let per = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        for m in models() {
+            let agg = convolve_parallel(m.as_ref(), &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated).unwrap();
+            // inner columns (≥ 2h from plane seams) agree
+            for p in 0..3 {
+                for i in 0..40 {
+                    for j in 4..32 {
+                        let d = (agg.get(p, i, j) - per.get(p, i, j)).abs();
+                        assert!(d < 1e-5, "{} ({p},{i},{j}) d={d}", m.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agglomerated_seams_differ_from_per_plane() {
+        // guard: 3RxC must actually convolve across seams, not fall back
+        // to per-plane (plane 1's col 0..2 is interior in the wide image)
+        let img = synth_image(3, 24, 20, Pattern::Noise, 8);
+        let k = gaussian_kernel(5, 1.0);
+        let per = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let m = OpenMpModel::new(2);
+        let agg = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated).unwrap();
+        let mut max_d = 0f32;
+        for i in 4..20 {
+            for j in 0..2 {
+                max_d = max_d.max((agg.get(1, i, j) - per.get(1, i, j)).abs());
+            }
+        }
+        assert!(max_d > 1e-6, "seam columns identical — agglomeration is fake?");
+    }
+
+    #[test]
+    fn into_variant_matches_alloc_variant() {
+        let img = synth_image(3, 40, 36, Pattern::Noise, 12);
+        let k = gaussian_kernel(5, 1.0);
+        let m = OpenMpModel::new(3);
+        let mut ws = crate::conv::Workspace::new();
+        for alg in [Algorithm::TwoPass, Algorithm::SinglePassNoCopy, Algorithm::SinglePassCopyBack] {
+            let want = convolve_parallel(&m, &img, &k, alg, Variant::Simd, Layout::PerPlane).unwrap();
+            let got = convolve_parallel_into(&mut ws, &m, &img, &k, alg, Variant::Simd, Layout::PerPlane)
+                .unwrap()
+                .to_vec();
+            assert_eq!(got, want.data, "{alg:?}");
+        }
+        // agglomerated: wide result equals PlanarImage::agglomerate of the
+        // alloc-variant's output
+        let want = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+            .unwrap()
+            .agglomerate();
+        let got = convolve_parallel_into(&mut ws, &m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+            .unwrap()
+            .to_vec();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn workspace_reuse_across_sizes() {
+        let k = gaussian_kernel(5, 1.0);
+        let m = OpenMpModel::new(2);
+        let mut ws = crate::conv::Workspace::new();
+        for size in [16usize, 48, 24] {
+            let img = synth_image(3, size, size, Pattern::Noise, size as u64);
+            let want = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane).unwrap();
+            let got = convolve_parallel_into(&mut ws, &m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+                .unwrap()
+                .to_vec();
+            assert_eq!(got, want.data, "size {size}");
+        }
+    }
+
+    #[test]
+    fn layout_parse() {
+        assert_eq!(Layout::parse("rxc"), Some(Layout::PerPlane));
+        assert_eq!(Layout::parse("3rxc"), Some(Layout::Agglomerated));
+        assert_eq!(Layout::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_worker_models_work() {
+        let img = synth_image(1, 20, 18, Pattern::Noise, 9);
+        let k = gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        for m in [
+            Box::new(OpenMpModel::new(1)) as Box<dyn ExecutionModel>,
+            Box::new(OpenClModel::new(1, 1)),
+            Box::new(GprmModel::new(1, 1)),
+        ] {
+            let got = convolve_parallel(m.as_ref(), &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane).unwrap();
+            assert_eq!(got, want, "{}", m.name());
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! The paper's three parallel programming models as pluggable execution
+//! engines.
+//!
+//! Each model answers the same question — *how do `n` rows of work get
+//! scheduled onto a fixed set of worker threads?* — with the discipline
+//! of its namesake (DESIGN.md §1):
+//!
+//! * [`OpenMpModel`] — `#pragma omp parallel for schedule(static)`:
+//!   fork-join over a persistent team, one contiguous chunk per thread,
+//!   implicit barrier.
+//! * [`OpenClModel`] — NDRange: the row space is covered by work-groups
+//!   (`local_size` rows each) drained from a command queue by
+//!   compute-unit threads; scheduling is dynamic, runtime-managed.
+//! * [`GprmModel`] — pure task-based: `cutoff` task instances are created
+//!   up front, mapped round-robin to thread tiles ("compile-time"
+//!   mapping), executed with work stealing; `par_cont_for` index → row
+//!   range, phases composed sequentially (`#pragma gprm seq`).
+//!
+//! All models guarantee the same contract: `dispatch(n, job)` invokes
+//! `job` over a **disjoint cover** of `[0, n)` and returns after an
+//! implicit barrier. Pixel-level equivalence with the sequential engines
+//! is enforced by integration tests; cover-exactness by property tests.
+
+pub mod convolve;
+pub mod gprm;
+pub mod opencl;
+pub mod openmp;
+pub mod pool;
+
+pub use convolve::{convolve_parallel, convolve_parallel_into, Layout};
+pub use gprm::{GprmModel, StealPolicy};
+pub use opencl::OpenClModel;
+pub use openmp::{OpenMpModel, Schedule};
+
+use crate::metrics::SampleSet;
+
+/// A parallel execution model: schedules row-range jobs onto workers.
+pub trait ExecutionModel: Send + Sync {
+    /// Short name for tables ("OpenMP", "OpenCL", "GPRM").
+    fn name(&self) -> &'static str;
+
+    /// Worker threads backing the model.
+    fn workers(&self) -> usize;
+
+    /// Execute `job(r0, r1)` over a disjoint cover of `[0, n)`, barrier,
+    /// return. Implementations choose the partition and the schedule.
+    fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync));
+
+    /// Measure the model's fixed dispatch overhead: time `reps` empty
+    /// dispatches of the same shape and return per-dispatch ms.
+    ///
+    /// This is exactly the paper's methodology for Table 2 ("we can
+    /// create empty tasks and measure the overhead of distributing them
+    /// across different threads").
+    fn overhead_probe(&self, n: usize, reps: usize) -> SampleSet {
+        crate::metrics::time_reps(|| self.dispatch(n, &|_, _| {}), 2, reps)
+    }
+}
+
+/// The partition used by static schedulers: chunk `t` of `parts` covers
+/// `[n·t/parts, n·(t+1)/parts)` — contiguous, balanced to ±1 row,
+/// exactly OpenMP's `schedule(static)` / GPRM's `par_cont_for`.
+pub fn static_chunk(n: usize, parts: usize, t: usize) -> (usize, usize) {
+    (n * t / parts, n * (t + 1) / parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_chunk_covers_exactly() {
+        for n in [0usize, 1, 7, 100, 241] {
+            for parts in [1usize, 3, 16, 100] {
+                let mut covered = vec![0u8; n];
+                for t in 0..parts {
+                    let (a, b) = static_chunk(n, parts, t);
+                    assert!(a <= b && b <= n);
+                    for c in covered.iter_mut().take(b).skip(a) {
+                        *c += 1;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_chunk_balanced() {
+        let n = 103;
+        let parts = 10;
+        for t in 0..parts {
+            let (a, b) = static_chunk(n, parts, t);
+            let len = b - a;
+            assert!(len == 10 || len == 11, "chunk {t} has {len}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! OpenCL-style execution model: NDRange work-groups over a command
+//! queue.
+//!
+//! Mirrors the paper's OpenCL mapping on the Xeon Phi (section 5.4):
+//! *compute units* ≈ hardware threads, *processing elements* ≈ vector
+//! lanes, and the runtime — not the programmer — assigns work-groups to
+//! compute units. Here:
+//!
+//! * the global range is the row space `[0, n)`;
+//! * it is covered by work-groups of `local_size` consecutive rows
+//!   (`ngroups = ceil(n / local_size)`), mirroring the paper's optimum
+//!   `ngroups=236, nths=16` shape where indices are contiguous in the
+//!   local id so the group vectorises;
+//! * `compute_units` worker threads drain the group queue dynamically
+//!   (an atomic cursor — OpenCL runtimes schedule groups to CUs as they
+//!   free up, unlike OpenMP's static split);
+//! * `dispatch` = `clEnqueueNDRangeKernel` + `clFinish`.
+//!
+//! The paper's "disable vectorisation" trick — "using only a single
+//! processing element per compute unit" — is `local_size = 1` here, and
+//! the vectorised/scalar band kernels plug in as the work-item body.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::pool::WorkerPool;
+use super::ExecutionModel;
+
+pub struct OpenClModel {
+    pool: WorkerPool,
+    local_size: usize,
+}
+
+impl OpenClModel {
+    /// `compute_units` CU threads, `local_size` rows per work-group.
+    pub fn new(compute_units: usize, local_size: usize) -> Self {
+        assert!(local_size > 0, "local_size must be ≥ 1");
+        Self { pool: WorkerPool::new(compute_units), local_size }
+    }
+
+    pub fn local_size(&self) -> usize {
+        self.local_size
+    }
+}
+
+impl ExecutionModel for OpenClModel {
+    fn name(&self) -> &'static str {
+        "OpenCL"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
+        let local = self.local_size;
+        let ngroups = n.div_ceil(local);
+        // the command queue: a cursor over group ids
+        let cursor = AtomicUsize::new(0);
+        self.pool.broadcast(&|_cu| loop {
+            let g = cursor.fetch_add(1, Ordering::Relaxed);
+            if g >= ngroups {
+                break;
+            }
+            let r0 = g * local;
+            let r1 = ((g + 1) * local).min(n);
+            job(r0, r1);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn covers_rows_exactly_once() {
+        for local in [1usize, 4, 16, 64] {
+            let m = OpenClModel::new(5, local);
+            let hits = Mutex::new(vec![0u32; 103]);
+            m.dispatch(103, &|a, b| {
+                let mut h = hits.lock().unwrap();
+                for i in a..b {
+                    h[i] += 1;
+                }
+            });
+            assert!(
+                hits.lock().unwrap().iter().all(|&h| h == 1),
+                "local_size {local}"
+            );
+        }
+    }
+
+    #[test]
+    fn group_shapes_respect_local_size() {
+        let m = OpenClModel::new(3, 16);
+        let ranges = Mutex::new(vec![]);
+        m.dispatch(50, &|a, b| ranges.lock().unwrap().push((a, b)));
+        let mut r = ranges.lock().unwrap().clone();
+        r.sort_unstable();
+        assert_eq!(r, vec![(0, 16), (16, 32), (32, 48), (48, 50)]);
+    }
+
+    #[test]
+    fn single_pe_mode_is_row_granular() {
+        // the paper's "no-vec" OpenCL trick: one row per group
+        let m = OpenClModel::new(4, 1);
+        let ranges = Mutex::new(vec![]);
+        m.dispatch(10, &|a, b| ranges.lock().unwrap().push((a, b)));
+        let r = ranges.lock().unwrap();
+        assert_eq!(r.len(), 10);
+        assert!(r.iter().all(|&(a, b)| b - a == 1));
+    }
+
+    #[test]
+    fn zero_rows_is_noop() {
+        let m = OpenClModel::new(2, 8);
+        m.dispatch(0, &|_, _| panic!("no group expected"));
+    }
+
+    #[test]
+    fn dynamic_scheduling_balances_skew() {
+        // one slow group must not serialise the rest: with 4 CUs and 8
+        // groups where group 0 sleeps, wall time ≪ 8 × sleep.
+        let m = OpenClModel::new(4, 1);
+        let t0 = std::time::Instant::now();
+        m.dispatch(8, &|a, _| {
+            if a == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        let elapsed = t0.elapsed().as_millis();
+        assert!(elapsed < 34 + 10, "elapsed {elapsed}ms suggests serialisation");
+    }
+}

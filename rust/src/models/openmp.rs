@@ -1,0 +1,223 @@
+//! OpenMP-style execution model: fork-join static-chunk `parallel for`.
+//!
+//! Mirrors `#pragma omp parallel for` with the Intel runtime's default
+//! `schedule(static)` on a persistent team (paper Listing 1):
+//!
+//! * the team (worker pool) persists across parallel regions, like an
+//!   OpenMP thread team after the first fork;
+//! * each of the `num_threads` workers takes one contiguous chunk
+//!   `[n·t/T, n·(t+1)/T)` — no queueing, no stealing;
+//! * `dispatch` returns only after every worker finished: the implicit
+//!   barrier at the end of `omp parallel for`.
+//!
+//! The paper's "magic number" is 100 threads on 240 hw contexts; on the
+//! host the equivalent saturation point is measured by the thread-sweep
+//! harness (`bench-table threads`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::pool::WorkerPool;
+use super::{static_chunk, ExecutionModel};
+
+/// OpenMP loop schedules (ablation subject — the paper uses the Intel
+/// default, `static`; `dynamic`/`guided` are provided to measure what
+/// that choice costs/buys on this workload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// one contiguous chunk per thread (the paper's configuration)
+    Static,
+    /// fixed-size chunks drained from a shared counter
+    Dynamic(usize),
+    /// exponentially shrinking chunks: remaining/(2T), floored
+    Guided(usize),
+}
+
+impl Schedule {
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::Static => "static".into(),
+            Schedule::Dynamic(c) => format!("dynamic,{c}"),
+            Schedule::Guided(m) => format!("guided,{m}"),
+        }
+    }
+}
+
+pub struct OpenMpModel {
+    pool: WorkerPool,
+    schedule: Schedule,
+}
+
+impl OpenMpModel {
+    /// `num_threads` — the OMP_NUM_THREADS of this team; `schedule(static)`.
+    pub fn new(num_threads: usize) -> Self {
+        Self::with_schedule(num_threads, Schedule::Static)
+    }
+
+    pub fn with_schedule(num_threads: usize, schedule: Schedule) -> Self {
+        if let Schedule::Dynamic(c) | Schedule::Guided(c) = schedule {
+            assert!(c > 0, "chunk must be ≥ 1");
+        }
+        Self { pool: WorkerPool::new(num_threads), schedule }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+}
+
+impl ExecutionModel for OpenMpModel {
+    fn name(&self) -> &'static str {
+        "OpenMP"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
+        let t_total = self.pool.len();
+        match self.schedule {
+            Schedule::Static => self.pool.broadcast(&|t| {
+                let (r0, r1) = static_chunk(n, t_total, t);
+                if r0 < r1 {
+                    job(r0, r1);
+                }
+            }),
+            Schedule::Dynamic(chunk) => {
+                let cursor = AtomicUsize::new(0);
+                self.pool.broadcast(&|_t| loop {
+                    let r0 = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if r0 >= n {
+                        break;
+                    }
+                    job(r0, (r0 + chunk).min(n));
+                });
+            }
+            Schedule::Guided(min_chunk) => {
+                // OpenMP guided: each grab takes ~remaining/(2T), never
+                // below min_chunk. A mutex keeps remaining+cursor atomic
+                // as a pair (contention is amortised by the large grabs).
+                let state = std::sync::Mutex::new(0usize); // next row
+                self.pool.broadcast(&|_t| loop {
+                    let (r0, r1) = {
+                        let mut next = state.lock().unwrap();
+                        if *next >= n {
+                            break;
+                        }
+                        let remaining = n - *next;
+                        let take = (remaining / (2 * t_total)).max(min_chunk).min(remaining);
+                        let r0 = *next;
+                        *next += take;
+                        (r0, r0 + take)
+                    };
+                    job(r0, r1);
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn covers_rows_exactly_once() {
+        let m = OpenMpModel::new(7);
+        let hits = Mutex::new(vec![0u32; 100]);
+        m.dispatch(100, &|a, b| {
+            let mut h = hits.lock().unwrap();
+            for i in a..b {
+                h[i] += 1;
+            }
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let m = OpenMpModel::new(16);
+        let hits = Mutex::new(vec![0u32; 5]);
+        m.dispatch(5, &|a, b| {
+            let mut h = hits.lock().unwrap();
+            for i in a..b {
+                h[i] += 1;
+            }
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn zero_rows_is_noop() {
+        let m = OpenMpModel::new(4);
+        m.dispatch(0, &|_, _| panic!("no job expected"));
+    }
+
+    #[test]
+    fn chunks_are_contiguous_per_worker() {
+        // static schedule ⇒ exactly min(T, n) non-empty contiguous chunks
+        let m = OpenMpModel::new(4);
+        let ranges = Mutex::new(vec![]);
+        m.dispatch(40, &|a, b| ranges.lock().unwrap().push((a, b)));
+        let mut r = ranges.lock().unwrap().clone();
+        r.sort_unstable();
+        assert_eq!(r, vec![(0, 10), (10, 20), (20, 30), (30, 40)]);
+    }
+
+    #[test]
+    fn overhead_probe_runs() {
+        let m = OpenMpModel::new(4);
+        let s = m.overhead_probe(1000, 5);
+        assert_eq!(s.len(), 5);
+        assert!(s.min() >= 0.0);
+    }
+
+    #[test]
+    fn dynamic_schedule_covers_exactly_once() {
+        for chunk in [1usize, 3, 16, 200] {
+            let m = OpenMpModel::with_schedule(5, Schedule::Dynamic(chunk));
+            let hits = Mutex::new(vec![0u32; 103]);
+            m.dispatch(103, &|a, b| {
+                let mut h = hits.lock().unwrap();
+                for i in a..b {
+                    h[i] += 1;
+                }
+            });
+            assert!(hits.lock().unwrap().iter().all(|&h| h == 1), "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn guided_schedule_covers_exactly_once() {
+        for min in [1usize, 4, 50] {
+            let m = OpenMpModel::with_schedule(3, Schedule::Guided(min));
+            let hits = Mutex::new(vec![0u32; 211]);
+            m.dispatch(211, &|a, b| {
+                let mut h = hits.lock().unwrap();
+                for i in a..b {
+                    h[i] += 1;
+                }
+            });
+            assert!(hits.lock().unwrap().iter().all(|&h| h == 1), "min {min}");
+        }
+    }
+
+    #[test]
+    fn guided_chunks_shrink() {
+        let m = OpenMpModel::with_schedule(2, Schedule::Guided(1));
+        let sizes = Mutex::new(vec![]);
+        m.dispatch(400, &|a, b| sizes.lock().unwrap().push(b - a));
+        let s = sizes.lock().unwrap();
+        // first grab is remaining/(2T) = 100; later grabs shrink to 1
+        assert!(s.iter().max().unwrap() >= &90);
+        assert_eq!(*s.iter().min().unwrap(), 1);
+    }
+
+    #[test]
+    fn schedule_labels() {
+        assert_eq!(Schedule::Static.label(), "static");
+        assert_eq!(Schedule::Dynamic(4).label(), "dynamic,4");
+        assert_eq!(Schedule::Guided(2).label(), "guided,2");
+    }
+}

@@ -1,0 +1,241 @@
+//! Persistent worker-thread pool: the shared substrate under all three
+//! execution models.
+//!
+//! The pool plays the role the OS-thread layer plays on the Xeon Phi:
+//! OpenMP teams, OpenCL compute units and GPRM's thread tiles are all,
+//! underneath, a fixed set of kernel threads that a runtime parks and
+//! wakes. `broadcast` wakes every worker once with the same job closure
+//! and waits for all of them — each model builds its own scheduling
+//! discipline (static chunks / group queue / task deques) inside the job.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased borrowed job. Lifetime is erased (`'static` transmute) —
+/// sound because `broadcast` does not return until every worker has
+/// finished running the job, so the borrow outlives all uses.
+type JobRef = &'static (dyn Fn(usize) + Sync);
+
+struct State {
+    epoch: u64,
+    job: Option<JobRef>,
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// Fixed-size persistent pool.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// serialises broadcasts (one parallel region at a time, like an
+    /// OpenMP team)
+    dispatch: Mutex<()>,
+    n: usize,
+}
+
+impl WorkerPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, remaining: 0, shutdown: false }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..n)
+            .map(|id| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("phi-conv-worker-{id}"))
+                    .spawn(move || Self::worker_loop(sh, id))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, handles, dispatch: Mutex::new(()), n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    fn worker_loop(shared: Arc<Shared>, id: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap();
+                while !st.shutdown && st.epoch == seen {
+                    st = shared.start.wait(st).unwrap();
+                }
+                if st.shutdown {
+                    return;
+                }
+                seen = st.epoch;
+                st.job.expect("job set with epoch")
+            };
+            job(id);
+            let mut st = shared.state.lock().unwrap();
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Run `job(worker_id)` once on every worker; returns when all done.
+    pub fn broadcast(&self, job: &(dyn Fn(usize) + Sync)) {
+        let _serial = self.dispatch.lock().unwrap();
+        // SAFETY: lifetime erasure only; we wait for remaining == 0 below,
+        // so no worker touches `job` after this function returns.
+        let job_static: JobRef = unsafe { std::mem::transmute(job) };
+        let mut st = self.shared.state.lock().unwrap();
+        st.job = Some(job_static);
+        st.remaining = self.n;
+        st.epoch += 1;
+        self.shared.start.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Hands out disjoint mutable row-band views of one plane buffer to
+/// parallel workers.
+///
+/// Soundness contract: callers must request **disjoint** `[r0, r1)` row
+/// ranges (the execution models guarantee this by construction; the
+/// property tests verify their partitions). Each view is then a disjoint
+/// sub-slice, equivalent to nested `split_at_mut`.
+pub struct RowBands<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: access discipline (disjoint bands) is the caller contract above.
+unsafe impl Send for RowBands<'_> {}
+unsafe impl Sync for RowBands<'_> {}
+
+impl<'a> RowBands<'a> {
+    pub fn new(plane: &'a mut [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(plane.len(), rows * cols);
+        Self { ptr: plane.as_mut_ptr(), rows, cols, _marker: std::marker::PhantomData }
+    }
+
+    /// Mutable view of rows `[r0, r1)`.
+    ///
+    /// # Safety
+    /// The range must not overlap any other outstanding band.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn band(&self, r0: usize, r1: usize) -> &mut [f32] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(r0 * self.cols), (r1 - r0) * self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn broadcast_runs_every_worker_once() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        let seen = Mutex::new(vec![false; 4]);
+        pool.broadcast(&|id| {
+            count.fetch_add(1, Ordering::SeqCst);
+            seen.lock().unwrap()[id] = true;
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+        assert!(seen.lock().unwrap().iter().all(|&s| s));
+    }
+
+    #[test]
+    fn repeated_broadcasts() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.broadcast(&|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 300);
+    }
+
+    #[test]
+    fn broadcast_borrows_stack_data() {
+        let pool = WorkerPool::new(2);
+        let data = vec![1.0f32; 128];
+        let sum = Mutex::new(0.0f32);
+        pool.broadcast(&|id| {
+            let part: f32 = data[id * 64..(id + 1) * 64].iter().sum();
+            *sum.lock().unwrap() += part;
+        });
+        assert_eq!(*sum.lock().unwrap(), 128.0);
+    }
+
+    #[test]
+    fn concurrent_broadcasts_serialise() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let count = Arc::new(AtomicUsize::new(0));
+        let mut joins = vec![];
+        for _ in 0..4 {
+            let p = pool.clone();
+            let c = count.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    p.broadcast(&|_| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 4 * 50 * 2);
+    }
+
+    #[test]
+    fn row_bands_disjoint_views() {
+        let mut plane = vec![0f32; 6 * 4];
+        let bands = RowBands::new(&mut plane, 6, 4);
+        let (b0, b1) = unsafe { (bands.band(0, 3), bands.band(3, 6)) };
+        b0.fill(1.0);
+        b1.fill(2.0);
+        drop(bands);
+        assert!(plane[..12].iter().all(|&v| v == 1.0));
+        assert!(plane[12..].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(8);
+        pool.broadcast(&|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,391 @@
+//! The cost-model evaluator: workload × run-configuration → estimate.
+
+use crate::conv::{Algorithm, Variant};
+use crate::models::Layout;
+
+use super::calibration::{Calibration, PhiMachine};
+
+/// Which runtime schedules the work (Sequential = the ladder's Opt rungs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimModel {
+    Sequential,
+    OpenMp,
+    OpenCl,
+    Gprm,
+}
+
+impl SimModel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimModel::Sequential => "Sequential",
+            SimModel::OpenMp => "OpenMP",
+            SimModel::OpenCl => "OpenCL",
+            SimModel::Gprm => "GPRM",
+        }
+    }
+}
+
+/// The image + algorithm being convolved.
+#[derive(Debug, Clone, Copy)]
+pub struct SimWorkload {
+    pub rows: usize,
+    pub cols: usize,
+    pub planes: usize,
+    pub algorithm: Algorithm,
+    pub variant: Variant,
+}
+
+impl SimWorkload {
+    pub fn paper(size: usize, algorithm: Algorithm, variant: Variant) -> Self {
+        Self { rows: size, cols: size, planes: 3, algorithm, variant }
+    }
+
+    pub fn pixels(&self) -> f64 {
+        (self.rows * self.cols * self.planes) as f64
+    }
+
+    /// The barrier-separated passes of the algorithm, as
+    /// `(flops_per_pixel, dram_bytes_per_pixel)` pairs. Each pass is a
+    /// separate parallel region (its own dispatch + its own roofline):
+    /// neighbour reads hit the L2 row-reuse window, so DRAM traffic per
+    /// pass is stream-read + stream-write = 8 B/px.
+    pub fn passes(&self) -> Vec<(f64, f64)> {
+        match self.algorithm {
+            // horizontal 5 mul + 4 add, then vertical the same
+            Algorithm::TwoPass => vec![(9.0, 8.0), (9.0, 8.0)],
+            // 25 mul + 24 add in one sweep
+            Algorithm::SinglePassNoCopy => vec![(49.0, 8.0)],
+            // …plus the copy-back sweep (pure memory, ~1 move-op)
+            Algorithm::SinglePassCopyBack => vec![(49.0, 8.0), (1.0, 8.0)],
+        }
+    }
+
+    /// total flops per pixel (all passes)
+    pub fn flops_per_pixel(&self) -> f64 {
+        self.passes().iter().map(|p| p.0).sum()
+    }
+
+    /// total streamed DRAM bytes per pixel (all passes)
+    pub fn bytes_per_pixel(&self) -> f64 {
+        self.passes().iter().map(|p| p.1).sum()
+    }
+
+    /// parallel regions per image under a layout (each pass of each
+    /// plane-sweep is one dispatch; copy-back is a dispatch of its own).
+    pub fn dispatches(&self, layout: Layout) -> usize {
+        let passes = match self.algorithm {
+            Algorithm::TwoPass => 2,
+            Algorithm::SinglePassNoCopy => 1,
+            Algorithm::SinglePassCopyBack => 2,
+        };
+        match layout {
+            Layout::PerPlane => passes * self.planes,
+            Layout::Agglomerated => passes,
+        }
+    }
+}
+
+/// Scheduling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimRun {
+    pub model: SimModel,
+    pub threads: usize,
+    /// GPRM task cutoff (ignored elsewhere).
+    pub cutoff: usize,
+    pub layout: Layout,
+}
+
+impl SimRun {
+    pub fn sequential() -> Self {
+        Self { model: SimModel::Sequential, threads: 1, cutoff: 1, layout: Layout::PerPlane }
+    }
+
+    pub fn openmp(threads: usize) -> Self {
+        Self { model: SimModel::OpenMp, threads, cutoff: 0, layout: Layout::PerPlane }
+    }
+
+    pub fn opencl() -> Self {
+        // the paper: all compute units; ngroups×nths cover the device
+        Self { model: SimModel::OpenCl, threads: 236, cutoff: 0, layout: Layout::PerPlane }
+    }
+
+    pub fn gprm(cutoff: usize, layout: Layout) -> Self {
+        // GPRM pins threads = hw threads; concurrency comes from tasks
+        Self { model: SimModel::Gprm, threads: 240, cutoff, layout }
+    }
+}
+
+/// Per-image time estimate with its roofline breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    /// raw compute term (before roofline combination)
+    pub compute_ms: f64,
+    /// raw memory term
+    pub memory_ms: f64,
+    /// combined busy time (max() when threaded, sum when sequential,
+    /// with the GPRM pinning factor applied)
+    pub busy_ms: f64,
+    /// runtime dispatch/communication overhead
+    pub overhead_ms: f64,
+}
+
+impl Estimate {
+    pub fn total_ms(&self) -> f64 {
+        self.busy_ms + self.overhead_ms
+    }
+}
+
+/// Evaluate the cost model (see `phisim/mod.rs` for the formula and the
+/// calibration provenance).
+pub fn simulate(
+    machine: &PhiMachine,
+    cal: &Calibration,
+    w: &SimWorkload,
+    run: &SimRun,
+) -> Estimate {
+    let threads = run.threads.clamp(1, machine.hw_threads()) as f64;
+    let px = w.pixels();
+
+    // effective concurrency for GPRM: tasks, not threads, are the unit —
+    // with cutoff < threads only `cutoff` workers are busy ("some threads
+    // can be asleep during the execution").
+    let workers = match run.model {
+        SimModel::Sequential => 1.0,
+        SimModel::Gprm => (run.cutoff.max(1) as f64).min(threads),
+        _ => threads,
+    };
+
+    // -- per-pass terms ----------------------------------------------------
+    let base_rate = match w.variant {
+        Variant::Naive => cal.rate_naive,
+        Variant::Scalar => cal.rate_unrolled,
+        Variant::Simd => cal.rate_simd,
+    };
+    let rate = match run.model {
+        // the paper's no-vec OpenCL mode (one PE per CU) wastes the VPU
+        // entirely and its scalar fallback is poor — separate constant
+        SimModel::OpenCl => match (w.variant, w.algorithm) {
+            // the 25-tap stencil defeats OpenCL's implicit vectoriser
+            (Variant::Simd, Algorithm::SinglePassCopyBack | Algorithm::SinglePassNoCopy) => {
+                base_rate * workers * cal.ocl_singlepass_eff
+            }
+            (Variant::Simd, _) => base_rate * workers * cal.ocl_eff,
+            _ => base_rate * workers * cal.ocl_scalar_eff,
+        },
+        _ => base_rate * workers,
+    };
+    let bw_cap = match run.model {
+        SimModel::OpenCl => cal.ocl_bw_gbs,
+        _ => cal.bw_peak_gbs,
+    };
+    let bw = (workers * cal.bw_thread_gbs).min(bw_cap) * 1e9;
+
+    // Each pass is a barrier-separated parallel region with its own
+    // roofline. Multi-threaded runs overlap memory latency behind other
+    // threads' compute (the purpose of the Phi's 4-way SMT): busy time
+    // per pass is max(compute, memory). A single in-order thread cannot
+    // overlap: the sum. This asymmetry is what makes the paper's
+    // sequential SIMD gain (8.6×) exceed the 100-thread gain (4.2×).
+    let mut compute_ms = 0.0;
+    let mut memory_ms = 0.0;
+    let mut busy_ms = 0.0;
+    for (flops_px, bytes_px) in w.passes() {
+        let mut c = px * flops_px / rate * 1e3;
+        if run.model == SimModel::OpenCl {
+            // per-work-item indexing (global id → r, c via div/mod)
+            c += px * cal.ocl_item_ns / workers / 1e6;
+        }
+        let m = px * bytes_px / bw * 1e3;
+        compute_ms += c;
+        memory_ms += m;
+        busy_ms += if workers > 1.5 { c.max(m) } else { c + m };
+    }
+
+    // GPRM's pinned tasks avoid per-region fork/barrier losses: Table 2's
+    // GPRM-compute column ≈ factor × the OpenMP time, applied to the
+    // whole busy term.
+    if run.model == SimModel::Gprm {
+        busy_ms *= match w.variant {
+            Variant::Simd => cal.gprm_compute_factor_simd,
+            _ => cal.gprm_compute_factor_scalar,
+        };
+    }
+
+    // -- overhead term -------------------------------------------------------
+    let dispatches = w.dispatches(run.layout) as f64;
+    let overhead_ms = match run.model {
+        SimModel::Sequential => 0.0,
+        SimModel::OpenMp => {
+            dispatches * (cal.omp_dispatch_base_us + threads * cal.omp_dispatch_per_thread_ns / 1e3)
+                / 1e3
+        }
+        SimModel::OpenCl => dispatches * cal.ocl_enqueue_ms,
+        SimModel::Gprm => {
+            dispatches * (run.cutoff as f64 * cal.gprm_task_us / 1e3 + cal.gprm_graph_ms)
+        }
+    };
+
+    Estimate { compute_ms, memory_ms, busy_ms, overhead_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(w: &SimWorkload, run: &SimRun) -> Estimate {
+        simulate(&PhiMachine::default(), &Calibration::default(), w, run)
+    }
+
+    fn paper_w(size: usize, alg: Algorithm, variant: Variant) -> SimWorkload {
+        SimWorkload::paper(size, alg, variant)
+    }
+
+    /// Paper Table 1, OpenMP SIMD column — the anchor calibration row.
+    #[test]
+    fn table1_openmp_simd_within_tolerance() {
+        let paper: [(usize, f64); 6] = [
+            (1152, 0.8),
+            (1728, 2.0),
+            (2592, 4.1),
+            (3888, 8.8),
+            (5832, 19.6),
+            (8748, 59.2),
+        ];
+        for (size, want) in paper {
+            let w = paper_w(size, Algorithm::TwoPass, Variant::Simd);
+            let got = sim(&w, &SimRun::openmp(100)).total_ms();
+            let ratio = got / want;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{size}: simulated {got:.2}ms vs paper {want}ms (ratio {ratio:.2})"
+            );
+        }
+    }
+
+    /// Paper Table 1: vectorisation gain at 100 threads ≈ 4.2× for OpenMP.
+    #[test]
+    fn vectorisation_gain_parallel_shape() {
+        let mut gains = vec![];
+        for size in [1152usize, 2592, 5832] {
+            let novec = sim(&paper_w(size, Algorithm::TwoPass, Variant::Scalar), &SimRun::openmp(100)).total_ms();
+            let simd = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::openmp(100)).total_ms();
+            gains.push(novec / simd);
+        }
+        let avg = gains.iter().sum::<f64>() / gains.len() as f64;
+        assert!((2.5..7.0).contains(&avg), "avg parallel SIMD gain {avg:.1} (paper 4.2)");
+    }
+
+    /// Sequential vectorisation gain must exceed the parallel one (paper:
+    /// 8.6× sequential vs 4.2× at 100 threads — BW saturation).
+    #[test]
+    fn sequential_simd_gain_exceeds_parallel() {
+        let size = 2592;
+        let seq_novec = sim(&paper_w(size, Algorithm::TwoPass, Variant::Scalar), &SimRun::sequential()).total_ms();
+        let seq_simd = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::sequential()).total_ms();
+        let par_novec = sim(&paper_w(size, Algorithm::TwoPass, Variant::Scalar), &SimRun::openmp(100)).total_ms();
+        let par_simd = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::openmp(100)).total_ms();
+        assert!(seq_novec / seq_simd > par_novec / par_simd);
+    }
+
+    /// Paper Table 2: GPRM ≈ 26 ms at 1152² (overhead-dominated), and the
+    /// GPRM overhead constant ≈ 25.5 ms RxC.
+    #[test]
+    fn gprm_small_image_overhead_dominated() {
+        let w = paper_w(1152, Algorithm::TwoPass, Variant::Simd);
+        let e = sim(&w, &SimRun::gprm(100, Layout::PerPlane));
+        assert!((20.0..32.0).contains(&e.total_ms()), "total {:.1}", e.total_ms());
+        assert!(e.overhead_ms > 0.8 * e.total_ms(), "overhead should dominate");
+    }
+
+    /// Paper Fig. 3: agglomeration cuts GPRM overhead to one third and
+    /// makes GPRM beat OpenMP on the largest image.
+    #[test]
+    fn agglomeration_rescues_gprm_largest_image() {
+        let w = paper_w(8748, Algorithm::TwoPass, Variant::Simd);
+        let gprm_rxc = sim(&w, &SimRun::gprm(100, Layout::PerPlane));
+        let gprm_agg = sim(&w, &SimRun::gprm(100, Layout::Agglomerated));
+        let omp = sim(&w, &SimRun::openmp(100));
+        assert!((gprm_rxc.overhead_ms / gprm_agg.overhead_ms - 3.0).abs() < 0.2);
+        assert!(gprm_agg.total_ms() < omp.total_ms(), "GPRM 3RxC must win at 8748²");
+        // ...but still lose at the smallest image even agglomerated
+        let w1 = paper_w(1152, Algorithm::TwoPass, Variant::Simd);
+        let gprm1 = sim(&w1, &SimRun::gprm(100, Layout::Agglomerated));
+        let omp1 = sim(&w1, &SimRun::openmp(100));
+        assert!(gprm1.total_ms() > omp1.total_ms(), "OpenMP must keep winning at 1152²");
+    }
+
+    /// OpenCL sits between OpenMP and GPRM for small images and is the
+    /// worst of the three at the largest (paper section 7).
+    #[test]
+    fn opencl_ordering() {
+        let w = paper_w(1152, Algorithm::TwoPass, Variant::Simd);
+        let omp = sim(&w, &SimRun::openmp(100)).total_ms();
+        let ocl = sim(&w, &SimRun::opencl()).total_ms();
+        let gprm = sim(&w, &SimRun::gprm(100, Layout::PerPlane)).total_ms();
+        assert!(omp < ocl && ocl < gprm, "1152: omp {omp:.1} < ocl {ocl:.1} < gprm {gprm:.1}");
+
+        let w8 = paper_w(8748, Algorithm::TwoPass, Variant::Simd);
+        let omp8 = sim(&w8, &SimRun::openmp(100)).total_ms();
+        let ocl8 = sim(&w8, &SimRun::opencl()).total_ms();
+        let gprm8 = sim(&w8, &SimRun::gprm(100, Layout::Agglomerated)).total_ms();
+        assert!(gprm8 < omp8 && omp8 < ocl8, "8748: gprm {gprm8:.1} < omp {omp8:.1} < ocl {ocl8:.1}");
+    }
+
+    /// Paper Fig. 4: parallel single-pass-nocopy SIMD beats parallel
+    /// two-pass SIMD (≈1.2×) even though sequentially two-pass wins 1.6×.
+    #[test]
+    fn fig4_crossover() {
+        let size = 5832;
+        let seq_sp = sim(&paper_w(size, Algorithm::SinglePassNoCopy, Variant::Simd), &SimRun::sequential()).total_ms();
+        let seq_tp = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::sequential()).total_ms();
+        assert!(seq_tp < seq_sp, "sequential: two-pass must win");
+        let par_sp = sim(&paper_w(size, Algorithm::SinglePassNoCopy, Variant::Simd), &SimRun::openmp(100)).total_ms();
+        let par_tp = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::openmp(100)).total_ms();
+        assert!(par_sp < par_tp, "parallel: single-pass-nocopy must win ({par_sp:.1} vs {par_tp:.1})");
+    }
+
+    /// Figure 1 ladder: monotone improvement Opt-0 → Par-4, with the
+    /// paper's approximate gains.
+    #[test]
+    fn fig1_ladder_monotone() {
+        let size = 5832;
+        let base = sim(&paper_w(size, Algorithm::SinglePassCopyBack, Variant::Naive), &SimRun::sequential()).total_ms();
+        let opt1 = sim(&paper_w(size, Algorithm::SinglePassCopyBack, Variant::Scalar), &SimRun::sequential()).total_ms();
+        let opt2 = sim(&paper_w(size, Algorithm::SinglePassCopyBack, Variant::Simd), &SimRun::sequential()).total_ms();
+        let opt3 = sim(&paper_w(size, Algorithm::TwoPass, Variant::Scalar), &SimRun::sequential()).total_ms();
+        let opt4 = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::sequential()).total_ms();
+        let par4 = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::openmp(100)).total_ms();
+        assert!(base > opt1 && opt1 > opt2, "unroll then simd improve");
+        assert!(opt1 > opt3 && opt3 > opt4, "two-pass improves each rung");
+        assert!(opt4 > par4, "parallelism improves");
+        let g1 = base / opt1;
+        assert!((2.0..3.0).contains(&g1), "Opt-1 gain {g1:.1} (paper 2.5)");
+        let g2 = base / opt2;
+        assert!((15.0..30.0).contains(&g2), "Opt-2 gain {g2:.1} (paper 22)");
+        let g4 = base / opt4;
+        assert!((30.0..70.0).contains(&g4), "Opt-4 gain {g4:.1} (paper 47)");
+    }
+
+    /// Paper section 7: "the results of the OpenCL kernel for the
+    /// single-pass implementation are on average about 50% slower than
+    /// for the two-pass implementation".
+    #[test]
+    fn opencl_singlepass_slower_than_twopass() {
+        let mut ratios = vec![];
+        for size in [3888usize, 5832, 8748] {
+            let sp = sim(&paper_w(size, Algorithm::SinglePassNoCopy, Variant::Simd), &SimRun::opencl()).total_ms();
+            let tp = sim(&paper_w(size, Algorithm::TwoPass, Variant::Simd), &SimRun::opencl()).total_ms();
+            ratios.push(sp / tp);
+        }
+        let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((1.1..2.5).contains(&avg), "avg sp/tp ratio {avg:.2} (paper ≈ 1.5)");
+    }
+
+    #[test]
+    fn gprm_cutoff_below_threads_limits_concurrency() {
+        let w = paper_w(2592, Algorithm::TwoPass, Variant::Scalar);
+        let few = sim(&w, &SimRun::gprm(10, Layout::PerPlane));
+        let many = sim(&w, &SimRun::gprm(100, Layout::PerPlane));
+        assert!(few.compute_ms > many.compute_ms, "10 tasks can only use 10 workers");
+    }
+}

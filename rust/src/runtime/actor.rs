@@ -1,0 +1,111 @@
+//! PJRT actor: confines the (non-`Send`) xla client to one dedicated
+//! thread and exposes a channel-based, `Send + Sync + Clone` handle.
+//!
+//! The `xla` crate's `PjRtClient` holds `Rc` internals, so executables
+//! cannot be shared across the coordinator's executor threads. Instead a
+//! single actor thread owns the [`EnginePool`] and serves execution
+//! requests over a channel — the standard confinement pattern, and a
+//! reasonable serving shape regardless: the PJRT CPU client parallelises
+//! execution internally, so one submission thread does not serialise the
+//! actual compute.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::pool::EnginePool;
+
+enum Job {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Warm {
+        names: Vec<String>,
+        reply: Sender<Result<Vec<f64>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT actor.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Arc<Mutex<Sender<Job>>>,
+}
+
+impl PjrtHandle {
+    /// Spawn the actor; fails fast if the artifacts dir / client are bad.
+    pub fn spawn(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("phi-conv-pjrt".into())
+            .spawn(move || {
+                let pool = match EnginePool::open(&dir) {
+                    Ok(p) => {
+                        let _ = ready_tx.send(Ok(()));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for job in rx {
+                    match job {
+                        Job::Run { name, inputs, reply } => {
+                            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                            let result = pool.engine(&name).and_then(|e| e.run(&refs));
+                            let _ = reply.send(result);
+                        }
+                        Job::Warm { names, reply } => {
+                            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                            let _ = reply.send(pool.warm(&refs));
+                        }
+                        Job::Shutdown => return,
+                    }
+                }
+            })
+            .context("spawning PJRT actor")?;
+        ready_rx.recv().context("PJRT actor died during startup")??;
+        Ok(Self { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    /// Execute an artifact; blocks until the actor replies.
+    pub fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Run { name: name.to_string(), inputs, reply })
+            .context("PJRT actor gone")?;
+        rx.recv().context("PJRT actor dropped reply")?
+    }
+
+    /// Single-output convenience.
+    pub fn run1(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        let mut outs = self.run(name, inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{name}: expected 1 output, got {}", outs.len());
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Pre-compile artifacts; returns per-artifact compile ms.
+    pub fn warm(&self, names: &[&str]) -> Result<Vec<f64>> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Warm { names: names.iter().map(|s| s.to_string()).collect(), reply })
+            .context("PJRT actor gone")?;
+        rx.recv().context("PJRT actor dropped reply")?
+    }
+
+    /// Ask the actor to exit (also happens when the last handle drops the
+    /// channel).
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}

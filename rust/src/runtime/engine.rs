@@ -1,0 +1,130 @@
+//! `HloEngine`: one compiled PJRT executable plus its tensor contracts.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// Shape + dtype contract for one tensor (f32 only in this project).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A loaded-and-compiled HLO artifact, ready to execute.
+///
+/// Compilation happens once at load time (AOT on the Python side, JIT of
+/// the *text* here); `run` is the request-path entry and does no Python,
+/// no parsing, no compilation.
+pub struct HloEngine {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// wall time spent compiling the artifact, for the perf log
+    pub compile_time_ms: f64,
+}
+
+impl HloEngine {
+    /// Load one artifact from a manifest through a shared PJRT client.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.get(name)?;
+        let path = manifest.path_of(entry);
+        Self::load_entry(client, entry, &path)
+    }
+
+    /// Load from an explicit entry + path (used by the pool loader).
+    pub fn load_entry(
+        client: &xla::PjRtClient,
+        entry: &ArtifactEntry,
+        path: &std::path::Path,
+    ) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let compile_time_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(Self {
+            name: entry.name.clone(),
+            exe,
+            inputs: entry
+                .inputs
+                .iter()
+                .map(|s| TensorSpec { shape: s.shape.clone() })
+                .collect(),
+            outputs: entry
+                .outputs
+                .iter()
+                .map(|s| TensorSpec { shape: s.shape.clone() })
+                .collect(),
+            compile_time_ms,
+        })
+    }
+
+    /// Execute with raw f32 buffers; returns one `Vec<f32>` per output.
+    ///
+    /// Inputs are validated against the manifest contract — a wrong-sized
+    /// buffer is a caller bug and fails fast here rather than deep inside
+    /// PJRT.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.inputs.len() {
+            anyhow::bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.inputs) {
+            if buf.len() != spec.elements() {
+                anyhow::bail!(
+                    "{}: input buffer has {} elements, spec {:?} wants {}",
+                    self.name,
+                    buf.len(),
+                    spec.shape,
+                    spec.elements()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            anyhow::bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Convenience: single-output artifacts.
+    pub fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let mut outs = self.run(inputs)?;
+        if outs.len() != 1 {
+            anyhow::bail!("{}: run1 on a {}-output artifact", self.name, outs.len());
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// Create the process-wide PJRT CPU client.
+pub fn cpu_client() -> Result<Arc<xla::PjRtClient>> {
+    Ok(Arc::new(xla::PjRtClient::cpu()?))
+}

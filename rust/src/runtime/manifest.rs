@@ -1,0 +1,213 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! `manifest.json` names every lowered HLO artifact together with its
+//! input/output tensor specs and a role tag, so the Rust side can load and
+//! validate artifacts without hard-coding shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec as recorded by the AOT compiler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecJson {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl SpecJson {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: j.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One AOT artifact: name, file, role and tensor contracts.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "full" | "agg" | "tile" | "ablation" | "pyramid"
+    pub role: String,
+    /// "twopass" | "singlepass"
+    pub algorithm: String,
+    pub variant: String,
+    pub inputs: Vec<SpecJson>,
+    pub outputs: Vec<SpecJson>,
+    pub meta: BTreeMap<String, Json>,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<SpecJson>> {
+            j.req_arr(key)?.iter().map(SpecJson::from_json).collect()
+        };
+        Ok(Self {
+            name: j.req_str("name")?.to_string(),
+            file: j.req_str("file")?.to_string(),
+            role: j.req_str("role")?.to_string(),
+            algorithm: j.req_str("algorithm")?.to_string(),
+            variant: j.req_str("variant")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            meta: j.get("meta").as_obj().cloned().unwrap_or_default(),
+            sha256: j.req_str("sha256")?.to_string(),
+            bytes: j.req_f64("bytes")? as u64,
+        })
+    }
+
+    /// Integer metadata field (rows, cols, planes, tile_rows, halo, …).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// The whole manifest: artifact index plus the reference kernel.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kernel_width: usize,
+    pub gaussian_sigma: f64,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Reference Gaussian kernel values — used to cross-check the Rust
+    /// kernel generator against the Python one.
+    pub kernel_values: Vec<f32>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("cannot read {}. Run `make artifacts` first.", path.display())
+        })?;
+        let j = Json::parse(&text).context("manifest.json is not valid JSON")?;
+        if j.req_str("format")? != "hlo-text" {
+            bail!("unsupported artifact format {:?}", j.get("format"));
+        }
+        let artifacts = j
+            .req_arr("artifacts")?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let kernel_values = j
+            .req_arr("kernel_values")?
+            .iter()
+            .map(|v| v.as_f64().context("kernel value not a number").map(|f| f as f32))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            kernel_width: j.req_usize("kernel_width")?,
+            gaussian_sigma: j.req_f64("gaussian_sigma")?,
+            artifacts,
+            kernel_values,
+            dir,
+        })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not in manifest ({} entries)",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    /// All artifacts with a given role tag.
+    pub fn by_role(&self, role: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts.iter().filter(|a| a.role == role).collect()
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Full-image artifact name for (algorithm, planes, size).
+    pub fn full_image_name(&self, algorithm: &str, planes: usize, size: usize) -> String {
+        format!("{algorithm}_p{planes}_{size}")
+    }
+
+    /// The square full-image sizes available in this manifest.
+    pub fn full_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_role("full")
+            .iter()
+            .filter_map(|a| a.meta_usize("rows"))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Locate the artifacts directory: $PHI_CONV_ARTIFACTS or ./artifacts
+/// relative to the crate root (works from `cargo test` / `cargo bench`).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PHI_CONV_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_shipped_manifest() {
+        let m = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
+        assert_eq!(m.kernel_width, 5);
+        assert!(!m.artifacts.is_empty());
+        assert_eq!(m.kernel_values.len(), 5);
+        let s: f32 = m.kernel_values.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn roles_and_lookup() {
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert!(!m.by_role("full").is_empty());
+        assert!(!m.by_role("tile").is_empty());
+        assert!(!m.by_role("pyramid").is_empty());
+        let name = m.full_image_name("twopass", 3, m.full_sizes()[0]);
+        let e = m.get(&name).unwrap();
+        assert_eq!(e.algorithm, "twopass");
+        assert!(m.path_of(e).exists());
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].shape, vec![5]);
+    }
+
+    #[test]
+    fn tile_metadata_present() {
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        for t in m.by_role("tile") {
+            assert!(t.meta_usize("tile_rows").is_some(), "{}", t.name);
+            assert!(t.meta_usize("cols").is_some(), "{}", t.name);
+            assert!(t.meta_usize("halo").is_some(), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert!(m.get("definitely_not_an_artifact").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let e = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

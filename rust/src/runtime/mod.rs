@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only place the compiled Python/Pallas world touches the
+//! Rust request path. The flow (from /opt/xla-example/load_hlo):
+//!
+//! ```text
+//! artifacts/<name>.hlo.txt --HloModuleProto::from_text_file-->
+//!   XlaComputation --PjRtClient::compile--> PjRtLoadedExecutable
+//!   --execute(&[Literal])--> tuple of output Literals
+//! ```
+//!
+//! HLO *text* is the interchange format: xla_extension 0.5.1 rejects
+//! serialized protos from jax ≥ 0.5 (64-bit instruction ids); the text
+//! parser reassigns ids (DESIGN.md §2).
+
+pub mod actor;
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+
+pub use actor::PjrtHandle;
+pub use engine::{HloEngine, TensorSpec};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use pool::EnginePool;

@@ -1,0 +1,67 @@
+//! `EnginePool`: lazy, shared registry of compiled executables.
+//!
+//! One PJRT client per process; engines compile on first use and are
+//! cached behind an `Arc` so the coordinator's worker threads can execute
+//! the same artifact concurrently (PJRT executables are thread-safe for
+//! execution).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::engine::HloEngine;
+use super::manifest::Manifest;
+
+pub struct EnginePool {
+    client: Arc<xla::PjRtClient>,
+    manifest: Manifest,
+    engines: Mutex<HashMap<String, Arc<HloEngine>>>,
+}
+
+impl EnginePool {
+    /// Open an artifacts directory: loads the manifest, creates the PJRT
+    /// CPU client, compiles nothing yet.
+    pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self {
+            client: super::engine::cpu_client()?,
+            manifest: Manifest::load(artifacts_dir)?,
+            engines: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling on first use) the engine for an artifact name.
+    pub fn engine(&self, name: &str) -> Result<Arc<HloEngine>> {
+        if let Some(e) = self.engines.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        // Compile outside the lock: compilation can take hundreds of ms
+        // and other engines should stay usable meanwhile. A racing second
+        // compile of the same name is harmless (last insert wins).
+        let engine = Arc::new(HloEngine::load(&self.client, &self.manifest, name)?);
+        self.engines
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), engine.clone());
+        Ok(engine)
+    }
+
+    /// Pre-compile a set of artifacts (the serving warm-up path).
+    pub fn warm(&self, names: &[&str]) -> Result<Vec<f64>> {
+        names
+            .iter()
+            .map(|n| Ok(self.engine(n)?.compile_time_ms))
+            .collect()
+    }
+
+    /// Names currently resident.
+    pub fn resident(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.engines.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

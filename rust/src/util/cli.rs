@@ -1,0 +1,232 @@
+//! Tiny declarative CLI argument parser (in-tree replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and auto-generated `--help`. Each binary declares its options up front;
+//! unknown options are hard errors so typos never silently fall through.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+    help: &'static str,
+}
+
+/// Builder + parsed result.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    bin: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Self {
+            bin,
+            about,
+            opts: vec![],
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positionals: vec![],
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            takes_value: true,
+            default: Some(default.to_string()),
+            help,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` with no default (optional).
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, takes_value: true, default: None, help });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, takes_value: false, default: None, help });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [options] [args…]\n\nOPTIONS:\n", self.bin, self.about, self.bin);
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let dflt = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<22} {}{dflt}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse; on `--help` prints usage and exits the process.
+    pub fn parse(self, args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut me = self;
+        for o in &me.opts {
+            if let Some(d) = &o.default {
+                me.values.insert(o.name.to_string(), d.clone());
+            }
+            if !o.takes_value {
+                me.flags.insert(o.name.to_string(), false);
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print!("{}", me.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = me
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", me.usage()))?
+                    .clone();
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                    };
+                    me.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    me.flags.insert(name, true);
+                }
+            } else {
+                me.positionals.push(a);
+            }
+        }
+        Ok(me)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_of(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_of(&self, name: &str) -> Result<usize> {
+        Ok(self.str_of(name)?.parse()?)
+    }
+
+    pub fn f64_of(&self, name: &str) -> Result<f64> {
+        Ok(self.str_of(name)?.parse()?)
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 1152,1728`.
+    pub fn usize_list_of(&self, name: &str) -> Result<Vec<usize>> {
+        self.str_of(name)?
+            .split(',')
+            .map(|s| Ok(s.trim().parse()?))
+            .collect()
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn base() -> Cli {
+        Cli::new("t", "test")
+            .opt("size", "288", "image size")
+            .opt_req("name", "artifact name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = base().parse(args(&["--name", "x"])).unwrap();
+        assert_eq!(c.usize_of("size").unwrap(), 288);
+        assert_eq!(c.str_of("name").unwrap(), "x");
+        assert!(!c.is_set("verbose"));
+
+        let c = base()
+            .parse(args(&["--size=512", "--name", "y", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.usize_of("size").unwrap(), 512);
+        assert!(c.is_set("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = base().parse(args(&["serve", "--name", "x", "extra"])).unwrap();
+        assert_eq!(c.positionals(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(base().parse(args(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(base().parse(args(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn missing_required_is_error_on_access() {
+        let c = base().parse(args(&[])).unwrap();
+        assert!(c.str_of("name").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Cli::new("t", "t")
+            .opt("sizes", "1,2,3", "list")
+            .parse(args(&["--sizes", "10, 20,30"]))
+            .unwrap();
+        assert_eq!(c.usize_list_of("sizes").unwrap(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(base().parse(args(&["--verbose=yes", "--name", "x"])).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate's vendored
+//! closure is available), so the small infrastructure crates a project
+//! would normally pull from crates.io are implemented here from scratch:
+//!
+//! * [`json`]  — a strict recursive-descent JSON parser + value model
+//!   (replaces `serde_json`; parses the AOT manifest).
+//! * [`toml`]  — a pragmatic TOML-subset parser (replaces `toml`; parses
+//!   run configuration files).
+//! * [`cli`]   — declarative-ish argument parsing (replaces `clap`).
+//! * [`prng`]  — a splitmix64/xoshiro256** PRNG (replaces `rand`; drives
+//!   synthetic images and the property-test generators).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod toml;

@@ -1,0 +1,163 @@
+//! Deterministic PRNG: splitmix64 seeding + xoshiro256** core.
+//!
+//! In-tree replacement for `rand` (offline build). Drives the synthetic
+//! image generators, the request workloads and the property-test case
+//! generators, so every run is reproducible from a single u64 seed.
+
+/// xoshiro256** (Blackman & Vigna), seeded via splitmix64.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// Approximately standard-normal f32 (sum of 12 uniforms − 6; exact
+    /// distribution does not matter for convolution workloads).
+    pub fn normal(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.f32();
+        }
+        s - 6.0
+    }
+
+    /// Uniform usize in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free modulo is fine here: n ≪ 2^64 so bias < 2^-40.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u64> = (0..8).map({
+            let mut p = Prng::new(7);
+            move |_| p.next_u64()
+        }).collect();
+        let b: Vec<u64> = (0..8).map({
+            let mut p = Prng::new(7);
+            move |_| p.next_u64()
+        }).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let mut p1 = Prng::new(1);
+        let mut p2 = Prng::new(2);
+        assert_ne!(p1.next_u64(), p2.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut p = Prng::new(42);
+        for _ in 0..10_000 {
+            let x = p.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut p = Prng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.f32() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut p = Prng::new(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut p = Prng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[p.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        p.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

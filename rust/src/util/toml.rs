@@ -1,0 +1,256 @@
+//! Pragmatic TOML-subset parser for run configuration files.
+//!
+//! In-tree replacement for the `toml` crate (offline build). Supports the
+//! subset the config system uses: `[section]` / `[a.b]` headers, `key =
+//! value` with string / integer / float / bool / homogeneous-scalar-array
+//! values, `#` comments and blank lines. Keys flatten to dotted paths
+//! (`section.key`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A TOML scalar or scalar array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().filter(|i| *i >= 0).map(|i| i as usize)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.as_usize()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Flat dotted-key map of a parsed document.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let v = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for {full:?}", lineno + 1))?;
+            if entries.insert(full.clone(), v).is_some() {
+                bail!("line {}: duplicate key {full:?}", lineno + 1);
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .with_context(|| "unterminated string".to_string())?;
+        // Minimal escapes (the config never needs more).
+        let un = inner.replace("\\\"", "\"").replace("\\\\", "\\").replace("\\n", "\n");
+        return Ok(TomlValue::Str(un));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .with_context(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|x| parse_value(x.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# run configuration
+title = "phi-conv"
+
+[workload]
+sizes = [1152, 1728, 2592]
+planes = 3
+reps = 10
+scale = 0.5
+verbose = true
+
+[models.gprm]
+cutoff = 100          # paper's magic number
+steal = true
+"#;
+
+    #[test]
+    fn parses_document() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.str_or("title", ""), "phi-conv");
+        assert_eq!(d.usize_or("workload.planes", 0), 3);
+        assert_eq!(d.usize_or("models.gprm.cutoff", 0), 100);
+        assert!((d.f64_or("workload.scale", 0.0) - 0.5).abs() < 1e-12);
+        assert!(d.bool_or("workload.verbose", false));
+        assert_eq!(
+            d.get("workload.sizes").unwrap().as_usize_arr().unwrap(),
+            vec![1152, 1728, 2592]
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("nope", 9), 9);
+        assert_eq!(d.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let d = TomlDoc::parse("k = \"a # not comment\"").unwrap();
+        assert_eq!(d.str_or("k", ""), "a # not comment");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let d = TomlDoc::parse("a = 3\nb = 3.5\nc = 1_000").unwrap();
+        assert_eq!(d.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(d.get("b").unwrap().as_i64(), None);
+        assert!((d.get("b").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+        assert_eq!(d.get("c").unwrap().as_i64(), Some(1000));
+        // ints coerce to f64 on demand
+        assert_eq!(d.get("a").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Integration: the full (model × algorithm × variant × layout) matrix
+//! produces pixels identical to the sequential engines, across awkward
+//! shapes, thread counts, cutoffs and local sizes.
+
+use phi_conv::conv::{convolve_image, Algorithm, Variant};
+use phi_conv::image::{gaussian_kernel, synth_image, Pattern};
+use phi_conv::models::{
+    convolve_parallel, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+
+fn k5() -> Vec<f32> {
+    gaussian_kernel(5, 1.0)
+}
+
+#[test]
+fn full_matrix_odd_shape() {
+    // 37x53 defeats every divisibility assumption
+    let img = synth_image(3, 37, 53, Pattern::Noise, 1);
+    let k = k5();
+    let models: Vec<Box<dyn ExecutionModel>> = vec![
+        Box::new(OpenMpModel::new(5)),
+        Box::new(OpenClModel::new(3, 7)),
+        Box::new(GprmModel::new(4, 11)),
+    ];
+    for alg in [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let want = convolve_image(img.clone(), &k, alg, variant).unwrap();
+            for m in &models {
+                let got = convolve_parallel(m.as_ref(), &img, &k, alg, variant, Layout::PerPlane)
+                    .unwrap();
+                assert_eq!(got, want, "{} {alg:?} {variant:?}", m.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_pixels() {
+    let img = synth_image(3, 41, 29, Pattern::Checker, 2);
+    let k = k5();
+    let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+    for threads in [1usize, 2, 3, 7, 16, 64] {
+        let m = OpenMpModel::new(threads);
+        let got =
+            convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+                .unwrap();
+        assert_eq!(got, want, "{threads} threads");
+    }
+}
+
+#[test]
+fn gprm_cutoff_never_changes_pixels() {
+    let img = synth_image(3, 41, 29, Pattern::Noise, 3);
+    let k = k5();
+    let want = convolve_image(img.clone(), &k, Algorithm::SinglePassNoCopy, Variant::Simd).unwrap();
+    for cutoff in [1usize, 2, 41, 100, 480] {
+        let m = GprmModel::new(4, cutoff);
+        let got = convolve_parallel(
+            &m,
+            &img,
+            &k,
+            Algorithm::SinglePassNoCopy,
+            Variant::Simd,
+            Layout::PerPlane,
+        )
+        .unwrap();
+        assert_eq!(got, want, "cutoff {cutoff}");
+    }
+}
+
+#[test]
+fn opencl_local_size_never_changes_pixels() {
+    let img = synth_image(3, 41, 29, Pattern::Disc, 4);
+    let k = k5();
+    let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Scalar).unwrap();
+    for local in [1usize, 2, 16, 41, 64] {
+        let m = OpenClModel::new(3, local);
+        let got =
+            convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Scalar, Layout::PerPlane)
+                .unwrap();
+        assert_eq!(got, want, "local_size {local}");
+    }
+}
+
+#[test]
+fn agglomerated_layout_consistent_across_models() {
+    // all three models agree with each other bit-for-bit under 3RxC
+    let img = synth_image(3, 40, 32, Pattern::Noise, 5);
+    let k = k5();
+    let m1 = OpenMpModel::new(4);
+    let want =
+        convolve_parallel(&m1, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+            .unwrap();
+    let m2 = OpenClModel::new(2, 8);
+    let m3 = GprmModel::new(3, 10);
+    for m in [&m2 as &dyn ExecutionModel, &m3] {
+        let got =
+            convolve_parallel(m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+                .unwrap();
+        assert_eq!(got, want, "{}", m.name());
+    }
+}
+
+#[test]
+fn tiny_images_survive_every_model() {
+    // 6x6: interior is 2x2; 5x5: interior is 1x1; 4x4: no interior at all
+    let k = k5();
+    for size in [4usize, 5, 6] {
+        let img = synth_image(3, size, size, Pattern::Noise, 6);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        for m in [
+            Box::new(OpenMpModel::new(8)) as Box<dyn ExecutionModel>,
+            Box::new(OpenClModel::new(4, 3)),
+            Box::new(GprmModel::new(4, 100)),
+        ] {
+            let got = convolve_parallel(m.as_ref(), &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+                .unwrap();
+            assert_eq!(got, want, "{} at {size}", m.name());
+        }
+        if size == 4 {
+            // no interior: output must equal input
+            assert_eq!(want, img);
+        }
+    }
+}
+
+#[test]
+fn single_plane_and_many_planes() {
+    let k = k5();
+    for planes in [1usize, 2, 5] {
+        let img = synth_image(planes, 24, 24, Pattern::Noise, 7);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let m = GprmModel::new(3, 9);
+        let got = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+            .unwrap();
+        assert_eq!(got, want, "{planes} planes");
+        // agglomerated works for any plane count too
+        let agg = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+            .unwrap();
+        assert_eq!(agg.planes, planes);
+    }
+}
+
+#[test]
+fn repeated_convolution_converges_to_flat() {
+    // Gaussian blur applied repeatedly flattens the interior (heat
+    // diffusion) — a cross-model behavioural sanity, not just equality
+    let k = k5();
+    let mut img = synth_image(1, 32, 32, Pattern::Checker, 8);
+    let m = OpenMpModel::new(4);
+    let initial_var = variance(&img.data);
+    for _ in 0..30 {
+        img = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+            .unwrap();
+    }
+    // interior variance collapses
+    let mut inner = vec![];
+    for i in 8..24 {
+        for j in 8..24 {
+            inner.push(img.get(0, i, j));
+        }
+    }
+    assert!(variance(&inner) < initial_var * 0.05);
+}
+
+fn variance(xs: &[f32]) -> f32 {
+    let m = xs.iter().sum::<f32>() / xs.len() as f32;
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f32>() / xs.len() as f32
+}

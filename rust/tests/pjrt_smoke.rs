@@ -1,0 +1,55 @@
+//! Smoke: load + execute one AOT artifact through PJRT and sanity-check
+//! the numerics (full validation against native engines lives in
+//! `integration_runtime.rs`).
+
+use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
+
+#[test]
+fn horiz_tile_executes_and_smooths() {
+    let pool = EnginePool::open(default_artifacts_dir()).expect("make artifacts first");
+    let name = "horiz_tile_64x288";
+    let engine = pool.engine(name).unwrap();
+    assert_eq!(engine.inputs[0].shape, vec![64, 288]);
+
+    // ramp input: horizontal Gaussian of a linear ramp is the same ramp
+    // (interior), a strong analytic check.
+    let mut img = vec![0f32; 64 * 288];
+    for r in 0..64 {
+        for c in 0..288 {
+            img[r * 288 + c] = c as f32;
+        }
+    }
+    let k = pool.manifest().kernel_values.clone();
+    let out = engine.run1(&[&img, &k]).unwrap();
+    assert_eq!(out.len(), 64 * 284);
+    // valid output col j corresponds to input col j+2; ramp is preserved
+    for r in [0usize, 31, 63] {
+        for j in [0usize, 100, 283] {
+            let got = out[r * 284 + j];
+            let want = (j + 2) as f32;
+            assert!(
+                (got - want).abs() < 1e-3,
+                "r={r} j={j}: got {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pyramid_multi_output() {
+    let pool = EnginePool::open(default_artifacts_dir()).unwrap();
+    let engine = pool.engine("pyramid_1152").unwrap();
+    assert_eq!(engine.outputs.len(), 3);
+    let img = vec![1.5f32; 3 * 1152 * 1152];
+    let k = pool.manifest().kernel_values.clone();
+    let outs = engine.run(&[&img, &k]).unwrap();
+    assert_eq!(outs[0].len(), 3 * 1152 * 1152);
+    assert_eq!(outs[1].len(), 3 * 576 * 576);
+    assert_eq!(outs[2].len(), 3 * 288 * 288);
+    // constant image is a fixed point of normalised blur + decimate
+    for o in &outs {
+        for &v in o.iter().step_by(1001) {
+            assert!((v - 1.5).abs() < 1e-4, "{v}");
+        }
+    }
+}

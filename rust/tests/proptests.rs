@@ -1,0 +1,250 @@
+//! Property-based tests over randomised cases.
+//!
+//! The offline build has no `proptest` crate, so these use the in-tree
+//! PRNG (`util::prng`) to generate many random cases per property with a
+//! fixed seed — deterministic, shrink-free property testing. Each
+//! property states its invariant in the test name; failures print the
+//! offending case's parameters.
+
+use std::sync::Mutex;
+
+use phi_conv::conv::{convolve_image, Algorithm, Variant};
+use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
+use phi_conv::models::{
+    convolve_parallel, static_chunk, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+use phi_conv::phisim::{simulate, Calibration, PhiMachine, SimRun, SimWorkload};
+use phi_conv::util::json::Json;
+use phi_conv::util::prng::Prng;
+
+const CASES: usize = 40;
+
+// ---------------------------------------------------------------------------
+// models: partition invariants
+// ---------------------------------------------------------------------------
+
+/// Every execution model's dispatch covers [0, n) exactly once — no gaps,
+/// no overlaps — for arbitrary n, worker counts and granularity knobs.
+#[test]
+fn prop_every_model_covers_rows_exactly_once() {
+    let mut rng = Prng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let n = rng.range(0, 300);
+        let threads = rng.range(1, 9);
+        let model: Box<dyn ExecutionModel> = match case % 3 {
+            0 => Box::new(OpenMpModel::new(threads)),
+            1 => Box::new(OpenClModel::new(threads, rng.range(1, 40))),
+            _ => Box::new(GprmModel::new(threads, rng.range(1, 300))),
+        };
+        let hits = Mutex::new(vec![0u32; n]);
+        model.dispatch(n, &|a, b| {
+            assert!(a <= b && b <= n, "range ({a},{b}) out of [0,{n})");
+            let mut h = hits.lock().unwrap();
+            for i in a..b {
+                h[i] += 1;
+            }
+        });
+        let h = hits.lock().unwrap();
+        assert!(
+            h.iter().all(|&c| c == 1),
+            "case {case}: {} n={n} threads={threads}: cover counts {:?}",
+            model.name(),
+            h.iter().enumerate().filter(|(_, &c)| c != 1).take(5).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// static_chunk is a partition for arbitrary (n, parts).
+#[test]
+fn prop_static_chunk_partition() {
+    let mut rng = Prng::new(7);
+    for _ in 0..200 {
+        let n = rng.range(0, 1000);
+        let parts = rng.range(1, 513);
+        let mut prev_end = 0;
+        for t in 0..parts {
+            let (a, b) = static_chunk(n, parts, t);
+            assert_eq!(a, prev_end, "chunks must be contiguous");
+            assert!(b >= a);
+            prev_end = b;
+        }
+        assert_eq!(prev_end, n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel == sequential, randomised
+// ---------------------------------------------------------------------------
+
+/// Any model / any knobs / any shape: parallel pixels == sequential
+/// pixels (PerPlane layout).
+#[test]
+fn prop_parallel_equals_sequential() {
+    let mut rng = Prng::new(0xBEEF);
+    let k = gaussian_kernel(5, 1.0);
+    for case in 0..20 {
+        let rows = rng.range(6, 70);
+        let cols = rng.range(6, 70);
+        let planes = rng.range(1, 4);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, case as u64);
+        let threads = rng.range(1, 7);
+        let model: Box<dyn ExecutionModel> = match case % 3 {
+            0 => Box::new(OpenMpModel::new(threads)),
+            1 => Box::new(OpenClModel::new(threads, rng.range(1, 20))),
+            _ => Box::new(GprmModel::new(threads, rng.range(1, 200))),
+        };
+        let alg = *rng.pick(&[
+            Algorithm::TwoPass,
+            Algorithm::SinglePassCopyBack,
+            Algorithm::SinglePassNoCopy,
+        ]);
+        let variant = *rng.pick(&[Variant::Scalar, Variant::Simd]);
+        let want = convolve_image(img.clone(), &k, alg, variant).unwrap();
+        let got = convolve_parallel(model.as_ref(), &img, &k, alg, variant, Layout::PerPlane)
+            .unwrap();
+        assert_eq!(
+            got,
+            want,
+            "case {case}: {} {rows}x{cols}x{planes} {alg:?} {variant:?}",
+            model.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layout transforms
+// ---------------------------------------------------------------------------
+
+/// agglomerate ∘ deagglomerate == identity for arbitrary shapes.
+#[test]
+fn prop_agglomeration_roundtrip() {
+    let mut rng = Prng::new(0xA66);
+    for case in 0..CASES {
+        let planes = rng.range(1, 6);
+        let rows = rng.range(1, 40);
+        let cols = rng.range(1, 40);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, case as u64);
+        let wide = img.agglomerate();
+        assert_eq!(wide.len(), planes * rows * cols);
+        let back = PlanarImage::from_agglomerated(planes, rows, cols, &wide).unwrap();
+        assert_eq!(back, img, "case {case}: {planes}x{rows}x{cols}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+/// Busy time never increases with more threads (the overhead term may,
+/// but raw compute+memory cannot).
+#[test]
+fn prop_sim_busy_monotone_in_threads() {
+    let mut rng = Prng::new(0x51);
+    let m = PhiMachine::default();
+    let cal = Calibration::default();
+    for _ in 0..CASES {
+        let size = *rng.pick(&[1152usize, 2592, 5832, 8748]);
+        let alg = *rng.pick(&[Algorithm::TwoPass, Algorithm::SinglePassNoCopy]);
+        let variant = *rng.pick(&[Variant::Scalar, Variant::Simd]);
+        let w = SimWorkload::paper(size, alg, variant);
+        let mut prev = f64::INFINITY;
+        for threads in [1usize, 10, 50, 100, 200, 240] {
+            let e = simulate(&m, &cal, &w, &SimRun::openmp(threads));
+            assert!(
+                e.busy_ms <= prev + 1e-9,
+                "busy went up at {threads} threads ({size}, {alg:?}, {variant:?})"
+            );
+            prev = e.busy_ms;
+        }
+    }
+}
+
+/// GPRM overhead is linear in the cutoff and amortised 3× by
+/// agglomeration, for any workload.
+#[test]
+fn prop_sim_gprm_overhead_structure() {
+    let mut rng = Prng::new(0x52);
+    let m = PhiMachine::default();
+    let cal = Calibration::default();
+    for _ in 0..CASES {
+        let size = *rng.pick(&[1152usize, 3888, 8748]);
+        let w = SimWorkload::paper(size, Algorithm::TwoPass, Variant::Simd);
+        let c1 = rng.range(10, 200);
+        let c2 = c1 * 2;
+        let o1 = simulate(&m, &cal, &w, &SimRun::gprm(c1, Layout::PerPlane)).overhead_ms;
+        let o2 = simulate(&m, &cal, &w, &SimRun::gprm(c2, Layout::PerPlane)).overhead_ms;
+        // linear with positive intercept: o2 < 2*o1, o2 > o1
+        assert!(o2 > o1 && o2 < 2.0 * o1 + 1e-9, "cutoff {c1}->{c2}: {o1} -> {o2}");
+        let rxc = simulate(&m, &cal, &w, &SimRun::gprm(c1, Layout::PerPlane)).overhead_ms;
+        let agg = simulate(&m, &cal, &w, &SimRun::gprm(c1, Layout::Agglomerated)).overhead_ms;
+        assert!((rxc / agg - 3.0).abs() < 1e-9, "agglomeration must cut overhead 3x");
+    }
+}
+
+/// The GPRM-vs-OpenMP crossover exists and is monotone: once GPRM(3R×C)
+/// wins at some size, it keeps winning at every larger size.
+#[test]
+fn prop_sim_agglomeration_crossover_monotone() {
+    let m = PhiMachine::default();
+    let cal = Calibration::default();
+    let mut won = false;
+    for size in [576usize, 1152, 1728, 2592, 3888, 5832, 8748, 12000, 16000] {
+        let w = SimWorkload::paper(size, Algorithm::TwoPass, Variant::Simd);
+        let omp = simulate(&m, &cal, &w, &SimRun::openmp(100)).total_ms();
+        let gprm = simulate(&m, &cal, &w, &SimRun::gprm(100, Layout::Agglomerated)).total_ms();
+        let wins = gprm < omp;
+        assert!(!won || wins, "GPRM stopped winning at {size} after winning earlier");
+        won = won || wins;
+    }
+    assert!(won, "GPRM+agglomeration must win somewhere (paper: at 8748)");
+}
+
+// ---------------------------------------------------------------------------
+// util substrates
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Prng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.range(0, 100000) as f64) / 8.0),
+            _ => Json::Str(format!("s{}", rng.range(0, 999))),
+        };
+    }
+    match rng.below(2) {
+        0 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// JSON display ∘ parse == identity for random documents.
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Prng::new(0x77);
+    for case in 0..100 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let re = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, re, "case {case}: {text}");
+    }
+}
+
+/// Convolution energy property across random inputs: a normalised
+/// Gaussian never increases the max-abs pixel value of the interior.
+#[test]
+fn prop_blur_never_amplifies() {
+    let mut rng = Prng::new(0x88);
+    let k = gaussian_kernel(5, 1.0);
+    for case in 0..CASES {
+        let img = synth_image(1, 24, 24, Pattern::Noise, case as u64 + rng.below(1000) as u64);
+        let max_in = img.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let out = convolve_image(img, &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let max_out = out.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(max_out <= max_in + 1e-5, "case {case}: {max_in} -> {max_out}");
+    }
+}
