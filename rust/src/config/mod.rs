@@ -5,7 +5,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::image::Pattern;
 use crate::util::cli::Cli;

@@ -4,7 +4,7 @@
 //! every parallel execution model must produce pixel-identical output to
 //! these drivers (integration tests enforce it).
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 use crate::image::{gaussian_kernel2d, PlanarImage};
 

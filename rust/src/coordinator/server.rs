@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::config::RunConfig;
 use crate::conv::Algorithm;

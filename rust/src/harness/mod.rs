@@ -13,7 +13,7 @@ pub mod measured;
 pub mod paper;
 pub mod sim_tables;
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 use crate::config::RunConfig;
 use crate::metrics::Table;

@@ -6,7 +6,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::planar::PlanarImage;
 
@@ -152,6 +152,85 @@ mod tests {
         let path = dir.join("bad.pgm");
         std::fs::write(&path, b"P2\n2 2\n255\n0 0 0 0").unwrap();
         assert!(read_pgm(&path).is_err());
+    }
+
+    fn write_case(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("phi_conv_pgm_neg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn pgm_rejects_truncated_header() {
+        // header ends after the magic: no dims, no maxval
+        let e = read_pgm(write_case("trunc_header.pgm", b"P5\n")).unwrap_err();
+        assert!(e.to_string().contains("truncated PGM header"), "{e}");
+        // dims present but maxval missing
+        let e = read_pgm(write_case("no_maxval.pgm", b"P5\n2 2\n")).unwrap_err();
+        assert!(e.to_string().contains("truncated PGM header"), "{e}");
+    }
+
+    #[test]
+    fn pgm_rejects_empty_file() {
+        assert!(read_pgm(write_case("empty.pgm", b"")).is_err());
+    }
+
+    #[test]
+    fn pgm_rejects_maxval_zero() {
+        let mut bytes = b"P5\n2 2\n0\n".to_vec();
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let e = read_pgm(write_case("maxval0.pgm", &bytes)).unwrap_err();
+        assert!(e.to_string().contains("unsupported maxval"), "{e}");
+    }
+
+    #[test]
+    fn pgm_rejects_wide_maxval() {
+        // 16-bit PGM (maxval > 255) is out of scope for this 8-bit reader
+        let mut bytes = b"P5\n2 2\n65535\n".to_vec();
+        bytes.extend_from_slice(&[0; 8]);
+        let e = read_pgm(write_case("maxval16.pgm", &bytes)).unwrap_err();
+        assert!(e.to_string().contains("unsupported maxval"), "{e}");
+    }
+
+    #[test]
+    fn pgm_rejects_truncated_pixel_data() {
+        let mut bytes = b"P5\n4 4\n255\n".to_vec();
+        bytes.extend_from_slice(&[7; 15]); // one byte short of 16
+        let e = read_pgm(write_case("trunc_pixels.pgm", &bytes)).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn pgm_rejects_non_numeric_dims() {
+        let e = read_pgm(write_case("bad_dims.pgm", b"P5\nxx 2\n255\n\0\0\0\0")).unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn pgm_rejects_missing_file() {
+        let e = read_pgm("/nonexistent/phi_conv.pgm").unwrap_err();
+        assert!(e.to_string().contains("open"), "{e}");
+    }
+
+    #[test]
+    fn pgm_roundtrip_per_plane_of_rgb() {
+        // write each plane of a 3-plane image, read back, compare scaled
+        let img = synth_image(3, 12, 16, Pattern::Checker, 2);
+        let dir = std::env::temp_dir().join("phi_conv_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for p in 0..3 {
+            let path = dir.join(format!("plane{p}.pgm"));
+            write_pgm(&path, &img, p).unwrap();
+            let back = read_pgm(&path).unwrap();
+            assert_eq!((back.rows, back.cols, back.planes), (12, 16, 1));
+            // checker is 0/1-valued: exact after quantisation
+            for (a, b) in img.plane(p).iter().zip(&back.data) {
+                assert!((a - b).abs() < 1.0 / 255.0 + 1e-6, "plane {p}");
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `PlanarImage`: the paper's `float ***A` — P planes of R×C f32 pixels —
 //! as one contiguous buffer with plane views.
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// A planar (plane-major) f32 image: `data[p*R*C + i*C + j]`.
 ///

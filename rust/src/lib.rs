@@ -34,6 +34,14 @@
 //!   the offline build has no access to crates.io beyond the vendored
 //!   `xla` closure, so these are built from scratch (DESIGN.md §1).
 
+// `util` must be declared first and with `#[macro_use]`: `util::error`'s
+// `macro_rules!` macros (`err!`, `bail!`, `ensure!`) are textually
+// scoped, and the modules below use them unqualified. (External crates —
+// tests, benches, the binary — import them as `use phi_conv::{bail, …}`,
+// which `#[macro_export]` provides.)
+#[macro_use]
+pub mod util;
+
 pub mod config;
 pub mod conv;
 pub mod coordinator;
@@ -43,7 +51,6 @@ pub mod metrics;
 pub mod models;
 pub mod phisim;
 pub mod runtime;
-pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide error and result types (see [`util::error`]).
+pub use util::error::{Context, Error, Result};

@@ -14,7 +14,7 @@
 //!   phi-conv serve --requests 40 --executors 2
 //!   phi-conv info
 
-use anyhow::{bail, Context, Result};
+use phi_conv::{bail, ensure, Context, Result};
 
 use phi_conv::config::{standard_cli, RunConfig};
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
@@ -97,7 +97,7 @@ fn validate(cfg: &RunConfig) -> Result<()> {
 
     // kernel values must match the Python reference bit-for-bit
     for (a, b) in k.iter().zip(&manifest.kernel_values) {
-        anyhow::ensure!((a - b).abs() < 1e-7, "kernel generator mismatch: {a} vs {b}");
+        ensure!((a - b).abs() < 1e-7, "kernel generator mismatch: {a} vs {b}");
     }
     println!("kernel generator matches Python reference ✓");
 
@@ -136,7 +136,7 @@ fn validate(cfg: &RunConfig) -> Result<()> {
             .zip(&want.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0f32, f32::max);
-        anyhow::ensure!(
+        ensure!(
             max_diff < 1e-4,
             "{}: PJRT vs native max diff {max_diff}",
             entry.name
@@ -158,7 +158,16 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
             None => bail!("unknown policy {other:?}"),
         },
     };
-    let coord = Coordinator::new(cfg, policy, executors, with_pjrt)?;
+    let coord = match Coordinator::new(cfg, policy, executors, with_pjrt) {
+        Ok(c) => c,
+        Err(e) if with_pjrt && !matches!(policy, RoutePolicy::Fixed(Backend::Pjrt)) => {
+            // PJRT is an optional backend (feature-gated, needs artifacts):
+            // serve native-only rather than refusing to start.
+            eprintln!("PJRT backend unavailable ({e:#}); serving native-only");
+            Coordinator::new(cfg, policy, executors, false)?
+        }
+        Err(e) => return Err(e),
+    };
     println!(
         "coordinator up: {} executors, policy {policy:?}, pjrt={}",
         executors,

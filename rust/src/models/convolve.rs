@@ -14,7 +14,7 @@
 //!   per-dispatch overhead amortises to a third — the fix that lets GPRM
 //!   win the largest image.
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 use crate::conv::{band, Algorithm, Variant};
 use crate::image::{gaussian_kernel2d, PlanarImage};

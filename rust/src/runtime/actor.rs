@@ -12,7 +12,7 @@
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::pool::EnginePool;
 
@@ -88,7 +88,7 @@ impl PjrtHandle {
     /// Single-output convenience.
     pub fn run1(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
         let mut outs = self.run(name, inputs)?;
-        anyhow::ensure!(outs.len() == 1, "{name}: expected 1 output, got {}", outs.len());
+        ensure!(outs.len() == 1, "{name}: expected 1 output, got {}", outs.len());
         Ok(outs.pop().unwrap())
     }
 

@@ -3,7 +3,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::manifest::{ArtifactEntry, Manifest};
 
@@ -50,7 +50,7 @@ impl HloEngine {
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+                .ok_or_else(|| err!("non-utf8 artifact path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp)?;
@@ -79,7 +79,7 @@ impl HloEngine {
     /// PJRT.
     pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.inputs.len() {
-            anyhow::bail!(
+            bail!(
                 "{}: expected {} inputs, got {}",
                 self.name,
                 self.inputs.len(),
@@ -89,7 +89,7 @@ impl HloEngine {
         let mut literals = Vec::with_capacity(inputs.len());
         for (buf, spec) in inputs.iter().zip(&self.inputs) {
             if buf.len() != spec.elements() {
-                anyhow::bail!(
+                bail!(
                     "{}: input buffer has {} elements, spec {:?} wants {}",
                     self.name,
                     buf.len(),
@@ -104,7 +104,7 @@ impl HloEngine {
         // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
         let parts = result.to_tuple()?;
         if parts.len() != self.outputs.len() {
-            anyhow::bail!(
+            bail!(
                 "{}: expected {} outputs, got {}",
                 self.name,
                 self.outputs.len(),
@@ -118,7 +118,7 @@ impl HloEngine {
     pub fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let mut outs = self.run(inputs)?;
         if outs.len() != 1 {
-            anyhow::bail!("{}: run1 on a {}-output artifact", self.name, outs.len());
+            bail!("{}: run1 on a {}-output artifact", self.name, outs.len());
         }
         Ok(outs.pop().unwrap())
     }

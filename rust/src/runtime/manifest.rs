@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -117,7 +117,7 @@ impl Manifest {
     /// Find an artifact by exact name.
     pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
         self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
-            anyhow::anyhow!(
+            err!(
                 "artifact {name:?} not in manifest ({} entries)",
                 self.artifacts.len()
             )
@@ -161,53 +161,207 @@ pub fn default_artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Canonical example manifest JSON — the single source of truth for the
+/// schema used by the unit- and integration-test fixtures (full, agg,
+/// tile and pyramid roles; full-image sizes 288 and 576). Test-support
+/// only; not part of the public API.
+#[doc(hidden)]
+pub fn example_manifest_json() -> String {
+    let spec = |shape: &str| format!(r#"{{"shape": {shape}, "dtype": "float32"}}"#);
+    let entry = |name: &str,
+                 role: &str,
+                 algorithm: &str,
+                 variant: &str,
+                 inputs: &str,
+                 outputs: &str,
+                 meta: &str| {
+        format!(
+            r#"{{"name": "{name}", "file": "{name}.hlo.txt", "role": "{role}",
+                "algorithm": "{algorithm}", "variant": "{variant}",
+                "inputs": {inputs}, "outputs": {outputs}, "meta": {meta},
+                "sha256": "0000", "bytes": 128}}"#
+        )
+    };
+    let img288 = spec("[3, 288, 288]");
+    let img576 = spec("[3, 576, 576]");
+    let kv = spec("[5]");
+    let artifacts = [
+        entry(
+            "twopass_p3_288",
+            "full",
+            "twopass",
+            "simd",
+            &format!("[{img288}, {kv}]"),
+            &format!("[{img288}]"),
+            r#"{"rows": 288, "cols": 288, "planes": 3}"#,
+        ),
+        entry(
+            "singlepass_p3_288",
+            "full",
+            "singlepass",
+            "simd",
+            &format!("[{img288}, {kv}]"),
+            &format!("[{img288}]"),
+            r#"{"rows": 288, "cols": 288, "planes": 3}"#,
+        ),
+        entry(
+            "twopass_p3_576",
+            "full",
+            "twopass",
+            "simd",
+            &format!("[{img576}, {kv}]"),
+            &format!("[{img576}]"),
+            r#"{"rows": 576, "cols": 576, "planes": 3}"#,
+        ),
+        entry(
+            "twopass_agg_288",
+            "agg",
+            "twopass",
+            "simd",
+            &format!("[{}, {kv}]", spec("[288, 864]")),
+            &format!("[{}]", spec("[288, 864]")),
+            r#"{"rows": 288, "cols": 288, "planes": 3}"#,
+        ),
+        entry(
+            "horiz_tile_64x288",
+            "tile",
+            "twopass",
+            "horiz",
+            &format!("[{}, {kv}]", spec("[64, 288]")),
+            &format!("[{}]", spec("[64, 284]")),
+            r#"{"tile_rows": 60, "cols": 288, "halo": 2}"#,
+        ),
+        entry(
+            "pyramid_288",
+            "pyramid",
+            "twopass",
+            "simd",
+            &format!("[{img288}, {kv}]"),
+            &format!("[{img288}, {}, {}]", spec("[3, 144, 144]"), spec("[3, 72, 72]")),
+            r#"{"rows": 288, "cols": 288, "planes": 3, "levels": 3}"#,
+        ),
+    ];
+    format!(
+        r#"{{"format": "hlo-text", "kernel_width": 5, "gaussian_sigma": 1.0,
+            "kernel_values": [0.05448868, 0.24420135, 0.40261996, 0.24420135, 0.05448868],
+            "artifacts": [{}]}}"#,
+        artifacts.join(",\n")
+    )
+}
+
+/// Write [`example_manifest_json`] plus stub artifact files into `dir`
+/// (creating it), so `path_of(..).exists()` holds — the shared fixture
+/// writer for the unit and integration suites. Test-support only.
+#[doc(hidden)]
+pub fn write_example_manifest(dir: &Path) {
+    std::fs::create_dir_all(dir).expect("create fixture dir");
+    std::fs::write(dir.join("manifest.json"), example_manifest_json())
+        .expect("write fixture manifest");
+    let m = Manifest::load(dir).expect("fixture manifest parses");
+    for a in &m.artifacts {
+        std::fs::write(m.path_of(a), "HloModule stub\n").expect("write stub artifact");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Shared example manifest + stub artifact files in a unique temp dir.
+    fn write_fixture(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("phi_conv_manifest_{}_{tag}", std::process::id()));
+        write_example_manifest(&dir);
+        dir
+    }
+
     #[test]
-    fn loads_shipped_manifest() {
-        let m = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
+    fn loads_fixture_manifest() {
+        let m = Manifest::load(write_fixture("load")).unwrap();
         assert_eq!(m.kernel_width, 5);
-        assert!(!m.artifacts.is_empty());
+        assert_eq!(m.artifacts.len(), 6);
         assert_eq!(m.kernel_values.len(), 5);
         let s: f32 = m.kernel_values.iter().sum();
         assert!((s - 1.0).abs() < 1e-5);
+        assert!((m.gaussian_sigma - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn roles_and_lookup() {
-        let m = Manifest::load(default_artifacts_dir()).unwrap();
-        assert!(!m.by_role("full").is_empty());
-        assert!(!m.by_role("tile").is_empty());
-        assert!(!m.by_role("pyramid").is_empty());
+        let m = Manifest::load(write_fixture("roles")).unwrap();
+        assert_eq!(m.by_role("full").len(), 3);
+        assert_eq!(m.by_role("tile").len(), 1);
+        assert_eq!(m.by_role("pyramid").len(), 1);
+        assert_eq!(m.full_sizes(), vec![288, 576]);
         let name = m.full_image_name("twopass", 3, m.full_sizes()[0]);
         let e = m.get(&name).unwrap();
         assert_eq!(e.algorithm, "twopass");
         assert!(m.path_of(e).exists());
         assert_eq!(e.inputs.len(), 2);
         assert_eq!(e.inputs[1].shape, vec![5]);
+        assert_eq!(e.outputs[0].shape, vec![3, 288, 288]);
     }
 
     #[test]
     fn tile_metadata_present() {
-        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        let m = Manifest::load(write_fixture("tile")).unwrap();
         for t in m.by_role("tile") {
-            assert!(t.meta_usize("tile_rows").is_some(), "{}", t.name);
-            assert!(t.meta_usize("cols").is_some(), "{}", t.name);
-            assert!(t.meta_usize("halo").is_some(), "{}", t.name);
+            assert_eq!(t.meta_usize("tile_rows"), Some(60), "{}", t.name);
+            assert_eq!(t.meta_usize("cols"), Some(288), "{}", t.name);
+            assert_eq!(t.meta_usize("halo"), Some(2), "{}", t.name);
+            assert_eq!(t.meta_usize("not_there"), None);
         }
     }
 
     #[test]
     fn missing_artifact_is_an_error() {
-        let m = Manifest::load(default_artifacts_dir()).unwrap();
-        assert!(m.get("definitely_not_an_artifact").is_err());
+        let m = Manifest::load(write_fixture("missing")).unwrap();
+        let e = m.get("definitely_not_an_artifact").unwrap_err();
+        assert!(e.to_string().contains("not in manifest"));
     }
 
     #[test]
     fn missing_dir_is_helpful_error() {
         let e = Manifest::load("/nonexistent/path").unwrap_err();
         assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn wrong_format_tag_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("phi_conv_manifest_{}_badformat", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-proto", "kernel_width": 5, "gaussian_sigma": 1.0,
+                "kernel_values": [], "artifacts": []}"#,
+        )
+        .unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("unsupported artifact format"), "{e}");
+    }
+
+    #[test]
+    fn malformed_json_reports_context() {
+        let dir = std::env::temp_dir()
+            .join(format!("phi_conv_manifest_{}_badjson", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("not valid JSON"), "{e}");
+    }
+
+    #[test]
+    fn shipped_artifacts_parse_if_present() {
+        // the artifacts dir only exists after `make artifacts`; when it
+        // does, it must satisfy the same contract as the fixture
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {}", dir.display());
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.kernel_width, 5);
+        assert!(!m.by_role("full").is_empty());
     }
 }

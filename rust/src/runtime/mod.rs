@@ -12,13 +12,43 @@
 //! HLO *text* is the interchange format: xla_extension 0.5.1 rejects
 //! serialized protos from jax ≥ 0.5 (64-bit instruction ids); the text
 //! parser reassigns ids (DESIGN.md §2).
+//!
+//! ## The `pjrt` cargo feature
+//!
+//! The bridge depends on the vendored `xla` crate, which the default
+//! offline build does not require: the [`manifest`] module (pure JSON,
+//! no PJRT) is always compiled, while [`engine`] / [`pool`] / [`actor`]
+//! are gated behind the off-by-default `pjrt` feature. Without the
+//! feature, [`stub`] provides the identical public API — every
+//! constructor returns an error explaining the gate — so the
+//! coordinator, CLI and benches compile and degrade gracefully instead
+//! of being littered with `cfg` at call sites.
 
-pub mod actor;
-pub mod engine;
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod actor;
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod pool;
 
-pub use actor::PjrtHandle;
-pub use engine::{HloEngine, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
 pub use manifest::{ArtifactEntry, Manifest};
+
+#[cfg(feature = "pjrt")]
+pub use actor::PjrtHandle;
+#[cfg(feature = "pjrt")]
+pub use engine::{HloEngine, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use pool::EnginePool;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{EnginePool, HloEngine, PjrtHandle, TensorSpec};
+
+/// True when this build carries the real PJRT bridge.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}

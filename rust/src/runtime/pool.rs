@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::engine::HloEngine;
 use super::manifest::Manifest;

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// Declared option.
 #[derive(Debug, Clone)]
@@ -108,14 +108,14 @@ impl Cli {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", me.usage()))?
+                    .ok_or_else(|| err!("unknown option --{name}\n\n{}", me.usage()))?
                     .clone();
                 if opt.takes_value {
                     let v = match inline {
                         Some(v) => v,
                         None => it
                             .next()
-                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                            .ok_or_else(|| err!("--{name} needs a value"))?,
                     };
                     me.values.insert(name, v);
                 } else {
@@ -137,7 +137,7 @@ impl Cli {
 
     pub fn str_of(&self, name: &str) -> Result<&str> {
         self.get(name)
-            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+            .ok_or_else(|| err!("missing required option --{name}"))
     }
 
     pub fn usize_of(&self, name: &str) -> Result<usize> {

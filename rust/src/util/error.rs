@@ -1,0 +1,278 @@
+//! In-tree error substrate (replaces `anyhow` — offline build).
+//!
+//! The build environment provides no crates.io access (DESIGN.md §1), so
+//! the error-handling conveniences the rest of the crate leans on are
+//! implemented here from scratch, in the same spirit as the in-tree
+//! [`crate::util::json`] / [`crate::util::toml`] / [`crate::util::cli`]
+//! substrates:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value holding a chain of
+//!   human-readable context frames (outermost first, root cause last);
+//! * [`Result`] — the crate-wide alias `Result<T, Error>`;
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on both
+//!   `Result` and `Option`, pushing a new outer frame;
+//! * [`crate::err!`], [`crate::bail!`], [`crate::ensure!`] — formatted
+//!   construction / early-return / assertion macros.
+//!
+//! Any `E: std::error::Error + Send + Sync + 'static` converts into
+//! [`Error`] via `?` (the source chain is flattened into frames), so
+//! `std` errors — I/O, UTF-8, parse — thread through unchanged call
+//! sites. Like `anyhow::Error`, [`Error`] deliberately does **not**
+//! implement `std::error::Error` itself: that keeps the blanket `From`
+//! conversion coherent.
+//!
+//! Display: `{e}` prints the outermost frame only; `{e:#}` prints the
+//! whole chain separated by `": "` (the CLI's error format).
+
+use std::fmt;
+
+/// An error: a non-empty chain of context frames, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single printable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (what `.context(..)` does).
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The root cause (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain is non-empty")
+    }
+
+    /// All frames, outermost first.
+    pub fn frames(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: the full chain, anyhow-style
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.chain[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Every standard error converts via `?`, with its `source()` chain
+/// flattened into frames.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or missing value) with an outer context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Like [`Context::context`], but the message is built lazily —
+    /// use when formatting it is not free.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(ctx)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string: `err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`]: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Bail unless a condition holds: `ensure!(x > 0, "x must be positive")`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e = Error::msg("root").context("middle").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: middle: root");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn f() -> Result<()> {
+            let _: usize = "nope".parse()?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_on_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "opening manifest");
+        assert!(format!("{e:#}").contains("no such file"));
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { panic!("must not be evaluated on Ok") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn context_on_option() {
+        let some = Some(3).context("missing").unwrap();
+        assert_eq!(some, 3);
+        let e = None::<u32>.with_context(|| format!("field {:?} absent", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "field \"x\" absent");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 0 {
+                bail!("v must be nonzero");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "v must be nonzero");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "v too big: 11");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn f(v: usize) -> Result<()> {
+            ensure!(v % 2 == 0);
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert!(format!("{}", f(3).unwrap_err()).contains("v % 2 == 0"));
+    }
+
+    #[test]
+    fn source_chain_flattens_into_frames() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer failed")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert_eq!(e.frames().len(), 2);
+        assert_eq!(e.message(), "outer failed");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

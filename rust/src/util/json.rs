@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -78,25 +78,25 @@ impl Json {
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.get(key)
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} missing or not a string"))
+            .ok_or_else(|| err!("field {key:?} missing or not a string"))
     }
 
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.get(key)
             .as_usize()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} missing or not an unsigned integer"))
+            .ok_or_else(|| err!("field {key:?} missing or not an unsigned integer"))
     }
 
     pub fn req_f64(&self, key: &str) -> Result<f64> {
         self.get(key)
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} missing or not a number"))
+            .ok_or_else(|| err!("field {key:?} missing or not a number"))
     }
 
     pub fn req_arr(&self, key: &str) -> Result<&[Json]> {
         self.get(key)
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} missing or not an array"))
+            .ok_or_else(|| err!("field {key:?} missing or not an array"))
     }
 }
 
@@ -284,7 +284,7 @@ impl<'a> Parser<'a> {
                             // Surrogate pairs are not needed by the
                             // manifest; reject rather than mis-decode.
                             let c = char::from_u32(cp)
-                                .ok_or_else(|| anyhow::anyhow!("invalid \\u{hex}"))?;
+                                .ok_or_else(|| err!("invalid \\u{hex}"))?;
                             s.push(c);
                             self.i += 4;
                         }

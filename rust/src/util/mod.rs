@@ -4,6 +4,8 @@
 //! closure is available), so the small infrastructure crates a project
 //! would normally pull from crates.io are implemented here from scratch:
 //!
+//! * [`error`] — context-chaining error type + `Result` alias + the
+//!   `err!`/`bail!`/`ensure!` macros (replaces `anyhow`).
 //! * [`json`]  — a strict recursive-descent JSON parser + value model
 //!   (replaces `serde_json`; parses the AOT manifest).
 //! * [`toml`]  — a pragmatic TOML-subset parser (replaces `toml`; parses
@@ -11,6 +13,12 @@
 //! * [`cli`]   — declarative-ish argument parsing (replaces `clap`).
 //! * [`prng`]  — a splitmix64/xoshiro256** PRNG (replaces `rand`; drives
 //!   synthetic images and the property-test generators).
+
+// `error` must be first and `#[macro_use]`: its `macro_rules!`
+// definitions are textually scoped, and every later module uses
+// `bail!`/`ensure!` unqualified.
+#[macro_use]
+pub mod error;
 
 pub mod cli;
 pub mod json;

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 /// A TOML scalar or scalar array.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,209 +1,300 @@
-//! Integration: every AOT artifact executes through PJRT and matches the
-//! native engines / oracles at its own shape — the cross-layer numerics
-//! contract (DESIGN.md §2: "native Rust conv engines are
-//! numerics-validated against the Pallas/PJRT artifacts").
+//! Integration: the runtime layer's manifest contract (always on) and —
+//! when built with `--features pjrt` and real artifacts — every AOT
+//! artifact executing through PJRT and matching the native engines
+//! (DESIGN.md §2: "native Rust conv engines are numerics-validated
+//! against the Pallas/PJRT artifacts").
 
-use phi_conv::conv::{convolve_image, Algorithm, Variant};
-use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
-use phi_conv::models::{convolve_parallel, Layout, OpenMpModel};
-use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool, PjrtHandle};
+use std::path::PathBuf;
 
-fn pool() -> EnginePool {
-    EnginePool::open(default_artifacts_dir()).expect("run `make artifacts` first")
-}
+use phi_conv::runtime::Manifest;
 
-fn max_diff(a: &[f32], b: &[f32]) -> f32 {
-    assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+/// The crate's canonical example manifest plus stub artifact files in a
+/// unique temp dir (shared writer: `runtime::manifest::write_example_manifest`).
+fn write_fixture(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("phi_conv_it_runtime_{}_{tag}", std::process::id()));
+    phi_conv::runtime::manifest::write_example_manifest(&dir);
+    dir
 }
 
 #[test]
-fn kernel_values_match_python_reference() {
-    let m = pool();
-    let k = gaussian_kernel(m.manifest().kernel_width, m.manifest().gaussian_sigma);
-    for (rust, python) in k.iter().zip(&m.manifest().kernel_values) {
-        assert!((rust - python).abs() < 1e-7, "{rust} vs {python}");
+fn manifest_round_trip_through_public_api() {
+    let dir = write_fixture("roundtrip");
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.kernel_width, 5);
+    assert_eq!(m.artifacts.len(), 6);
+    assert_eq!(m.full_sizes(), vec![288, 576]);
+    let name = m.full_image_name("twopass", 3, 288);
+    let e = m.get(&name).unwrap();
+    assert_eq!(e.inputs[0].shape, vec![3, 288, 288]);
+    assert!(m.path_of(e).exists());
+    // the embedded kernel must match the Rust generator (the Python
+    // cross-check contract, testable without PJRT)
+    let k = phi_conv::image::gaussian_kernel(m.kernel_width, m.gaussian_sigma);
+    for (rust, reference) in k.iter().zip(&m.kernel_values) {
+        assert!((rust - reference).abs() < 1e-7, "{rust} vs {reference}");
     }
 }
 
 #[test]
-fn all_ablation_artifacts_match_native() {
-    // every lowering variant (naive / fused / whole / gridded) of both
-    // algorithms produces the same pixels as the native engines
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let entries: Vec<_> = pool
-        .manifest()
-        .by_role("ablation")
-        .iter()
-        .map(|e| {
-            (
-                e.name.clone(),
-                e.algorithm.clone(),
-                e.meta_usize("rows").unwrap(),
-                e.meta_usize("planes").unwrap(),
-            )
-        })
-        .collect();
-    assert!(!entries.is_empty());
-    for (name, algorithm, rows, planes) in entries {
-        let img = synth_image(planes, rows, rows, Pattern::Noise, 99);
-        let engine = pool.engine(&name).unwrap();
-        let got = engine.run1(&[&img.data, &k]).unwrap();
-        let alg = match algorithm.as_str() {
-            "twopass" => Algorithm::TwoPass,
-            _ => Algorithm::SinglePassNoCopy,
-        };
-        let want = convolve_image(img, &k, alg, Variant::Simd).unwrap();
-        let d = max_diff(&got, &want.data);
-        assert!(d < 1e-4, "{name}: max diff {d}");
+fn manifest_missing_dir_is_a_helpful_error() {
+    let e = Manifest::load("/nonexistent/phi-conv-artifacts").unwrap_err();
+    assert!(e.to_string().contains("make artifacts"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// Default build: the PJRT bridge is feature-gated; the stub must refuse
+// loudly and the coordinator-facing surface must stay compilable.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod gated {
+    use super::*;
+    use phi_conv::runtime::{EnginePool, PjrtHandle};
+
+    #[test]
+    fn pjrt_disabled_in_default_build() {
+        assert!(!phi_conv::runtime::pjrt_enabled());
+    }
+
+    #[test]
+    fn engine_pool_reports_the_feature_gate() {
+        // even with a perfectly valid manifest on disk
+        let dir = write_fixture("gate_pool");
+        let e = EnginePool::open(&dir).unwrap_err();
+        assert!(e.to_string().contains("--features pjrt"), "{e}");
+    }
+
+    #[test]
+    fn actor_spawn_reports_the_feature_gate() {
+        let dir = write_fixture("gate_actor");
+        let e = PjrtHandle::spawn(&dir).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[test]
+    fn default_artifacts_dir_points_into_the_crate() {
+        // NOTE: deliberately no std::env::set_var here — mutating the
+        // environment races sibling tests' getenv calls (UB on glibc);
+        // the $PHI_CONV_ARTIFACTS override branch is a one-line env
+        // read. Reading the environment is safe.
+        if std::env::var("PHI_CONV_ARTIFACTS").is_ok() {
+            eprintln!("skipping: PHI_CONV_ARTIFACTS is set in this environment");
+            return;
+        }
+        let dir = phi_conv::runtime::manifest::default_artifacts_dir();
+        assert!(dir.ends_with("artifacts"), "{}", dir.display());
     }
 }
 
-#[test]
-fn full_image_artifacts_match_native_at_smallest_size() {
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let n = pool.manifest().full_sizes()[0];
-    for (alg_name, alg) in
-        [("twopass", Algorithm::TwoPass), ("singlepass", Algorithm::SinglePassNoCopy)]
-    {
-        let name = format!("{alg_name}_p3_{n}");
-        let img = synth_image(3, n, n, Pattern::Checker, 5);
-        let engine = pool.engine(&name).unwrap();
-        let got = engine.run1(&[&img.data, &k]).unwrap();
-        let want = convolve_image(img, &k, alg, Variant::Simd).unwrap();
-        let d = max_diff(&got, &want.data);
-        assert!(d < 1e-4, "{name}: {d}");
+// ---------------------------------------------------------------------------
+// `--features pjrt` with real artifacts (`make artifacts`): the original
+// cross-layer numerics contract.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod with_pjrt {
+    use phi_conv::conv::{convolve_image, Algorithm, Variant};
+    use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
+    use phi_conv::models::{convolve_parallel, Layout, OpenMpModel};
+    use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool, PjrtHandle};
+
+    fn pool() -> EnginePool {
+        EnginePool::open(default_artifacts_dir()).expect("run `make artifacts` first")
     }
-}
 
-#[test]
-fn agglomerated_artifact_matches_native_3rxc() {
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let n = pool.manifest().full_sizes()[0];
-    let img = synth_image(3, n, n, Pattern::Noise, 6);
-    let engine = pool.engine(&format!("twopass_agg_{n}")).unwrap();
-    let got = engine.run1(&[&img.data, &k]).unwrap();
-    let m = OpenMpModel::new(2);
-    let want =
-        convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
-            .unwrap();
-    let d = max_diff(&got, &want.data);
-    assert!(d < 1e-4, "agglomerated PJRT vs native 3RxC: {d}");
-}
-
-#[test]
-fn tile_artifacts_stitch_to_full_plane() {
-    // schedule a full plane through the halo'd vertical tile artifact the
-    // way the execution models would, and compare against a native sweep
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let (name, th, cols, halo) = {
-        let tiles = pool.manifest().by_role("tile");
-        let vert = tiles.iter().find(|t| t.variant == "vert").expect("vert tile");
-        (
-            vert.name.clone(),
-            vert.meta_usize("tile_rows").unwrap(),
-            vert.meta_usize("cols").unwrap(),
-            vert.meta_usize("halo").unwrap(),
-        )
-    };
-
-    let rows = th * 3 + 2 * halo; // three tiles of valid output
-    let plane = synth_image(1, rows, cols, Pattern::Noise, 7);
-    let engine = pool.engine(&name).unwrap();
-
-    let mut stitched: Vec<f32> = Vec::new();
-    for t in 0..3 {
-        let r0 = t * th;
-        let slab = &plane.plane(0)[r0 * cols..(r0 + th + 2 * halo) * cols];
-        stitched.extend(engine.run1(&[slab, &k]).unwrap());
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
     }
-    assert_eq!(stitched.len(), 3 * th * cols);
 
-    // native vertical sweep (writes interior rows and columns of dst)
-    let k5: [f32; 5] = k.clone().try_into().unwrap();
-    let src = plane.plane(0).to_vec();
-    let mut dst = src.clone();
-    phi_conv::conv::band::vert_band_scalar(&src, &mut dst, rows, cols, &k5, 0, rows);
-    // stitched row r corresponds to plane row r + halo; compare interior
-    // columns (the native band leaves border columns untouched).
-    for r in 0..3 * th {
-        for j in halo..cols - halo {
-            let g = stitched[r * cols + j];
-            let w = dst[(r + halo) * cols + j];
-            let d = (g - w).abs();
-            assert!(d < 1e-4, "row {r} col {j}: {d}");
+    #[test]
+    fn kernel_values_match_python_reference() {
+        let m = pool();
+        let k = gaussian_kernel(m.manifest().kernel_width, m.manifest().gaussian_sigma);
+        for (rust, python) in k.iter().zip(&m.manifest().kernel_values) {
+            assert!((rust - python).abs() < 1e-7, "{rust} vs {python}");
         }
     }
-}
 
-#[test]
-fn pyramid_artifact_levels_match_native() {
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let (name, n) = {
-        let entry = pool.manifest().by_role("pyramid")[0];
-        (entry.name.clone(), entry.meta_usize("rows").unwrap())
-    };
-    let img = synth_image(3, n, n, Pattern::Disc, 8);
-    let engine = pool.engine(&name).unwrap();
-    let outs = engine.run(&[&img.data, &k]).unwrap();
-    assert_eq!(outs.len(), 3);
+    #[test]
+    fn all_ablation_artifacts_match_native() {
+        // every lowering variant (naive / fused / whole / gridded) of both
+        // algorithms produces the same pixels as the native engines
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let entries: Vec<_> = pool
+            .manifest()
+            .by_role("ablation")
+            .iter()
+            .map(|e| {
+                (
+                    e.name.clone(),
+                    e.algorithm.clone(),
+                    e.meta_usize("rows").unwrap(),
+                    e.meta_usize("planes").unwrap(),
+                )
+            })
+            .collect();
+        assert!(!entries.is_empty());
+        for (name, algorithm, rows, planes) in entries {
+            let img = synth_image(planes, rows, rows, Pattern::Noise, 99);
+            let engine = pool.engine(&name).unwrap();
+            let got = engine.run1(&[&img.data, &k]).unwrap();
+            let alg = match algorithm.as_str() {
+                "twopass" => Algorithm::TwoPass,
+                _ => Algorithm::SinglePassNoCopy,
+            };
+            let want = convolve_image(img, &k, alg, Variant::Simd).unwrap();
+            let d = max_diff(&got, &want.data);
+            assert!(d < 1e-4, "{name}: max diff {d}");
+        }
+    }
 
-    // level 1 = blur(level 0) decimated
-    let blurred = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
-    let mut want1 = PlanarImage::zeros(3, n / 2, n / 2);
-    for p in 0..3 {
-        for i in 0..n / 2 {
-            for j in 0..n / 2 {
-                want1.set(p, i, j, blurred.get(p, 2 * i, 2 * j));
+    #[test]
+    fn full_image_artifacts_match_native_at_smallest_size() {
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let n = pool.manifest().full_sizes()[0];
+        for (alg_name, alg) in
+            [("twopass", Algorithm::TwoPass), ("singlepass", Algorithm::SinglePassNoCopy)]
+        {
+            let name = format!("{alg_name}_p3_{n}");
+            let img = synth_image(3, n, n, Pattern::Checker, 5);
+            let engine = pool.engine(&name).unwrap();
+            let got = engine.run1(&[&img.data, &k]).unwrap();
+            let want = convolve_image(img, &k, alg, Variant::Simd).unwrap();
+            let d = max_diff(&got, &want.data);
+            assert!(d < 1e-4, "{name}: {d}");
+        }
+    }
+
+    #[test]
+    fn agglomerated_artifact_matches_native_3rxc() {
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let n = pool.manifest().full_sizes()[0];
+        let img = synth_image(3, n, n, Pattern::Noise, 6);
+        let engine = pool.engine(&format!("twopass_agg_{n}")).unwrap();
+        let got = engine.run1(&[&img.data, &k]).unwrap();
+        let m = OpenMpModel::new(2);
+        let want =
+            convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
+                .unwrap();
+        let d = max_diff(&got, &want.data);
+        assert!(d < 1e-4, "agglomerated PJRT vs native 3RxC: {d}");
+    }
+
+    #[test]
+    fn tile_artifacts_stitch_to_full_plane() {
+        // schedule a full plane through the halo'd vertical tile artifact the
+        // way the execution models would, and compare against a native sweep
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let (name, th, cols, halo) = {
+            let tiles = pool.manifest().by_role("tile");
+            let vert = tiles.iter().find(|t| t.variant == "vert").expect("vert tile");
+            (
+                vert.name.clone(),
+                vert.meta_usize("tile_rows").unwrap(),
+                vert.meta_usize("cols").unwrap(),
+                vert.meta_usize("halo").unwrap(),
+            )
+        };
+
+        let rows = th * 3 + 2 * halo; // three tiles of valid output
+        let plane = synth_image(1, rows, cols, Pattern::Noise, 7);
+        let engine = pool.engine(&name).unwrap();
+
+        let mut stitched: Vec<f32> = Vec::new();
+        for t in 0..3 {
+            let r0 = t * th;
+            let slab = &plane.plane(0)[r0 * cols..(r0 + th + 2 * halo) * cols];
+            stitched.extend(engine.run1(&[slab, &k]).unwrap());
+        }
+        assert_eq!(stitched.len(), 3 * th * cols);
+
+        // native vertical sweep (writes interior rows and columns of dst)
+        let k5: [f32; 5] = k.clone().try_into().unwrap();
+        let src = plane.plane(0).to_vec();
+        let mut dst = src.clone();
+        phi_conv::conv::band::vert_band_scalar(&src, &mut dst, rows, cols, &k5, 0, rows);
+        // stitched row r corresponds to plane row r + halo; compare interior
+        // columns (the native band leaves border columns untouched).
+        for r in 0..3 * th {
+            for j in halo..cols - halo {
+                let g = stitched[r * cols + j];
+                let w = dst[(r + halo) * cols + j];
+                let d = (g - w).abs();
+                assert!(d < 1e-4, "row {r} col {j}: {d}");
             }
         }
     }
-    let d = max_diff(&outs[1], &want1.data);
-    assert!(d < 1e-4, "pyramid level 1 vs native: {d}");
-    assert_eq!(outs[0].len(), 3 * n * n);
-    assert_eq!(outs[2].len(), 3 * (n / 4) * (n / 4));
-}
 
-#[test]
-fn actor_handle_serves_from_other_threads() {
-    let handle = PjrtHandle::spawn(default_artifacts_dir()).unwrap();
-    let pool = pool();
-    let k = pool.manifest().kernel_values.clone();
-    let n = pool.manifest().full_sizes()[0];
-    let name = format!("twopass_p3_{n}");
-    let img = synth_image(3, n, n, Pattern::Noise, 9);
-    let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+    #[test]
+    fn pyramid_artifact_levels_match_native() {
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let (name, n) = {
+            let entry = pool.manifest().by_role("pyramid")[0];
+            (entry.name.clone(), entry.meta_usize("rows").unwrap())
+        };
+        let img = synth_image(3, n, n, Pattern::Disc, 8);
+        let engine = pool.engine(&name).unwrap();
+        let outs = engine.run(&[&img.data, &k]).unwrap();
+        assert_eq!(outs.len(), 3);
 
-    let mut joins = vec![];
-    for _ in 0..3 {
-        let h = handle.clone();
-        let name = name.clone();
-        let data = img.data.clone();
-        let k = k.clone();
-        let want = want.data.clone();
-        joins.push(std::thread::spawn(move || {
-            let got = h.run1(&name, vec![data, k]).unwrap();
-            assert!(max_diff(&got, &want) < 1e-4);
-        }));
+        // level 1 = blur(level 0) decimated
+        let blurred = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let mut want1 = PlanarImage::zeros(3, n / 2, n / 2);
+        for p in 0..3 {
+            for i in 0..n / 2 {
+                for j in 0..n / 2 {
+                    want1.set(p, i, j, blurred.get(p, 2 * i, 2 * j));
+                }
+            }
+        }
+        let d = max_diff(&outs[1], &want1.data);
+        assert!(d < 1e-4, "pyramid level 1 vs native: {d}");
+        assert_eq!(outs[0].len(), 3 * n * n);
+        assert_eq!(outs[2].len(), 3 * (n / 4) * (n / 4));
     }
-    for j in joins {
-        j.join().unwrap();
-    }
-    handle.shutdown();
-}
 
-#[test]
-fn engine_rejects_wrong_shapes() {
-    let pool = pool();
-    let n = pool.manifest().full_sizes()[0];
-    let engine = pool.engine(&format!("twopass_p3_{n}")).unwrap();
-    let too_small = vec![0f32; 10];
-    let k = pool.manifest().kernel_values.clone();
-    assert!(engine.run(&[&too_small, &k]).is_err());
-    assert!(engine.run(&[&too_small]).is_err());
+    #[test]
+    fn actor_handle_serves_from_other_threads() {
+        let handle = PjrtHandle::spawn(default_artifacts_dir()).unwrap();
+        let pool = pool();
+        let k = pool.manifest().kernel_values.clone();
+        let n = pool.manifest().full_sizes()[0];
+        let name = format!("twopass_p3_{n}");
+        let img = synth_image(3, n, n, Pattern::Noise, 9);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+
+        let mut joins = vec![];
+        for _ in 0..3 {
+            let h = handle.clone();
+            let name = name.clone();
+            let data = img.data.clone();
+            let k = k.clone();
+            let want = want.data.clone();
+            joins.push(std::thread::spawn(move || {
+                let got = h.run1(&name, vec![data, k]).unwrap();
+                assert!(max_diff(&got, &want) < 1e-4);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn engine_rejects_wrong_shapes() {
+        let pool = pool();
+        let n = pool.manifest().full_sizes()[0];
+        let engine = pool.engine(&format!("twopass_p3_{n}")).unwrap();
+        let too_small = vec![0f32; 10];
+        let k = pool.manifest().kernel_values.clone();
+        assert!(engine.run(&[&too_small, &k]).is_err());
+        assert!(engine.run(&[&too_small]).is_err());
+    }
 }

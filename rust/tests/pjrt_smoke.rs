@@ -1,6 +1,10 @@
 //! Smoke: load + execute one AOT artifact through PJRT and sanity-check
 //! the numerics (full validation against native engines lives in
 //! `integration_runtime.rs`).
+//!
+//! Requires `--features pjrt` plus real artifacts (`make artifacts`);
+//! the default build compiles this target to an empty suite.
+#![cfg(feature = "pjrt")]
 
 use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
 

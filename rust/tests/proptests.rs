@@ -234,6 +234,88 @@ fn prop_json_roundtrip() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// cross-engine equivalence: every variant and every execution model must
+// stay within 1e-4 of the naive reference on randomised images
+// ---------------------------------------------------------------------------
+
+/// Naive single-pass with copy-back: the paper's Opt-0, used as the
+/// numeric reference for the whole ladder.
+fn naive_reference(img: &PlanarImage, k: &[f32]) -> PlanarImage {
+    convolve_image(img.clone(), k, Algorithm::SinglePassCopyBack, Variant::Naive).unwrap()
+}
+
+/// Every sequential conv variant agrees with the naive reference: the
+/// single-pass rungs pixel-for-pixel (identical border handling), the
+/// two-pass rungs on the deep interior (border treatment differs by
+/// construction).
+#[test]
+fn prop_every_conv_variant_matches_naive_reference() {
+    let mut rng = Prng::new(0xD1CE);
+    let k = gaussian_kernel(5, 1.0);
+    for case in 0..CASES {
+        let rows = rng.range(10, 60);
+        let cols = rng.range(10, 60);
+        let planes = rng.range(1, 4);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, 1000 + case as u64);
+        let want = naive_reference(&img, &k);
+        for (alg, variant) in [
+            (Algorithm::SinglePassCopyBack, Variant::Scalar),
+            (Algorithm::SinglePassCopyBack, Variant::Simd),
+            (Algorithm::SinglePassNoCopy, Variant::Scalar),
+            (Algorithm::SinglePassNoCopy, Variant::Simd),
+        ] {
+            let out = convolve_image(img.clone(), &k, alg, variant).unwrap();
+            let d = out.max_abs_diff(&want);
+            assert!(d < 1e-4, "case {case}: {alg:?} {variant:?} vs naive: {d}");
+        }
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let out = convolve_image(img.clone(), &k, Algorithm::TwoPass, variant).unwrap();
+            let d = out.max_abs_diff_deep(&want, 2);
+            assert!(d < 1e-4, "case {case}: two-pass {variant:?} vs naive (deep): {d}");
+        }
+    }
+}
+
+/// Every execution model × both layouts (GPRM agglomeration on and off,
+/// and the same axis for OpenMP/OpenCL) stays within 1e-4 of the naive
+/// reference on the deep interior — randomised shapes, thread counts and
+/// granularity knobs.
+#[test]
+fn prop_every_execution_model_matches_naive_reference() {
+    let mut rng = Prng::new(0xE0E0);
+    let k = gaussian_kernel(5, 1.0);
+    for case in 0..12 {
+        let rows = rng.range(12, 50);
+        let cols = rng.range(12, 50);
+        let img = synth_image(3, rows, cols, Pattern::Noise, 2000 + case as u64);
+        let want = naive_reference(&img, &k);
+        let threads = rng.range(1, 6);
+        let models: Vec<Box<dyn ExecutionModel>> = vec![
+            Box::new(OpenMpModel::new(threads)),
+            Box::new(OpenClModel::new(threads, rng.range(1, 16))),
+            Box::new(GprmModel::new(threads, rng.range(1, 120))),
+        ];
+        let variant = *rng.pick(&[Variant::Scalar, Variant::Simd]);
+        for m in &models {
+            for layout in [Layout::PerPlane, Layout::Agglomerated] {
+                for alg in [Algorithm::SinglePassNoCopy, Algorithm::TwoPass] {
+                    let out =
+                        convolve_parallel(m.as_ref(), &img, &k, alg, variant, layout).unwrap();
+                    // deep interior: clear of borders and, for 3R×C, of
+                    // the plane seams (both are within 2·halo = 4 px)
+                    let d = out.max_abs_diff_deep(&want, 2);
+                    assert!(
+                        d < 1e-4,
+                        "case {case}: {} {alg:?} {variant:?} {layout:?} vs naive: {d}",
+                        m.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Convolution energy property across random inputs: a normalised
 /// Gaussian never increases the max-abs pixel value of the interior.
 #[test]

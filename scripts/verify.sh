@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md) plus bench compilation, run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo build --benches"
+cargo build --benches
+
+echo "verify: OK"
