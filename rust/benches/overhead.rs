@@ -9,23 +9,8 @@ const EXHIBIT: &str = "table2";
 use phi_conv::config::RunConfig;
 use phi_conv::harness;
 
-fn cfg_from_env() -> RunConfig {
-    let mut cfg = RunConfig::default();
-    if let Ok(s) = std::env::var("PHI_BENCH_SIZES") {
-        cfg.sizes = s.split(',').map(|x| x.trim().parse().expect("size")).collect();
-    } else {
-        cfg.sizes = vec![288, 576]; // keep default bench runtime bounded
-    }
-    cfg.reps = std::env::var("PHI_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
-    cfg.warmup = 2;
-    if let Ok(t) = std::env::var("PHI_BENCH_THREADS") {
-        cfg.threads = t.parse().expect("threads");
-    }
-    cfg
-}
-
 fn main() {
-    let cfg = cfg_from_env();
+    let cfg = RunConfig::from_bench_env();
     for t in harness::simulated(EXHIBIT).unwrap() {
         println!("{}", t.to_text());
     }

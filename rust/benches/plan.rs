@@ -1,0 +1,104 @@
+//! Bench: plan-layer smoke — what does routing through `ConvPlan` cost
+//! versus calling the band primitives directly, and what does the
+//! width-5 unrolled fast path buy over the generic-width engines?
+//!
+//! Two tables:
+//! 1. plan execute vs a hand-rolled direct dispatch of the same passes
+//!    (same buffer loads, same band functions) — the plan overhead;
+//! 2. width-5 fast path vs forced-generic at the same width — the
+//!    fast-path gain the plan's automatic selection preserves.
+//!
+//! `cargo bench --bench plan` — env overrides:
+//!   PHI_BENCH_SIZES=288,576   PHI_BENCH_REPS=5   PHI_BENCH_THREADS=8
+
+use phi_conv::config::RunConfig;
+use phi_conv::conv::{band, Algorithm, Variant};
+use phi_conv::image::{synth_image, PlanarImage};
+use phi_conv::metrics::{time_reps, Table};
+use phi_conv::plan::{ConvPlan, ScratchArena};
+
+/// The two-pass SIMD pipeline written out by hand against the band
+/// primitives — the pre-plan dispatch shape, as a baseline.
+fn direct_twopass_ms(img: &PlanarImage, k5: &[f32; 5], reps: usize, warmup: usize) -> f64 {
+    let (rows, cols) = (img.rows, img.cols);
+    let plane_len = rows * cols;
+    let mut a = vec![0f32; img.data.len()];
+    let mut b = img.data.clone();
+    time_reps(
+        || {
+            a.copy_from_slice(&img.data);
+            for p in 0..img.planes {
+                let ap = &mut a[p * plane_len..(p + 1) * plane_len];
+                let bp = &mut b[p * plane_len..(p + 1) * plane_len];
+                band::horiz_band_simd(ap, bp, rows, cols, k5, 0, rows);
+                band::vert_band_simd(bp, ap, rows, cols, k5, 0, rows);
+            }
+        },
+        warmup,
+        reps,
+    )
+    .median()
+}
+
+fn plan_ms(plan: &ConvPlan, img: &PlanarImage, reps: usize, warmup: usize) -> f64 {
+    let mut arena = ScratchArena::new();
+    time_reps(|| plan.execute_discard(None, img, &mut arena).unwrap(), warmup, reps).median()
+}
+
+fn main() {
+    let cfg = RunConfig::from_bench_env();
+    let k = phi_conv::image::gaussian_kernel(5, 1.0);
+    let k5: &[f32; 5] = k.as_slice().try_into().unwrap();
+
+    let mut t = Table::new(
+        "Plan-layer overhead: sequential two-pass SIMD, plan vs direct band dispatch",
+        &["Image Size", "direct ms", "plan ms", "overhead"],
+    );
+    for &size in &cfg.sizes {
+        let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+        let direct = direct_twopass_ms(&img, k5, cfg.reps, cfg.warmup);
+        let plan = ConvPlan::builder()
+            .algorithm(Algorithm::TwoPass)
+            .variant(Variant::Simd)
+            .shape(cfg.planes, size, size)
+            .build()
+            .unwrap();
+        let planned = plan_ms(&plan, &img, cfg.reps, cfg.warmup);
+        t.row(vec![
+            format!("{size}x{size}"),
+            format!("{direct:.3}"),
+            format!("{planned:.3}"),
+            format!("{:+.1}%", (planned / direct - 1.0) * 100.0),
+        ]);
+    }
+    println!("{}", t.to_text());
+
+    let mut t = Table::new(
+        "Width-5 fast path vs generic engines (plan-selected, sequential)",
+        &["Image Size", "Variant", "fast ms", "generic ms", "fast-path gain"],
+    );
+    for &size in &cfg.sizes {
+        let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+        for (label, variant) in [("no-vec", Variant::Scalar), ("simd", Variant::Simd)] {
+            let build = |generic: bool| {
+                ConvPlan::builder()
+                    .algorithm(Algorithm::TwoPass)
+                    .variant(variant)
+                    .shape(cfg.planes, size, size)
+                    .force_generic(generic)
+                    .build()
+                    .unwrap()
+            };
+            let fast = plan_ms(&build(false), &img, cfg.reps, cfg.warmup);
+            let generic = plan_ms(&build(true), &img, cfg.reps, cfg.warmup);
+            t.row(vec![
+                format!("{size}x{size}"),
+                label.into(),
+                format!("{fast:.3}"),
+                format!("{generic:.3}"),
+                format!("{:.2}x", generic / fast),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+}

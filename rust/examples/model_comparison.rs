@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo run --offline --release --example model_comparison -- [--sizes 288,576]`
 
-use anyhow::Result;
+use phi_conv::Result;
 
 use phi_conv::config::{standard_cli, RunConfig};
 use phi_conv::conv::{Algorithm, Variant};

@@ -1,7 +1,8 @@
 // §Perf probe (kept as a repeatable tool): hot-path timings per layer
-use phi_conv::conv::{convolve_image_into, Algorithm, Variant, Workspace};
+use phi_conv::conv::{Algorithm, Variant};
 use phi_conv::image::{gaussian_kernel, synth_image, Pattern};
 use phi_conv::metrics::time_reps;
+use phi_conv::plan::{ConvPlan, ScratchArena};
 use phi_conv::runtime::{manifest::default_artifacts_dir, EnginePool};
 fn main() {
     let k = gaussian_kernel(5, 1.0);
@@ -13,8 +14,14 @@ fn main() {
         ("singlepass+cb simd", Algorithm::SinglePassCopyBack, Variant::Simd),
         ("naive", Algorithm::SinglePassCopyBack, Variant::Naive),
     ] {
-        let mut ws = Workspace::new();
-        let s = time_reps(|| { convolve_image_into(&mut ws, &img, &k, alg, v).unwrap(); }, 3, 12);
+        let plan = ConvPlan::builder()
+            .algorithm(alg)
+            .variant(v)
+            .shape(3, 576, 576)
+            .build()
+            .unwrap();
+        let mut arena = ScratchArena::new();
+        let s = time_reps(|| plan.execute_discard(None, &img, &mut arena).unwrap(), 3, 12);
         let mpx = (3 * 576 * 576) as f64 / s.median() / 1e3;
         println!("native {name:22} {:7.3} ms ({mpx:4.0} Mpx/s)", s.median());
     }

@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo run --offline --release --example quickstart`
 
-use anyhow::Result;
+use phi_conv::Result;
 
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
 use phi_conv::image::{gaussian_kernel, synth_image, write_pgm, Pattern};

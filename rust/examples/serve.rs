@@ -12,13 +12,14 @@
 //!
 //! Run: `cargo run --offline --release --example serve -- [--requests 48]`
 
-use anyhow::{Context, Result};
+use phi_conv::{ensure, Context, Result};
 
 use phi_conv::config::{standard_cli, RunConfig};
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
 use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
 use phi_conv::image::synth_image;
 use phi_conv::metrics::SampleSet;
+use phi_conv::plan::KernelSpec;
 use phi_conv::util::prng::Prng;
 
 fn main() -> Result<()> {
@@ -42,8 +43,11 @@ fn main() -> Result<()> {
     }
 
     // mixed workload: sizes from the artifact set, four backend choices —
-    // policy-routed, and explicitly-pinned native/PJRT requests
+    // policy-routed, explicitly-pinned native/PJRT, and every fifth
+    // request carrying its own (wider) kernel spec through the plan layer
     let k = phi_conv::image::gaussian_kernel(cfg.kernel_width, cfg.sigma);
+    let wide_spec = KernelSpec::new(7, 1.5);
+    let wide_taps = phi_conv::image::gaussian_kernel(wide_spec.width, wide_spec.sigma);
     let mut rng = Prng::new(cfg.seed);
     let t0 = std::time::Instant::now();
     let mut jobs = Vec::new();
@@ -57,16 +61,22 @@ fn main() -> Result<()> {
             2 => req.with_backend(Backend::NativeOpenCl),
             _ => req.with_backend(Backend::NativeGprm),
         };
-        jobs.push((img, coord.submit(req)));
+        let custom_kernel = i % 5 == 0;
+        if custom_kernel {
+            req = req.with_kernel(wide_spec);
+        }
+        jobs.push((img, custom_kernel, coord.submit(req)));
     }
 
     let mut latency = SampleSet::new();
     let mut verified = 0usize;
-    for (i, (input, rx)) in jobs.into_iter().enumerate() {
+    for (i, (input, custom_kernel, rx)) in jobs.into_iter().enumerate() {
         let resp = rx.recv().context("coordinator dropped")??;
         latency.push(resp.latency_ms());
-        // verify every response against the sequential oracle
-        let want = convolve_image(input, &k, Algorithm::TwoPass, Variant::Simd)?;
+        // verify every response against the sequential oracle (with the
+        // kernel the request actually carried)
+        let taps = if custom_kernel { &wide_taps } else { &k };
+        let want = convolve_image(input, taps, Algorithm::TwoPass, Variant::Simd)?;
         let max_diff = resp
             .image
             .data
@@ -76,7 +86,7 @@ fn main() -> Result<()> {
             .fold(0f32, f32::max);
         // 3RxC-routed responses differ in the 2h seam columns by design
         let tol = if resp.layout == phi_conv::models::Layout::Agglomerated { f32::MAX } else { 1e-4 };
-        anyhow::ensure!(max_diff < tol, "request {i}: max diff {max_diff}");
+        ensure!(max_diff < tol, "request {i}: max diff {max_diff}");
         if tol < f32::MAX {
             verified += 1;
         }

@@ -15,7 +15,7 @@
 //! correctness signal. Run:
 //! `cargo run --offline --release --example stereo_pipeline`
 
-use anyhow::Result;
+use phi_conv::Result;
 
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
 use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};

@@ -103,10 +103,16 @@ impl RunConfig {
             Ok(())
         }
         set(cli, "planes", &mut self.planes)?;
+        set(cli, "kernel-width", &mut self.kernel_width)?;
         set(cli, "reps", &mut self.reps)?;
         set(cli, "warmup", &mut self.warmup)?;
         set(cli, "threads", &mut self.threads)?;
         set(cli, "cutoff", &mut self.cutoff)?;
+        if let Some(s) = cli.get("sigma") {
+            if !s.is_empty() {
+                self.sigma = s.parse()?;
+            }
+        }
         if let Some(p) = cli.get("pattern") {
             if !p.is_empty() {
                 self.pattern =
@@ -126,6 +132,44 @@ impl RunConfig {
         Ok(())
     }
 
+    /// The run's kernel as a plan-layer spec.
+    pub fn kernel_spec(&self) -> crate::plan::KernelSpec {
+        crate::plan::KernelSpec::new(self.kernel_width, self.sigma)
+    }
+
+    /// Structured validation of the resolved configuration — the CLI
+    /// entry point for kernel errors (no silent fallback downstream).
+    pub fn validate(&self) -> Result<()> {
+        self.kernel_spec().validate()?;
+        ensure!(self.planes >= 1, "planes must be >= 1");
+        ensure!(!self.sizes.is_empty(), "sizes must be non-empty");
+        ensure!(self.sizes.iter().all(|&s| s >= 1), "every size must be >= 1, got {:?}", self.sizes);
+        Ok(())
+    }
+
+    /// Bench-binary configuration from the `PHI_BENCH_*` env knobs
+    /// shared by every bench target (previously copy-pasted into each):
+    /// `PHI_BENCH_SIZES` (default `288,576` to keep default bench runtime
+    /// bounded), `PHI_BENCH_REPS` (default 5), `PHI_BENCH_WARMUP`
+    /// (default 2), `PHI_BENCH_THREADS` (default: host cores). Panics on
+    /// malformed values — benches are developer-facing binaries.
+    pub fn from_bench_env() -> Self {
+        let mut cfg = Self::default();
+        if let Ok(s) = std::env::var("PHI_BENCH_SIZES") {
+            cfg.sizes = s.split(',').map(|x| x.trim().parse().expect("size")).collect();
+        } else {
+            cfg.sizes = vec![288, 576];
+        }
+        cfg.reps = std::env::var("PHI_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+        cfg.warmup =
+            std::env::var("PHI_BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+        if let Ok(t) = std::env::var("PHI_BENCH_THREADS") {
+            cfg.threads = t.parse().expect("threads");
+        }
+        cfg.validate().expect("PHI_BENCH_* configuration");
+        cfg
+    }
+
     /// Resolve from optional TOML path + CLI.
     pub fn resolve(cli: &Cli) -> Result<Self> {
         let mut cfg = Self::default();
@@ -137,6 +181,7 @@ impl RunConfig {
             }
         }
         cfg.apply_cli(cli)?;
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -147,6 +192,8 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("config", "", "TOML config file (section [run])")
         .opt("sizes", "", "comma-separated square sizes (default 288,576,1152)")
         .opt("planes", "", "colour planes (default 3)")
+        .opt("kernel-width", "", "odd Gaussian kernel width (default 5)")
+        .opt("sigma", "", "Gaussian sigma (default 1.0)")
         .opt("reps", "", "timed repetitions (default 20)")
         .opt("warmup", "", "warmup runs (default 3)")
         .opt("threads", "", "worker threads (default: host cores)")
@@ -202,5 +249,25 @@ mod tests {
         let mut c = RunConfig::default();
         let doc = TomlDoc::parse("[run]\npattern = \"bogus\"\n").unwrap();
         assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn kernel_flags_plumb_through_cli() {
+        let cli = standard_cli("t", "t")
+            .parse(["--kernel-width".to_string(), "7".to_string(), "--sigma".to_string(), "2.5".to_string()])
+            .unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert_eq!(c.kernel_width, 7);
+        assert!((c.sigma - 2.5).abs() < 1e-12);
+        assert_eq!(c.kernel_spec(), crate::plan::KernelSpec::new(7, 2.5));
+    }
+
+    #[test]
+    fn even_kernel_width_is_structured_cli_error() {
+        let cli = standard_cli("t", "t")
+            .parse(["--kernel-width".to_string(), "4".to_string()])
+            .unwrap();
+        let e = RunConfig::resolve(&cli).unwrap_err();
+        assert!(format!("{e:#}").contains("odd"), "got: {e:#}");
     }
 }

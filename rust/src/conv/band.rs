@@ -31,6 +31,17 @@ fn dot5(w: &[f32], k: &[f32]) -> f32 {
     w[0] * k[0] + w[1] * k[1] + w[2] * k[2] + w[3] * k[3] + w[4] * k[4]
 }
 
+/// Window dot product of arbitrary width (the generic-width analogue of
+/// [`dot5`]); the paired `iter().zip()` shape keeps it vectorisable.
+#[inline(always)]
+fn dotw(w: &[f32], k: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (a, b) in w.iter().zip(k) {
+        s += a * b;
+    }
+    s
+}
+
 // ---------------------------------------------------------------------------
 // Opt-0: naive single-pass — generic width, 4 nested loops, per-pixel
 // ---------------------------------------------------------------------------
@@ -49,6 +60,9 @@ pub fn singlepass_naive_band(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = width / 2;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
         let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
@@ -81,6 +95,9 @@ pub fn singlepass_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
         let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
@@ -115,6 +132,9 @@ pub fn singlepass_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
     for i in a..b {
@@ -152,6 +172,9 @@ pub fn horiz_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
         let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
@@ -178,6 +201,9 @@ pub fn horiz_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
     for i in a..b {
@@ -203,6 +229,9 @@ pub fn vert_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
         let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
@@ -229,6 +258,9 @@ pub fn vert_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
+    if 2 * h >= cols {
+        return; // no interior columns (also guards the `cols - h` arithmetic)
+    }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
     for i in a..b {
@@ -243,6 +275,213 @@ pub fn vert_band_simd(
         let out = &mut dst_band[start..start + w];
         for jj in 0..w {
             out[jj] = s0[jj] * k[0] + s1[jj] * k[1] + s2[jj] * k[2] + s3[jj] * k[3] + s4[jj] * k[4];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic odd-width engines: the same scalar/simd shapes as the W=5
+// unrolled rungs above, parameterised over any odd kernel width. The
+// plan layer (`crate::plan`) selects the W=5 unrolled functions as a
+// fast path and falls back to these for every other width, replacing
+// the old zero-filled `[0.0; 5]` dummy-kernel behaviour.
+// ---------------------------------------------------------------------------
+
+/// Single-pass, scalar shape, generic width: per-pixel indexed
+/// arithmetic with per-source-row subtotals (the unrolled Eq. 3 shape,
+/// re-rolled over `width`).
+pub fn singlepass_band_scalar_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    debug_assert_eq!(k2d.len(), width * width);
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            for u in 0..width {
+                let base = (i + u - h) * cols + j - h;
+                let ku = &k2d[u * width..(u + 1) * width];
+                let mut row_s = 0.0f32;
+                for (v, &kv) in ku.iter().enumerate() {
+                    row_s += src[base + v] * kv;
+                }
+                s += row_s;
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Single-pass, SIMD shape, generic width: per source row, sweep a
+/// `width`-window dot product across the output row and accumulate.
+pub fn singlepass_band_simd_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    debug_assert_eq!(k2d.len(), width * width);
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        let row0 = &src[(i - h) * cols..(i - h) * cols + cols];
+        for (o, win) in out.iter_mut().zip(row0.windows(width)) {
+            *o = dotw(win, &k2d[0..width]);
+        }
+        for u in 1..width {
+            let row = &src[(i + u - h) * cols..(i + u - h) * cols + cols];
+            let ku = &k2d[u * width..(u + 1) * width];
+            for (o, win) in out.iter_mut().zip(row.windows(width)) {
+                *o += dotw(win, ku);
+            }
+        }
+    }
+}
+
+/// Horizontal pass, scalar shape, generic width.
+pub fn horiz_band_scalar_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let base = i * cols + j - h;
+            let mut s = 0.0f32;
+            for (v, &kv) in k.iter().enumerate() {
+                s += src[base + v] * kv;
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Horizontal pass, SIMD shape, generic width: one `width`-window sweep
+/// per row.
+pub fn horiz_band_simd_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let row = &src[i * cols..(i + 1) * cols];
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        for (o, win) in out.iter_mut().zip(row.windows(width)) {
+            *o = dotw(win, k);
+        }
+    }
+}
+
+/// Vertical pass, scalar shape, generic width.
+pub fn vert_band_scalar_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            for (u, &ku) in k.iter().enumerate() {
+                s += src[(i + u - h) * cols + j] * ku;
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Vertical pass, SIMD shape, generic width: `width` aligned row-slice
+/// FMAs per output row.
+pub fn vert_band_simd_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    let w = cols - 2 * h;
+    for i in a..b {
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        let row0 = &src[(i - h) * cols + h..(i - h) * cols + h + w];
+        for (o, &s0) in out.iter_mut().zip(row0) {
+            *o = s0 * k[0];
+        }
+        for u in 1..width {
+            let row = &src[(i + u - h) * cols + h..(i + u - h) * cols + h + w];
+            let ku = k[u];
+            for (o, &sv) in out.iter_mut().zip(row) {
+                *o += sv * ku;
+            }
         }
     }
 }
@@ -403,6 +642,96 @@ mod tests {
         copy_back_band_simd(&src, &mut b, C, 3, 17);
         assert_eq!(a, b);
         assert_eq!(a[0], src[3 * C]);
+    }
+
+    #[test]
+    fn generic_width5_matches_unrolled_fast_path() {
+        let src = noise(10);
+        let (k, k2) = k5();
+
+        let mut fast = src.clone();
+        singlepass_band_simd(&src, &mut fast, R, C, &k2, 0, R);
+        let mut generic = src.clone();
+        singlepass_band_simd_w(&src, &mut generic, R, C, &k2, 5, 0, R);
+        for (f, g) in fast.iter().zip(&generic) {
+            assert!((f - g).abs() < 1e-6, "simd: {f} vs {g}");
+        }
+
+        let mut fast = src.clone();
+        singlepass_band_scalar(&src, &mut fast, R, C, &k2, 0, R);
+        let mut generic = src.clone();
+        singlepass_band_scalar_w(&src, &mut generic, R, C, &k2, 5, 0, R);
+        for (f, g) in fast.iter().zip(&generic) {
+            assert!((f - g).abs() < 1e-6, "scalar: {f} vs {g}");
+        }
+
+        let mut fast = src.clone();
+        horiz_band_simd(&src, &mut fast, R, C, &k, 0, R);
+        let mut generic = src.clone();
+        horiz_band_simd_w(&src, &mut generic, R, C, &k, 0, R);
+        assert_eq!(fast, generic, "horiz: identical tap order ⇒ bitwise equal");
+
+        let mut fast = src.clone();
+        vert_band_simd(&src, &mut fast, R, C, &k, 0, R);
+        let mut generic = src.clone();
+        vert_band_simd_w(&src, &mut generic, R, C, &k, 0, R);
+        assert_eq!(fast, generic, "vert: identical tap order ⇒ bitwise equal");
+    }
+
+    #[test]
+    fn generic_scalar_simd_agree_at_width7() {
+        let src = noise(11);
+        let k = gaussian_kernel(7, 1.5);
+        let k2 = gaussian_kernel2d(&k);
+
+        let mut a = src.clone();
+        singlepass_band_scalar_w(&src, &mut a, R, C, &k2, 7, 0, R);
+        let mut b = src.clone();
+        singlepass_band_simd_w(&src, &mut b, R, C, &k2, 7, 0, R);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "singlepass w7: {x} vs {y}");
+        }
+
+        let mut a = src.clone();
+        horiz_band_scalar_w(&src, &mut a, R, C, &k, 0, R);
+        let mut b = src.clone();
+        horiz_band_simd_w(&src, &mut b, R, C, &k, 0, R);
+        assert_eq!(a, b, "horiz w7");
+
+        let mut a = src.clone();
+        vert_band_scalar_w(&src, &mut a, R, C, &k, 0, R);
+        let mut b = src.clone();
+        vert_band_simd_w(&src, &mut b, R, C, &k, 0, R);
+        assert_eq!(a, b, "vert w7");
+    }
+
+    #[test]
+    fn generic_singlepass_matches_naive_at_width3() {
+        let src = noise(12);
+        let k = gaussian_kernel(3, 1.0);
+        let k2 = gaussian_kernel2d(&k);
+        let mut want = src.clone();
+        singlepass_naive_band(&src, &mut want, R, C, &k2, 3, 0, R);
+        for f in [singlepass_band_scalar_w, singlepass_band_simd_w] {
+            let mut got = src.clone();
+            f(&src, &mut got, R, C, &k2, 3, 0, R);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_fns_noop_when_kernel_exceeds_plane() {
+        // width 9 on a 7-column plane: no interior, everything untouched
+        let src = noise(13);
+        let k = gaussian_kernel(9, 2.0);
+        let k2 = gaussian_kernel2d(&k);
+        let mut d = vec![5f32; 10 * 7];
+        singlepass_band_scalar_w(&src[..70], &mut d, 10, 7, &k2, 9, 0, 10);
+        horiz_band_simd_w(&src[..70], &mut d, 10, 7, &k, 0, 10);
+        vert_band_scalar_w(&src[..70], &mut d, 10, 7, &k, 0, 10);
+        assert!(d.iter().all(|&v| v == 5.0));
     }
 
     #[test]

@@ -27,15 +27,21 @@
 //! [`crate::models`] can parallelise the outer loop exactly like
 //! `#pragma omp parallel for` / GPRM's `par_cont_for` / OpenCL NDRange
 //! partitioning do in the paper.
+//!
+//! Every rung exists in two widths: the paper's hand-unrolled W=5
+//! primitives (the fast path) and generic odd-width `*_w` twins of the
+//! same scalar/simd shape. Selection between them — and all
+//! algorithm/variant/layout dispatch — lives in [`crate::plan`]; the
+//! drivers here are sequential conveniences over it.
 
 pub mod band;
 pub mod plane;
 
-pub use plane::{convolve_image, convolve_image_into, convolve_plane, Algorithm, Variant, Workspace};
+pub use plane::{convolve_image, convolve_plane, Algorithm, Variant};
 
 /// Halo of the paper's 5-wide kernel.
 pub const HALO: usize = 2;
 
-/// Fixed kernel width of the unrolled engines (the paper hand-unrolls
-/// W=5; the generic-width naive engine accepts any odd width).
+/// Kernel width of the unrolled fast-path engines (the paper hand-unrolls
+/// W=5; the generic-width engines accept any odd width).
 pub const WIDTH: usize = 5;

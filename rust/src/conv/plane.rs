@@ -3,12 +3,17 @@
 //! These are the "sequential code" of the paper's speedup denominators:
 //! every parallel execution model must produce pixel-identical output to
 //! these drivers (integration tests enforce it).
+//!
+//! Since the plan refactor, these drivers are thin conveniences over
+//! [`crate::plan::ConvPlan`]: the former per-function
+//! `match (algorithm, variant)` dispatch lives in the plan's pass
+//! pipeline, which also serves the parallel driver, the coordinator and
+//! the harness. Any odd kernel width is accepted — width 5 takes the
+//! unrolled fast path, everything else the generic-width engines.
 
 use crate::util::error::Result;
 
-use crate::image::{gaussian_kernel2d, PlanarImage};
-
-use super::band;
+use crate::image::PlanarImage;
 
 /// Which algorithm (paper sections 5.1 / 7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -76,6 +81,9 @@ impl Variant {
 /// * `SinglePassNoCopy`: direct a→b; result in `b` (`b` must start as a
 ///   copy of `a` so its border band carries the pass-through pixels).
 /// * `SinglePassCopyBack`: direct a→b then copy b→a; result in `a`.
+///
+/// One-shot wrapper over [`crate::plan::ConvPlan::run_plane`] — build a
+/// plan once instead when convolving repeatedly.
 pub fn convolve_plane(
     a: &mut [f32],
     b: &mut [f32],
@@ -85,129 +93,13 @@ pub fn convolve_plane(
     algorithm: Algorithm,
     variant: Variant,
 ) -> Result<()> {
-    if k.len() != 5 && variant != Variant::Naive {
-        bail!("unrolled engines are specialised to width 5, got {}", k.len());
-    }
-    if a.len() != rows * cols || b.len() != rows * cols {
-        bail!("plane buffers must be rows*cols");
-    }
-    let k2d = gaussian_kernel2d(k);
-    match (algorithm, variant) {
-        (Algorithm::TwoPass, Variant::Naive) => {
-            bail!("the paper's naive rung is single-pass only (Opt-0)")
-        }
-        (Algorithm::TwoPass, Variant::Scalar) => {
-            band::horiz_band_scalar(a, b, rows, cols, five(k), 0, rows);
-            band::vert_band_scalar(b, a, rows, cols, five(k), 0, rows);
-        }
-        (Algorithm::TwoPass, Variant::Simd) => {
-            band::horiz_band_simd(a, b, rows, cols, five(k), 0, rows);
-            band::vert_band_simd(b, a, rows, cols, five(k), 0, rows);
-        }
-        (alg, variant) => {
-            match variant {
-                Variant::Naive => band::singlepass_naive_band(a, b, rows, cols, &k2d, k.len(), 0, rows),
-                Variant::Scalar => {
-                    band::singlepass_band_scalar(a, b, rows, cols, k2d25(&k2d), 0, rows)
-                }
-                Variant::Simd => band::singlepass_band_simd(a, b, rows, cols, k2d25(&k2d), 0, rows),
-            }
-            if alg == Algorithm::SinglePassCopyBack {
-                match variant {
-                    Variant::Simd => band::copy_back_band_simd(b, a, cols, 0, rows),
-                    _ => band::copy_back_band_scalar(b, a, cols, 0, rows),
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-fn five(k: &[f32]) -> &[f32; 5] {
-    k.try_into().expect("width-5 kernel")
-}
-
-fn k2d25(k2d: &[f32]) -> &[f32; 25] {
-    k2d.try_into().expect("5x5 kernel")
-}
-
-/// Reusable buffers for repeated convolutions (perf pass, EXPERIMENTS.md
-/// §Perf iteration 1): a fresh `Vec` per call costs an allocation plus
-/// first-touch page faults — ~2.5 ms at 576²×3, more than the convolution
-/// itself. The paper's benchmark loop convolves the same arrays 1000
-/// times in place; `Workspace` restores that pattern.
-#[derive(Debug, Default)]
-pub struct Workspace {
-    pub a: Vec<f32>,
-    pub b: Vec<f32>,
-    /// wide buffers for the 3R×C agglomerated layout
-    pub wide_a: Vec<f32>,
-    pub wide_b: Vec<f32>,
-}
-
-impl Workspace {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Fill `a` and `b` for a convolution, reusing capacity.
-    ///
-    /// `a` is a full copy. `b` nominally "starts as a copy of A"
-    /// (DESIGN.md §4), but only its border band is ever *read* before
-    /// being written — the vertical pass reads B's top/bottom `h` rows,
-    /// and the single-pass result's pass-through pixels are B's border
-    /// ring — so only the border ring is copied (§Perf iteration 3:
-    /// ~19 % off the two-pass sequential path at 576²).
-    pub fn load(&mut self, img: &PlanarImage) {
-        self.a.clear();
-        self.a.extend_from_slice(&img.data);
-        let n = img.data.len();
-        self.b.resize(n, 0.0);
-        let h = crate::conv::HALO;
-        let (rows, cols) = (img.rows, img.cols);
-        if rows <= 2 * h || cols <= 2 * h {
-            self.b.copy_from_slice(&img.data);
-            return;
-        }
-        let plane_len = rows * cols;
-        for p in 0..img.planes {
-            let src = &img.data[p * plane_len..(p + 1) * plane_len];
-            let dst = &mut self.b[p * plane_len..(p + 1) * plane_len];
-            // top and bottom h rows
-            dst[..h * cols].copy_from_slice(&src[..h * cols]);
-            dst[(rows - h) * cols..].copy_from_slice(&src[(rows - h) * cols..]);
-            // left and right h columns of the interior rows
-            for i in h..rows - h {
-                dst[i * cols..i * cols + h].copy_from_slice(&src[i * cols..i * cols + h]);
-                dst[(i + 1) * cols - h..(i + 1) * cols]
-                    .copy_from_slice(&src[(i + 1) * cols - h..(i + 1) * cols]);
-            }
-        }
-    }
-}
-
-/// Convolve an image using caller-owned buffers; returns the slice (in
-/// the workspace) holding the result. No allocation after the first call
-/// at a given size.
-pub fn convolve_image_into<'ws>(
-    ws: &'ws mut Workspace,
-    img: &PlanarImage,
-    k: &[f32],
-    algorithm: Algorithm,
-    variant: Variant,
-) -> Result<&'ws [f32]> {
-    ws.load(img);
-    let (rows, cols) = (img.rows, img.cols);
-    let plane_len = rows * cols;
-    for p in 0..img.planes {
-        let a = &mut ws.a[p * plane_len..(p + 1) * plane_len];
-        let b = &mut ws.b[p * plane_len..(p + 1) * plane_len];
-        convolve_plane(a, b, rows, cols, k, algorithm, variant)?;
-    }
-    Ok(match algorithm {
-        Algorithm::SinglePassNoCopy => &ws.b,
-        _ => &ws.a,
-    })
+    let plan = crate::plan::ConvPlan::builder()
+        .algorithm(algorithm)
+        .variant(variant)
+        .kernel_taps(k.to_vec())
+        .shape(1, rows, cols)
+        .build()?;
+    plan.run_plane(a, b)
 }
 
 /// Convolve every plane of an image sequentially (the paper's `conv`
@@ -220,11 +112,17 @@ pub fn convolve_image(
     variant: Variant,
 ) -> Result<PlanarImage> {
     let (rows, cols) = (img.rows, img.cols);
+    let plan = crate::plan::ConvPlan::builder()
+        .algorithm(algorithm)
+        .variant(variant)
+        .kernel_taps(k.to_vec())
+        .shape(1, rows, cols)
+        .build()?;
     let mut scratch_img = img.clone(); // B starts as a copy of A (DESIGN.md §4)
     for p in 0..img.planes {
         let a = img.plane_mut(p);
         let b = scratch_img.plane_mut(p);
-        convolve_plane(a, b, rows, cols, k, algorithm, variant)?;
+        plan.run_plane(a, b)?;
     }
     Ok(match algorithm {
         Algorithm::SinglePassNoCopy => scratch_img, // result lives in B
@@ -322,12 +220,23 @@ mod tests {
     }
 
     #[test]
-    fn width5_enforced_for_unrolled() {
+    fn generic_widths_served_not_mis_served() {
+        // pre-plan, non-5 widths under the unrolled variants were a hard
+        // error (and the parallel driver silently used a zero kernel);
+        // now they run the generic-width engines correctly.
         let (img, _) = setup();
         let k3 = gaussian_kernel(3, 1.0);
-        assert!(convolve_image(img.clone(), &k3, Algorithm::TwoPass, Variant::Simd).is_err());
-        // but the naive generic engine accepts width 3
-        assert!(convolve_image(img, &k3, Algorithm::SinglePassCopyBack, Variant::Naive).is_ok());
+        let naive3 =
+            convolve_image(img.clone(), &k3, Algorithm::SinglePassCopyBack, Variant::Naive).unwrap();
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let sp = convolve_image(img.clone(), &k3, Algorithm::SinglePassCopyBack, variant).unwrap();
+            assert!(sp.max_abs_diff(&naive3) < 1e-4, "{variant:?} single-pass w3");
+            let tp = convolve_image(img.clone(), &k3, Algorithm::TwoPass, variant).unwrap();
+            assert!(tp.max_abs_diff_deep(&naive3, 1) < 1e-4, "{variant:?} two-pass w3");
+        }
+        // even widths stay structured errors
+        let k4 = vec![0.25f32; 4];
+        assert!(convolve_image(img, &k4, Algorithm::TwoPass, Variant::Simd).is_err());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::models::Layout;
+use crate::plan::KernelSpec;
 
 use super::router::Backend;
 
@@ -17,6 +18,10 @@ pub struct ConvRequest {
     pub backend: Option<Backend>,
     /// `None` → policy decides (paper-adaptive picks 3R×C for large).
     pub layout: Option<Layout>,
+    /// `None` → the coordinator's configured default kernel. A request
+    /// may carry its own Gaussian spec; executors cache one plan per
+    /// distinct `(algorithm, variant, layout, shape, kernel)` key.
+    pub kernel: Option<KernelSpec>,
 }
 
 impl ConvRequest {
@@ -29,6 +34,7 @@ impl ConvRequest {
             variant: Variant::Simd,
             backend: None,
             layout: None,
+            kernel: None,
         }
     }
 
@@ -49,6 +55,12 @@ impl ConvRequest {
 
     pub fn with_layout(mut self, l: Layout) -> Self {
         self.layout = Some(l);
+        self
+    }
+
+    /// Carry a per-request kernel (width + sigma); validated at intake.
+    pub fn with_kernel(mut self, spec: KernelSpec) -> Self {
+        self.kernel = Some(spec);
         self
     }
 }
@@ -85,12 +97,14 @@ mod tests {
             .with_algorithm(Algorithm::SinglePassNoCopy)
             .with_variant(Variant::Scalar)
             .with_backend(Backend::NativeOpenMp)
-            .with_layout(Layout::Agglomerated);
+            .with_layout(Layout::Agglomerated)
+            .with_kernel(KernelSpec::new(7, 2.0));
         assert_eq!(r.id, 7);
         assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
         assert_eq!(r.variant, Variant::Scalar);
         assert_eq!(r.backend, Some(Backend::NativeOpenMp));
         assert_eq!(r.layout, Some(Layout::Agglomerated));
+        assert_eq!(r.kernel, Some(KernelSpec::new(7, 2.0)));
     }
 
     #[test]
@@ -99,6 +113,7 @@ mod tests {
         let r = ConvRequest::new(1, img);
         assert!(r.backend.is_none());
         assert!(r.layout.is_none());
+        assert!(r.kernel.is_none());
         assert_eq!(r.algorithm, Algorithm::TwoPass);
     }
 }

@@ -1,4 +1,10 @@
 //! The coordinator itself: queue, executor threads, metrics.
+//!
+//! Executors run every native request through the plan layer: each
+//! executor thread owns a [`ScratchArena`] (scratch planes recycle
+//! across requests — zero scratch allocations after warm-up) and a cache
+//! of built [`ConvPlan`]s keyed by `(algorithm, variant, layout, shape,
+//! kernel)`, so repeated traffic at a shape pays plan validation once.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -10,10 +16,11 @@ use std::time::Instant;
 use crate::util::error::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::conv::Algorithm;
+use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::metrics::SampleSet;
 use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
+use crate::plan::{ConvPlan, KernelSpec, ScratchArena};
 use crate::runtime::{Manifest, PjrtHandle};
 
 use super::request::{ConvRequest, ConvResponse};
@@ -40,11 +47,35 @@ struct Inner {
     openmp: OpenMpModel,
     opencl: OpenClModel,
     gprm: GprmModel,
-    kernel: Vec<f32>,
+    /// configured default kernel spec (requests may override)
+    kernel: KernelSpec,
+    /// taps the PJRT path executes with: the manifest's reference
+    /// kernel when PJRT is loaded, the configured default otherwise
+    kernel_taps: Vec<f32>,
     /// manifest (shape lookups, caller side) + execution handle (actor)
     pjrt: Option<(Manifest, PjrtHandle)>,
     stats: Mutex<CoordinatorStats>,
     seq: AtomicU64,
+}
+
+/// Per-executor cache bounds. Shapes and kernels are request-controlled,
+/// so without a cap an adversarial mix of distinct (shape, kernel)
+/// combinations would grow the plan cache and scratch pool without
+/// bound; past the cap the whole cache is dropped (requests simply
+/// rebuild plans / re-lease scratch — correctness is unaffected).
+const PLAN_CACHE_MAX: usize = 64;
+const ARENA_POOL_MAX: usize = 16;
+
+/// Plan-cache key: everything a [`ConvPlan`] is built from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    algorithm: Algorithm,
+    variant: Variant,
+    layout: Layout,
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    kernel: (usize, u64),
 }
 
 /// The serving loop (see module docs).
@@ -65,12 +96,24 @@ impl Coordinator {
         } else {
             None
         };
+        let kernel = KernelSpec::new(cfg.kernel_width, cfg.sigma);
+        kernel.validate().context("invalid configured kernel")?;
+        // the PJRT path always executes with the artifacts' reference
+        // taps (`pjrt_can_serve` guarantees the request's effective
+        // kernel matches them, even when the configured default differs)
+        let kernel_taps = match &pjrt {
+            Some((manifest, _)) => KernelSpec::new(manifest.kernel_width, manifest.gaussian_sigma)
+                .taps()
+                .context("manifest kernel spec")?,
+            None => kernel.taps()?,
+        };
         let inner = Arc::new(Inner {
             policy,
             openmp: OpenMpModel::new(cfg.threads),
             opencl: OpenClModel::new(cfg.threads, 16),
             gprm: GprmModel::new(cfg.threads, cfg.cutoff),
-            kernel: crate::image::gaussian_kernel(cfg.kernel_width, cfg.sigma),
+            kernel,
+            kernel_taps,
             pjrt,
             stats: Mutex::new(CoordinatorStats::default()),
             seq: AtomicU64::new(0),
@@ -148,16 +191,18 @@ impl Drop for Coordinator {
 }
 
 fn executor_loop(inner: Arc<Inner>, rx: Arc<Mutex<Receiver<Job>>>) {
-    // per-executor reusable buffers (§Perf iteration 1: no per-request
-    // image allocations on the native path)
-    let mut ws = crate::conv::Workspace::new();
+    // per-executor state: scratch planes recycle across requests (zero
+    // scratch allocations after warm-up) and plans are built once per
+    // distinct request configuration
+    let mut arena = ScratchArena::new();
+    let mut plans: HashMap<PlanKey, ConvPlan> = HashMap::new();
     loop {
         let job = match rx.lock().unwrap().recv() {
             Ok(j) => j,
             Err(_) => return, // queue closed
         };
         let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let result = serve_one(&inner, &mut ws, job.req, queue_ms);
+        let result = serve_one(&inner, &mut arena, &mut plans, job.req, queue_ms);
         let mut st = inner.stats.lock().unwrap();
         match &result {
             Ok(resp) => {
@@ -177,11 +222,17 @@ fn executor_loop(inner: Arc<Inner>, rx: Arc<Mutex<Receiver<Job>>>) {
 
 fn serve_one(
     inner: &Inner,
-    ws: &mut crate::conv::Workspace,
+    arena: &mut ScratchArena,
+    plans: &mut HashMap<PlanKey, ConvPlan>,
     req: ConvRequest,
     queue_ms: f64,
 ) -> Result<ConvResponse> {
     let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+    // request intake validation: a bad kernel spec is a structured error
+    // before any routing or execution happens
+    let kernel = req.kernel.unwrap_or(inner.kernel);
+    kernel.validate().context("invalid request kernel")?;
+
     let (mut backend, mut layout) = match (req.backend, req.layout) {
         (Some(b), Some(l)) => (b, l),
         (Some(b), None) => (b, inner.policy.route(req.image.rows, seq).1),
@@ -189,8 +240,9 @@ fn serve_one(
         (None, None) => inner.policy.route(req.image.rows, seq),
     };
 
-    // PJRT can only serve shapes it has artifacts for; fall back to the
-    // adaptive native choice otherwise.
+    // PJRT can only serve shapes it has artifacts for (and only the
+    // configured default kernel the artifacts were lowered with); fall
+    // back to the adaptive native choice otherwise.
     if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
         inner.stats.lock().unwrap().pjrt_fallbacks += 1;
         let (b, l) = RoutePolicy::paper_default().route(req.image.rows, seq);
@@ -207,29 +259,35 @@ fn serve_one(
                 Backend::NativeOpenCl => &inner.opencl,
                 _ => &inner.gprm,
             };
-            let out = crate::models::convolve_parallel_into(
-                ws,
-                model,
-                &req.image,
-                &inner.kernel,
-                req.algorithm,
-                req.variant,
+            let key = PlanKey {
+                algorithm: req.algorithm,
+                variant: req.variant,
                 layout,
-            )?;
-            match layout {
-                Layout::PerPlane => PlanarImage::from_vec(
-                    req.image.planes,
-                    req.image.rows,
-                    req.image.cols,
-                    out.to_vec(),
-                )?,
-                Layout::Agglomerated => PlanarImage::from_agglomerated(
-                    req.image.planes,
-                    req.image.rows,
-                    req.image.cols,
-                    out,
-                )?,
+                planes: req.image.planes,
+                rows: req.image.rows,
+                cols: req.image.cols,
+                kernel: kernel.cache_key(),
+            };
+            if !plans.contains_key(&key) {
+                if plans.len() >= PLAN_CACHE_MAX {
+                    plans.clear();
+                }
+                let plan = ConvPlan::builder()
+                    .algorithm(req.algorithm)
+                    .variant(req.variant)
+                    .layout(layout)
+                    .kernel(kernel)
+                    .shape(req.image.planes, req.image.rows, req.image.cols)
+                    .build()
+                    .context("invalid request plan")?;
+                plans.insert(key, plan);
             }
+            let plan = plans.get(&key).expect("plan just cached");
+            let image = plan.execute_on(model, &req.image, arena)?;
+            if arena.pooled() > ARENA_POOL_MAX {
+                arena.clear();
+            }
+            image
         }
     };
     let service_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -253,16 +311,27 @@ fn pjrt_artifact_name(req: &ConvRequest, layout: Layout) -> Option<String> {
 }
 
 fn pjrt_can_serve(inner: &Inner, req: &ConvRequest, layout: Layout) -> bool {
-    match (&inner.pjrt, pjrt_artifact_name(req, layout)) {
-        (Some((manifest, _)), Some(name)) => manifest.get(&name).is_ok(),
-        _ => false,
+    let (manifest, _) = match &inner.pjrt {
+        Some(p) => p,
+        None => return false,
+    };
+    // the AOT artifacts bake in the manifest's reference kernel; the
+    // request's effective kernel (its own spec, or the coordinator's
+    // configured default) must match it exactly or take the native path
+    let spec = req.kernel.unwrap_or(inner.kernel);
+    if spec.width != manifest.kernel_width || spec.sigma != manifest.gaussian_sigma {
+        return false;
+    }
+    match pjrt_artifact_name(req, layout) {
+        Some(name) => manifest.get(&name).is_ok(),
+        None => false,
     }
 }
 
 fn run_pjrt(inner: &Inner, req: &ConvRequest, layout: Layout) -> Result<PlanarImage> {
     let (_, handle) = inner.pjrt.as_ref().context("PJRT backend not loaded")?;
     let name = pjrt_artifact_name(req, layout).context("no artifact for this request shape")?;
-    let out = handle.run1(&name, vec![req.image.data.clone(), inner.kernel.clone()])?;
+    let out = handle.run1(&name, vec![req.image.data.clone(), inner.kernel_taps.clone()])?;
     PlanarImage::from_vec(req.image.planes, req.image.rows, req.image.cols, out)
 }
 
@@ -341,6 +410,65 @@ mod tests {
             assert!(rx.recv().unwrap().is_ok());
         }
         assert_eq!(c.stats().served, 20);
+    }
+
+    #[test]
+    fn per_request_kernel_served_natively() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 28, 28, Pattern::Noise, 8);
+        for spec in [KernelSpec::new(3, 1.0), KernelSpec::new(7, 2.0)] {
+            let k = crate::image::gaussian_kernel(spec.width, spec.sigma);
+            let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+            let resp = c.serve(ConvRequest::new(1, img.clone()).with_kernel(spec)).unwrap();
+            assert_eq!(resp.image, want, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn invalid_request_kernel_is_structured_error() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 9);
+        let err = c
+            .serve(ConvRequest::new(1, img.clone()).with_kernel(KernelSpec::new(4, 1.0)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("odd"), "got: {err:#}");
+        // the coordinator keeps serving and counts the error
+        assert!(c.serve(ConvRequest::new(2, img)).is_ok());
+        let st = c.stats();
+        assert_eq!((st.errors, st.served), (1, 1));
+    }
+
+    #[test]
+    fn shape_churn_beyond_cache_caps_still_serves() {
+        // more distinct shapes than PLAN_CACHE_MAX / ARENA_POOL_MAX:
+        // the eviction path must kick in without affecting results
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        for size in 8..(8 + PLAN_CACHE_MAX + 6) {
+            let img = synth_image(1, size, size, Pattern::Noise, size as u64);
+            let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+            let resp = c.serve(ConvRequest::new(size as u64, img)).unwrap();
+            assert_eq!(resp.image, want, "size {size}");
+        }
+        assert_eq!(c.stats().errors, 0);
+    }
+
+    #[test]
+    fn invalid_configured_kernel_rejected_at_construction() {
+        let bad = RunConfig { kernel_width: 4, ..cfg() };
+        assert!(Coordinator::new(&bad, RoutePolicy::RoundRobin, 1, false).is_err());
+    }
+
+    #[test]
+    fn custom_kernel_never_routes_to_pjrt() {
+        // explicit Pjrt backend + non-default kernel: must fall back to a
+        // native backend (artifacts carry only the default taps)
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::Pjrt), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 10);
+        let resp = c
+            .serve(ConvRequest::new(1, img).with_kernel(KernelSpec::new(7, 1.0)))
+            .unwrap();
+        assert_ne!(resp.backend, Backend::Pjrt);
     }
 
     #[test]

@@ -10,9 +10,8 @@ use crate::config::RunConfig;
 use crate::conv::{Algorithm, Variant};
 use crate::image::{gaussian_kernel, synth_image, PlanarImage};
 use crate::metrics::{time_reps, Table};
-use crate::models::{
-    convolve_parallel_into, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
-};
+use crate::models::{ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel};
+use crate::plan::{ConvPlan, ScratchArena};
 
 /// Shared context: models are built once (pools are persistent).
 pub struct Measured {
@@ -38,7 +37,20 @@ impl Measured {
         synth_image(self.cfg.planes, size, size, self.cfg.pattern, self.cfg.seed)
     }
 
-    /// median ms of one parallel convolution (workspace-reusing, like the
+    /// Build the plan a measurement runs (built once, outside the timed
+    /// loop — exactly how a serving executor amortises it).
+    fn plan(&self, img: &PlanarImage, alg: Algorithm, variant: Variant, layout: Layout) -> ConvPlan {
+        ConvPlan::builder()
+            .algorithm(alg)
+            .variant(variant)
+            .layout(layout)
+            .kernel_taps(self.kernel.clone())
+            .shape(img.planes, img.rows, img.cols)
+            .build()
+            .expect("measured exhibit plan (validated by run_measured)")
+    }
+
+    /// median ms of one parallel convolution (arena-reusing, like the
     /// paper's 1000-rep loop over the same arrays — §Perf iteration 1)
     fn par_ms(
         &self,
@@ -48,25 +60,22 @@ impl Measured {
         variant: Variant,
         layout: Layout,
     ) -> f64 {
-        let mut ws = crate::conv::Workspace::new();
+        let plan = self.plan(img, alg, variant, layout);
+        let mut arena = ScratchArena::new();
         time_reps(
-            || {
-                convolve_parallel_into(&mut ws, model, img, &self.kernel, alg, variant, layout)
-                    .unwrap();
-            },
+            || plan.execute_discard(Some(model), img, &mut arena).unwrap(),
             self.cfg.warmup,
             self.cfg.reps,
         )
         .median()
     }
 
-    /// median ms of one sequential convolution (workspace-reusing)
+    /// median ms of one sequential convolution (arena-reusing)
     fn seq_ms(&self, img: &PlanarImage, alg: Algorithm, variant: Variant) -> f64 {
-        let mut ws = crate::conv::Workspace::new();
+        let plan = self.plan(img, alg, variant, Layout::PerPlane);
+        let mut arena = ScratchArena::new();
         time_reps(
-            || {
-                crate::conv::convolve_image_into(&mut ws, img, &self.kernel, alg, variant).unwrap();
-            },
+            || plan.execute_discard(None, img, &mut arena).unwrap(),
             self.cfg.warmup,
             self.cfg.reps,
         )
@@ -333,5 +342,27 @@ mod tests {
         let m = Measured::new(&tiny_cfg());
         let t = m.threads_sweep(&[1, 2, 4]);
         assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn run_measured_rejects_invalid_kernel_config() {
+        let cfg = RunConfig { kernel_width: 4, ..tiny_cfg() };
+        assert!(crate::harness::run_measured("table1", &cfg).is_err());
+        let cfg = RunConfig { sigma: 0.0, ..tiny_cfg() };
+        assert!(crate::harness::run_measured("fig1", &cfg).is_err());
+        // degenerate shapes are structured errors, not plan-builder panics
+        let cfg = RunConfig { sizes: vec![64, 0], ..tiny_cfg() };
+        assert!(crate::harness::run_measured("table1", &cfg).is_err());
+        let cfg = RunConfig { planes: 0, ..tiny_cfg() };
+        assert!(crate::harness::run_measured("fig2", &cfg).is_err());
+    }
+
+    #[test]
+    fn measured_tables_render_at_width3() {
+        // non-default kernel widths flow through the whole harness
+        let cfg = RunConfig { kernel_width: 3, ..tiny_cfg() };
+        let tables = crate::harness::run_measured("fig2", &cfg).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert!(tables[0].n_rows() >= 2);
     }
 }

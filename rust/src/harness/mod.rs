@@ -50,6 +50,10 @@ pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
 
 /// Generate the measured rendition of an exhibit on this host.
 pub fn run_measured(exhibit: &str, cfg: &RunConfig) -> Result<Vec<Table>> {
+    // structured config validation at the harness entry point — the
+    // exhibit generators (and `Measured::plan`) assume a valid spec and
+    // non-empty shapes
+    cfg.validate()?;
     let m = measured::Measured::new(cfg);
     Ok(match exhibit {
         "fig1" => vec![m.fig1()],

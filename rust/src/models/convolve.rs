@@ -3,8 +3,13 @@
 //!
 //! This is the paper's benchmark inner loop: the outer row loop of each
 //! pass is handed to an [`ExecutionModel`], the inner loops are the
-//! [`crate::conv::band`] primitives. The `Layout` axis reproduces the
-//! task-agglomeration study (paper section 6, Fig. 2 vs Fig. 3):
+//! [`crate::conv::band`] primitives. Since the plan refactor the
+//! dispatch itself — which band primitive, which pass order, which
+//! scratch discipline — lives in [`crate::plan::ConvPlan`]; this module
+//! keeps the [`Layout`] axis and thin whole-image wrappers.
+//!
+//! The `Layout` axis reproduces the task-agglomeration study (paper
+//! section 6, Fig. 2 vs Fig. 3):
 //!
 //! * [`Layout::PerPlane`] — "R×C": each colour plane is a separate
 //!   parallel sweep (3 sequential dispatches per pass), the paper's
@@ -16,10 +21,10 @@
 
 use crate::util::error::Result;
 
-use crate::conv::{band, Algorithm, Variant};
-use crate::image::{gaussian_kernel2d, PlanarImage};
+use crate::conv::{Algorithm, Variant};
+use crate::image::PlanarImage;
+use crate::plan::{ConvPlan, ScratchArena};
 
-use super::pool::RowBands;
 use super::ExecutionModel;
 
 /// Parallelisation layout (paper Figs. 2/3).
@@ -48,28 +53,13 @@ impl Layout {
     }
 }
 
-/// One parallel pass: `model.dispatch` over the rows, each worker writing
-/// its disjoint band of `dst`.
-fn parallel_pass(
-    model: &dyn ExecutionModel,
-    rows: usize,
-    cols: usize,
-    src: &[f32],
-    dst: &mut [f32],
-    pass: &(dyn Fn(&[f32], &mut [f32], usize, usize) + Sync),
-) {
-    let bands = RowBands::new(dst, rows, cols);
-    model.dispatch(rows, &|r0, r1| {
-        // SAFETY: execution models dispatch disjoint covers of [0, rows)
-        // (property-tested), so bands never overlap.
-        let band = unsafe { bands.band(r0, r1) };
-        pass(src, band, r0, r1);
-    });
-}
-
 /// Convolve one plane in parallel. `a` is the source/result buffer, `b`
 /// the scratch; semantics identical to [`crate::conv::convolve_plane`].
-#[allow(clippy::too_many_arguments)]
+///
+/// One-shot wrapper over [`ConvPlan::run_plane_on`] — build a plan once
+/// instead when convolving repeatedly. Any odd kernel width is served
+/// (width 5 unrolled, others generic); invalid widths are structured
+/// errors, never the old zero-filled-kernel fallback.
 pub fn convolve_plane_parallel(
     model: &dyn ExecutionModel,
     a: &mut [f32],
@@ -80,138 +70,22 @@ pub fn convolve_plane_parallel(
     algorithm: Algorithm,
     variant: Variant,
 ) -> Result<()> {
-    if k.len() != 5 && variant != Variant::Naive {
-        bail!("unrolled engines are specialised to width 5, got {}", k.len());
-    }
-    let k2d = gaussian_kernel2d(k);
-    let k5: &[f32; 5] = if k.len() == 5 { k.try_into().unwrap() } else { &[0.0; 5] };
-    let k25: &[f32; 25] = if k.len() == 5 { k2d.as_slice().try_into().unwrap() } else { &[0.0; 25] };
-
-    match algorithm {
-        Algorithm::TwoPass => {
-            // horizontal a→b, barrier, vertical b→a (the paper's two
-            // `#pragma omp parallel for` regions / GPRM's `seq` phases).
-            match variant {
-                Variant::Naive => bail!("the paper's naive rung is single-pass only"),
-                Variant::Scalar => {
-                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
-                        band::horiz_band_scalar(s, d, rows, cols, k5, r0, r1)
-                    });
-                    parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
-                        band::vert_band_scalar(s, d, rows, cols, k5, r0, r1)
-                    });
-                }
-                Variant::Simd => {
-                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
-                        band::horiz_band_simd(s, d, rows, cols, k5, r0, r1)
-                    });
-                    parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
-                        band::vert_band_simd(s, d, rows, cols, k5, r0, r1)
-                    });
-                }
-            }
-        }
-        Algorithm::SinglePassCopyBack | Algorithm::SinglePassNoCopy => {
-            let width = k.len();
-            match variant {
-                Variant::Naive => {
-                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
-                        band::singlepass_naive_band(s, d, rows, cols, &k2d, width, r0, r1)
-                    });
-                }
-                Variant::Scalar => {
-                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
-                        band::singlepass_band_scalar(s, d, rows, cols, k25, r0, r1)
-                    });
-                }
-                Variant::Simd => {
-                    parallel_pass(model, rows, cols, a, b, &|s, d, r0, r1| {
-                        band::singlepass_band_simd(s, d, rows, cols, k25, r0, r1)
-                    });
-                }
-            }
-            if algorithm == Algorithm::SinglePassCopyBack {
-                // the copy-back is parallelised + vectorised too (paper
-                // Par-2: "both convolution computation and the copy-back").
-                match variant {
-                    Variant::Simd => parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
-                        band::copy_back_band_simd(s, d, cols, r0, r1)
-                    }),
-                    _ => parallel_pass(model, rows, cols, b, a, &|s, d, r0, r1| {
-                        band::copy_back_band_scalar(s, d, cols, r0, r1)
-                    }),
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Parallel convolution into caller-owned buffers (perf pass,
-/// EXPERIMENTS.md §Perf iteration 1: avoids the two per-call image
-/// allocations + first-touch faults). Returns the workspace slice
-/// holding the result — plane-major `(P,R,C)` for `PerPlane`, wide
-/// `(R, P·C)` for `Agglomerated`.
-pub fn convolve_parallel_into<'ws>(
-    ws: &'ws mut crate::conv::Workspace,
-    model: &dyn ExecutionModel,
-    img: &PlanarImage,
-    k: &[f32],
-    algorithm: Algorithm,
-    variant: Variant,
-    layout: Layout,
-) -> Result<&'ws [f32]> {
-    match layout {
-        Layout::PerPlane => {
-            ws.load(img);
-            let (rows, cols) = (img.rows, img.cols);
-            let plane_len = rows * cols;
-            for p in 0..img.planes {
-                let a = &mut ws.a[p * plane_len..(p + 1) * plane_len];
-                let b = &mut ws.b[p * plane_len..(p + 1) * plane_len];
-                convolve_plane_parallel(model, a, b, rows, cols, k, algorithm, variant)?;
-            }
-            Ok(match algorithm {
-                Algorithm::SinglePassNoCopy => &ws.b,
-                _ => &ws.a,
-            })
-        }
-        Layout::Agglomerated => {
-            let (rows, cols) = (img.rows, img.planes * img.cols);
-            // agglomerate into the wide buffers without reallocating
-            ws.wide_a.clear();
-            let wc = cols;
-            for i in 0..rows {
-                for p in 0..img.planes {
-                    let plane = img.plane(p);
-                    ws.wide_a.extend_from_slice(&plane[i * img.cols..(i + 1) * img.cols]);
-                }
-            }
-            debug_assert_eq!(ws.wide_a.len(), rows * wc);
-            ws.wide_b.clear();
-            ws.wide_b.extend_from_slice(&ws.wide_a);
-            convolve_plane_parallel(
-                model,
-                &mut ws.wide_a,
-                &mut ws.wide_b,
-                rows,
-                cols,
-                k,
-                algorithm,
-                variant,
-            )?;
-            Ok(match algorithm {
-                Algorithm::SinglePassNoCopy => &ws.wide_b,
-                _ => &ws.wide_a,
-            })
-        }
-    }
+    let plan = ConvPlan::builder()
+        .algorithm(algorithm)
+        .variant(variant)
+        .kernel_taps(k.to_vec())
+        .shape(1, rows, cols)
+        .build()?;
+    plan.run_plane_on(model, a, b)
 }
 
 /// Convolve a whole image in parallel under a layout. Returns the
 /// convolved image; pixels are identical to the sequential
 /// [`crate::conv::convolve_image`] for `PerPlane`, and identical away
 /// from plane seams for `Agglomerated` (DESIGN.md §4).
+///
+/// One-shot wrapper over [`ConvPlan::execute_on`]; serving paths hold a
+/// plan + [`ScratchArena`] instead.
 pub fn convolve_parallel(
     model: &dyn ExecutionModel,
     img: &PlanarImage,
@@ -220,34 +94,15 @@ pub fn convolve_parallel(
     variant: Variant,
     layout: Layout,
 ) -> Result<PlanarImage> {
-    match layout {
-        Layout::PerPlane => {
-            let mut a_img = img.clone();
-            let mut b_img = img.clone(); // B starts as a copy of A (DESIGN.md §4)
-            let (rows, cols) = (img.rows, img.cols);
-            for p in 0..img.planes {
-                let a = a_img.plane_mut(p);
-                // disjoint planes: borrow b plane via split or clone view
-                let b = b_img.plane_mut(p);
-                convolve_plane_parallel(model, a, b, rows, cols, k, algorithm, variant)?;
-            }
-            Ok(match algorithm {
-                Algorithm::SinglePassNoCopy => b_img,
-                _ => a_img,
-            })
-        }
-        Layout::Agglomerated => {
-            let (rows, cols) = (img.rows, img.planes * img.cols);
-            let mut a = img.agglomerate();
-            let mut b = a.clone();
-            convolve_plane_parallel(model, &mut a, &mut b, rows, cols, k, algorithm, variant)?;
-            let result = match algorithm {
-                Algorithm::SinglePassNoCopy => b,
-                _ => a,
-            };
-            PlanarImage::from_agglomerated(img.planes, img.rows, img.cols, &result)
-        }
-    }
+    let plan = ConvPlan::builder()
+        .algorithm(algorithm)
+        .variant(variant)
+        .layout(layout)
+        .kernel_taps(k.to_vec())
+        .shape(img.planes, img.rows, img.cols)
+        .build()?;
+    let mut arena = ScratchArena::new();
+    plan.execute_on(model, img, &mut arena)
 }
 
 #[cfg(test)]
@@ -334,42 +189,73 @@ mod tests {
     }
 
     #[test]
-    fn into_variant_matches_alloc_variant() {
+    fn plan_execute_into_matches_one_shot_wrapper() {
         let img = synth_image(3, 40, 36, Pattern::Noise, 12);
         let k = gaussian_kernel(5, 1.0);
         let m = OpenMpModel::new(3);
-        let mut ws = crate::conv::Workspace::new();
+        let mut arena = ScratchArena::new();
+        let mut out = Vec::new();
         for alg in [Algorithm::TwoPass, Algorithm::SinglePassNoCopy, Algorithm::SinglePassCopyBack] {
             let want = convolve_parallel(&m, &img, &k, alg, Variant::Simd, Layout::PerPlane).unwrap();
-            let got = convolve_parallel_into(&mut ws, &m, &img, &k, alg, Variant::Simd, Layout::PerPlane)
-                .unwrap()
-                .to_vec();
-            assert_eq!(got, want.data, "{alg:?}");
+            let plan = ConvPlan::builder()
+                .algorithm(alg)
+                .kernel_taps(k.clone())
+                .shape(3, 40, 36)
+                .build()
+                .unwrap();
+            plan.execute_into(Some(&m), &img, &mut arena, &mut out).unwrap();
+            assert_eq!(out, want.data, "{alg:?}");
         }
         // agglomerated: wide result equals PlanarImage::agglomerate of the
-        // alloc-variant's output
+        // one-shot wrapper's output
         let want = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
             .unwrap()
             .agglomerate();
-        let got = convolve_parallel_into(&mut ws, &m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::Agglomerated)
-            .unwrap()
-            .to_vec();
-        assert_eq!(got, want);
+        let plan = ConvPlan::builder()
+            .layout(Layout::Agglomerated)
+            .kernel_taps(k.clone())
+            .shape(3, 40, 36)
+            .build()
+            .unwrap();
+        plan.execute_into(Some(&m), &img, &mut arena, &mut out).unwrap();
+        assert_eq!(out, want);
     }
 
     #[test]
-    fn workspace_reuse_across_sizes() {
+    fn arena_reuse_across_sizes() {
         let k = gaussian_kernel(5, 1.0);
         let m = OpenMpModel::new(2);
-        let mut ws = crate::conv::Workspace::new();
-        for size in [16usize, 48, 24] {
+        let mut arena = ScratchArena::new();
+        for size in [16usize, 48, 24, 48, 16] {
             let img = synth_image(3, size, size, Pattern::Noise, size as u64);
             let want = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane).unwrap();
-            let got = convolve_parallel_into(&mut ws, &m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
-                .unwrap()
-                .to_vec();
-            assert_eq!(got, want.data, "size {size}");
+            let plan = ConvPlan::builder()
+                .kernel_taps(k.clone())
+                .shape(3, size, size)
+                .build()
+                .unwrap();
+            let got = plan.execute_on(&m, &img, &mut arena).unwrap();
+            assert_eq!(got, want, "size {size}");
         }
+        // three distinct sizes → at most 6 scratch allocations ever
+        assert_eq!(arena.allocations(), 6);
+    }
+
+    #[test]
+    fn zero_kernel_fallback_is_gone() {
+        // pre-plan, width-3 + Simd silently convolved with a zero-filled
+        // width-5 kernel through the parallel driver; now it computes the
+        // real width-3 result.
+        let img = synth_image(1, 24, 24, Pattern::Noise, 13);
+        let k3 = gaussian_kernel(3, 1.0);
+        let m = OpenMpModel::new(2);
+        let got = convolve_parallel(&m, &img, &k3, Algorithm::SinglePassNoCopy, Variant::Simd, Layout::PerPlane)
+            .unwrap();
+        let want = convolve_image(img.clone(), &k3, Algorithm::SinglePassNoCopy, Variant::Simd).unwrap();
+        assert_eq!(got, want);
+        // and a genuinely invalid (even) width is a structured error
+        assert!(convolve_parallel(&m, &img, &[0.5, 0.5], Algorithm::TwoPass, Variant::Simd, Layout::PerPlane)
+            .is_err());
     }
 
     #[test]

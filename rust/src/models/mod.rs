@@ -27,7 +27,7 @@ pub mod opencl;
 pub mod openmp;
 pub mod pool;
 
-pub use convolve::{convolve_parallel, convolve_parallel_into, Layout};
+pub use convolve::{convolve_parallel, convolve_plane_parallel, Layout};
 pub use gprm::{GprmModel, StealPolicy};
 pub use opencl::OpenClModel;
 pub use openmp::{OpenMpModel, Schedule};

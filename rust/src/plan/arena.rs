@@ -1,0 +1,124 @@
+//! `ScratchArena`: a reusable pool of scratch planes, keyed by buffer
+//! length.
+//!
+//! Every [`super::ConvPlan`] execution needs two working buffers (the
+//! paper's A and B arrays) sized to the request's plane layout. Before
+//! the plan layer, each consumer owned its own ad-hoc reuse scheme
+//! (the since-deleted `conv::Workspace`) or allocated per request; the
+//! arena centralises
+//! that: executors hold one arena each, `take`/`put` recycle buffers,
+//! and after the first request at a given size the steady state performs
+//! **zero scratch allocations** (asserted by the reuse property test).
+//!
+//! The arena is deliberately not thread-safe — each executor / bench
+//! loop owns its own (`&mut` discipline), which keeps `take`/`put` at
+//! hash-map-lookup cost with no locking on the serving path.
+
+use std::collections::HashMap;
+
+/// Pool of `Vec<f32>` scratch buffers keyed by exact length.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// length → stack of free buffers of exactly that length
+    pools: HashMap<usize, Vec<Vec<f32>>>,
+    /// total fresh allocations performed (monotone; growth after warm-up
+    /// means a leak or a shape churn — the reuse tests watch this)
+    allocations: usize,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a buffer of exactly `len` elements: recycled if one is
+    /// pooled, freshly allocated (zero-filled) otherwise. Contents of a
+    /// recycled buffer are unspecified — plan passes overwrite or ignore
+    /// every cell they read.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if let Some(buf) = self.pools.get_mut(&len).and_then(|pool| pool.pop()) {
+            return buf;
+        }
+        self.allocations += 1;
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.pools.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// Fresh allocations performed so far (never decreases).
+    pub fn allocations(&self) -> usize {
+        self.allocations
+    }
+
+    /// Buffers currently pooled (across all sizes).
+    pub fn pooled(&self) -> usize {
+        self.pools.values().map(Vec::len).sum()
+    }
+
+    /// Drop every pooled buffer (e.g. after a shape-mix change).
+    pub fn clear(&mut self) {
+        self.pools.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles() {
+        let mut a = ScratchArena::new();
+        let b1 = a.take(64);
+        assert_eq!(b1.len(), 64);
+        assert_eq!(a.allocations(), 1);
+        a.put(b1);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.take(64);
+        assert_eq!(a.allocations(), 1, "recycled, not re-allocated");
+        assert_eq!(a.pooled(), 0);
+        a.put(b2);
+    }
+
+    #[test]
+    fn distinct_sizes_pool_separately() {
+        let mut a = ScratchArena::new();
+        let x = a.take(16);
+        let y = a.take(32);
+        a.put(x);
+        a.put(y);
+        assert_eq!(a.allocations(), 2);
+        let _ = a.take(16);
+        let _ = a.take(32);
+        assert_eq!(a.allocations(), 2);
+        // a third size allocates fresh
+        let _ = a.take(64);
+        assert_eq!(a.allocations(), 3);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut a = ScratchArena::new();
+        for _ in 0..100 {
+            let x = a.take(128);
+            let y = a.take(128);
+            a.put(x);
+            a.put(y);
+        }
+        assert_eq!(a.allocations(), 2);
+        assert_eq!(a.pooled(), 2);
+    }
+
+    #[test]
+    fn clear_drops_buffers() {
+        let mut a = ScratchArena::new();
+        let x = a.take(8);
+        a.put(x);
+        a.clear();
+        assert_eq!(a.pooled(), 0);
+        let _ = a.take(8);
+        assert_eq!(a.allocations(), 2);
+    }
+}

@@ -1,0 +1,771 @@
+//! The plan layer: validated, reusable execution plans for convolution
+//! requests.
+//!
+//! The paper's study is a cross-product — algorithm × optimisation rung
+//! × execution model × layout — and before this layer every consumer
+//! (sequential drivers, parallel driver, coordinator executors, harness,
+//! benches) wired that product up with its own `match` block and its own
+//! scratch-buffer scheme, each hard-specialised to width-5 Gaussian
+//! kernels. A [`ConvPlan`] is built **once** per configuration through a
+//! validating [`PlanBuilder`], resolves to a concrete pipeline of passes
+//! ([`PassKind`]), and executes against a reusable [`ScratchArena`]:
+//!
+//! ```text
+//! ConvPlan::builder()                 // defaults: two-pass SIMD, RxC
+//!     .algorithm(Algorithm::TwoPass)
+//!     .variant(Variant::Simd)
+//!     .layout(Layout::PerPlane)
+//!     .kernel(KernelSpec::new(5, 1.0))   // or .kernel_taps(vec![...])
+//!     .shape(planes, rows, cols)
+//!     .build()?                       // rejects silently-wrong combos
+//!     .execute(&img, &mut arena)?     // or .execute_on(&model, ...)
+//! ```
+//!
+//! **Validation.** `build()` rejects the combinations the old ad-hoc
+//! dispatch either mis-served or punted on: even kernel widths, taps of
+//! the wrong length, naive+two-pass (the paper's naive rung is
+//! single-pass only), non-positive sigma and empty shapes. The
+//! zero-filled `[0.0; 5]` dummy-kernel fallback that previously made
+//! non-5 widths *silently compute garbage* under the unrolled variants
+//! is gone: every width is either served correctly or refused with a
+//! structured error at build time.
+//!
+//! **Fast-path selection.** Width-5 kernels (the paper's) automatically
+//! use the hand-unrolled band primitives; any other odd width runs the
+//! generic-width engines of the same scalar/simd shape. The choice is
+//! observable via [`ConvPlan::is_fast_path`] and can be overridden with
+//! [`PlanBuilder::force_generic`] (bench/test comparisons).
+//!
+//! **Scratch discipline.** Execution leases the A/B working planes from
+//! the caller's [`ScratchArena`] and returns them after the run, so a
+//! serving executor performs zero scratch allocations after its first
+//! request at a given shape (property-tested). Only the response image
+//! itself is freshly allocated.
+
+use crate::util::error::Result;
+
+use crate::conv::{Algorithm, Variant};
+use crate::image::{gaussian_kernel, gaussian_kernel2d, PlanarImage};
+use crate::models::{ExecutionModel, Layout};
+
+pub mod arena;
+mod pipeline;
+
+pub use arena::ScratchArena;
+pub use pipeline::PassKind;
+
+use pipeline::{Exec, ResultHome};
+
+/// A kernel described by construction parameters (width + Gaussian
+/// sigma) rather than explicit taps — what a serving request carries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelSpec {
+    /// odd tap count (the paper uses 5)
+    pub width: usize,
+    /// Gaussian sigma (the paper uses 1.0)
+    pub sigma: f64,
+}
+
+impl KernelSpec {
+    pub fn new(width: usize, sigma: f64) -> Self {
+        Self { width, sigma }
+    }
+
+    /// Structured validation — every public entry point (CLI, coordinator
+    /// request intake, harness) funnels kernel parameters through here.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.width % 2 == 1, "kernel width must be odd, got {}", self.width);
+        ensure!(self.sigma > 0.0, "kernel sigma must be positive, got {}", self.sigma);
+        Ok(())
+    }
+
+    /// Materialise the normalised 1-D taps.
+    pub fn taps(&self) -> Result<Vec<f32>> {
+        self.validate()?;
+        Ok(gaussian_kernel(self.width, self.sigma))
+    }
+
+    /// Stable hash-map key for plan caches (`f64` is not `Eq`/`Hash`;
+    /// the bit pattern is).
+    pub fn cache_key(&self) -> (usize, u64) {
+        (self.width, self.sigma.to_bits())
+    }
+}
+
+impl Default for KernelSpec {
+    /// The paper's kernel: width 5, sigma 1.
+    fn default() -> Self {
+        Self { width: 5, sigma: 1.0 }
+    }
+}
+
+enum KernelSource {
+    Spec(KernelSpec),
+    Taps(Vec<f32>),
+}
+
+/// Validating builder for [`ConvPlan`] — see the module docs for the
+/// rejection rules.
+pub struct PlanBuilder {
+    algorithm: Algorithm,
+    variant: Variant,
+    layout: Layout,
+    kernel: KernelSource,
+    shape: Option<(usize, usize, usize)>,
+    force_generic: bool,
+}
+
+impl PlanBuilder {
+    fn new() -> Self {
+        Self {
+            algorithm: Algorithm::TwoPass,
+            variant: Variant::Simd,
+            layout: Layout::PerPlane,
+            kernel: KernelSource::Spec(KernelSpec::default()),
+            shape: None,
+            force_generic: false,
+        }
+    }
+
+    pub fn algorithm(mut self, a: Algorithm) -> Self {
+        self.algorithm = a;
+        self
+    }
+
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn layout(mut self, l: Layout) -> Self {
+        self.layout = l;
+        self
+    }
+
+    /// Kernel by construction parameters (Gaussian width + sigma).
+    pub fn kernel(mut self, spec: KernelSpec) -> Self {
+        self.kernel = KernelSource::Spec(spec);
+        self
+    }
+
+    /// Kernel by explicit separable taps (length = width, must be odd).
+    pub fn kernel_taps(mut self, taps: Vec<f32>) -> Self {
+        self.kernel = KernelSource::Taps(taps);
+        self
+    }
+
+    /// Image shape the plan serves: `planes` × `rows` × `cols`.
+    pub fn shape(mut self, planes: usize, rows: usize, cols: usize) -> Self {
+        self.shape = Some((planes, rows, cols));
+        self
+    }
+
+    /// Disable the width-5 unrolled fast path even when eligible (for
+    /// measuring fast-path gain and cross-checking the generic engines).
+    pub fn force_generic(mut self, yes: bool) -> Self {
+        self.force_generic = yes;
+        self
+    }
+
+    /// Validate the full combination and resolve the pass pipeline.
+    pub fn build(self) -> Result<ConvPlan> {
+        let (planes, rows, cols) = self
+            .shape
+            .ok_or_else(|| err!("plan needs a shape: call .shape(planes, rows, cols)"))?;
+        ensure!(
+            planes >= 1 && rows >= 1 && cols >= 1,
+            "plan shape must be non-empty, got {planes}x{rows}x{cols}"
+        );
+        let taps = match self.kernel {
+            KernelSource::Spec(spec) => spec.taps()?,
+            KernelSource::Taps(taps) => {
+                ensure!(!taps.is_empty(), "kernel taps must be non-empty");
+                ensure!(taps.len() % 2 == 1, "kernel width must be odd, got {}", taps.len());
+                taps
+            }
+        };
+        let width = taps.len();
+        if self.algorithm == Algorithm::TwoPass && self.variant == Variant::Naive {
+            bail!("the paper's naive rung is single-pass only (Opt-0)");
+        }
+        let fast_path = width == 5 && self.variant != Variant::Naive && !self.force_generic;
+        let passes = match self.algorithm {
+            Algorithm::TwoPass => vec![PassKind::Horiz, PassKind::Vert],
+            Algorithm::SinglePassNoCopy => vec![PassKind::SinglePass],
+            Algorithm::SinglePassCopyBack => vec![PassKind::SinglePass, PassKind::CopyBack],
+        };
+        // only the direct single-pass engines read the 2-D kernel; the
+        // separable passes use the 1-D taps alone
+        let k2d = if passes.contains(&PassKind::SinglePass) {
+            gaussian_kernel2d(&taps)
+        } else {
+            Vec::new()
+        };
+        Ok(ConvPlan {
+            algorithm: self.algorithm,
+            variant: self.variant,
+            layout: self.layout,
+            planes,
+            rows,
+            cols,
+            taps,
+            k2d,
+            width,
+            passes,
+            fast_path,
+        })
+    }
+}
+
+/// A validated, resolved convolution plan: build once, execute many
+/// times against a [`ScratchArena`]. See the module docs.
+pub struct ConvPlan {
+    algorithm: Algorithm,
+    variant: Variant,
+    layout: Layout,
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    taps: Vec<f32>,
+    k2d: Vec<f32>,
+    width: usize,
+    passes: Vec<PassKind>,
+    fast_path: bool,
+}
+
+impl ConvPlan {
+    pub fn builder() -> PlanBuilder {
+        PlanBuilder::new()
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// `(planes, rows, cols)` the plan was built for.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.planes, self.rows, self.cols)
+    }
+
+    /// Kernel width (odd).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Kernel halo (`width / 2`).
+    pub fn halo(&self) -> usize {
+        self.width / 2
+    }
+
+    /// The separable taps the plan convolves with.
+    pub fn taps(&self) -> &[f32] {
+        &self.taps
+    }
+
+    /// The resolved pass pipeline.
+    pub fn passes(&self) -> &[PassKind] {
+        &self.passes
+    }
+
+    /// True when the width-5 unrolled band primitives were selected.
+    pub fn is_fast_path(&self) -> bool {
+        self.fast_path
+    }
+
+    // -- whole-image execution -------------------------------------------
+
+    /// Convolve sequentially (no execution model). Scratch comes from
+    /// `arena`; only the returned image is freshly allocated.
+    pub fn execute(&self, img: &PlanarImage, arena: &mut ScratchArena) -> Result<PlanarImage> {
+        self.execute_image(Exec::Seq, img, arena)
+    }
+
+    /// Convolve with each pass banded across `model`'s workers.
+    pub fn execute_on(
+        &self,
+        model: &dyn ExecutionModel,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<PlanarImage> {
+        self.execute_image(Exec::Par(model), img, arena)
+    }
+
+    /// Convolve a batch of images under one plan (all must match the
+    /// plan's shape). `model: None` runs sequentially.
+    pub fn execute_batch(
+        &self,
+        model: Option<&dyn ExecutionModel>,
+        imgs: &[PlanarImage],
+        arena: &mut ScratchArena,
+    ) -> Result<Vec<PlanarImage>> {
+        let exec = match model {
+            Some(m) => Exec::Par(m),
+            None => Exec::Seq,
+        };
+        imgs.iter().map(|img| self.execute_image(exec, img, arena)).collect()
+    }
+
+    /// Convolve into a caller-owned output buffer — plane-major
+    /// `(P,R,C)` for [`Layout::PerPlane`], wide `(R, P·C)` for
+    /// [`Layout::Agglomerated`]. After the first call neither `out` nor
+    /// the arena re-allocates.
+    pub fn execute_into(
+        &self,
+        model: Option<&dyn ExecutionModel>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let exec = match model {
+            Some(m) => Exec::Par(m),
+            None => Exec::Seq,
+        };
+        self.execute_core(exec, img, arena, Sink::Buffer(out))
+    }
+
+    /// Convolve and discard the result: the timing-loop shape (no output
+    /// copy at all — scratch in, scratch out).
+    pub fn execute_discard(
+        &self,
+        model: Option<&dyn ExecutionModel>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        let exec = match model {
+            Some(m) => Exec::Par(m),
+            None => Exec::Seq,
+        };
+        self.execute_core(exec, img, arena, Sink::None)
+    }
+
+    fn execute_image(
+        &self,
+        exec: Exec<'_>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<PlanarImage> {
+        // the image is built straight from the scratch buffer (one copy),
+        // not via an intermediate layout buffer
+        let mut slot = None;
+        self.execute_core(exec, img, arena, Sink::Image(&mut slot))?;
+        Ok(slot.expect("image sink filled on success"))
+    }
+
+    fn execute_core(
+        &self,
+        exec: Exec<'_>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+        sink: Sink<'_>,
+    ) -> Result<()> {
+        ensure!(
+            (img.planes, img.rows, img.cols) == (self.planes, self.rows, self.cols),
+            "image shape {}x{}x{} does not match plan shape {}x{}x{}",
+            img.planes,
+            img.rows,
+            img.cols,
+            self.planes,
+            self.rows,
+            self.cols
+        );
+        let n = self.planes * self.rows * self.cols;
+        let mut a = arena.take(n);
+        let mut b = arena.take(n);
+        match self.layout {
+            Layout::PerPlane => {
+                a.copy_from_slice(&img.data);
+                // B nominally "starts as a copy of A", but only its
+                // border ring is ever read before being written (the
+                // vertical pass reads B's top/bottom halo rows; the
+                // single-pass result's pass-through pixels are B's
+                // border) — so only the ring is copied.
+                load_border_ring(&mut b, img, self.halo());
+                let plane_len = self.rows * self.cols;
+                for p in 0..self.planes {
+                    let ap = &mut a[p * plane_len..(p + 1) * plane_len];
+                    let bp = &mut b[p * plane_len..(p + 1) * plane_len];
+                    self.run_passes(exec, ap, bp, self.rows, self.cols);
+                }
+            }
+            Layout::Agglomerated => {
+                // fold planes into the 3R×C wide layout without allocating
+                let (rows, cols, wc) = (self.rows, self.cols, self.planes * self.cols);
+                for i in 0..rows {
+                    for p in 0..self.planes {
+                        let plane = img.plane(p);
+                        a[i * wc + p * cols..i * wc + (p + 1) * cols]
+                            .copy_from_slice(&plane[i * cols..(i + 1) * cols]);
+                    }
+                }
+                b.copy_from_slice(&a);
+                self.run_passes(exec, &mut a, &mut b, rows, wc);
+            }
+        }
+        let result: &[f32] = match self.result_home() {
+            ResultHome::A => &a,
+            ResultHome::B => &b,
+        };
+        let sunk = match sink {
+            Sink::None => Ok(()),
+            Sink::Buffer(out) => {
+                out.clear();
+                out.extend_from_slice(result);
+                Ok(())
+            }
+            Sink::Image(slot) => {
+                let image = match self.layout {
+                    Layout::PerPlane => PlanarImage::from_vec(
+                        self.planes,
+                        self.rows,
+                        self.cols,
+                        result.to_vec(),
+                    ),
+                    Layout::Agglomerated => PlanarImage::from_agglomerated(
+                        self.planes,
+                        self.rows,
+                        self.cols,
+                        result,
+                    ),
+                };
+                image.map(|im| *slot = Some(im))
+            }
+        };
+        arena.put(a);
+        arena.put(b);
+        sunk
+    }
+
+    fn result_home(&self) -> ResultHome {
+        match self.algorithm {
+            Algorithm::SinglePassNoCopy => ResultHome::B,
+            _ => ResultHome::A,
+        }
+    }
+
+    // -- plane-level execution (expert API for caller-owned buffers) -----
+
+    /// Run the pipeline over one caller-owned plane pair, sequentially.
+    ///
+    /// `a` is the source (and, except for no-copy, the result); `b` is
+    /// scratch that must start as a copy of `a` at least on its border
+    /// ring. Requires a single-plane plan (`shape(1, rows, cols)`); the
+    /// dispatch width is the plan's `cols` (pass the widened column
+    /// count for agglomerated planes).
+    pub fn run_plane(&self, a: &mut [f32], b: &mut [f32]) -> Result<()> {
+        self.run_plane_exec(Exec::Seq, a, b)
+    }
+
+    /// [`Self::run_plane`], banded across an execution model.
+    pub fn run_plane_on(
+        &self,
+        model: &dyn ExecutionModel,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) -> Result<()> {
+        self.run_plane_exec(Exec::Par(model), a, b)
+    }
+
+    fn run_plane_exec(&self, exec: Exec<'_>, a: &mut [f32], b: &mut [f32]) -> Result<()> {
+        ensure!(
+            self.planes == 1,
+            "run_plane requires a single-plane plan (this one has {} planes); use execute()",
+            self.planes
+        );
+        let n = self.rows * self.cols;
+        ensure!(
+            a.len() == n && b.len() == n,
+            "plane buffers must be rows*cols = {n}, got a={} b={}",
+            a.len(),
+            b.len()
+        );
+        self.run_passes(exec, a, b, self.rows, self.cols);
+        Ok(())
+    }
+}
+
+/// Where an execution's result goes: nowhere (timing loops), a raw
+/// layout buffer, or a freshly built [`PlanarImage`] (one copy straight
+/// from the scratch plane in every case).
+enum Sink<'o> {
+    None,
+    Buffer(&'o mut Vec<f32>),
+    Image(&'o mut Option<PlanarImage>),
+}
+
+/// Copy only the halo-wide border ring of each plane of `img` into `b`
+/// (everything the pipeline may read of B before writing it). Planes too
+/// small to have an interior are copied whole.
+fn load_border_ring(b: &mut [f32], img: &PlanarImage, h: usize) {
+    let (rows, cols) = (img.rows, img.cols);
+    if rows <= 2 * h || cols <= 2 * h {
+        b.copy_from_slice(&img.data);
+        return;
+    }
+    let plane_len = rows * cols;
+    for p in 0..img.planes {
+        let src = &img.data[p * plane_len..(p + 1) * plane_len];
+        let dst = &mut b[p * plane_len..(p + 1) * plane_len];
+        // top and bottom h rows
+        dst[..h * cols].copy_from_slice(&src[..h * cols]);
+        dst[(rows - h) * cols..].copy_from_slice(&src[(rows - h) * cols..]);
+        // left and right h columns of the interior rows
+        for i in h..rows - h {
+            dst[i * cols..i * cols + h].copy_from_slice(&src[i * cols..i * cols + h]);
+            dst[(i + 1) * cols - h..(i + 1) * cols]
+                .copy_from_slice(&src[(i + 1) * cols - h..(i + 1) * cols]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{synth_image, Pattern};
+    use crate::models::OpenMpModel;
+
+    fn img(planes: usize, rows: usize, cols: usize) -> PlanarImage {
+        synth_image(planes, rows, cols, Pattern::Noise, 42)
+    }
+
+    fn base_plan(alg: Algorithm, variant: Variant) -> ConvPlan {
+        ConvPlan::builder()
+            .algorithm(alg)
+            .variant(variant)
+            .shape(3, 24, 20)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let p = ConvPlan::builder().shape(3, 24, 20).build().unwrap();
+        assert_eq!(p.algorithm(), Algorithm::TwoPass);
+        assert_eq!(p.variant(), Variant::Simd);
+        assert_eq!(p.layout(), Layout::PerPlane);
+        assert_eq!(p.shape(), (3, 24, 20));
+        assert_eq!(p.width(), 5);
+        assert_eq!(p.halo(), 2);
+        assert!(p.is_fast_path());
+        assert_eq!(p.passes(), &[PassKind::Horiz, PassKind::Vert]);
+    }
+
+    #[test]
+    fn pipeline_resolution_per_algorithm() {
+        let p = base_plan(Algorithm::SinglePassNoCopy, Variant::Simd);
+        assert_eq!(p.passes(), &[PassKind::SinglePass]);
+        let p = base_plan(Algorithm::SinglePassCopyBack, Variant::Scalar);
+        assert_eq!(p.passes(), &[PassKind::SinglePass, PassKind::CopyBack]);
+    }
+
+    #[test]
+    fn build_rejects_silently_wrong_combos() {
+        // naive + two-pass
+        let e = ConvPlan::builder()
+            .algorithm(Algorithm::TwoPass)
+            .variant(Variant::Naive)
+            .shape(1, 16, 16)
+            .build();
+        assert!(e.is_err());
+        // even kernel width (spec and taps)
+        assert!(ConvPlan::builder()
+            .kernel(KernelSpec::new(4, 1.0))
+            .shape(1, 16, 16)
+            .build()
+            .is_err());
+        assert!(ConvPlan::builder()
+            .kernel_taps(vec![0.25; 4])
+            .shape(1, 16, 16)
+            .build()
+            .is_err());
+        // empty taps, bad sigma, missing/empty shape
+        assert!(ConvPlan::builder().kernel_taps(vec![]).shape(1, 16, 16).build().is_err());
+        assert!(ConvPlan::builder()
+            .kernel(KernelSpec::new(5, 0.0))
+            .shape(1, 16, 16)
+            .build()
+            .is_err());
+        assert!(ConvPlan::builder().build().is_err());
+        assert!(ConvPlan::builder().shape(0, 16, 16).build().is_err());
+    }
+
+    #[test]
+    fn fast_path_selection_rules() {
+        // width 5 + unrolled variant → fast
+        assert!(base_plan(Algorithm::TwoPass, Variant::Simd).is_fast_path());
+        // naive is the generic engine by definition
+        assert!(!base_plan(Algorithm::SinglePassCopyBack, Variant::Naive).is_fast_path());
+        // non-5 widths → generic
+        let p = ConvPlan::builder()
+            .kernel(KernelSpec::new(7, 1.0))
+            .shape(1, 24, 24)
+            .build()
+            .unwrap();
+        assert!(!p.is_fast_path());
+        // forced generic at width 5
+        let p = ConvPlan::builder().force_generic(true).shape(1, 24, 24).build().unwrap();
+        assert!(!p.is_fast_path());
+    }
+
+    #[test]
+    fn execute_matches_legacy_sequential_driver() {
+        let image = img(3, 24, 20);
+        let k = gaussian_kernel(5, 1.0);
+        let mut arena = ScratchArena::new();
+        for alg in [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy]
+        {
+            for variant in [Variant::Scalar, Variant::Simd] {
+                let want =
+                    crate::conv::convolve_image(image.clone(), &k, alg, variant).unwrap();
+                let plan = ConvPlan::builder()
+                    .algorithm(alg)
+                    .variant(variant)
+                    .shape(3, 24, 20)
+                    .build()
+                    .unwrap();
+                let got = plan.execute(&image, &mut arena).unwrap();
+                assert_eq!(got, want, "{alg:?} {variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_on_matches_sequential() {
+        let image = img(3, 30, 26);
+        let model = OpenMpModel::new(4);
+        let mut arena = ScratchArena::new();
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            let plan = ConvPlan::builder().layout(layout).shape(3, 30, 26).build().unwrap();
+            let seq = plan.execute(&image, &mut arena).unwrap();
+            let par = plan.execute_on(&model, &image, &mut arena).unwrap();
+            assert_eq!(seq, par, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn execute_rejects_shape_mismatch() {
+        let plan = ConvPlan::builder().shape(3, 24, 20).build().unwrap();
+        let mut arena = ScratchArena::new();
+        assert!(plan.execute(&img(3, 20, 24), &mut arena).is_err());
+        assert!(plan.execute(&img(1, 24, 20), &mut arena).is_err());
+    }
+
+    #[test]
+    fn execute_into_layout_contracts() {
+        let image = img(3, 24, 20);
+        let mut arena = ScratchArena::new();
+        let mut out = Vec::new();
+        let plan = ConvPlan::builder().shape(3, 24, 20).build().unwrap();
+        plan.execute_into(None, &image, &mut arena, &mut out).unwrap();
+        let want = plan.execute(&image, &mut arena).unwrap();
+        assert_eq!(out, want.data, "PerPlane: plane-major buffer");
+
+        let plan =
+            ConvPlan::builder().layout(Layout::Agglomerated).shape(3, 24, 20).build().unwrap();
+        plan.execute_into(None, &image, &mut arena, &mut out).unwrap();
+        let want = plan.execute(&image, &mut arena).unwrap();
+        assert_eq!(out, want.agglomerate(), "Agglomerated: wide buffer");
+    }
+
+    #[test]
+    fn execute_batch_matches_singles() {
+        let imgs: Vec<PlanarImage> =
+            (0..3).map(|s| synth_image(2, 20, 18, Pattern::Noise, s)).collect();
+        let plan = ConvPlan::builder().shape(2, 20, 18).build().unwrap();
+        let model = OpenMpModel::new(2);
+        let mut arena = ScratchArena::new();
+        let batch = plan.execute_batch(Some(&model), &imgs, &mut arena).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (one, image) in batch.iter().zip(&imgs) {
+            let single = plan.execute(image, &mut arena).unwrap();
+            assert_eq!(*one, single);
+        }
+    }
+
+    #[test]
+    fn arena_stops_allocating_after_warmup() {
+        let image = img(3, 32, 28);
+        let plan = ConvPlan::builder().shape(3, 32, 28).build().unwrap();
+        let mut arena = ScratchArena::new();
+        plan.execute(&image, &mut arena).unwrap();
+        let warm = arena.allocations();
+        for _ in 0..10 {
+            plan.execute(&image, &mut arena).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm, "steady state must not allocate scratch");
+    }
+
+    #[test]
+    fn generic_width_plans_execute() {
+        let image = img(1, 26, 26);
+        let mut arena = ScratchArena::new();
+        for width in [3usize, 7, 9] {
+            let plan = ConvPlan::builder()
+                .kernel(KernelSpec::new(width, 1.0))
+                .shape(1, 26, 26)
+                .build()
+                .unwrap();
+            let out = plan.execute(&image, &mut arena).unwrap();
+            // border ring passes through untouched
+            for j in 0..26 {
+                assert_eq!(out.get(0, 0, j), image.get(0, 0, j), "width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_pass_through_without_panic() {
+        // planes narrower than the kernel have no interior: every
+        // algorithm/variant must return the input unchanged (never
+        // panic), including the width-5 fast path on 1–3 column images
+        let mut arena = ScratchArena::new();
+        for (rows, cols) in [(1usize, 1usize), (3, 1), (1, 3), (3, 3), (16, 2), (2, 16), (4, 4)] {
+            let image = synth_image(2, rows, cols, Pattern::Noise, 7);
+            for variant in [Variant::Naive, Variant::Scalar, Variant::Simd] {
+                for alg in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+                    let plan = ConvPlan::builder()
+                        .algorithm(alg)
+                        .variant(variant)
+                        .shape(2, rows, cols)
+                        .build()
+                        .unwrap();
+                    let out = plan.execute(&image, &mut arena).unwrap();
+                    assert_eq!(out, image, "{rows}x{cols} {alg:?} {variant:?}");
+                }
+            }
+            let plan = ConvPlan::builder().shape(2, rows, cols).build().unwrap();
+            let out = plan.execute(&image, &mut arena).unwrap();
+            assert_eq!(out, image, "{rows}x{cols} two-pass");
+        }
+    }
+
+    #[test]
+    fn run_plane_requires_single_plane_plan() {
+        let plan = ConvPlan::builder().shape(3, 16, 16).build().unwrap();
+        let mut a = vec![0f32; 3 * 16 * 16];
+        let mut b = a.clone();
+        assert!(plan.run_plane(&mut a, &mut b).is_err());
+        let plan = ConvPlan::builder().shape(1, 16, 16).build().unwrap();
+        let mut a = vec![0f32; 16 * 16];
+        let mut b = a.clone();
+        assert!(plan.run_plane(&mut a, &mut b).is_ok());
+        assert!(plan.run_plane(&mut a[..100].to_vec(), &mut b).is_err());
+    }
+
+    #[test]
+    fn kernel_spec_validation_and_key() {
+        assert!(KernelSpec::new(5, 1.0).validate().is_ok());
+        assert!(KernelSpec::new(2, 1.0).validate().is_err());
+        assert!(KernelSpec::new(5, -1.0).validate().is_err());
+        assert_eq!(KernelSpec::default(), KernelSpec::new(5, 1.0));
+        assert_eq!(KernelSpec::new(5, 1.0).cache_key(), KernelSpec::default().cache_key());
+        assert_ne!(KernelSpec::new(5, 2.0).cache_key(), KernelSpec::default().cache_key());
+    }
+}

@@ -1,0 +1,187 @@
+//! Pipeline resolution and execution: the single dispatch point that
+//! replaced the five per-layer `match (algorithm, variant, layout)`
+//! blocks.
+//!
+//! A built [`ConvPlan`] owns a resolved sequence of [`PassKind`]s; this
+//! module maps each pass onto the right [`crate::conv::band`] primitive
+//! — width-5 unrolled fast path or generic odd-width engine — and runs
+//! it either sequentially or banded across an [`ExecutionModel`] (the
+//! row-band parallel sweep formerly private to `models::convolve`).
+
+use crate::conv::band;
+use crate::conv::Variant;
+use crate::models::{pool::RowBands, ExecutionModel};
+
+use super::ConvPlan;
+
+/// One resolved pass of a convolution pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassKind {
+    /// separable horizontal sweep (two-pass, first phase)
+    Horiz,
+    /// separable vertical sweep (two-pass, second phase)
+    Vert,
+    /// direct 2-D convolution (single-pass algorithms)
+    SinglePass,
+    /// copy B back over A (the paper's copy-back epilogue)
+    CopyBack,
+}
+
+/// Where the pipeline's result lands (the paper's A/B buffer discipline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum ResultHome {
+    A,
+    B,
+}
+
+/// How passes run: inline on the caller's thread, or banded over an
+/// execution model (one disjoint row band per worker, implicit barrier
+/// between passes — the paper's `#pragma omp parallel for` regions).
+#[derive(Clone, Copy)]
+pub(super) enum Exec<'m> {
+    Seq,
+    Par(&'m dyn ExecutionModel),
+}
+
+/// Run one pass over `[0, rows)`: whole-plane for [`Exec::Seq`], a
+/// disjoint row-band cover for [`Exec::Par`].
+fn run_banded(
+    exec: Exec<'_>,
+    rows: usize,
+    cols: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    pass: &(dyn Fn(&[f32], &mut [f32], usize, usize) + Sync),
+) {
+    match exec {
+        Exec::Seq => pass(src, dst, 0, rows),
+        Exec::Par(model) => {
+            let bands = RowBands::new(dst, rows, cols);
+            model.dispatch(rows, &|r0, r1| {
+                // SAFETY: execution models dispatch disjoint covers of
+                // [0, rows) (property-tested), so bands never overlap.
+                let band = unsafe { bands.band(r0, r1) };
+                pass(src, band, r0, r1);
+            });
+        }
+    }
+}
+
+impl ConvPlan {
+    /// Run the whole resolved pipeline over one plane: even passes read
+    /// A and write B, odd passes read B and write A (the fixed A↔B
+    /// ping-pong every algorithm in the paper follows).
+    pub(super) fn run_passes(&self, exec: Exec<'_>, a: &mut [f32], b: &mut [f32], rows: usize, cols: usize) {
+        for (i, &kind) in self.passes.iter().enumerate() {
+            if i % 2 == 0 {
+                self.run_pass(exec, kind, a, b, rows, cols);
+            } else {
+                self.run_pass(exec, kind, b, a, rows, cols);
+            }
+        }
+    }
+
+    /// Dispatch one pass to the band primitive the plan selected:
+    /// width-5 unrolled when `fast_path`, generic odd-width otherwise.
+    fn run_pass(
+        &self,
+        exec: Exec<'_>,
+        kind: PassKind,
+        src: &[f32],
+        dst: &mut [f32],
+        rows: usize,
+        cols: usize,
+    ) {
+        let w = self.width;
+        match kind {
+            PassKind::SinglePass => match (self.variant, self.fast_path) {
+                (Variant::Naive, _) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::singlepass_naive_band(s, d, rows, cols, &self.k2d, w, r0, r1)
+                    });
+                }
+                (Variant::Scalar, true) => {
+                    let k25: &[f32; 25] = self.k2d.as_slice().try_into().expect("5x5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::singlepass_band_scalar(s, d, rows, cols, k25, r0, r1)
+                    });
+                }
+                (Variant::Scalar, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::singlepass_band_scalar_w(s, d, rows, cols, &self.k2d, w, r0, r1)
+                    });
+                }
+                (Variant::Simd, true) => {
+                    let k25: &[f32; 25] = self.k2d.as_slice().try_into().expect("5x5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::singlepass_band_simd(s, d, rows, cols, k25, r0, r1)
+                    });
+                }
+                (Variant::Simd, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::singlepass_band_simd_w(s, d, rows, cols, &self.k2d, w, r0, r1)
+                    });
+                }
+            },
+            PassKind::Horiz => match (self.variant, self.fast_path) {
+                (Variant::Naive, _) => unreachable!("naive+twopass rejected at build"),
+                (Variant::Scalar, true) => {
+                    let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::horiz_band_scalar(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+                (Variant::Scalar, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::horiz_band_scalar_w(s, d, rows, cols, &self.taps, r0, r1)
+                    });
+                }
+                (Variant::Simd, true) => {
+                    let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::horiz_band_simd(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+                (Variant::Simd, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::horiz_band_simd_w(s, d, rows, cols, &self.taps, r0, r1)
+                    });
+                }
+            },
+            PassKind::Vert => match (self.variant, self.fast_path) {
+                (Variant::Naive, _) => unreachable!("naive+twopass rejected at build"),
+                (Variant::Scalar, true) => {
+                    let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::vert_band_scalar(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+                (Variant::Scalar, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::vert_band_scalar_w(s, d, rows, cols, &self.taps, r0, r1)
+                    });
+                }
+                (Variant::Simd, true) => {
+                    let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::vert_band_simd(s, d, rows, cols, k5, r0, r1)
+                    });
+                }
+                (Variant::Simd, false) => {
+                    run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                        band::vert_band_simd_w(s, d, rows, cols, &self.taps, r0, r1)
+                    });
+                }
+            },
+            PassKind::CopyBack => match self.variant {
+                // parallelised + vectorised copy-back (paper Par-2)
+                Variant::Simd => run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                    band::copy_back_band_simd(s, d, cols, r0, r1)
+                }),
+                _ => run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                    band::copy_back_band_scalar(s, d, cols, r0, r1)
+                }),
+            },
+        }
+    }
+}

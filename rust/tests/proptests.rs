@@ -14,6 +14,7 @@ use phi_conv::models::{
     convolve_parallel, static_chunk, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
 };
 use phi_conv::phisim::{simulate, Calibration, PhiMachine, SimRun, SimWorkload};
+use phi_conv::plan::{ConvPlan, KernelSpec, ScratchArena};
 use phi_conv::util::json::Json;
 use phi_conv::util::prng::Prng;
 
@@ -314,6 +315,141 @@ fn prop_every_execution_model_matches_naive_reference() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// plan layer: cross-width equivalence + scratch-arena discipline
+// ---------------------------------------------------------------------------
+
+/// Generic-width engines at widths 3/7/9 agree with the naive generic
+/// reference within 1e-4 — single-pass rungs pixel-for-pixel, two-pass
+/// on the deep interior — across random shapes, both sequentially and
+/// under every execution model.
+#[test]
+fn prop_generic_widths_match_naive_reference() {
+    let mut rng = Prng::new(0x71D5);
+    for width in [3usize, 7, 9] {
+        let k = gaussian_kernel(width, 0.5 + width as f64 / 4.0);
+        let h = width / 2;
+        for case in 0..8 {
+            let rows = rng.range(4 * width, 4 * width + 30);
+            let cols = rng.range(4 * width, 4 * width + 30);
+            let planes = rng.range(1, 4);
+            let img = synth_image(planes, rows, cols, Pattern::Noise, 3000 + case as u64);
+            let want =
+                convolve_image(img.clone(), &k, Algorithm::SinglePassCopyBack, Variant::Naive)
+                    .unwrap();
+            let mut arena = ScratchArena::new();
+            for variant in [Variant::Scalar, Variant::Simd] {
+                for alg in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+                    let plan = ConvPlan::builder()
+                        .algorithm(alg)
+                        .variant(variant)
+                        .kernel_taps(k.clone())
+                        .shape(planes, rows, cols)
+                        .build()
+                        .unwrap();
+                    assert!(!plan.is_fast_path(), "width {width} must take the generic path");
+                    let out = plan.execute(&img, &mut arena).unwrap();
+                    let d = out.max_abs_diff(&want);
+                    assert!(d < 1e-4, "w{width} case {case}: {alg:?} {variant:?}: {d}");
+                }
+                let plan = ConvPlan::builder()
+                    .algorithm(Algorithm::TwoPass)
+                    .variant(variant)
+                    .kernel_taps(k.clone())
+                    .shape(planes, rows, cols)
+                    .build()
+                    .unwrap();
+                let out = plan.execute(&img, &mut arena).unwrap();
+                let d = out.max_abs_diff_deep(&want, h);
+                assert!(d < 1e-4, "w{width} case {case}: two-pass {variant:?} deep: {d}");
+                // parallel execution agrees bit-for-bit with sequential
+                let model = OpenMpModel::new(rng.range(1, 6));
+                let par = plan.execute_on(&model, &img, &mut arena).unwrap();
+                assert_eq!(par, out, "w{width} case {case}: parallel != sequential");
+            }
+        }
+    }
+}
+
+/// The width-5 unrolled fast path and the forced-generic path compute
+/// the same pixels within 1e-4 for every algorithm × variant.
+#[test]
+fn prop_width5_fast_path_matches_generic_path() {
+    let mut rng = Prng::new(0xFA57);
+    for case in 0..10 {
+        let rows = rng.range(12, 50);
+        let cols = rng.range(12, 50);
+        let planes = rng.range(1, 4);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, 4000 + case as u64);
+        let mut arena = ScratchArena::new();
+        for variant in [Variant::Scalar, Variant::Simd] {
+            for alg in
+                [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy]
+            {
+                let build = |generic: bool| {
+                    ConvPlan::builder()
+                        .algorithm(alg)
+                        .variant(variant)
+                        .kernel(KernelSpec::new(5, 1.0))
+                        .shape(planes, rows, cols)
+                        .force_generic(generic)
+                        .build()
+                        .unwrap()
+                };
+                let fast = build(false);
+                let generic = build(true);
+                assert!(fast.is_fast_path() && !generic.is_fast_path());
+                let a = fast.execute(&img, &mut arena).unwrap();
+                let b = generic.execute(&img, &mut arena).unwrap();
+                let d = a.max_abs_diff(&b);
+                assert!(d < 1e-4, "case {case}: {alg:?} {variant:?} fast vs generic: {d}");
+            }
+        }
+    }
+}
+
+/// Arena discipline: repeated `execute`/`execute_on`/`execute_batch`
+/// calls never allocate scratch after warm-up, across every algorithm
+/// and layout at a fixed shape.
+#[test]
+fn prop_scratch_arena_never_grows_after_warmup() {
+    let img = synth_image(3, 40, 36, Pattern::Noise, 77);
+    let model = OpenMpModel::new(3);
+    let mut arena = ScratchArena::new();
+    let mut plans = Vec::new();
+    for layout in [Layout::PerPlane, Layout::Agglomerated] {
+        for alg in [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy]
+        {
+            plans.push(
+                ConvPlan::builder()
+                    .algorithm(alg)
+                    .layout(layout)
+                    .shape(3, 40, 36)
+                    .build()
+                    .unwrap(),
+            );
+        }
+    }
+    // warm-up: one sequential + one parallel pass over every plan
+    for plan in &plans {
+        plan.execute(&img, &mut arena).unwrap();
+        plan.execute_on(&model, &img, &mut arena).unwrap();
+    }
+    let warm = arena.allocations();
+    // both layouts share one buffer size here (planes*rows*cols), so the
+    // whole mix needs exactly two scratch planes
+    assert_eq!(warm, 2, "expected 2 scratch planes, got {warm}");
+    let batch: Vec<PlanarImage> = vec![img.clone(), img.clone()];
+    for _ in 0..5 {
+        for plan in &plans {
+            plan.execute(&img, &mut arena).unwrap();
+            plan.execute_on(&model, &img, &mut arena).unwrap();
+            plan.execute_batch(Some(&model), &batch, &mut arena).unwrap();
+        }
+    }
+    assert_eq!(arena.allocations(), warm, "steady state allocated scratch");
 }
 
 /// Convolution energy property across random inputs: a normalised
