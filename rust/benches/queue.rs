@@ -1,0 +1,201 @@
+//! Bench: coordinator intake path — bounded admission-queue throughput
+//! and the sharded-stats hot path versus the designs they replaced.
+//!
+//! Two tables:
+//! 1. raw queue throughput: the hand-rolled `AdmissionQueue` ring
+//!    buffer against the old intake shape (unbounded `mpsc` channel
+//!    drained through one `Mutex<Receiver>`), across producer ×
+//!    consumer mixes;
+//! 2. per-request stats accounting: one global `Mutex` taken by every
+//!    executor (the old design) against per-executor shards merged
+//!    only at read time.
+//!
+//! `cargo bench --bench queue` — env overrides:
+//!   PHI_QUEUE_BENCH_ITEMS=200000   PHI_QUEUE_BENCH_OPS=400000
+//!
+//! Numbers are ops/ms (higher is better); these are contention
+//! microbenches, so expect run-to-run noise — compare magnitudes, not
+//! single percents.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use phi_conv::coordinator::{AdmissionQueue, CoordinatorStats, Pop};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Producer/consumer sweep over the bounded ring buffer.
+fn ring_throughput(producers: usize, consumers: usize, items: usize) -> f64 {
+    let q = Arc::new(AdmissionQueue::new(1024));
+    let per = items / producers;
+    let t0 = Instant::now();
+    let cons: Vec<_> = (0..consumers)
+        .map(|_| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut n = 0usize;
+                loop {
+                    match q.pop() {
+                        Pop::Job(_) | Pop::Expired(_) => n += 1,
+                        Pop::Closed => return n,
+                    }
+                }
+            })
+        })
+        .collect();
+    let prod: Vec<_> = (0..producers)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push((p * per + i) as u64, None).ok();
+                }
+            })
+        })
+        .collect();
+    for h in prod {
+        h.join().unwrap();
+    }
+    q.close();
+    let total: usize = cons.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, per * producers, "every item delivered");
+    total as f64 / (t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// The pre-PR intake shape: unbounded channel, all consumers
+/// serializing on one `Mutex<Receiver>` around a blocking `recv()`.
+fn channel_throughput(producers: usize, consumers: usize, items: usize) -> f64 {
+    let (tx, rx) = mpsc::channel::<u64>();
+    let rx = Arc::new(Mutex::new(rx));
+    let per = items / producers;
+    let t0 = Instant::now();
+    let cons: Vec<_> = (0..consumers)
+        .map(|_| {
+            let rx = rx.clone();
+            std::thread::spawn(move || {
+                let mut n = 0usize;
+                loop {
+                    match rx.lock().unwrap().recv() {
+                        Ok(_) => n += 1,
+                        Err(_) => return n,
+                    }
+                }
+            })
+        })
+        .collect();
+    let prod: Vec<_> = (0..producers)
+        .map(|p| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    tx.send((p * per + i) as u64).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in prod {
+        h.join().unwrap();
+    }
+    drop(tx); // close: consumers drain and exit
+    let total: usize = cons.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, per * producers, "every item delivered");
+    total as f64 / (t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Every executor takes one global stats lock per request (old design).
+fn stats_single_lock(threads: usize, ops: usize) -> f64 {
+    let stats = Arc::new(Mutex::new(CoordinatorStats::default()));
+    let per = ops / threads;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let mut st = stats.lock().unwrap();
+                    st.served += 1;
+                    st.queue_ms.push(i as f64);
+                    st.service_ms.entry("openmp").or_default().push(i as f64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let st = stats.lock().unwrap();
+    assert_eq!(st.served as usize, per * threads);
+    (per * threads) as f64 / (t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Each executor owns a shard; the shards merge only at read time
+/// (the design the coordinator now uses).
+fn stats_sharded(threads: usize, ops: usize) -> f64 {
+    let shards: Arc<Vec<Mutex<CoordinatorStats>>> =
+        Arc::new((0..threads).map(|_| Mutex::new(CoordinatorStats::default())).collect());
+    let per = ops / threads;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let shards = shards.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let mut st = shards[t].lock().unwrap();
+                    st.served += 1;
+                    st.queue_ms.push(i as f64);
+                    st.service_ms.entry("openmp").or_default().push(i as f64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // the read-side merge (what `Coordinator::stats` does)
+    let mut total = CoordinatorStats::default();
+    for shard in shards.iter() {
+        total.merge(&shard.lock().unwrap());
+    }
+    assert_eq!(total.served as usize, per * threads);
+    (per * threads) as f64 / (t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let items = env_usize("PHI_QUEUE_BENCH_ITEMS", 200_000);
+    let ops = env_usize("PHI_QUEUE_BENCH_OPS", 400_000);
+
+    let mut t = phi_conv::metrics::Table::new(
+        format!("Intake throughput, {items} items (ops/ms): bounded ring vs mpsc+Mutex<Receiver>"),
+        &["producers x consumers", "ring ops/ms", "channel ops/ms", "ring gain"],
+    );
+    for (p, c) in [(1, 1), (1, 4), (4, 1), (4, 4), (8, 4)] {
+        let ring = ring_throughput(p, c, items);
+        let chan = channel_throughput(p, c, items);
+        t.row(vec![
+            format!("{p} x {c}"),
+            format!("{ring:.0}"),
+            format!("{chan:.0}"),
+            format!("{:.2}x", ring / chan),
+        ]);
+    }
+    println!("{}", t.to_text());
+
+    let mut t = phi_conv::metrics::Table::new(
+        format!("Per-request stats accounting, {ops} ops (ops/ms): global lock vs shards"),
+        &["executors", "single-lock ops/ms", "sharded ops/ms", "sharded gain"],
+    );
+    for threads in [1, 2, 4, 8] {
+        let single = stats_single_lock(threads, ops);
+        let sharded = stats_sharded(threads, ops);
+        t.row(vec![
+            format!("{threads}"),
+            format!("{single:.0}"),
+            format!("{sharded:.0}"),
+            format!("{:.2}x", sharded / single),
+        ]);
+    }
+    println!("{}", t.to_text());
+}

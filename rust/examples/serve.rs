@@ -12,7 +12,7 @@
 //!
 //! Run: `cargo run --offline --release --example serve -- [--requests 48]`
 
-use phi_conv::{ensure, Context, Result};
+use phi_conv::{ensure, Context, ErrorKind, Result};
 
 use phi_conv::config::{standard_cli, RunConfig};
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
@@ -65,7 +65,7 @@ fn main() -> Result<()> {
         if custom_kernel {
             req = req.with_kernel(wide_spec);
         }
-        jobs.push((img, custom_kernel, coord.submit(req)));
+        jobs.push((img, custom_kernel, coord.submit(req)?));
     }
 
     let mut latency = SampleSet::new();
@@ -119,6 +119,54 @@ fn main() -> Result<()> {
     if stats.pjrt_fallbacks > 0 {
         println!("  ({} PJRT fallbacks)", stats.pjrt_fallbacks);
     }
+
+    // burst-shedding demo: a deliberately tiny queue in front of one
+    // busy executor. try_submit either admits or refuses with a
+    // structured QueueFull error — the coordinator never panics and
+    // never grows memory without bound under a traffic spike.
+    println!("\n== burst shedding (queue capacity 4, 1 executor) ==");
+    // deadline_ms zeroed: the demo asserts on QueueFull shedding, and a
+    // user-supplied --deadline-ms would otherwise turn refusals into
+    // DeadlineExceeded and expire admitted jobs mid-drain
+    let burst_cfg = RunConfig { queue_capacity: 4, deadline_ms: 0, ..cfg.clone() };
+    let small =
+        Coordinator::new(&burst_cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)?;
+    let burst = 64usize;
+    // requests pre-built so the burst hits the queue back-to-back
+    let burst_reqs: Vec<_> = (0..burst)
+        .map(|i| {
+            let img = synth_image(cfg.planes, 128, 128, cfg.pattern, cfg.seed + 9000 + i as u64);
+            ConvRequest::new(9000 + i as u64, img)
+        })
+        .collect();
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for req in burst_reqs {
+        match small.try_submit(req) {
+            Ok(rx) => admitted.push(rx),
+            Err(e) if e.kind() == ErrorKind::QueueFull => shed += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut completed = 0usize;
+    for rx in &admitted {
+        if rx.recv().context("burst coordinator dropped")?.is_ok() {
+            completed += 1;
+        }
+    }
+    let bst = small.stats();
+    println!(
+        "burst of {burst}: admitted {} (all {completed} completed), shed {shed} with QueueFull",
+        admitted.len()
+    );
+    println!(
+        "queue counters: depth peak {} of 4, shed {}, expired {}",
+        bst.depth_peak, bst.shed, bst.expired
+    );
+    ensure!(shed > 0, "a {burst}-burst into a capacity-4 queue must shed");
+    ensure!(completed == admitted.len(), "every admitted request must complete");
+    ensure!(bst.shed as usize == shed, "stats must account each shed request");
+
     println!("end-to-end driver OK");
     Ok(())
 }

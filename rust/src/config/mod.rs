@@ -35,6 +35,14 @@ pub struct RunConfig {
     pub seed: u64,
     /// Artifacts directory for the PJRT path.
     pub artifacts_dir: PathBuf,
+    /// Coordinator admission-queue capacity: jobs waiting beyond this
+    /// are shed with structured `QueueFull` errors instead of growing
+    /// memory without bound.
+    pub queue_capacity: usize,
+    /// Default per-request deadline in milliseconds (0 = none). A
+    /// request whose TTL lapses before execution is refused with a
+    /// structured `DeadlineExceeded` error.
+    pub deadline_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -51,6 +59,8 @@ impl Default for RunConfig {
             pattern: Pattern::Noise,
             seed: 20170710,
             artifacts_dir: crate::runtime::manifest::default_artifacts_dir(),
+            queue_capacity: 256,
+            deadline_ms: 0,
         }
     }
 }
@@ -84,6 +94,19 @@ impl RunConfig {
         if let Some(d) = doc.get("run.artifacts_dir") {
             self.artifacts_dir = PathBuf::from(d.as_str().context("artifacts_dir")?);
         }
+        self.queue_capacity = doc.usize_or("run.queue_capacity", self.queue_capacity);
+        // parsed strictly (not through the usize helper): deadline_ms
+        // is u64 and must not truncate on 32-bit targets, and a
+        // negative or fractional TTL must be an error — a silent `as`
+        // coercion to 0 would disable the deadline the operator set
+        if let Some(v) = doc.get("run.deadline_ms") {
+            let n = v.as_f64().context("run.deadline_ms must be a number")?;
+            ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "run.deadline_ms must be a non-negative integer, got {n}"
+            );
+            self.deadline_ms = n as u64;
+        }
         Ok(())
     }
 
@@ -108,6 +131,12 @@ impl RunConfig {
         set(cli, "warmup", &mut self.warmup)?;
         set(cli, "threads", &mut self.threads)?;
         set(cli, "cutoff", &mut self.cutoff)?;
+        set(cli, "queue-capacity", &mut self.queue_capacity)?;
+        if let Some(v) = cli.get("deadline-ms") {
+            if !v.is_empty() {
+                self.deadline_ms = v.parse()?;
+            }
+        }
         if let Some(s) = cli.get("sigma") {
             if !s.is_empty() {
                 self.sigma = s.parse()?;
@@ -144,6 +173,7 @@ impl RunConfig {
         ensure!(self.planes >= 1, "planes must be >= 1");
         ensure!(!self.sizes.is_empty(), "sizes must be non-empty");
         ensure!(self.sizes.iter().all(|&s| s >= 1), "every size must be >= 1, got {:?}", self.sizes);
+        ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
         Ok(())
     }
 
@@ -201,6 +231,8 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("pattern", "", "input pattern: noise|ramp-x|ramp-xy|checker|disc|constant")
         .opt("seed", "", "PRNG seed (default 20170710)")
         .opt("artifacts", "", "artifacts directory (default ./artifacts)")
+        .opt("queue-capacity", "", "coordinator admission-queue capacity (default 256)")
+        .opt("deadline-ms", "", "per-request deadline in ms, 0 = none (default 0)")
 }
 
 #[cfg(test)]
@@ -260,6 +292,51 @@ mod tests {
         assert_eq!(c.kernel_width, 7);
         assert!((c.sigma - 2.5).abs() < 1e-12);
         assert_eq!(c.kernel_spec(), crate::plan::KernelSpec::new(7, 2.5));
+    }
+
+    #[test]
+    fn queue_knobs_plumb_through_cli_and_toml() {
+        let c = RunConfig::default();
+        assert_eq!(c.queue_capacity, 256);
+        assert_eq!(c.deadline_ms, 0);
+
+        let mut c = RunConfig::default();
+        let doc = TomlDoc::parse("[run]\nqueue_capacity = 32\ndeadline_ms = 750\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.queue_capacity, 32);
+        assert_eq!(c.deadline_ms, 750);
+
+        let cli = standard_cli("t", "t")
+            .parse([
+                "--queue-capacity".to_string(),
+                "8".to_string(),
+                "--deadline-ms".to_string(),
+                "100".to_string(),
+            ])
+            .unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert_eq!(c.queue_capacity, 8);
+        assert_eq!(c.deadline_ms, 100);
+    }
+
+    #[test]
+    fn negative_or_fractional_toml_deadline_rejected() {
+        // the CLI path rejects these via u64 parse; the TOML path must
+        // not silently coerce them to 0 (= "no deadline")
+        for bad in ["deadline_ms = -250", "deadline_ms = 0.5"] {
+            let mut c = RunConfig::default();
+            let doc = TomlDoc::parse(&format!("[run]\n{bad}\n")).unwrap();
+            assert!(c.apply_toml(&doc).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn zero_queue_capacity_is_structured_error() {
+        let cli = standard_cli("t", "t")
+            .parse(["--queue-capacity".to_string(), "0".to_string()])
+            .unwrap();
+        let e = RunConfig::resolve(&cli).unwrap_err();
+        assert!(format!("{e:#}").contains("queue_capacity"), "got: {e:#}");
     }
 
     #[test]

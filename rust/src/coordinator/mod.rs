@@ -1,7 +1,10 @@
 //! L3 coordinator: request router + batcher serving convolution jobs.
 //!
 //! The serving loop a downstream user would deploy: requests (images +
-//! algorithm choice) enter a queue; executor threads drain it and run
+//! algorithm choice) enter a **bounded admission queue** (capacity and
+//! per-request deadlines from `RunConfig`; overload is shed with
+//! structured `QueueFull` / `DeadlineExceeded` / `Shutdown` errors,
+//! never a panic — see [`queue`]); executor threads drain it and run
 //! each request on a backend —
 //!
 //! * **native** engines under any of the three execution models, or
@@ -16,10 +19,12 @@
 //! very large images where GPRM shows better performance after using
 //! task agglomeration").
 
+pub mod queue;
 mod request;
 mod router;
 mod server;
 
+pub use queue::{AdmissionQueue, Pop, QueueCounters, Rejected};
 pub use request::{ConvRequest, ConvResponse};
 pub use router::{Backend, RoutePolicy};
-pub use server::{Coordinator, CoordinatorStats};
+pub use server::{Coordinator, CoordinatorStats, ReplyReceiver};

@@ -1,0 +1,578 @@
+//! Bounded admission queue: the coordinator's intake path.
+//!
+//! A hand-rolled fixed-capacity ring buffer behind one `Mutex` + two
+//! `Condvar`s (zero external deps — DESIGN.md §1). This replaces the
+//! unbounded `mpsc` channel the coordinator originally used, which had
+//! three failure modes under load:
+//!
+//! * **unbounded growth** — a burst simply accumulated jobs until OOM;
+//!   here admission is refused at `capacity` ([`ErrorKind::QueueFull`]),
+//! * **panicking intake** — `send().expect(..)` panicked the *calling*
+//!   thread once an executor died; here every refusal is a structured
+//!   [`Rejected`] value the caller turns into an error reply,
+//! * **no latency bound** — jobs could wait forever; here a per-item
+//!   deadline is checked at admission, while blocked waiting for space,
+//!   and again at dequeue ([`ErrorKind::DeadlineExceeded`]).
+//!
+//! The lock is held only for O(1) slot bookkeeping — never across the
+//! convolution itself — so executors no longer serialize on a
+//! `Mutex<Receiver>` around a blocking `recv()`.
+//!
+//! Shutdown is cooperative: [`AdmissionQueue::close`] refuses new pushes
+//! ([`ErrorKind::Shutdown`]) while consumers keep draining; queued items
+//! whose deadline already lapsed come back as [`Pop::Expired`] so the
+//! owner can reject them, and live ones as [`Pop::Job`] so in-flight
+//! work completes. [`Pop::Closed`] is the consumers' exit signal.
+
+use std::fmt;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Error, ErrorKind};
+
+/// Why an admission attempt was refused. Carries the item back to the
+/// caller (so a reply channel inside it can be failed, not leaked).
+pub struct Rejected<T> {
+    pub item: T,
+    pub kind: ErrorKind,
+}
+
+impl<T> fmt::Debug for Rejected<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Rejected({:?})", self.kind)
+    }
+}
+
+impl<T> Rejected<T> {
+    fn new(item: T, kind: ErrorKind) -> Self {
+        Self { item, kind }
+    }
+
+    /// The refusal as a structured [`Error`] (kind-preserving).
+    pub fn to_error(&self, capacity: usize) -> Error {
+        match self.kind {
+            ErrorKind::QueueFull => Error::with_kind(
+                ErrorKind::QueueFull,
+                format!("admission queue full (capacity {capacity}); request shed"),
+            ),
+            ErrorKind::DeadlineExceeded => Error::with_kind(
+                ErrorKind::DeadlineExceeded,
+                "request deadline exceeded before admission",
+            ),
+            _ => Error::with_kind(ErrorKind::Shutdown, "coordinator is shut down"),
+        }
+    }
+}
+
+/// One dequeue outcome.
+pub enum Pop<T> {
+    /// A live item, still within its deadline — execute it.
+    Job(T),
+    /// An item whose deadline lapsed while queued — reject it.
+    Expired(T),
+    /// The queue is closed and fully drained — the consumer exits.
+    Closed,
+}
+
+/// Monotonic intake counters, exported into `CoordinatorStats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueCounters {
+    /// items currently waiting (gauge, sampled at read time)
+    pub depth: usize,
+    /// high-water mark of `depth` since construction
+    pub depth_peak: usize,
+    /// admissions refused because the queue was at capacity
+    pub shed: u64,
+    /// deadlines lapsed (at admission, while waiting, or at dequeue)
+    pub expired: u64,
+}
+
+struct Slot<T> {
+    item: T,
+    deadline: Option<Instant>,
+}
+
+struct State<T> {
+    /// fixed-size ring: `ring[(head + i) % capacity]` is the i-th queued
+    /// slot; cells outside `[head, head+len)` are `None`
+    ring: Vec<Option<Slot<T>>>,
+    head: usize,
+    len: usize,
+    closed: bool,
+    depth_peak: usize,
+    shed: u64,
+    expired: u64,
+}
+
+/// The bounded, deadline-aware MPMC admission queue (see module docs).
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+/// Poison-proof lock: a consumer that panicked mid-pop must not turn
+/// every later `submit` into a second panic — the state it guards is
+/// plain bookkeeping that stays consistent (mutations are single-step).
+fn relock<'a, T>(
+    r: Result<MutexGuard<'a, T>, PoisonError<MutexGuard<'a, T>>>,
+) -> MutexGuard<'a, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue holding at most `capacity` items (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            state: Mutex::new(State {
+                ring: std::iter::repeat_with(|| None).take(capacity).collect(),
+                head: 0,
+                len: 0,
+                closed: false,
+                depth_peak: 0,
+                shed: 0,
+                expired: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued.
+    pub fn depth(&self) -> usize {
+        relock(self.state.lock()).len
+    }
+
+    pub fn is_closed(&self) -> bool {
+        relock(self.state.lock()).closed
+    }
+
+    /// Snapshot of the intake counters.
+    pub fn counters(&self) -> QueueCounters {
+        let st = relock(self.state.lock());
+        QueueCounters {
+            depth: st.len,
+            depth_peak: st.depth_peak,
+            shed: st.shed,
+            expired: st.expired,
+        }
+    }
+
+    /// Non-blocking admission: refused immediately with `QueueFull` when
+    /// at capacity (load shedding), `DeadlineExceeded` when the deadline
+    /// already lapsed, `Shutdown` after [`close`](Self::close).
+    pub fn try_push(&self, item: T, deadline: Option<Instant>) -> Result<(), Rejected<T>> {
+        let st = relock(self.state.lock());
+        self.admit(st, item, deadline, AdmitWait::None)
+    }
+
+    /// Blocking admission: waits for a free slot until `wait` elapses
+    /// (refused with `QueueFull` on timeout). The item's own deadline
+    /// still bounds the wait, whichever comes first. A `wait` so large
+    /// that `now + wait` overflows `Instant` degrades to an unbounded
+    /// wait rather than panicking.
+    pub fn push_timeout(
+        &self,
+        item: T,
+        deadline: Option<Instant>,
+        wait: Duration,
+    ) -> Result<(), Rejected<T>> {
+        let st = relock(self.state.lock());
+        let give_up = match Instant::now().checked_add(wait) {
+            Some(g) => AdmitWait::Until(g),
+            None => AdmitWait::Forever,
+        };
+        self.admit(st, item, deadline, give_up)
+    }
+
+    /// Blocking admission with no caller timeout: backpressure. Waits
+    /// until a slot frees, the item's deadline lapses, or the queue
+    /// closes.
+    pub fn push(&self, item: T, deadline: Option<Instant>) -> Result<(), Rejected<T>> {
+        let st = relock(self.state.lock());
+        self.admit(st, item, deadline, AdmitWait::Forever)
+    }
+
+    /// The single admission loop behind the three push variants.
+    fn admit<'q>(
+        &'q self,
+        mut st: MutexGuard<'q, State<T>>,
+        item: T,
+        deadline: Option<Instant>,
+        wait: AdmitWait,
+    ) -> Result<(), Rejected<T>> {
+        loop {
+            if st.closed {
+                return Err(Rejected::new(item, ErrorKind::Shutdown));
+            }
+            let now = Instant::now();
+            if deadline.is_some_and(|d| d <= now) {
+                st.expired += 1;
+                // this producer may have consumed a not_full wakeup
+                // while it slept; if capacity is free, hand the
+                // notification on — otherwise another blocked producer
+                // sleeps through an open slot (lost wakeup)
+                let slot_free = st.len < self.capacity;
+                drop(st);
+                if slot_free {
+                    self.not_full.notify_one();
+                }
+                return Err(Rejected::new(item, ErrorKind::DeadlineExceeded));
+            }
+            if st.len < self.capacity {
+                let idx = (st.head + st.len) % self.capacity;
+                st.ring[idx] = Some(Slot { item, deadline });
+                st.len += 1;
+                st.depth_peak = st.depth_peak.max(st.len);
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            // full: shed, or sleep until whichever bound fires first
+            let bound = match wait {
+                AdmitWait::None => None,
+                AdmitWait::Until(g) => Some(match deadline {
+                    Some(d) => g.min(d),
+                    None => g,
+                }),
+                AdmitWait::Forever => deadline,
+            };
+            match bound {
+                None if matches!(wait, AdmitWait::Forever) => {
+                    st = relock(self.not_full.wait(st));
+                }
+                None => {
+                    st.shed += 1;
+                    return Err(Rejected::new(item, ErrorKind::QueueFull));
+                }
+                Some(b) => {
+                    if b <= now {
+                        // timed out waiting for space; if it was the
+                        // item's own deadline the next loop iteration
+                        // classifies it as expired
+                        if deadline.is_some_and(|d| d <= b) {
+                            continue;
+                        }
+                        st.shed += 1;
+                        return Err(Rejected::new(item, ErrorKind::QueueFull));
+                    }
+                    st = match self.not_full.wait_timeout(st, b - now) {
+                        Ok((g, _)) => g,
+                        Err(p) => p.into_inner().0,
+                    };
+                }
+            }
+        }
+    }
+
+    /// Blocking dequeue. Returns [`Pop::Closed`] only once the queue is
+    /// both closed and drained — items queued before [`close`] are still
+    /// handed out (live ones to complete, expired ones to reject).
+    pub fn pop(&self) -> Pop<T> {
+        let mut st = relock(self.state.lock());
+        loop {
+            if st.len > 0 {
+                let head = st.head;
+                let slot = st.ring[head].take().expect("occupied slot in [head, head+len)");
+                st.head = (head + 1) % self.capacity;
+                st.len -= 1;
+                let expired = slot.deadline.is_some_and(|d| d <= Instant::now());
+                if expired {
+                    st.expired += 1;
+                }
+                drop(st);
+                self.not_full.notify_one();
+                return if expired { Pop::Expired(slot.item) } else { Pop::Job(slot.item) };
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            st = relock(self.not_empty.wait(st));
+        }
+    }
+
+    /// Begin shutdown: new pushes are refused with `Shutdown`; consumers
+    /// drain what is already queued and then observe [`Pop::Closed`].
+    /// Blocked producers and consumers are woken.
+    pub fn close(&self) {
+        relock(self.state.lock()).closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// How long an admission attempt may block when the queue is full.
+#[derive(Clone, Copy)]
+enum AdmitWait {
+    /// not at all (`try_push`)
+    None,
+    /// until this instant (`push_timeout`)
+    Until(Instant),
+    /// indefinitely — bounded only by deadline/close (`push`)
+    Forever,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn fifo_order_and_wraparound() {
+        let q = AdmissionQueue::new(3);
+        for round in 0..4u64 {
+            for i in 0..3 {
+                q.try_push(round * 10 + i, None).unwrap();
+            }
+            assert_eq!(q.depth(), 3);
+            for i in 0..3 {
+                match q.pop() {
+                    Pop::Job(v) => assert_eq!(v, round * 10 + i),
+                    _ => panic!("expected live job"),
+                }
+            }
+        }
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn capacity_zero_clamps_to_one() {
+        let q = AdmissionQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(1u8, None).unwrap();
+        assert!(q.try_push(2u8, None).is_err());
+    }
+
+    #[test]
+    fn full_queue_sheds_with_queue_full() {
+        let q = AdmissionQueue::new(2);
+        q.try_push(1, None).unwrap();
+        q.try_push(2, None).unwrap();
+        let rej = q.try_push(3, None).unwrap_err();
+        assert_eq!(rej.kind, ErrorKind::QueueFull);
+        assert_eq!(rej.item, 3); // the item comes back to the caller
+        let e = rej.to_error(q.capacity());
+        assert_eq!(e.kind(), ErrorKind::QueueFull);
+        assert!(format!("{e}").contains("capacity 2"), "got: {e}");
+        assert_eq!(q.counters().shed, 1);
+    }
+
+    #[test]
+    fn expired_at_admission_rejected() {
+        let q = AdmissionQueue::new(4);
+        let past = Instant::now() - ms(1);
+        let rej = q.try_push(7, Some(past)).unwrap_err();
+        assert_eq!(rej.kind, ErrorKind::DeadlineExceeded);
+        assert_eq!(q.counters().expired, 1);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn expired_at_dequeue_reported() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(1, Some(Instant::now() + ms(2))).unwrap();
+        q.try_push(2, None).unwrap();
+        std::thread::sleep(ms(10));
+        match q.pop() {
+            Pop::Expired(v) => assert_eq!(v, 1),
+            _ => panic!("first item should have expired in queue"),
+        }
+        match q.pop() {
+            Pop::Job(v) => assert_eq!(v, 2),
+            _ => panic!("second item has no deadline"),
+        }
+        assert_eq!(q.counters().expired, 1);
+    }
+
+    #[test]
+    fn push_timeout_gives_up_with_queue_full() {
+        let q = AdmissionQueue::new(1);
+        q.try_push(1, None).unwrap();
+        let t0 = Instant::now();
+        let rej = q.push_timeout(2, None, ms(20)).unwrap_err();
+        assert_eq!(rej.kind, ErrorKind::QueueFull);
+        assert!(t0.elapsed() >= ms(15), "must actually have waited");
+        assert_eq!(q.counters().shed, 1);
+    }
+
+    #[test]
+    fn push_timeout_admits_when_space_frees() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(1u32, None).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(ms(10));
+            match q2.pop() {
+                Pop::Job(v) => assert_eq!(v, 1),
+                _ => panic!("expected job"),
+            }
+        });
+        q.push_timeout(2u32, None, Duration::from_secs(10)).unwrap();
+        h.join().unwrap();
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.counters().shed, 0);
+    }
+
+    #[test]
+    fn deadline_bounds_blocking_push() {
+        let q = AdmissionQueue::new(1);
+        q.try_push(1, None).unwrap();
+        // blocked waiting for space, the item's own deadline lapses:
+        // classified DeadlineExceeded, not QueueFull
+        let rej = q.push(2, Some(Instant::now() + ms(15))).unwrap_err();
+        assert_eq!(rej.kind, ErrorKind::DeadlineExceeded);
+        assert_eq!(q.counters().expired, 1);
+    }
+
+    #[test]
+    fn expired_producer_forwards_the_wakeup() {
+        // regression (lost wakeup): producer A, parked on a full queue
+        // with a TTL, can consume the single not_full notification from
+        // a pop and then exit DeadlineExceeded; it must hand the
+        // notification on, or producer B (no TTL) sleeps through the
+        // free slot. The exact interleaving is a narrow race, so this
+        // runs many rounds; every interleaving must leave B admitted
+        // promptly (a lost wakeup strands B until its own 10 s bound).
+        for round in 0..50 {
+            let q = Arc::new(AdmissionQueue::new(1));
+            q.try_push(0u32, None).unwrap();
+            let qa = q.clone();
+            let a = std::thread::spawn(move || {
+                qa.push(1u32, Some(Instant::now() + ms(2))).is_ok()
+            });
+            let qb = q.clone();
+            let b = std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let ok = qb.push_timeout(2u32, None, Duration::from_secs(10)).is_ok();
+                (ok, t0.elapsed())
+            });
+            std::thread::sleep(ms(2)); // pop lands around A's TTL lapse
+            assert!(matches!(q.pop(), Pop::Job(0)), "round {round}");
+            if a.join().unwrap() {
+                // A won the freed slot before its TTL lapsed (also a
+                // valid interleaving): free another so B's admission
+                // doesn't depend on A's item
+                assert!(
+                    matches!(q.pop(), Pop::Job(1) | Pop::Expired(1)),
+                    "round {round}"
+                );
+            }
+            let (admitted, waited) = b.join().unwrap();
+            assert!(admitted, "round {round}: B must admit into a freed slot");
+            assert!(
+                waited < Duration::from_secs(5),
+                "round {round}: B waited {waited:?} — the wakeup was lost"
+            );
+            assert!(matches!(q.pop(), Pop::Job(2)), "round {round}");
+        }
+    }
+
+    #[test]
+    fn close_rejects_new_pushes_but_drains_old() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(1, None).unwrap();
+        q.try_push(2, Some(Instant::now() + ms(2))).unwrap();
+        std::thread::sleep(ms(10));
+        q.close();
+        let rej = q.try_push(3, None).unwrap_err();
+        assert_eq!(rej.kind, ErrorKind::Shutdown);
+        assert_eq!(rej.to_error(4).kind(), ErrorKind::Shutdown);
+        // drain semantics: live items handed out to complete, expired
+        // ones handed out to reject, then Closed
+        assert!(matches!(q.pop(), Pop::Job(1)));
+        assert!(matches!(q.pop(), Pop::Expired(2)));
+        assert!(matches!(q.pop(), Pop::Closed));
+        assert!(matches!(q.pop(), Pop::Closed)); // idempotent
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(AdmissionQueue::<u32>::new(2));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || matches!(q.pop(), Pop::Closed))
+            })
+            .collect();
+        std::thread::sleep(ms(10));
+        q.close();
+        for h in handles {
+            assert!(h.join().unwrap(), "blocked consumer must see Closed");
+        }
+    }
+
+    #[test]
+    fn close_wakes_blocked_producers() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(1u32, None).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(2u32, None).unwrap_err().kind);
+        std::thread::sleep(ms(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), ErrorKind::Shutdown);
+    }
+
+    #[test]
+    fn depth_counters_track_watermark() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i, None).unwrap();
+        }
+        assert!(matches!(q.pop(), Pop::Job(0)));
+        let c = q.counters();
+        assert_eq!(c.depth, 4);
+        assert_eq!(c.depth_peak, 5);
+        assert_eq!((c.shed, c.expired), (0, 0));
+    }
+
+    #[test]
+    fn mpmc_under_contention_delivers_everything_once() {
+        let q = Arc::new(AdmissionQueue::new(16));
+        let producers = 4u64;
+        let per = 500u64;
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop() {
+                            Pop::Job(v) => got.push(v),
+                            Pop::Expired(_) => panic!("no deadlines in this test"),
+                            Pop::Closed => return got,
+                        }
+                    }
+                })
+            })
+            .collect();
+        let prod: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push(p * per + i, None).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in prod {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (0..producers * per).collect();
+        assert_eq!(all, want, "every item delivered exactly once");
+    }
+}

@@ -1,5 +1,7 @@
 //! Request/response types of the serving API.
 
+use std::time::Duration;
+
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::models::Layout;
@@ -22,6 +24,12 @@ pub struct ConvRequest {
     /// may carry its own Gaussian spec; executors cache one plan per
     /// distinct `(algorithm, variant, layout, shape, kernel)` key.
     pub kernel: Option<KernelSpec>,
+    /// Time-to-live from submission. `None` → the coordinator's
+    /// configured default (`--deadline-ms`; no deadline if that is 0).
+    /// Checked at admission, while blocked waiting for a queue slot,
+    /// and again at dequeue — a lapsed request is refused with a
+    /// structured `DeadlineExceeded` error instead of executing.
+    pub deadline: Option<Duration>,
 }
 
 impl ConvRequest {
@@ -35,6 +43,7 @@ impl ConvRequest {
             backend: None,
             layout: None,
             kernel: None,
+            deadline: None,
         }
     }
 
@@ -61,6 +70,13 @@ impl ConvRequest {
     /// Carry a per-request kernel (width + sigma); validated at intake.
     pub fn with_kernel(mut self, spec: KernelSpec) -> Self {
         self.kernel = Some(spec);
+        self
+    }
+
+    /// Give this request its own time-to-live (overrides the
+    /// coordinator's `--deadline-ms` default).
+    pub fn with_deadline(mut self, ttl: Duration) -> Self {
+        self.deadline = Some(ttl);
         self
     }
 }
@@ -98,13 +114,15 @@ mod tests {
             .with_variant(Variant::Scalar)
             .with_backend(Backend::NativeOpenMp)
             .with_layout(Layout::Agglomerated)
-            .with_kernel(KernelSpec::new(7, 2.0));
+            .with_kernel(KernelSpec::new(7, 2.0))
+            .with_deadline(Duration::from_millis(250));
         assert_eq!(r.id, 7);
         assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
         assert_eq!(r.variant, Variant::Scalar);
         assert_eq!(r.backend, Some(Backend::NativeOpenMp));
         assert_eq!(r.layout, Some(Layout::Agglomerated));
         assert_eq!(r.kernel, Some(KernelSpec::new(7, 2.0)));
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 
     #[test]
@@ -114,6 +132,7 @@ mod tests {
         assert!(r.backend.is_none());
         assert!(r.layout.is_none());
         assert!(r.kernel.is_none());
+        assert!(r.deadline.is_none());
         assert_eq!(r.algorithm, Algorithm::TwoPass);
     }
 }

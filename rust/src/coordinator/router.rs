@@ -63,6 +63,14 @@ impl RoutePolicy {
 
     /// Decide (backend, layout) for a request of `rows` rows, given how
     /// many requests were routed before it (for round-robin).
+    ///
+    /// `seq` contract: the caller must advance it only for requests
+    /// whose *backend* this policy actually chooses. Explicitly pinned
+    /// traffic (including PJRT-pinned requests that later fall back to
+    /// a native backend) must not consume a slot, or the round-robin
+    /// rotation silently skips backends whenever such traffic
+    /// interleaves. Layout-only lookups may pass any value (layout
+    /// never depends on `seq`).
     pub fn route(&self, rows: usize, seq: u64) -> (Backend, Layout) {
         match *self {
             RoutePolicy::Fixed(b) => (b, Layout::PerPlane),

@@ -1,19 +1,36 @@
-//! The coordinator itself: queue, executor threads, metrics.
+//! The coordinator itself: bounded admission queue, executor threads,
+//! sharded metrics.
 //!
-//! Executors run every native request through the plan layer: each
+//! **Intake** goes through the [`AdmissionQueue`]: capacity and the
+//! default per-request deadline come from `RunConfig`
+//! (`--queue-capacity` / `--deadline-ms`), and every refusal is a
+//! structured error — [`ErrorKind::QueueFull`] when shedding,
+//! [`ErrorKind::DeadlineExceeded`] when a TTL lapses,
+//! [`ErrorKind::Shutdown`] once the coordinator is dropped. Nothing on
+//! the submit path panics; [`Coordinator::submit`] returns
+//! `Result<ReplyReceiver>` and callers pick their admission flavour
+//! (`submit` blocks for space, `try_submit` sheds immediately,
+//! `submit_timeout` bounds the wait).
+//!
+//! **Executors** run every native request through the plan layer: each
 //! executor thread owns a [`ScratchArena`] (scratch planes recycle
 //! across requests — zero scratch allocations after warm-up) and a cache
 //! of built [`ConvPlan`]s keyed by `(algorithm, variant, layout, shape,
 //! kernel)`, so repeated traffic at a shape pays plan validation once.
+//!
+//! **Stats are sharded**: each executor accumulates into its own
+//! `Mutex<CoordinatorStats>` slot — uncontended on the hot path — and
+//! the shards are only merged (plus the queue's own counters) when
+//! [`Coordinator::stats`] is called. The old design took one global
+//! lock per request, serializing all executors on metrics bookkeeping.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, ErrorKind, Result};
 
 use crate::config::RunConfig;
 use crate::conv::{Algorithm, Variant};
@@ -23,8 +40,12 @@ use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
 use crate::plan::{ConvPlan, KernelSpec, ScratchArena};
 use crate::runtime::{Manifest, PjrtHandle};
 
+use super::queue::{AdmissionQueue, Pop};
 use super::request::{ConvRequest, ConvResponse};
 use super::router::{Backend, RoutePolicy};
+
+/// Receiver side of a submitted job's reply channel.
+pub type ReplyReceiver = Receiver<Result<ConvResponse>>;
 
 struct Job {
     req: ConvRequest,
@@ -32,14 +53,42 @@ struct Job {
     reply: Sender<Result<ConvResponse>>,
 }
 
-/// Per-backend serving statistics.
+/// Serving statistics: executor-side tallies plus the admission queue's
+/// own counters (merged view returned by [`Coordinator::stats`]).
 #[derive(Debug, Default, Clone)]
 pub struct CoordinatorStats {
     pub served: u64,
+    /// execution failures returned to callers (not shed/expired traffic)
     pub errors: u64,
     pub pjrt_fallbacks: u64,
     pub service_ms: HashMap<&'static str, SampleSet>,
     pub queue_ms: SampleSet,
+    /// admissions refused because the queue was at capacity
+    pub shed: u64,
+    /// request deadlines lapsed (at admission, waiting, or dequeue)
+    pub expired: u64,
+    /// queue depth when this snapshot was taken
+    pub depth: usize,
+    /// high-water mark of queue depth since construction
+    pub depth_peak: usize,
+}
+
+impl CoordinatorStats {
+    /// Fold another shard into this one. Counters add, sample sets
+    /// concatenate, the depth high-water mark takes the max.
+    pub fn merge(&mut self, other: &CoordinatorStats) {
+        self.served += other.served;
+        self.errors += other.errors;
+        self.pjrt_fallbacks += other.pjrt_fallbacks;
+        self.queue_ms.extend_from(&other.queue_ms);
+        for (backend, set) in &other.service_ms {
+            self.service_ms.entry(backend).or_default().extend_from(set);
+        }
+        self.shed += other.shed;
+        self.expired += other.expired;
+        self.depth += other.depth;
+        self.depth_peak = self.depth_peak.max(other.depth_peak);
+    }
 }
 
 struct Inner {
@@ -54,8 +103,20 @@ struct Inner {
     kernel_taps: Vec<f32>,
     /// manifest (shape lookups, caller side) + execution handle (actor)
     pjrt: Option<(Manifest, PjrtHandle)>,
-    stats: Mutex<CoordinatorStats>,
-    seq: AtomicU64,
+    /// one stats shard per executor; shard `i` is only ever locked by
+    /// executor `i` (hot path, uncontended) and by `stats()` (merge)
+    shards: Vec<Mutex<CoordinatorStats>>,
+    /// default TTL stamped on requests that don't carry their own
+    default_deadline: Option<Duration>,
+    /// round-robin counter: advanced only when the policy itself picks
+    /// a backend, so pinned traffic (PJRT included) can't skew it
+    native_seq: AtomicU64,
+}
+
+impl Inner {
+    fn next_seq(&self) -> u64 {
+        self.native_seq.fetch_add(1, Ordering::Relaxed)
+    }
 }
 
 /// Per-executor cache bounds. Shapes and kernels are request-controlled,
@@ -81,14 +142,21 @@ struct PlanKey {
 /// The serving loop (see module docs).
 pub struct Coordinator {
     inner: Arc<Inner>,
-    tx: Option<Sender<Job>>,
-    executors: Vec<JoinHandle<()>>,
+    queue: Arc<AdmissionQueue<Job>>,
+    executors: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
     /// Build from a run config. `with_pjrt` loads the artifact pool (set
     /// false for native-only serving, e.g. when artifacts aren't built).
-    pub fn new(cfg: &RunConfig, policy: RoutePolicy, executors: usize, with_pjrt: bool) -> Result<Self> {
+    /// Queue capacity and the default deadline come from
+    /// `cfg.queue_capacity` / `cfg.deadline_ms` (0 = no deadline).
+    pub fn new(
+        cfg: &RunConfig,
+        policy: RoutePolicy,
+        executors: usize,
+        with_pjrt: bool,
+    ) -> Result<Self> {
         let pjrt = if with_pjrt {
             let manifest = Manifest::load(&cfg.artifacts_dir)?;
             let handle = PjrtHandle::spawn(&cfg.artifacts_dir).context("starting PJRT actor")?;
@@ -107,6 +175,7 @@ impl Coordinator {
                 .context("manifest kernel spec")?,
             None => kernel.taps()?,
         };
+        let n = executors.max(1);
         let inner = Arc::new(Inner {
             policy,
             openmp: OpenMpModel::new(cfg.threads),
@@ -115,39 +184,126 @@ impl Coordinator {
             kernel,
             kernel_taps,
             pjrt,
-            stats: Mutex::new(CoordinatorStats::default()),
-            seq: AtomicU64::new(0),
+            shards: (0..n).map(|_| Mutex::new(CoordinatorStats::default())).collect(),
+            default_deadline: (cfg.deadline_ms > 0)
+                .then(|| Duration::from_millis(cfg.deadline_ms)),
+            native_seq: AtomicU64::new(0),
         });
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let executors = (0..executors.max(1))
-            .map(|i| {
-                let inner = inner.clone();
-                let rx = rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("phi-conv-executor-{i}"))
-                    .spawn(move || executor_loop(inner, rx))
-                    .expect("spawn executor")
-            })
-            .collect();
-        Ok(Self { inner, tx: Some(tx), executors })
+        let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let inner = inner.clone();
+            let queue_ref = queue.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("phi-conv-executor-{i}"))
+                .spawn(move || executor_loop(inner, queue_ref, i));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // wake and join whatever already spawned before
+                    // surfacing the error, or those executors would
+                    // block on the queue forever (no Coordinator means
+                    // no Drop to close it)
+                    queue.close();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::from(e).context(format!("spawning executor {i}")));
+                }
+            }
+        }
+        Ok(Self { inner, queue, executors: handles })
     }
 
-    /// Enqueue a request; the receiver yields the response when served.
-    pub fn submit(&self, req: ConvRequest) -> Receiver<Result<ConvResponse>> {
+    /// The request's effective admission deadline: its own TTL, or the
+    /// coordinator's configured default. A TTL so large that
+    /// `now + ttl` overflows `Instant` is treated as "no deadline" —
+    /// `Instant + Duration` would panic, and the submit path guarantees
+    /// it never does.
+    fn deadline_of(&self, req: &ConvRequest) -> Option<Instant> {
+        req.deadline
+            .or(self.inner.default_deadline)
+            .and_then(|ttl| Instant::now().checked_add(ttl))
+    }
+
+    fn job(req: ConvRequest) -> (Job, ReplyReceiver) {
         let (reply, rx) = channel();
-        let job = Job { req, enqueued: Instant::now(), reply };
-        self.tx.as_ref().expect("coordinator live").send(job).expect("executors alive");
-        rx
+        (Job { req, enqueued: Instant::now(), reply }, rx)
     }
 
-    /// Submit and wait.
+    /// Enqueue a request; the receiver yields the response (or a
+    /// structured error) when served. Blocks while the queue is at
+    /// capacity — backpressure — bounded by the request's deadline.
+    /// Never panics: refusals are `QueueFull` / `DeadlineExceeded` /
+    /// `Shutdown` errors.
+    pub fn submit(&self, req: ConvRequest) -> Result<ReplyReceiver> {
+        let deadline = self.deadline_of(&req);
+        let (job, rx) = Self::job(req);
+        self.queue
+            .push(job, deadline)
+            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        Ok(rx)
+    }
+
+    /// Non-blocking admission: sheds immediately with `QueueFull` when
+    /// the queue is at capacity.
+    pub fn try_submit(&self, req: ConvRequest) -> Result<ReplyReceiver> {
+        let deadline = self.deadline_of(&req);
+        let (job, rx) = Self::job(req);
+        self.queue
+            .try_push(job, deadline)
+            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        Ok(rx)
+    }
+
+    /// Blocking admission bounded by `wait`: sheds with `QueueFull` if
+    /// no slot frees in time.
+    pub fn submit_timeout(&self, req: ConvRequest, wait: Duration) -> Result<ReplyReceiver> {
+        let deadline = self.deadline_of(&req);
+        let (job, rx) = Self::job(req);
+        self.queue
+            .push_timeout(job, deadline, wait)
+            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait for the response.
     pub fn serve(&self, req: ConvRequest) -> Result<ConvResponse> {
-        self.submit(req).recv().context("coordinator dropped reply")?
+        let rx = self.submit(req)?;
+        match rx.recv() {
+            Ok(result) => result,
+            // the reply sender was dropped without a reply — only
+            // possible if an executor died mid-request
+            Err(_) => Err(Error::with_kind(
+                ErrorKind::Shutdown,
+                "coordinator dropped the reply channel",
+            )),
+        }
     }
 
+    /// Merged statistics: all executor shards plus the queue counters.
     pub fn stats(&self) -> CoordinatorStats {
-        self.inner.stats.lock().unwrap().clone()
+        let mut total = CoordinatorStats::default();
+        for shard in &self.inner.shards {
+            let guard = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            total.merge(&guard);
+        }
+        let q = self.queue.counters();
+        total.shed = q.shed;
+        total.expired = q.expired;
+        total.depth = q.depth;
+        total.depth_peak = q.depth_peak;
+        total
+    }
+
+    /// Items currently waiting for an executor.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// The admission queue's capacity.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
     }
 
     /// True when the PJRT backend is loaded.
@@ -182,28 +338,47 @@ impl Coordinator {
 }
 
 impl Drop for Coordinator {
+    /// Graceful drain: refuse new admissions, let the executors finish
+    /// everything already queued (expired items are rejected with
+    /// structured `DeadlineExceeded` errors, live ones complete), then
+    /// join them. Every outstanding reply channel resolves.
     fn drop(&mut self) {
-        self.tx.take(); // close the queue; executors drain and exit
+        self.queue.close();
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn executor_loop(inner: Arc<Inner>, rx: Arc<Mutex<Receiver<Job>>>) {
+fn executor_loop(inner: Arc<Inner>, queue: Arc<AdmissionQueue<Job>>, shard: usize) {
     // per-executor state: scratch planes recycle across requests (zero
     // scratch allocations after warm-up) and plans are built once per
     // distinct request configuration
     let mut arena = ScratchArena::new();
     let mut plans: HashMap<PlanKey, ConvPlan> = HashMap::new();
     loop {
-        let job = match rx.lock().unwrap().recv() {
-            Ok(j) => j,
-            Err(_) => return, // queue closed
+        let job = match queue.pop() {
+            Pop::Closed => return, // drained and shut down
+            Pop::Expired(job) => {
+                let waited = job.enqueued.elapsed().as_secs_f64() * 1e3;
+                let _ = job.reply.send(Err(Error::with_kind(
+                    ErrorKind::DeadlineExceeded,
+                    format!("request deadline exceeded after {waited:.1} ms in queue"),
+                )));
+                continue;
+            }
+            Pop::Job(job) => job,
         };
         let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let result = serve_one(&inner, &mut arena, &mut plans, job.req, queue_ms);
-        let mut st = inner.stats.lock().unwrap();
+        let mut pjrt_fell_back = false;
+        let result =
+            serve_one(&inner, &mut arena, &mut plans, &mut pjrt_fell_back, job.req, queue_ms);
+        // this executor's own shard: uncontended unless stats() is
+        // merging, and never held across the convolution above
+        let mut st = inner.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
+        if pjrt_fell_back {
+            st.pjrt_fallbacks += 1;
+        }
         match &result {
             Ok(resp) => {
                 st.served += 1;
@@ -224,28 +399,32 @@ fn serve_one(
     inner: &Inner,
     arena: &mut ScratchArena,
     plans: &mut HashMap<PlanKey, ConvPlan>,
+    pjrt_fell_back: &mut bool,
     req: ConvRequest,
     queue_ms: f64,
 ) -> Result<ConvResponse> {
-    let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
     // request intake validation: a bad kernel spec is a structured error
     // before any routing or execution happens
     let kernel = req.kernel.unwrap_or(inner.kernel);
     kernel.validate().context("invalid request kernel")?;
 
+    // the round-robin counter advances only when the policy picks the
+    // backend: explicitly pinned traffic (PJRT included) must not
+    // consume native cycle slots, or the rotation silently skips
+    // backends whenever pinned requests interleave
     let (mut backend, mut layout) = match (req.backend, req.layout) {
         (Some(b), Some(l)) => (b, l),
-        (Some(b), None) => (b, inner.policy.route(req.image.rows, seq).1),
-        (None, Some(l)) => (inner.policy.route(req.image.rows, seq).0, l),
-        (None, None) => inner.policy.route(req.image.rows, seq),
+        (Some(b), None) => (b, inner.policy.route(req.image.rows, 0).1),
+        (None, Some(l)) => (inner.policy.route(req.image.rows, inner.next_seq()).0, l),
+        (None, None) => inner.policy.route(req.image.rows, inner.next_seq()),
     };
 
     // PJRT can only serve shapes it has artifacts for (and only the
     // configured default kernel the artifacts were lowered with); fall
     // back to the adaptive native choice otherwise.
     if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
-        inner.stats.lock().unwrap().pjrt_fallbacks += 1;
-        let (b, l) = RoutePolicy::paper_default().route(req.image.rows, seq);
+        *pjrt_fell_back = true;
+        let (b, l) = RoutePolicy::paper_default().route(req.image.rows, 0);
         backend = b;
         layout = l;
     }
@@ -358,17 +537,31 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_spreads_backends() {
+    fn round_robin_unskewed_by_pinned_traffic() {
+        // pinned traffic (PJRT included — it falls back natively here)
+        // interleaves with policy-routed requests; the rotation must
+        // still hand each native backend exactly its even share
         let c = Coordinator::new(&cfg(), RoutePolicy::RoundRobin, 1, false).unwrap();
         let img = synth_image(3, 24, 24, Pattern::Noise, 2);
-        let mut seen = std::collections::HashSet::new();
-        for i in 0..6 {
+        let mut counts: HashMap<Backend, usize> = HashMap::new();
+        for i in 0..12u64 {
+            if i % 2 == 1 {
+                // explicitly pinned: must not consume a rotation slot
+                let pinned = c
+                    .serve(ConvRequest::new(i, img.clone()).with_backend(Backend::Pjrt))
+                    .unwrap();
+                assert_ne!(pinned.backend, Backend::Pjrt, "no PJRT loaded: falls back");
+                continue;
+            }
             let resp = c.serve(ConvRequest::new(i, img.clone())).unwrap();
-            seen.insert(resp.backend);
+            *counts.entry(resp.backend).or_insert(0) += 1;
         }
-        assert_eq!(seen.len(), 3, "all three native backends used");
+        assert_eq!(counts.len(), 3, "all three native backends used: {counts:?}");
+        for (backend, n) in &counts {
+            assert_eq!(*n, 2, "{backend:?} must serve exactly 2 of 6 rotation slots");
+        }
         let st = c.stats();
-        assert_eq!(st.served, 6);
+        assert_eq!(st.served, 12);
         assert_eq!(st.errors, 0);
     }
 
@@ -404,12 +597,79 @@ mod tests {
         let c = Coordinator::new(&cfg(), RoutePolicy::RoundRobin, 3, false).unwrap();
         let img = synth_image(3, 24, 24, Pattern::Noise, 6);
         let receivers: Vec<_> = (0..20)
-            .map(|i| c.submit(ConvRequest::new(i, img.clone())))
+            .map(|i| c.submit(ConvRequest::new(i, img.clone())).unwrap())
             .collect();
         for rx in receivers {
             assert!(rx.recv().unwrap().is_ok());
         }
         assert_eq!(c.stats().served, 20);
+    }
+
+    #[test]
+    fn burst_beyond_capacity_sheds_not_panics() {
+        // tiny queue, one executor kept busy by real work: try_submit
+        // must shed the overflow with structured QueueFull errors and
+        // keep every admitted request servable
+        let cfg = RunConfig { queue_capacity: 1, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 128, 128, Pattern::Noise, 7);
+        // requests pre-built so the burst loop is tight: the executor
+        // cannot drain a capacity-1 queue as fast as try_submit refills
+        let reqs: Vec<_> = (0..50u64).map(|i| ConvRequest::new(i, img.clone())).collect();
+        let mut admitted = Vec::new();
+        let mut shed = 0u64;
+        for req in reqs {
+            match c.try_submit(req) {
+                Ok(rx) => admitted.push(rx),
+                Err(e) => {
+                    assert_eq!(e.kind(), ErrorKind::QueueFull, "got: {e:#}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "a 50-burst into a capacity-1 queue must shed");
+        for rx in admitted {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let st = c.stats();
+        assert_eq!(st.shed, shed);
+        assert_eq!(st.served + st.shed, 50);
+        assert!(st.depth_peak >= 1);
+    }
+
+    #[test]
+    fn zero_ttl_request_is_deadline_exceeded() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 8);
+        let e = c
+            .submit(ConvRequest::new(1, img).with_deadline(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+        assert_eq!(c.stats().expired, 1);
+    }
+
+    #[test]
+    fn absurd_ttl_never_panics_the_submit_path() {
+        // Instant::now() + Duration::MAX would overflow-panic; the
+        // submit path must degrade it to "no deadline" instead
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 13);
+        let resp = c.serve(ConvRequest::new(1, img).with_deadline(Duration::MAX));
+        assert!(resp.is_ok(), "got: {resp:?}");
+        assert_eq!(c.stats().expired, 0);
+    }
+
+    #[test]
+    fn configured_default_deadline_applies() {
+        // deadline_ms stamps every request lacking its own TTL; an
+        // impossible 0-width window is exercised per-request instead
+        // (deadline_ms = 0 means "no default"), so here we only check
+        // that a generous default leaves normal serving untouched
+        let cfg = RunConfig { deadline_ms: 60_000, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 12);
+        assert!(c.serve(ConvRequest::new(1, img)).is_ok());
+        assert_eq!(c.stats().expired, 0);
     }
 
     #[test]
@@ -432,6 +692,7 @@ mod tests {
             .serve(ConvRequest::new(1, img.clone()).with_kernel(KernelSpec::new(4, 1.0)))
             .unwrap_err();
         assert!(format!("{err:#}").contains("odd"), "got: {err:#}");
+        assert_eq!(err.kind(), ErrorKind::Other, "execution errors are not refusals");
         // the coordinator keeps serving and counts the error
         assert!(c.serve(ConvRequest::new(2, img)).is_ok());
         let st = c.stats();
@@ -479,5 +740,21 @@ mod tests {
         let resp = c.serve(ConvRequest::new(1, img)).unwrap();
         assert_ne!(resp.backend, Backend::Pjrt);
         assert_eq!(c.stats().pjrt_fallbacks, 1);
+    }
+
+    #[test]
+    fn stats_merge_folds_shards() {
+        let mut a = CoordinatorStats { served: 3, errors: 1, ..Default::default() };
+        a.queue_ms.push(1.0);
+        a.service_ms.entry("openmp").or_default().push(2.0);
+        let mut b = CoordinatorStats { served: 2, pjrt_fallbacks: 4, ..Default::default() };
+        b.queue_ms.push(3.0);
+        b.service_ms.entry("openmp").or_default().push(4.0);
+        b.service_ms.entry("gprm").or_default().push(5.0);
+        a.merge(&b);
+        assert_eq!((a.served, a.errors, a.pjrt_fallbacks), (5, 1, 4));
+        assert_eq!(a.queue_ms.len(), 2);
+        assert_eq!(a.service_ms["openmp"].len(), 2);
+        assert_eq!(a.service_ms["gprm"].len(), 1);
     }
 }

@@ -107,8 +107,17 @@ impl PlanarImage {
 
     /// Max |a−b| restricted to the deep interior `[d, n-d)` of every
     /// plane, where single-pass and two-pass provably agree (d = 2h).
+    ///
+    /// Planes too small to have a deep interior (`rows ≤ 2d` or
+    /// `cols ≤ 2d` — reachable since arbitrary odd kernel widths meet
+    /// tiny planes) compare as 0.0: there are no interior pixels to
+    /// disagree on. The old `d..rows - d` range underflowed and
+    /// panicked on such shapes.
     pub fn max_abs_diff_deep(&self, other: &Self, halo: usize) -> f32 {
         let d = 2 * halo;
+        if self.rows <= 2 * d || self.cols <= 2 * d {
+            return 0.0;
+        }
         let mut m = 0f32;
         for p in 0..self.planes {
             let (a, b) = (self.plane(p), other.plane(p));
@@ -166,5 +175,24 @@ mod tests {
         b.set(0, 6, 6, 0.5); // deep interior pixel ([4,8) x [4,8))
         assert_eq!(a.max_abs_diff(&b), 2.0);
         assert_eq!(a.max_abs_diff_deep(&b, 2), 0.5);
+    }
+
+    #[test]
+    fn deep_diff_on_tiny_planes_is_zero_not_panic() {
+        // regression: `d..rows - d` underflowed when rows/cols < 2*halo
+        // (reachable since arbitrary odd kernel widths meet tiny planes)
+        for (rows, cols, halo) in
+            [(3, 3, 2), (4, 4, 2), (8, 8, 2), (1, 1, 1), (12, 3, 2), (3, 12, 2), (5, 5, 3)]
+        {
+            let a = PlanarImage::zeros(2, rows, cols);
+            let mut b = PlanarImage::zeros(2, rows, cols);
+            b.set(0, 0, 0, 9.0);
+            assert_eq!(a.max_abs_diff_deep(&b, halo), 0.0, "{rows}x{cols} halo {halo}");
+        }
+        // the boundary case: the smallest plane that *has* an interior
+        let a = PlanarImage::zeros(1, 9, 9);
+        let mut b = PlanarImage::zeros(1, 9, 9);
+        b.set(0, 4, 4, 0.25); // the single interior pixel at d = 4
+        assert_eq!(a.max_abs_diff_deep(&b, 2), 0.25);
     }
 }

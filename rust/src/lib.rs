@@ -71,4 +71,4 @@ pub mod plan;
 pub mod runtime;
 
 /// Crate-wide error and result types (see [`util::error`]).
-pub use util::error::{Context, Error, Result};
+pub use util::error::{Context, Error, ErrorKind, Result};

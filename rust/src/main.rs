@@ -177,16 +177,31 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
     let mut rng = Prng::new(cfg.seed);
     let t0 = std::time::Instant::now();
     let mut latencies = SampleSet::new();
-    let receivers: Vec<_> = (0..requests)
-        .map(|i| {
-            let size = *rng.pick(&cfg.sizes);
-            let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed + i as u64);
-            coord.submit(ConvRequest::new(i as u64, img))
-        })
-        .collect();
+    let mut receivers = Vec::with_capacity(requests);
+    let mut refused = 0usize;
+    for i in 0..requests {
+        let size = *rng.pick(&cfg.sizes);
+        let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed + i as u64);
+        // blocking admission: backpressure (bounded by --queue-capacity
+        // / --deadline-ms) rather than unbounded memory growth; a
+        // refused admission is tallied like any other refusal, not a
+        // run-aborting error
+        match coord.submit(ConvRequest::new(i as u64, img)) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => {
+                refused += 1;
+                eprintln!("  request {i} refused at admission: {e:#}");
+            }
+        }
+    }
     for rx in receivers {
-        let resp = rx.recv().context("coordinator dropped")??;
-        latencies.push(resp.latency_ms());
+        match rx.recv().context("coordinator dropped")? {
+            Ok(resp) => latencies.push(resp.latency_ms()),
+            Err(e) => {
+                refused += 1;
+                eprintln!("  request refused: {e:#}");
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = coord.stats();
@@ -203,6 +218,14 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
     if stats.pjrt_fallbacks > 0 {
         println!("  ({} requests fell back from PJRT)", stats.pjrt_fallbacks);
     }
+    println!(
+        "queue: depth peak {} of {} · {} shed · {} expired · {} refused replies",
+        stats.depth_peak,
+        coord.queue_capacity(),
+        stats.shed,
+        stats.expired,
+        refused
+    );
     Ok(())
 }
 

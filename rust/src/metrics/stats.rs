@@ -2,6 +2,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// A set of f64 samples (milliseconds by convention).
 #[derive(Debug, Clone, Default)]
 pub struct SampleSet {
@@ -19,6 +21,11 @@ impl SampleSet {
 
     pub fn push(&mut self, v: f64) {
         self.samples.push(v);
+    }
+
+    /// Append every sample of `other` (stats-shard merging).
+    pub fn extend_from(&mut self, other: &SampleSet) {
+        self.samples.extend_from_slice(&other.samples);
     }
 
     pub fn len(&self) -> usize {
@@ -86,6 +93,11 @@ impl SampleSet {
     }
 
     pub fn summary(&self) -> String {
+        // empty sets have no defined min/max/mean (±inf / NaN); never
+        // let those leak into human- or machine-readable output
+        if self.is_empty() {
+            return "n=0 (no samples)".to_string();
+        }
         format!(
             "n={} min={:.3} p50={:.3} mean={:.3} p95={:.3} max={:.3} (ms)",
             self.len(),
@@ -95,6 +107,27 @@ impl SampleSet {
             self.percentile(95.0),
             self.max()
         )
+    }
+
+    /// The summary as a JSON object. RFC 8259 has no NaN/Infinity, so
+    /// the undefined statistics of an empty set (±inf min/max, NaN
+    /// mean) are emitted as `null` alongside `n = 0`, rather than the
+    /// invalid tokens a naive dump of [`SampleSet::min`] would produce.
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(self.len() as f64));
+        let fields: [(&str, f64); 5] = [
+            ("min", self.min()),
+            ("p50", self.median()),
+            ("mean", self.mean()),
+            ("p95", self.percentile(95.0)),
+            ("max", self.max()),
+        ];
+        for (key, v) in fields {
+            obj.insert(key.to_string(), num(v));
+        }
+        Json::Obj(obj)
     }
 }
 
@@ -164,6 +197,46 @@ mod tests {
         let s = SampleSet::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn empty_set_summary_is_guarded() {
+        let s = SampleSet::new();
+        let text = s.summary();
+        assert_eq!(text, "n=0 (no samples)");
+        assert!(!text.contains("inf") && !text.contains("NaN"), "got: {text}");
+    }
+
+    #[test]
+    fn empty_set_json_round_trips() {
+        // an empty stats dump must be *valid* JSON: ±inf/NaN have no
+        // JSON spelling and used to serialize as invalid tokens
+        let dumped = SampleSet::new().to_json().to_string();
+        let parsed = Json::parse(&dumped).expect("empty-set dump must be parseable JSON");
+        assert_eq!(parsed.req_usize("n").unwrap(), 0);
+        assert_eq!(parsed.get("min"), &Json::Null);
+        assert_eq!(parsed.get("mean"), &Json::Null);
+        assert_eq!(parsed.get("max"), &Json::Null);
+    }
+
+    #[test]
+    fn populated_json_round_trips() {
+        let s = SampleSet::from_vec(vec![1.0, 2.0, 3.0]);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req_usize("n").unwrap(), 3);
+        assert!((parsed.req_f64("min").unwrap() - 1.0).abs() < 1e-12);
+        assert!((parsed.req_f64("mean").unwrap() - 2.0).abs() < 1e-12);
+        assert!((parsed.req_f64("max").unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extend_from_concatenates() {
+        let mut a = SampleSet::from_vec(vec![1.0, 2.0]);
+        let b = SampleSet::from_vec(vec![3.0]);
+        a.extend_from(&b);
+        assert_eq!(a.samples(), &[1.0, 2.0, 3.0]);
+        a.extend_from(&SampleSet::new());
+        assert_eq!(a.len(), 3);
     }
 
     #[test]

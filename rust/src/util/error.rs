@@ -7,7 +7,8 @@
 //! substrates:
 //!
 //! * [`Error`] — an opaque, `Send + Sync` error value holding a chain of
-//!   human-readable context frames (outermost first, root cause last);
+//!   human-readable context frames (outermost first, root cause last)
+//!   plus a machine-matchable [`ErrorKind`] for the serving taxonomy;
 //! * [`Result`] — the crate-wide alias `Result<T, Error>`;
 //! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on both
 //!   `Result` and `Option`, pushing a new outer frame;
@@ -26,21 +27,55 @@
 
 use std::fmt;
 
+/// Machine-matchable classification of an [`Error`].
+///
+/// Most errors are [`ErrorKind::Other`] — a human-readable chain is all
+/// a CLI or test needs. The serving path (the coordinator's admission
+/// queue) additionally needs callers to *dispatch* on why a request was
+/// refused — retry on `QueueFull`, give up on `DeadlineExceeded`, stop
+/// on `Shutdown` — which string matching cannot do robustly. Context
+/// frames added with `.context(..)` preserve the kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[non_exhaustive]
+pub enum ErrorKind {
+    /// Anything without a more specific classification.
+    #[default]
+    Other,
+    /// The admission queue was at capacity and the request was shed.
+    QueueFull,
+    /// The request's deadline lapsed (at admission or while queued).
+    DeadlineExceeded,
+    /// The service is shutting down (or already shut down).
+    Shutdown,
+}
+
 /// An error: a non-empty chain of context frames, outermost first.
 pub struct Error {
     chain: Vec<String>,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Build from a single printable message.
     pub fn msg(m: impl fmt::Display) -> Self {
-        Self { chain: vec![m.to_string()] }
+        Self { chain: vec![m.to_string()], kind: ErrorKind::Other }
+    }
+
+    /// Build with an explicit [`ErrorKind`] (the serving taxonomy).
+    pub fn with_kind(kind: ErrorKind, m: impl fmt::Display) -> Self {
+        Self { chain: vec![m.to_string()], kind }
     }
 
     /// Wrap with an outer context frame (what `.context(..)` does).
+    /// The kind is preserved.
     pub fn context(mut self, c: impl fmt::Display) -> Self {
         self.chain.insert(0, c.to_string());
         self
+    }
+
+    /// The machine-matchable classification.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 
     /// The outermost message.
@@ -93,7 +128,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Self { chain }
+        Self { chain, kind: ErrorKind::Other }
     }
 }
 
@@ -274,5 +309,26 @@ mod tests {
     fn error_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn kinds_default_to_other() {
+        assert_eq!(Error::msg("x").kind(), ErrorKind::Other);
+        let e: Error = io_err().into();
+        assert_eq!(e.kind(), ErrorKind::Other);
+        assert_eq!(err!("formatted {}", 1).kind(), ErrorKind::Other);
+    }
+
+    #[test]
+    fn kind_survives_context_frames() {
+        let e = Error::with_kind(ErrorKind::QueueFull, "queue full (capacity 8)");
+        assert_eq!(e.kind(), ErrorKind::QueueFull);
+        let wrapped = e.context("submitting request 42");
+        assert_eq!(wrapped.kind(), ErrorKind::QueueFull);
+        assert_eq!(format!("{wrapped:#}"), "submitting request 42: queue full (capacity 8)");
+
+        // and through the Context trait on Result
+        let r: Result<()> = Err(Error::with_kind(ErrorKind::Shutdown, "shut down"));
+        assert_eq!(r.context("outer").unwrap_err().kind(), ErrorKind::Shutdown);
     }
 }

@@ -107,7 +107,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // RFC 8259 has no NaN/Infinity token; emitting the
+                    // Rust Display forms ("NaN", "inf") would produce
+                    // output this parser itself rejects
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -370,6 +375,17 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // the parser rejects "NaN"/"inf"; the serializer must never
+        // produce them (empty SampleSet summaries used to)
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let out = Json::Arr(vec![Json::Num(v)]).to_string();
+            assert_eq!(out, "[null]");
+            assert!(Json::parse(&out).is_ok());
+        }
     }
 
     #[test]

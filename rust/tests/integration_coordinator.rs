@@ -71,7 +71,8 @@ fn failed_requests_are_counted_not_fatal() {
 fn throughput_accounting_consistent() {
     let coord = Coordinator::new(&cfg(), RoutePolicy::paper_default(), 2, false).unwrap();
     let img = synth_image(3, 48, 48, Pattern::Noise, 6);
-    let rxs: Vec<_> = (0..10).map(|i| coord.submit(ConvRequest::new(i, img.clone()))).collect();
+    let rxs: Vec<_> =
+        (0..10).map(|i| coord.submit(ConvRequest::new(i, img.clone())).unwrap()).collect();
     for rx in rxs {
         let resp = rx.recv().unwrap().unwrap();
         assert!(resp.service_ms >= 0.0 && resp.queue_ms >= 0.0);

@@ -3,9 +3,8 @@
 # run from anywhere. Tier-1 commands run first so a functional failure
 # is always the first error; clippy gates next; fmt gates last (so a
 # formatting-only failure proves everything functional already passed).
-# PHI_VERIFY_SKIP_FMT=1 skips the fmt gate (CI runs it as a separate
-# advisory step until a toolchain session runs `cargo fmt` once to
-# establish the formatting baseline).
+# The fmt gate is enforcing (PR 3 established the baseline); set
+# PHI_VERIFY_SKIP_FMT=1 only for local runs without rustfmt installed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,6 +13,12 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+echo "== cargo test -q --test queue_stress (coordinator under load)"
+# tier-1 by policy: shedding, deadlines and shutdown-under-load must
+# never panic or hang a client (already part of `cargo test`; re-run
+# standalone so a load-path regression is named in the output)
+cargo test -q --test queue_stress
 
 echo "== cargo build --benches"
 cargo build --benches
