@@ -1,0 +1,23 @@
+//! Bench: tiled 2-D dispatch + task agglomeration, auto-tuned.
+//!
+//! Sweeps the tile/agglomeration candidates per execution model at each
+//! size (the paper's Fig. 3 experiment generalised from 3R×C to
+//! arbitrary tiles), prints the per-size sweep tables, and finishes with
+//! the tuned-winner summary — the tuned tile beats or equals the untiled
+//! row-partition baseline by construction (the baseline is always a
+//! candidate).
+//!
+//! `cargo bench --bench tiling` — env overrides:
+//!   PHI_BENCH_SIZES=288,576   PHI_BENCH_REPS=5   PHI_BENCH_THREADS=8
+
+use phi_conv::autotune::{sweep_shape, TuningTable};
+use phi_conv::config::RunConfig;
+
+fn main() {
+    let cfg = RunConfig::from_bench_env();
+    let mut table = TuningTable::new();
+    for &size in &cfg.sizes {
+        println!("{}", sweep_shape(&cfg, size, &mut table).unwrap().to_text());
+    }
+    println!("{}", table.to_table().to_text());
+}

@@ -1,0 +1,366 @@
+//! Auto-tuning of tile granularity and task agglomeration.
+//!
+//! The paper's agglomeration experiment (section 6, Fig. 2 vs Fig. 3)
+//! shows that the *granularity* handed to the scheduler — not the
+//! scheduler itself — decides whether the task-based model competes with
+//! the loop-based ones; Kepner's multi-threaded fast convolver
+//! (astro-ph/0107084) reports the same tile-size trade-off for
+//! dynamically parallel image filtering in general. This module makes
+//! that trade-off a measured, queryable quantity:
+//!
+//! * [`default_candidates`] enumerates tile decompositions for a shape —
+//!   always starting from the **untiled row-partition baseline**, so the
+//!   tuned winner can only beat or equal it — plus, for GPRM,
+//!   agglomerated variants where several tiles fuse into one task
+//!   instance (the paper's cutoff knob re-expressed per tile).
+//! * [`sweep_shape`] measures every candidate under all three execution
+//!   models at one image shape (total ms via plan execution, fixed
+//!   overhead via the empty-`dispatch2d` probe — the paper's Table-2
+//!   methodology) and renders the sweep as a harness table mirroring the
+//!   paper's agglomeration exhibit.
+//! * [`TuningTable`] persists the per-(model, shape, kernel) winners in
+//!   memory, for lookups by serving code and for the `phi-conv tune`
+//!   subcommand's summary.
+//!
+//! Reproduce with `phi-conv tune` (sizes/reps/threads from the standard
+//! config) or `cargo bench --bench tiling`.
+
+use std::collections::HashMap;
+
+use crate::util::error::Result;
+
+use crate::config::RunConfig;
+use crate::image::synth_image;
+use crate::metrics::{time_reps, Table};
+use crate::models::{ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileSpec};
+use crate::plan::{ConvPlan, ScratchArena};
+
+/// One tiling configuration the tuner evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// `None` = the untiled row-partition baseline.
+    pub tile: Option<TileSpec>,
+    /// Tiles fused per task instance (GPRM only; 1 elsewhere).
+    pub agglomeration: usize,
+}
+
+impl Candidate {
+    /// The untiled row-partition baseline every sweep starts from.
+    pub fn untiled() -> Self {
+        Self { tile: None, agglomeration: 1 }
+    }
+
+    pub fn label(&self) -> String {
+        match self.tile {
+            None => "rows (untiled)".to_string(),
+            Some(t) if self.agglomeration > 1 => {
+                format!("{} agg={}", t.label(), self.agglomeration)
+            }
+            Some(t) => t.label(),
+        }
+    }
+}
+
+/// Default candidate set for a `rows`-tall image: the untiled baseline,
+/// full-width stripes, squares, and (when `gprm`) agglomerated variants
+/// of the finer decompositions. Shapes that don't fit the image are
+/// dropped rather than clamped so the sweep never measures duplicates.
+pub fn default_candidates(rows: usize, gprm: bool) -> Vec<Candidate> {
+    let mut out = vec![Candidate::untiled()];
+    let tiled = |rows: usize, cols: usize, agg: usize| Candidate {
+        tile: Some(TileSpec::new(rows, cols)),
+        agglomeration: agg,
+    };
+    for r in [16usize, 64] {
+        if r < rows {
+            out.push(tiled(r, usize::MAX, 1)); // full-width stripes
+        }
+    }
+    for s in [32usize, 128] {
+        if s < rows {
+            out.push(tiled(s, s, 1)); // squares
+        }
+    }
+    if gprm {
+        // the paper's knob: same tiles, coarser task instances
+        for agg in [4usize, 16] {
+            if 16 < rows {
+                out.push(tiled(16, usize::MAX, agg));
+            }
+            if 32 < rows {
+                out.push(tiled(32, 32, agg));
+            }
+        }
+    }
+    out
+}
+
+/// What a winner was tuned for.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    /// execution-model name ("OpenMP" / "OpenCL" / "GPRM")
+    pub model: String,
+    pub planes: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub kernel_width: usize,
+}
+
+/// A tuned winner plus the baseline it displaced.
+#[derive(Debug, Clone)]
+pub struct Tuned {
+    pub candidate: Candidate,
+    /// median ms of the winning configuration
+    pub ms: f64,
+    /// median ms of the untiled row-partition baseline
+    pub baseline_ms: f64,
+}
+
+impl Tuned {
+    /// ≥ 1.0 by construction: the baseline is always a candidate, so the
+    /// winner beats or equals it (modulo its own measurement).
+    pub fn speedup(&self) -> f64 {
+        if self.ms > 0.0 {
+            self.baseline_ms / self.ms
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Small in-memory table of tuned winners, keyed by
+/// (model, planes, rows, cols, kernel width).
+#[derive(Debug, Default)]
+pub struct TuningTable {
+    entries: HashMap<TuneKey, Tuned>,
+}
+
+impl TuningTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record a winner (later sweeps at the same key overwrite).
+    pub fn record(&mut self, key: TuneKey, tuned: Tuned) {
+        self.entries.insert(key, tuned);
+    }
+
+    /// The tuned winner for a configuration, if one was swept.
+    pub fn lookup(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+    ) -> Option<&Tuned> {
+        self.entries.get(&TuneKey {
+            model: model.to_string(),
+            planes,
+            rows,
+            cols,
+            kernel_width,
+        })
+    }
+
+    /// The tuned tile decomposition for a configuration (`Some(None)` =
+    /// "tuned, and untiled won").
+    pub fn tile_for(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+    ) -> Option<Option<TileSpec>> {
+        self.lookup(model, planes, rows, cols, kernel_width).map(|t| t.candidate.tile)
+    }
+
+    /// Render the winners as a harness table (rows sorted for
+    /// deterministic output).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Tuning table: per-(model, shape, kernel) winners vs untiled row partition",
+            &["Model", "Shape", "Kernel", "Tuned config", "ms", "Speedup vs untiled"],
+        );
+        let mut keys: Vec<&TuneKey> = self.entries.keys().collect();
+        keys.sort_by_key(|k| (k.rows, k.cols, k.planes, k.kernel_width, k.model.clone()));
+        for key in keys {
+            let tuned = &self.entries[key];
+            t.row(vec![
+                key.model.clone(),
+                format!("{}x{}x{}", key.planes, key.rows, key.cols),
+                format!("w{}", key.kernel_width),
+                tuned.candidate.label(),
+                format!("{:.3}", tuned.ms),
+                format!("{:.2}x", tuned.speedup()),
+            ]);
+        }
+        t
+    }
+}
+
+/// Sweep every candidate under all three models at one square image
+/// size, render the paper-style agglomeration table, and record each
+/// model's winner in `table`.
+pub fn sweep_shape(cfg: &RunConfig, size: usize, table: &mut TuningTable) -> Result<Table> {
+    cfg.validate()?;
+    let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+    let kernel = cfg.kernel_spec();
+    let mut out = Table::new(
+        format!(
+            "Agglomeration sweep (measured): {size}x{size}x{} planes, {} threads, w{} kernel",
+            cfg.planes, cfg.threads, cfg.kernel_width
+        ),
+        &["Model", "Config", "total ms", "empty-dispatch ms", "vs untiled", ""],
+    );
+
+    let openmp = OpenMpModel::new(cfg.threads);
+    let opencl = OpenClModel::new(cfg.threads, 16);
+    let gprm = GprmModel::new(cfg.threads, cfg.cutoff).with_agglomeration(cfg.agglomeration.max(1));
+    // GPRM agglomeration is a model parameter, so agglomerated
+    // candidates need their own instance; built lazily, one per factor
+    let mut gprm_variants: HashMap<usize, GprmModel> = HashMap::new();
+
+    for model_ix in 0..3usize {
+        let base: &dyn ExecutionModel = match model_ix {
+            0 => &openmp,
+            1 => &opencl,
+            _ => &gprm,
+        };
+        let is_gprm = model_ix == 2;
+        let candidates = default_candidates(size, is_gprm);
+        let mut arena = ScratchArena::new();
+        let mut measured: Vec<(Candidate, f64, f64)> = Vec::with_capacity(candidates.len());
+        for cand in candidates {
+            let model: &dyn ExecutionModel = if is_gprm && cand.agglomeration > 1 {
+                &*gprm_variants
+                    .entry(cand.agglomeration)
+                    .or_insert_with(|| gprm.respawn_with_agglomeration(cand.agglomeration))
+            } else {
+                base
+            };
+            let plan = ConvPlan::builder()
+                .kernel(kernel)
+                .tile_opt(cand.tile)
+                .shape(cfg.planes, size, size)
+                .build()?;
+            let ms = time_reps(
+                || plan.execute_discard(Some(model), &img, &mut arena).expect("sweep execution"),
+                cfg.warmup,
+                cfg.reps,
+            )
+            .median();
+            // the paper's empty-task probe at this candidate's granularity
+            let overhead = match cand.tile {
+                Some(tile) => {
+                    model.overhead_probe2d(size, size, tile, cfg.warmup, cfg.reps).median()
+                }
+                None => model.overhead_probe_with(size, cfg.warmup, cfg.reps).median(),
+            };
+            measured.push((cand, ms, overhead));
+        }
+        // baseline is always index 0 (untiled); winner = min total ms
+        let baseline_ms = measured[0].1;
+        let best = measured
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        for (i, (cand, ms, overhead)) in measured.iter().enumerate() {
+            out.row(vec![
+                base.name().to_string(),
+                cand.label(),
+                format!("{ms:.3}"),
+                format!("{overhead:.4}"),
+                format!("{:.2}x", if *ms > 0.0 { baseline_ms / ms } else { 1.0 }),
+                if i == best { "◀ tuned".to_string() } else { String::new() },
+            ]);
+        }
+        let (cand, ms, _) = measured[best];
+        table.record(
+            TuneKey {
+                model: base.name().to_string(),
+                planes: cfg.planes,
+                rows: size,
+                cols: size,
+                kernel_width: cfg.kernel_width,
+            },
+            Tuned { candidate: cand, ms, baseline_ms },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> RunConfig {
+        RunConfig { sizes: vec![40], reps: 1, warmup: 0, threads: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn candidates_start_from_untiled_baseline() {
+        for gprm in [false, true] {
+            let c = default_candidates(288, gprm);
+            assert_eq!(c[0], Candidate::untiled(), "gprm={gprm}");
+            assert!(c.len() >= 4);
+            let has_agglomerated = c.iter().any(|x| x.agglomeration > 1);
+            assert_eq!(has_agglomerated, gprm, "agglomeration is the GPRM knob");
+        }
+        // tiny images keep only the shapes that fit
+        let c = default_candidates(8, true);
+        assert_eq!(c, vec![Candidate::untiled()]);
+    }
+
+    #[test]
+    fn candidate_labels() {
+        assert_eq!(Candidate::untiled().label(), "rows (untiled)");
+        let c = Candidate { tile: Some(TileSpec::new(16, usize::MAX)), agglomeration: 1 };
+        assert_eq!(c.label(), "16xfull");
+        let c = Candidate { tile: Some(TileSpec::new(32, 32)), agglomeration: 4 };
+        assert_eq!(c.label(), "32x32 agg=4");
+    }
+
+    #[test]
+    fn sweep_records_winners_no_worse_than_baseline() {
+        let cfg = tiny_cfg();
+        let mut table = TuningTable::new();
+        let rendered = sweep_shape(&cfg, 40, &mut table).unwrap();
+        assert!(rendered.n_rows() >= 3, "at least the three baselines");
+        assert_eq!(table.len(), 3, "one winner per model");
+        for model in ["OpenMP", "OpenCL", "GPRM"] {
+            let tuned = table.lookup(model, 3, 40, 40, 5).unwrap_or_else(|| {
+                panic!("missing winner for {model}")
+            });
+            assert!(
+                tuned.ms <= tuned.baseline_ms,
+                "{model}: winner {} ms vs baseline {} ms",
+                tuned.ms,
+                tuned.baseline_ms
+            );
+            assert!(tuned.speedup() >= 1.0);
+        }
+        assert!(table.tile_for("OpenMP", 3, 40, 40, 5).is_some());
+        assert!(table.lookup("OpenMP", 3, 41, 41, 5).is_none());
+        let summary = table.to_table();
+        assert_eq!(summary.n_rows(), 3);
+        assert!(summary.to_text().contains("GPRM"));
+    }
+
+    #[test]
+    fn sweep_rejects_invalid_config() {
+        let cfg = RunConfig { kernel_width: 4, ..tiny_cfg() };
+        assert!(sweep_shape(&cfg, 40, &mut TuningTable::new()).is_err());
+    }
+}

@@ -30,6 +30,14 @@ pub struct RunConfig {
     pub threads: usize,
     /// GPRM task cutoff (paper: 100).
     pub cutoff: usize,
+    /// Tile rows for 2-D tiled dispatch (0 = full height; tiling is off
+    /// when both tile dimensions are 0).
+    pub tile_rows: usize,
+    /// Tile columns for 2-D tiled dispatch (0 = full width).
+    pub tile_cols: usize,
+    /// GPRM task-agglomeration factor under tiled dispatch: tiles fused
+    /// per task instance (≥ 1; the paper's Fig. 3 knob).
+    pub agglomeration: usize,
     /// Synthetic input pattern + seed.
     pub pattern: Pattern,
     pub seed: u64,
@@ -56,6 +64,9 @@ impl Default for RunConfig {
             warmup: 3,
             threads: default_threads(),
             cutoff: 100,
+            tile_rows: 0,
+            tile_cols: 0,
+            agglomeration: 1,
             pattern: Pattern::Noise,
             seed: 20170710,
             artifacts_dir: crate::runtime::manifest::default_artifacts_dir(),
@@ -85,6 +96,9 @@ impl RunConfig {
         self.warmup = doc.usize_or("run.warmup", self.warmup);
         self.threads = doc.usize_or("run.threads", self.threads);
         self.cutoff = doc.usize_or("run.cutoff", self.cutoff);
+        self.tile_rows = doc.usize_or("run.tile_rows", self.tile_rows);
+        self.tile_cols = doc.usize_or("run.tile_cols", self.tile_cols);
+        self.agglomeration = doc.usize_or("run.agglomeration", self.agglomeration);
         if let Some(p) = doc.get("run.pattern") {
             let s = p.as_str().context("run.pattern must be a string")?;
             self.pattern =
@@ -131,6 +145,9 @@ impl RunConfig {
         set(cli, "warmup", &mut self.warmup)?;
         set(cli, "threads", &mut self.threads)?;
         set(cli, "cutoff", &mut self.cutoff)?;
+        set(cli, "tile-rows", &mut self.tile_rows)?;
+        set(cli, "tile-cols", &mut self.tile_cols)?;
+        set(cli, "agglomeration", &mut self.agglomeration)?;
         set(cli, "queue-capacity", &mut self.queue_capacity)?;
         if let Some(v) = cli.get("deadline-ms") {
             if !v.is_empty() {
@@ -166,6 +183,17 @@ impl RunConfig {
         crate::plan::KernelSpec::new(self.kernel_width, self.sigma)
     }
 
+    /// The run's tile decomposition: `None` when both tile dimensions
+    /// are 0 (untiled row-band dispatch); a 0 in one dimension means
+    /// "full extent" (clamped at grid resolution).
+    pub fn tile_spec(&self) -> Option<crate::plan::TileSpec> {
+        let full = |d: usize| if d == 0 { usize::MAX } else { d };
+        match (self.tile_rows, self.tile_cols) {
+            (0, 0) => None,
+            (r, c) => Some(crate::plan::TileSpec::new(full(r), full(c))),
+        }
+    }
+
     /// Structured validation of the resolved configuration — the CLI
     /// entry point for kernel errors (no silent fallback downstream).
     pub fn validate(&self) -> Result<()> {
@@ -174,6 +202,7 @@ impl RunConfig {
         ensure!(!self.sizes.is_empty(), "sizes must be non-empty");
         ensure!(self.sizes.iter().all(|&s| s >= 1), "every size must be >= 1, got {:?}", self.sizes);
         ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
+        ensure!(self.agglomeration >= 1, "agglomeration must be >= 1");
         Ok(())
     }
 
@@ -191,8 +220,9 @@ impl RunConfig {
             cfg.sizes = vec![288, 576];
         }
         cfg.reps = std::env::var("PHI_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
-        cfg.warmup =
-            std::env::var("PHI_BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+        // same parse rule as ExecutionModel::overhead_probe, so benches
+        // and probes agree on what PHI_BENCH_WARMUP means
+        cfg.warmup = crate::models::overhead_warmup();
         if let Ok(t) = std::env::var("PHI_BENCH_THREADS") {
             cfg.threads = t.parse().expect("threads");
         }
@@ -228,6 +258,9 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("warmup", "", "warmup runs (default 3)")
         .opt("threads", "", "worker threads (default: host cores)")
         .opt("cutoff", "", "GPRM task cutoff (default 100)")
+        .opt("tile-rows", "", "tile rows for 2-D dispatch (0 = full height; default 0)")
+        .opt("tile-cols", "", "tile columns for 2-D dispatch (0 = full width; default 0)")
+        .opt("agglomeration", "", "GPRM tiles fused per task under tiling (default 1)")
         .opt("pattern", "", "input pattern: noise|ramp-x|ramp-xy|checker|disc|constant")
         .opt("seed", "", "PRNG seed (default 20170710)")
         .opt("artifacts", "", "artifacts directory (default ./artifacts)")
@@ -328,6 +361,42 @@ mod tests {
             let doc = TomlDoc::parse(&format!("[run]\n{bad}\n")).unwrap();
             assert!(c.apply_toml(&doc).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn tiling_knobs_plumb_through_cli_and_toml() {
+        let c = RunConfig::default();
+        assert_eq!((c.tile_rows, c.tile_cols, c.agglomeration), (0, 0, 1));
+        assert_eq!(c.tile_spec(), None, "untiled by default");
+
+        let mut c = RunConfig::default();
+        let doc =
+            TomlDoc::parse("[run]\ntile_rows = 16\ntile_cols = 64\nagglomeration = 4\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!((c.tile_rows, c.tile_cols, c.agglomeration), (16, 64, 4));
+        assert_eq!(c.tile_spec(), Some(crate::plan::TileSpec::new(16, 64)));
+
+        let cli = standard_cli("t", "t")
+            .parse([
+                "--tile-rows".to_string(),
+                "8".to_string(),
+                "--agglomeration".to_string(),
+                "2".to_string(),
+            ])
+            .unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert_eq!((c.tile_rows, c.tile_cols, c.agglomeration), (8, 0, 2));
+        // one zero dimension means "full extent", not "untiled"
+        assert_eq!(c.tile_spec(), Some(crate::plan::TileSpec::new(8, usize::MAX)));
+    }
+
+    #[test]
+    fn zero_agglomeration_is_structured_error() {
+        let cli = standard_cli("t", "t")
+            .parse(["--agglomeration".to_string(), "0".to_string()])
+            .unwrap();
+        let e = RunConfig::resolve(&cli).unwrap_err();
+        assert!(format!("{e:#}").contains("agglomeration"), "got: {e:#}");
     }
 
     #[test]

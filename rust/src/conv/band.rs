@@ -33,8 +33,10 @@ fn dot5(w: &[f32], k: &[f32]) -> f32 {
 
 /// Window dot product of arbitrary width (the generic-width analogue of
 /// [`dot5`]); the paired `iter().zip()` shape keeps it vectorisable.
+/// Shared with the tile primitives in [`super::tile`] so tiled and
+/// banded sweeps accumulate in the same order (bitwise-comparable).
 #[inline(always)]
-fn dotw(w: &[f32], k: &[f32]) -> f32 {
+pub(crate) fn dotw(w: &[f32], k: &[f32]) -> f32 {
     let mut s = 0.0f32;
     for (a, b) in w.iter().zip(k) {
         s += a * b;

@@ -26,7 +26,9 @@
 //! All engines work on *row bands* `[r0, r1)` so the execution models in
 //! [`crate::models`] can parallelise the outer loop exactly like
 //! `#pragma omp parallel for` / GPRM's `par_cont_for` / OpenCL NDRange
-//! partitioning do in the paper.
+//! partitioning do in the paper. The [`tile`] module carries the 2-D
+//! siblings of the band primitives (rectangular tiles instead of full
+//! rows) that back the tiled `dispatch2d` plans.
 //!
 //! Every rung exists in two widths: the paper's hand-unrolled W=5
 //! primitives (the fast path) and generic odd-width `*_w` twins of the
@@ -36,6 +38,7 @@
 
 pub mod band;
 pub mod plane;
+pub mod tile;
 
 pub use plane::{convolve_image, convolve_plane, Algorithm, Variant};
 

@@ -1,0 +1,392 @@
+//! Tile convolution primitives — the 2-D siblings of the row-band
+//! functions in [`super::band`].
+//!
+//! Every function computes the cells of one [`Tile`] clamped to the
+//! plane interior (`[h, rows−h) × [h, cols−h)` for a halo-`h` kernel;
+//! copy-back covers the whole tile). Output goes through a
+//! [`TileCells`] accessor instead of a `dst_band` slice: tiles in the
+//! same row range own different column segments, so the disjointness
+//! that made row bands expressible as safe sub-slices lives at
+//! row-segment granularity here (see `TileCells` for the contract — the
+//! execution models' `dispatch2d` covers are disjoint by construction,
+//! property-tested in `tests/tiling.rs`).
+//!
+//! All primitives are generic over odd kernel width and accumulate in
+//! exactly the same order as the generic-width band engines (`dotw`
+//! windows for simd shapes, row subtotals for scalar, the 4-nested-loop
+//! order for naive), so a tiled sweep is bitwise comparable to an
+//! untiled one — the property the differential equivalence suite
+//! asserts.
+
+use super::band::dotw;
+use crate::models::pool::TileCells;
+use crate::models::Tile;
+
+/// Clamp a tile to the interior `[h, rows−h) × [h, cols−h)`; returns
+/// `None` when nothing of the tile survives (border-only tiles, or a
+/// kernel wider than the plane).
+#[inline]
+fn interior(rows: usize, cols: usize, h: usize, t: Tile) -> Option<(usize, usize, usize, usize)> {
+    if 2 * h >= cols || 2 * h >= rows {
+        return None; // no interior (also guards the `- h` arithmetic)
+    }
+    let (a, b) = (t.r0.max(h), t.r1.min(rows - h));
+    let (ja, jb) = (t.c0.max(h), t.c1.min(cols - h));
+    if a >= b || ja >= jb {
+        return None;
+    }
+    Some((a, b, ja, jb))
+}
+
+/// Naive single-pass over one tile (4 nested loops, the Opt-0 shape).
+pub fn singlepass_tile_naive(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), width * width);
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: [ja, jb) ⊆ this tile's columns, i ∈ this tile's rows;
+        // dispatch2d covers are disjoint tiles (property-tested).
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let mut s = 0.0f32;
+            for u in 0..width {
+                for v in 0..width {
+                    s += src[(i + u - h) * cols + (j + v - h)] * k2d[u * width + v];
+                }
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Single-pass, scalar shape, over one tile (per-pixel indexed
+/// arithmetic with per-source-row subtotals, like
+/// [`super::band::singlepass_band_scalar_w`]).
+pub fn singlepass_tile_scalar(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), width * width);
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let mut s = 0.0f32;
+            for u in 0..width {
+                let base = (i + u - h) * cols + j - h;
+                let ku = &k2d[u * width..(u + 1) * width];
+                let mut row_s = 0.0f32;
+                for (v, &kv) in ku.iter().enumerate() {
+                    row_s += src[base + v] * kv;
+                }
+                s += row_s;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Single-pass, SIMD shape, over one tile: per source row, a
+/// `width`-window dot-product sweep across the tile's columns.
+pub fn singlepass_tile_simd(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    width: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), width * width);
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        let row0 = &src[(i - h) * cols + ja - h..(i - h) * cols + jb + h];
+        for (o, win) in out_row.iter_mut().zip(row0.windows(width)) {
+            *o = dotw(win, &k2d[0..width]);
+        }
+        for u in 1..width {
+            let row = &src[(i + u - h) * cols + ja - h..(i + u - h) * cols + jb + h];
+            let ku = &k2d[u * width..(u + 1) * width];
+            for (o, win) in out_row.iter_mut().zip(row.windows(width)) {
+                *o += dotw(win, ku);
+            }
+        }
+    }
+}
+
+/// Horizontal pass, scalar shape, over one tile.
+pub fn horiz_tile_scalar(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    t: Tile,
+) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let base = i * cols + j - h;
+            let mut s = 0.0f32;
+            for (v, &kv) in k.iter().enumerate() {
+                s += src[base + v] * kv;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Horizontal pass, SIMD shape, over one tile: one `width`-window sweep
+/// across the tile's columns per row.
+pub fn horiz_tile_simd(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    t: Tile,
+) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        let row = &src[i * cols + ja - h..i * cols + jb + h];
+        for (o, win) in out_row.iter_mut().zip(row.windows(width)) {
+            *o = dotw(win, k);
+        }
+    }
+}
+
+/// Vertical pass, scalar shape, over one tile.
+pub fn vert_tile_scalar(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    t: Tile,
+) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let mut s = 0.0f32;
+            for (u, &ku) in k.iter().enumerate() {
+                s += src[(i + u - h) * cols + j] * ku;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Vertical pass, SIMD shape, over one tile: `width` aligned row-slice
+/// FMAs per tile row.
+pub fn vert_tile_simd(src: &[f32], out: &TileCells, rows: usize, cols: usize, k: &[f32], t: Tile) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    let w = jb - ja;
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        let row0 = &src[(i - h) * cols + ja..(i - h) * cols + ja + w];
+        for (o, &s0) in out_row.iter_mut().zip(row0) {
+            *o = s0 * k[0];
+        }
+        for u in 1..width {
+            let row = &src[(i + u - h) * cols + ja..(i + u - h) * cols + ja + w];
+            let ku = k[u];
+            for (o, &sv) in out_row.iter_mut().zip(row) {
+                *o += sv * ku;
+            }
+        }
+    }
+}
+
+/// Copy-back over one tile (covers the whole tile — the copy-back pass
+/// has no interior clamp).
+pub fn copy_back_tile(src: &[f32], out: &TileCells, cols: usize, t: Tile) {
+    for i in t.r0..t.r1 {
+        // SAFETY: segment is exactly this tile's columns; tiles are
+        // disjoint.
+        let out_row = unsafe { out.row_seg(i, t.c0, t.c1) };
+        out_row.copy_from_slice(&src[i * cols + t.c0..i * cols + t.c1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::band;
+    use crate::image::{gaussian_kernel, gaussian_kernel2d};
+    use crate::models::{TileGrid, TileSpec};
+    use crate::util::prng::Prng;
+
+    const R: usize = 26;
+    const C: usize = 22;
+
+    fn noise(seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..R * C).map(|_| p.normal()).collect()
+    }
+
+    /// Run a tile primitive over every tile of a grid, sequentially.
+    fn sweep_tiles(spec: TileSpec, dst: &mut [f32], f: impl Fn(&TileCells, Tile)) {
+        let grid = TileGrid::new(R, C, spec);
+        let cells = TileCells::new(dst, R, C);
+        for i in 0..grid.len() {
+            f(&cells, grid.tile(i));
+        }
+    }
+
+    #[test]
+    fn tiled_matches_banded_all_passes_width5() {
+        let src = noise(1);
+        let k = gaussian_kernel(5, 1.0);
+        let k2 = gaussian_kernel2d(&k);
+        let spec = TileSpec::new(5, 7); // ragged against 26x22
+        // (banded reference fn, tiled fn) pairs — generic width twins
+        let mut want = src.clone();
+        band::horiz_band_simd_w(&src, &mut want, R, C, &k, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| horiz_tile_simd(&src, cells, R, C, &k, t));
+        assert_eq!(want, got, "horiz simd");
+
+        let mut want = src.clone();
+        band::horiz_band_scalar_w(&src, &mut want, R, C, &k, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| horiz_tile_scalar(&src, cells, R, C, &k, t));
+        assert_eq!(want, got, "horiz scalar");
+
+        let mut want = src.clone();
+        band::vert_band_simd_w(&src, &mut want, R, C, &k, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| vert_tile_simd(&src, cells, R, C, &k, t));
+        assert_eq!(want, got, "vert simd");
+
+        let mut want = src.clone();
+        band::vert_band_scalar_w(&src, &mut want, R, C, &k, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| vert_tile_scalar(&src, cells, R, C, &k, t));
+        assert_eq!(want, got, "vert scalar");
+
+        let mut want = src.clone();
+        band::singlepass_band_simd_w(&src, &mut want, R, C, &k2, 5, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| {
+            singlepass_tile_simd(&src, cells, R, C, &k2, 5, t)
+        });
+        assert_eq!(want, got, "singlepass simd");
+
+        let mut want = src.clone();
+        band::singlepass_band_scalar_w(&src, &mut want, R, C, &k2, 5, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| {
+            singlepass_tile_scalar(&src, cells, R, C, &k2, 5, t)
+        });
+        assert_eq!(want, got, "singlepass scalar");
+
+        let mut want = src.clone();
+        band::singlepass_naive_band(&src, &mut want, R, C, &k2, 5, 0, R);
+        let mut got = src.clone();
+        sweep_tiles(spec, &mut got, |cells, t| {
+            singlepass_tile_naive(&src, cells, R, C, &k2, 5, t)
+        });
+        assert_eq!(want, got, "singlepass naive");
+    }
+
+    #[test]
+    fn tiled_matches_banded_width7() {
+        let src = noise(2);
+        let k = gaussian_kernel(7, 1.5);
+        let k2 = gaussian_kernel2d(&k);
+        for spec in [TileSpec::new(1, 1), TileSpec::new(4, 4), TileSpec::new(100, 3)] {
+            let mut want = src.clone();
+            band::horiz_band_simd_w(&src, &mut want, R, C, &k, 0, R);
+            let mut got = src.clone();
+            sweep_tiles(spec, &mut got, |cells, t| horiz_tile_simd(&src, cells, R, C, &k, t));
+            assert_eq!(want, got, "horiz {}", spec.label());
+
+            let mut want = src.clone();
+            band::singlepass_band_simd_w(&src, &mut want, R, C, &k2, 7, 0, R);
+            let mut got = src.clone();
+            sweep_tiles(spec, &mut got, |cells, t| {
+                singlepass_tile_simd(&src, cells, R, C, &k2, 7, t)
+            });
+            assert_eq!(want, got, "singlepass {}", spec.label());
+        }
+    }
+
+    #[test]
+    fn border_tiles_are_noops() {
+        let src = noise(3);
+        let k = gaussian_kernel(5, 1.0);
+        let mut dst = vec![9f32; R * C];
+        {
+            let cells = TileCells::new(&mut dst, R, C);
+            // tiles entirely inside the halo ring: nothing written
+            horiz_tile_simd(&src, &cells, R, C, &k, Tile { r0: 0, r1: 2, c0: 0, c1: C });
+            vert_tile_scalar(&src, &cells, R, C, &k, Tile { r0: 0, r1: R, c0: 0, c1: 2 });
+            singlepass_tile_scalar(
+                &src,
+                &cells,
+                R,
+                C,
+                &gaussian_kernel2d(&k),
+                5,
+                Tile { r0: R - 2, r1: R, c0: 0, c1: C },
+            );
+        }
+        assert!(dst.iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn kernel_wider_than_plane_is_noop() {
+        let src = noise(4);
+        let k = gaussian_kernel(9, 2.0);
+        let mut dst = vec![5f32; 10 * 7];
+        {
+            let cells = TileCells::new(&mut dst, 10, 7);
+            horiz_tile_simd(&src[..70], &cells, 10, 7, &k, Tile { r0: 0, r1: 10, c0: 0, c1: 7 });
+            vert_tile_simd(&src[..70], &cells, 10, 7, &k, Tile { r0: 0, r1: 10, c0: 0, c1: 7 });
+        }
+        assert!(dst.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn copy_back_tile_covers_whole_tile() {
+        let src = noise(5);
+        let mut dst = vec![0f32; R * C];
+        sweep_tiles(TileSpec::new(6, 5), &mut dst, |cells, t| {
+            copy_back_tile(&src, cells, C, t)
+        });
+        assert_eq!(dst, src);
+    }
+}

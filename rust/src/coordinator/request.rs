@@ -5,7 +5,7 @@ use std::time::Duration;
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::models::Layout;
-use crate::plan::KernelSpec;
+use crate::plan::{KernelSpec, TileSpec};
 
 use super::router::Backend;
 
@@ -24,6 +24,11 @@ pub struct ConvRequest {
     /// may carry its own Gaussian spec; executors cache one plan per
     /// distinct `(algorithm, variant, layout, shape, kernel)` key.
     pub kernel: Option<KernelSpec>,
+    /// `None` → the coordinator's configured tile decomposition (untiled
+    /// row bands unless `--tile-rows`/`--tile-cols` were set). A request
+    /// may carry its own tile; executors cache one plan per distinct
+    /// `(algorithm, variant, layout, shape, kernel, tile)` key.
+    pub tile: Option<TileSpec>,
     /// Time-to-live from submission. `None` → the coordinator's
     /// configured default (`--deadline-ms`; no deadline if that is 0).
     /// Checked at admission, while blocked waiting for a queue slot,
@@ -43,6 +48,7 @@ impl ConvRequest {
             backend: None,
             layout: None,
             kernel: None,
+            tile: None,
             deadline: None,
         }
     }
@@ -70,6 +76,13 @@ impl ConvRequest {
     /// Carry a per-request kernel (width + sigma); validated at intake.
     pub fn with_kernel(mut self, spec: KernelSpec) -> Self {
         self.kernel = Some(spec);
+        self
+    }
+
+    /// Carry a per-request 2-D tile decomposition (overrides the
+    /// coordinator's configured default); validated at plan build.
+    pub fn with_tile(mut self, spec: TileSpec) -> Self {
+        self.tile = Some(spec);
         self
     }
 
@@ -115,6 +128,7 @@ mod tests {
             .with_backend(Backend::NativeOpenMp)
             .with_layout(Layout::Agglomerated)
             .with_kernel(KernelSpec::new(7, 2.0))
+            .with_tile(TileSpec::new(16, 32))
             .with_deadline(Duration::from_millis(250));
         assert_eq!(r.id, 7);
         assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
@@ -122,6 +136,7 @@ mod tests {
         assert_eq!(r.backend, Some(Backend::NativeOpenMp));
         assert_eq!(r.layout, Some(Layout::Agglomerated));
         assert_eq!(r.kernel, Some(KernelSpec::new(7, 2.0)));
+        assert_eq!(r.tile, Some(TileSpec::new(16, 32)));
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 
@@ -132,6 +147,7 @@ mod tests {
         assert!(r.backend.is_none());
         assert!(r.layout.is_none());
         assert!(r.kernel.is_none());
+        assert!(r.tile.is_none());
         assert!(r.deadline.is_none());
         assert_eq!(r.algorithm, Algorithm::TwoPass);
     }

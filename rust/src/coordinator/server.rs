@@ -37,7 +37,7 @@ use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::metrics::SampleSet;
 use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
-use crate::plan::{ConvPlan, KernelSpec, ScratchArena};
+use crate::plan::{ConvPlan, KernelSpec, ScratchArena, TileSpec};
 use crate::runtime::{Manifest, PjrtHandle};
 
 use super::queue::{AdmissionQueue, Pop};
@@ -98,6 +98,9 @@ struct Inner {
     gprm: GprmModel,
     /// configured default kernel spec (requests may override)
     kernel: KernelSpec,
+    /// configured default tile decomposition for native execution
+    /// (requests may override; `None` = untiled row bands)
+    tile: Option<TileSpec>,
     /// taps the PJRT path executes with: the manifest's reference
     /// kernel when PJRT is loaded, the configured default otherwise
     kernel_taps: Vec<f32>,
@@ -137,6 +140,8 @@ struct PlanKey {
     rows: usize,
     cols: usize,
     kernel: (usize, u64),
+    /// tile decomposition (`None` = untiled row bands)
+    tile: Option<(usize, usize)>,
 }
 
 /// The serving loop (see module docs).
@@ -180,8 +185,13 @@ impl Coordinator {
             policy,
             openmp: OpenMpModel::new(cfg.threads),
             opencl: OpenClModel::new(cfg.threads, 16),
-            gprm: GprmModel::new(cfg.threads, cfg.cutoff),
+            // agglomeration only applies under tiled dispatch; a raw
+            // config with 0 is treated as 1 (validate() enforces >= 1 at
+            // the CLI/TOML entry points)
+            gprm: GprmModel::new(cfg.threads, cfg.cutoff)
+                .with_agglomeration(cfg.agglomeration.max(1)),
             kernel,
+            tile: cfg.tile_spec(),
             kernel_taps,
             pjrt,
             shards: (0..n).map(|_| Mutex::new(CoordinatorStats::default())).collect(),
@@ -403,10 +413,14 @@ fn serve_one(
     req: ConvRequest,
     queue_ms: f64,
 ) -> Result<ConvResponse> {
-    // request intake validation: a bad kernel spec is a structured error
-    // before any routing or execution happens
+    // request intake validation: a bad kernel or tile spec is a
+    // structured error before any routing or execution happens
     let kernel = req.kernel.unwrap_or(inner.kernel);
     kernel.validate().context("invalid request kernel")?;
+    let tile = req.tile.or(inner.tile);
+    if let Some(t) = tile {
+        t.validate().context("invalid request tile")?;
+    }
 
     // the round-robin counter advances only when the policy picks the
     // backend: explicitly pinned traffic (PJRT included) must not
@@ -446,6 +460,7 @@ fn serve_one(
                 rows: req.image.rows,
                 cols: req.image.cols,
                 kernel: kernel.cache_key(),
+                tile: tile.map(|t| t.cache_key()),
             };
             if !plans.contains_key(&key) {
                 if plans.len() >= PLAN_CACHE_MAX {
@@ -456,6 +471,7 @@ fn serve_one(
                     .variant(req.variant)
                     .layout(layout)
                     .kernel(kernel)
+                    .tile_opt(tile)
                     .shape(req.image.planes, req.image.rows, req.image.cols)
                     .build()
                     .context("invalid request plan")?;
@@ -682,6 +698,55 @@ mod tests {
             let resp = c.serve(ConvRequest::new(1, img.clone()).with_kernel(spec)).unwrap();
             assert_eq!(resp.image, want, "{spec:?}");
         }
+    }
+
+    #[test]
+    fn tiled_request_matches_untiled_pixels() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 30, 28, Pattern::Noise, 21);
+        let want = c.serve(ConvRequest::new(1, img.clone())).unwrap();
+        for tile in [TileSpec::new(4, 8), TileSpec::new(64, 64)] {
+            let got = c.serve(ConvRequest::new(2, img.clone()).with_tile(tile)).unwrap();
+            assert!(
+                got.image.max_abs_diff(&want.image) <= 1e-6,
+                "tile {}",
+                tile.label()
+            );
+        }
+        // every backend serves tiled requests
+        for backend in [Backend::NativeOpenCl, Backend::NativeGprm] {
+            let got = c
+                .serve(
+                    ConvRequest::new(3, img.clone())
+                        .with_backend(backend)
+                        .with_tile(TileSpec::new(8, 8)),
+                )
+                .unwrap();
+            assert!(got.image.max_abs_diff(&want.image) <= 1e-6, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn configured_tile_default_applies_to_requests() {
+        let cfg = RunConfig { tile_rows: 8, tile_cols: 8, agglomeration: 2, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeGprm), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 22);
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert!(resp.image.max_abs_diff(&want) <= 1e-6);
+    }
+
+    #[test]
+    fn invalid_request_tile_is_structured_error() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 23);
+        let err = c
+            .serve(ConvRequest::new(1, img.clone()).with_tile(TileSpec::new(0, 8)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("tile"), "got: {err:#}");
+        // the coordinator keeps serving afterwards
+        assert!(c.serve(ConvRequest::new(2, img)).is_ok());
     }
 
     #[test]

@@ -29,7 +29,8 @@ impl Measured {
             kernel: gaussian_kernel(cfg.kernel_width, cfg.sigma),
             openmp: OpenMpModel::new(cfg.threads),
             opencl: OpenClModel::new(cfg.threads, 16),
-            gprm: GprmModel::new(cfg.threads, cfg.cutoff),
+            gprm: GprmModel::new(cfg.threads, cfg.cutoff)
+                .with_agglomeration(cfg.agglomeration.max(1)),
         }
     }
 
@@ -127,10 +128,14 @@ impl Measured {
             let omp = self.par_ms(&self.openmp, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
             let ocl = self.par_ms(&self.opencl, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
             let gprm = self.par_ms(&self.gprm, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
-            // empty-task probes: same dispatch count as the real run
+            // empty-task probes: same dispatch count as the real run;
+            // warmup follows the run config (not the old hardcoded 2)
             let dispatches = 2 * self.cfg.planes;
-            let ocl_ov = self.opencl.overhead_probe(size, 10).median() * dispatches as f64;
-            let gprm_ov = self.gprm.overhead_probe(size, 10).median() * dispatches as f64;
+            let warmup = self.cfg.warmup;
+            let ocl_ov =
+                self.opencl.overhead_probe_with(size, warmup, 10).median() * dispatches as f64;
+            let gprm_ov =
+                self.gprm.overhead_probe_with(size, warmup, 10).median() * dispatches as f64;
             t.row(vec![
                 format!("{size}x{size}"),
                 format!("{omp:.2}"),
@@ -242,7 +247,7 @@ impl Measured {
         for cutoff in [1usize, 10, 50, 100, 240, 480, 1000] {
             let m = self.gprm.with_cutoff(cutoff);
             let total = self.par_ms(&m, &img, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
-            let ov = m.overhead_probe(size, 8).median();
+            let ov = m.overhead_probe_with(size, self.cfg.warmup, 8).median();
             t.row(vec![cutoff.to_string(), format!("{total:.2}"), format!("{ov:.4}")]);
         }
         out.push(t);
@@ -355,6 +360,16 @@ mod tests {
         assert!(crate::harness::run_measured("table1", &cfg).is_err());
         let cfg = RunConfig { planes: 0, ..tiny_cfg() };
         assert!(crate::harness::run_measured("fig2", &cfg).is_err());
+    }
+
+    #[test]
+    fn tiling_exhibit_renders_sweep_and_winners() {
+        let cfg = RunConfig { sizes: vec![40], reps: 1, warmup: 0, threads: 2, ..Default::default() };
+        let tables = crate::harness::run_measured("tiling", &cfg).unwrap();
+        // one sweep table per size plus the tuned-winner summary
+        assert_eq!(tables.len(), 2);
+        assert!(tables[0].to_text().contains("tuned"));
+        assert_eq!(tables[1].n_rows(), 3, "one winner per model");
     }
 
     #[test]

@@ -20,8 +20,8 @@ use crate::metrics::Table;
 use crate::models::Layout;
 
 /// All exhibit names.
-pub const EXHIBITS: [&str; 9] =
-    ["fig1", "fig2", "fig3", "fig4", "table1", "table2", "threads", "ablations", "all"];
+pub const EXHIBITS: [&str; 10] =
+    ["fig1", "fig2", "fig3", "fig4", "table1", "table2", "threads", "ablations", "tiling", "all"];
 
 /// Generate the simulated rendition of an exhibit.
 pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
@@ -35,6 +35,9 @@ pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
         "threads" => vec![sim_tables::threads_sweep()],
         // ablations are host-measured only (cutoff is already a sim knob)
         "ablations" => vec![sim_tables::threads_sweep()],
+        // the tiling sweep is host-measured; its simulated counterpart
+        // is the paper's own agglomeration exhibit (Fig. 3)
+        "tiling" => vec![sim_tables::fig3()],
         "all" => vec![
             sim_tables::fig1(),
             sim_tables::table1(),
@@ -69,6 +72,17 @@ pub fn run_measured(exhibit: &str, cfg: &RunConfig) -> Result<Vec<Table>> {
             vec![m.threads_sweep(&counts)]
         }
         "ablations" => m.ablations(),
+        "tiling" => {
+            // the agglomeration-sweep exhibit: one table per size plus
+            // the tuned-winner summary (see crate::autotune)
+            let mut table = crate::autotune::TuningTable::new();
+            let mut out = Vec::new();
+            for &size in &cfg.sizes {
+                out.push(crate::autotune::sweep_shape(cfg, size, &mut table)?);
+            }
+            out.push(table.to_table());
+            out
+        }
         "all" => vec![
             m.fig1(),
             m.table1(),

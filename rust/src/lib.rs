@@ -23,7 +23,12 @@
 //!   pluggable execution engines over a shared worker-pool substrate:
 //!   OpenMP-style fork-join static chunking, OpenCL-style NDRange
 //!   work-groups, and GPRM-style task graphs with cutoff + stealing +
-//!   task agglomeration.
+//!   task agglomeration. Both row-range `dispatch` and 2-D tiled
+//!   `dispatch2d` (the agglomeration axis) are part of the contract.
+//! * [`autotune`] — sweeps tile shapes and agglomeration factors per
+//!   (model, image shape, kernel width), mirrors the paper's
+//!   agglomeration experiment as a harness table, and keeps the winners
+//!   in an in-memory tuning table (`phi-conv tune`).
 //! * [`phisim`] — a calibrated analytic timing model of the Xeon Phi
 //!   5110P that regenerates the paper's Tables 1–2 and Figures 1–4
 //!   (the hardware substitute; DESIGN.md §1).
@@ -59,6 +64,7 @@
 #[macro_use]
 pub mod util;
 
+pub mod autotune;
 pub mod config;
 pub mod conv;
 pub mod coordinator;

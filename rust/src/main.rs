@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate     regenerate a paper exhibit from the Xeon Phi cost model
 //!   measure      run the same exhibit measured on this host
+//!   tune         sweep tile shapes + agglomeration factors per model
 //!   validate     cross-check PJRT artifacts vs the native engines
 //!   serve        start the coordinator and push a synthetic workload
 //!   info         artifact manifest + configuration summary
@@ -10,8 +11,9 @@
 //! Examples:
 //!   phi-conv simulate --exhibit all
 //!   phi-conv measure --exhibit table1 --sizes 288,576 --reps 5
+//!   phi-conv tune --sizes 288,576 --reps 5
 //!   phi-conv validate
-//!   phi-conv serve --requests 40 --executors 2
+//!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
 //!   phi-conv info
 
 use phi_conv::{bail, ensure, Context, Result};
@@ -61,6 +63,7 @@ fn run() -> Result<()> {
                 print_table(&t, cli.str_of("format")?);
             }
         }
+        "tune" => tune(&cfg, cli.str_of("format")?)?,
         "validate" => validate(&cfg)?,
         "serve" => serve(
             &cfg,
@@ -71,7 +74,7 @@ fn run() -> Result<()> {
         )?,
         "info" => info(&cfg)?,
         _ => {
-            println!("usage: phi-conv <simulate|measure|validate|serve|info> [options]");
+            println!("usage: phi-conv <simulate|measure|tune|validate|serve|info> [options]");
             println!("       phi-conv --help        for the option list");
         }
     }
@@ -84,6 +87,23 @@ fn print_table(t: &phi_conv::metrics::Table, format: &str) {
         "csv" => println!("{}", t.to_csv()),
         _ => println!("{}", t.to_text()),
     }
+}
+
+/// The agglomeration auto-tune: sweep tile shapes (and, for GPRM,
+/// tiles-per-task factors) per model at each configured size, print the
+/// paper-style sweep tables, and finish with the tuned-winner summary.
+fn tune(cfg: &RunConfig, format: &str) -> Result<()> {
+    eprintln!(
+        "tuning tile/agglomeration on host: sizes {:?}, {} threads, {} reps",
+        cfg.sizes, cfg.threads, cfg.reps
+    );
+    let mut table = phi_conv::autotune::TuningTable::new();
+    for &size in &cfg.sizes {
+        let t = phi_conv::autotune::sweep_shape(cfg, size, &mut table)?;
+        print_table(&t, format);
+    }
+    print_table(&table.to_table(), format);
+    Ok(())
 }
 
 /// Cross-check every full/agg/ablation artifact against the native

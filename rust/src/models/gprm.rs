@@ -29,7 +29,7 @@ use std::collections::VecDeque;
 use std::sync::Mutex;
 
 use super::pool::WorkerPool;
-use super::{static_chunk, ExecutionModel};
+use super::{static_chunk, ExecutionModel, Tile, TileGrid, TileSpec};
 
 /// Victim-selection policy for work stealing (ablation subject; the
 /// GPRM papers describe "steal locally, share globally" ring order, and
@@ -47,22 +47,39 @@ pub struct GprmModel {
     pool: WorkerPool,
     cutoff: usize,
     steal: StealPolicy,
+    /// tiles fused per task instance under `dispatch2d` (the paper's
+    /// task-agglomeration factor; 1 = one task per tile)
+    agglomeration: usize,
 }
 
 impl GprmModel {
     /// GPRM pins threads = cores at startup; `cutoff` is chosen per
-    /// program (the paper's magic number is 100). Ring stealing.
+    /// program (the paper's magic number is 100). Ring stealing, no
+    /// tile agglomeration.
     pub fn new(threads: usize, cutoff: usize) -> Self {
         Self::with_policy(threads, cutoff, StealPolicy::Ring)
     }
 
     pub fn with_policy(threads: usize, cutoff: usize, steal: StealPolicy) -> Self {
         assert!(cutoff > 0, "cutoff must be ≥ 1");
-        Self { pool: WorkerPool::new(threads), cutoff, steal }
+        Self { pool: WorkerPool::new(threads), cutoff, steal, agglomeration: 1 }
+    }
+
+    /// Set the `dispatch2d` agglomeration factor: how many tiles each
+    /// task instance fuses (the knob the paper's Fig. 3 experiment
+    /// turns). Builder-style; 1 = maximally fine-grained.
+    pub fn with_agglomeration(mut self, factor: usize) -> Self {
+        assert!(factor >= 1, "agglomeration factor must be ≥ 1");
+        self.agglomeration = factor;
+        self
     }
 
     pub fn cutoff(&self) -> usize {
         self.cutoff
+    }
+
+    pub fn agglomeration(&self) -> usize {
+        self.agglomeration
     }
 
     pub fn steal_policy(&self) -> StealPolicy {
@@ -73,21 +90,27 @@ impl GprmModel {
     /// (new thread tiles) — used by the cutoff-sweep ablation.
     pub fn with_cutoff(&self, cutoff: usize) -> Self {
         Self::with_policy(self.pool.len(), cutoff, self.steal)
-    }
-}
-
-impl ExecutionModel for GprmModel {
-    fn name(&self) -> &'static str {
-        "GPRM"
+            .with_agglomeration(self.agglomeration)
     }
 
-    fn workers(&self) -> usize {
-        self.pool.len()
+    /// A copy with a different agglomeration factor (new thread tiles) —
+    /// used by the autotune sweep.
+    pub fn respawn_with_agglomeration(&self, factor: usize) -> Self {
+        Self::with_policy(self.pool.len(), self.cutoff, self.steal).with_agglomeration(factor)
     }
 
-    fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
+    /// Task instances a `dispatch2d` over `n_tiles` creates: tiles
+    /// fused `agglomeration` at a time (the 2-D analogue of `cutoff`).
+    pub fn agglomerated_cutoff(&self, n_tiles: usize) -> usize {
+        n_tiles.div_ceil(self.agglomeration)
+    }
+
+    /// The shared GPRM machinery: build `cutoff` task instances, map
+    /// them round-robin onto per-thread deques (the compile-time
+    /// mapping), then let every worker drain its own tile LIFO and
+    /// steal FIFO per the policy. `run(ind)` executes task `ind`.
+    fn run_graph(&self, cutoff: usize, run: &(dyn Fn(usize) + Sync)) {
         let t = self.pool.len();
-        let cutoff = self.cutoff;
         // --- "compile time": build the task instances and the initial
         // round-robin mapping onto thread tiles -------------------------
         let deques: Vec<Mutex<VecDeque<usize>>> =
@@ -102,7 +125,7 @@ impl ExecutionModel for GprmModel {
             loop {
                 let task = deques[id].lock().unwrap().pop_back();
                 match task {
-                    Some(ind) => run_task(ind, cutoff, n, job),
+                    Some(ind) => run(ind),
                     None => break,
                 }
             }
@@ -111,7 +134,7 @@ impl ExecutionModel for GprmModel {
                 StealPolicy::Ring => {
                     for off in 1..t {
                         let victim = (id + off) % t;
-                        drain_victim(&deques[victim], cutoff, n, job);
+                        drain_victim(&deques[victim], run);
                     }
                 }
                 StealPolicy::Random => {
@@ -121,11 +144,11 @@ impl ExecutionModel for GprmModel {
                     for _ in 0..2 * t {
                         let victim = rng.below(t);
                         if victim != id {
-                            drain_victim(&deques[victim], cutoff, n, job);
+                            drain_victim(&deques[victim], run);
                         }
                     }
                     for off in 1..t {
-                        drain_victim(&deques[(id + off) % t], cutoff, n, job);
+                        drain_victim(&deques[(id + off) % t], run);
                     }
                 }
             }
@@ -133,28 +156,54 @@ impl ExecutionModel for GprmModel {
     }
 }
 
-/// `par_cont_for`: task `ind` of `cutoff` covers its contiguous share of
-/// the `n` rows (paper Listing 3).
-#[inline]
-fn run_task(ind: usize, cutoff: usize, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
-    let (r0, r1) = static_chunk(n, cutoff, ind);
-    if r0 < r1 {
-        job(r0, r1);
+impl ExecutionModel for GprmModel {
+    fn name(&self) -> &'static str {
+        "GPRM"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
+        let cutoff = self.cutoff;
+        // task `ind` is `par_cont_for(ind)`: its contiguous share of the
+        // `n` rows (paper Listing 3)
+        self.run_graph(cutoff, &|ind| {
+            let (r0, r1) = static_chunk(n, cutoff, ind);
+            if r0 < r1 {
+                job(r0, r1);
+            }
+        });
+    }
+
+    fn dispatch2d(&self, rows: usize, cols: usize, tile: TileSpec, job: &(dyn Fn(Tile) + Sync)) {
+        // the cutoff of the 2-D graph is derived from the tile count:
+        // each task instance fuses `agglomeration` consecutive tiles of
+        // the row-major enumeration — exactly the paper's agglomeration
+        // experiment, where coarsening tasks amortises graph overhead
+        let grid = TileGrid::new(rows, cols, tile);
+        let n_tiles = grid.len();
+        if n_tiles == 0 {
+            return;
+        }
+        let cutoff = self.agglomerated_cutoff(n_tiles);
+        self.run_graph(cutoff, &|ind| {
+            let (t0, t1) = static_chunk(n_tiles, cutoff, ind);
+            for t in t0..t1 {
+                job(grid.tile(t));
+            }
+        });
     }
 }
 
 /// Steal every currently-queued task of one victim tile.
 #[inline]
-fn drain_victim(
-    deque: &Mutex<VecDeque<usize>>,
-    cutoff: usize,
-    n: usize,
-    job: &(dyn Fn(usize, usize) + Sync),
-) {
+fn drain_victim(deque: &Mutex<VecDeque<usize>>, run: &(dyn Fn(usize) + Sync)) {
     loop {
         let task = deque.lock().unwrap().pop_front();
         match task {
-            Some(ind) => run_task(ind, cutoff, n, job),
+            Some(ind) => run(ind),
             None => break,
         }
     }
@@ -258,6 +307,48 @@ mod tests {
             let got = convolve_parallel(&m, &img, &k, Algorithm::TwoPass, Variant::Simd, Layout::PerPlane).unwrap();
             assert_eq!(got, want, "{policy:?}");
         }
+    }
+
+    #[test]
+    fn dispatch2d_covers_exactly_once_across_agglomeration() {
+        for agglomeration in [1usize, 3, 16, 1000] {
+            let m = GprmModel::new(5, 50).with_agglomeration(agglomeration);
+            let (rows, cols) = (31, 27);
+            let hits = Mutex::new(vec![0u32; rows * cols]);
+            m.dispatch2d(rows, cols, TileSpec::new(3, 5), &|t| {
+                let mut h = hits.lock().unwrap();
+                for i in t.r0..t.r1 {
+                    for j in t.c0..t.c1 {
+                        h[i * cols + j] += 1;
+                    }
+                }
+            });
+            assert!(
+                hits.lock().unwrap().iter().all(|&h| h == 1),
+                "agglomeration {agglomeration}"
+            );
+        }
+    }
+
+    #[test]
+    fn agglomeration_fuses_tiles_into_tasks() {
+        // 24x24 in 4x4 tiles = 36 tiles; agglomeration 6 ⇒ 6 task
+        // instances, each running 6 consecutive tiles
+        let m = GprmModel::new(4, 100).with_agglomeration(6);
+        assert_eq!(m.agglomeration(), 6);
+        assert_eq!(m.agglomerated_cutoff(36), 6);
+        assert_eq!(m.agglomerated_cutoff(37), 7); // ragged tail gets a task
+        assert_eq!(m.respawn_with_agglomeration(2).agglomeration(), 2);
+        assert_eq!(m.with_cutoff(7).agglomeration(), 6, "with_cutoff keeps the factor");
+        let count = Mutex::new(0usize);
+        m.dispatch2d(24, 24, TileSpec::new(4, 4), &|_| *count.lock().unwrap() += 1);
+        assert_eq!(*count.lock().unwrap(), 36, "every tile runs exactly once");
+    }
+
+    #[test]
+    fn dispatch2d_empty_grid_is_noop() {
+        let m = GprmModel::new(3, 10);
+        m.dispatch2d(0, 8, TileSpec::new(2, 2), &|_| panic!("no tile expected"));
     }
 
     #[test]

@@ -18,19 +18,24 @@
 //!
 //! All models guarantee the same contract: `dispatch(n, job)` invokes
 //! `job` over a **disjoint cover** of `[0, n)` and returns after an
-//! implicit barrier. Pixel-level equivalence with the sequential engines
-//! is enforced by integration tests; cover-exactness by property tests.
+//! implicit barrier; `dispatch2d(rows, cols, tile, job)` does the same
+//! over a **disjoint tile cover** of the `rows × cols` grid (the
+//! agglomeration axis — see [`tile`]). Pixel-level equivalence with the
+//! sequential engines is enforced by integration tests; cover-exactness
+//! by property tests (`tests/tiling.rs`).
 
 pub mod convolve;
 pub mod gprm;
 pub mod opencl;
 pub mod openmp;
 pub mod pool;
+pub mod tile;
 
 pub use convolve::{convolve_parallel, convolve_plane_parallel, Layout};
 pub use gprm::{GprmModel, StealPolicy};
 pub use opencl::OpenClModel;
 pub use openmp::{OpenMpModel, Schedule};
+pub use tile::{Tile, TileGrid, TileSpec};
 
 use crate::metrics::SampleSet;
 
@@ -46,15 +51,85 @@ pub trait ExecutionModel: Send + Sync {
     /// return. Implementations choose the partition and the schedule.
     fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync));
 
+    /// Execute `job(tile)` over a disjoint tile cover of the
+    /// `rows × cols` grid, barrier, return (see [`TileGrid`] for the
+    /// decomposition). The default adapter linearises the grid row-major
+    /// and reuses `dispatch`'s 1-D schedule over tile indices; the three
+    /// models override it natively — OpenMP stripes contiguous tile-rows
+    /// per thread, OpenCL drains one tile per work-group from the
+    /// command queue, GPRM agglomerates tiles into task instances.
+    fn dispatch2d(&self, rows: usize, cols: usize, tile: TileSpec, job: &(dyn Fn(Tile) + Sync)) {
+        let grid = TileGrid::new(rows, cols, tile);
+        if grid.is_empty() {
+            return;
+        }
+        self.dispatch(grid.len(), &|t0, t1| {
+            for t in t0..t1 {
+                job(grid.tile(t));
+            }
+        });
+    }
+
     /// Measure the model's fixed dispatch overhead: time `reps` empty
     /// dispatches of the same shape and return per-dispatch ms.
     ///
     /// This is exactly the paper's methodology for Table 2 ("we can
     /// create empty tasks and measure the overhead of distributing them
-    /// across different threads").
+    /// across different threads"). Warmup honours `PHI_BENCH_WARMUP`
+    /// (default 2); use [`ExecutionModel::overhead_probe_with`] to pin
+    /// it explicitly.
     fn overhead_probe(&self, n: usize, reps: usize) -> SampleSet {
-        crate::metrics::time_reps(|| self.dispatch(n, &|_, _| {}), 2, reps)
+        self.overhead_probe_with(n, overhead_warmup(), reps)
     }
+
+    /// [`ExecutionModel::overhead_probe`] with an explicit warmup count
+    /// (the harness passes its configured `RunConfig::warmup`).
+    fn overhead_probe_with(&self, n: usize, warmup: usize, reps: usize) -> SampleSet {
+        crate::metrics::time_reps(|| self.dispatch(n, &|_, _| {}), warmup, reps)
+    }
+
+    /// The empty-task probe at tile granularity: time `reps` empty
+    /// `dispatch2d` calls of the given shape — the paper's Table-2
+    /// methodology applied to the agglomeration experiment (more tiles
+    /// per dispatch ⇒ more scheduling traffic to measure).
+    fn overhead_probe2d(
+        &self,
+        rows: usize,
+        cols: usize,
+        tile: TileSpec,
+        warmup: usize,
+        reps: usize,
+    ) -> SampleSet {
+        crate::metrics::time_reps(|| self.dispatch2d(rows, cols, tile, &|_| {}), warmup, reps)
+    }
+}
+
+/// Warmup count for [`ExecutionModel::overhead_probe`]: the
+/// `PHI_BENCH_WARMUP` knob every measured bench honours (previously a
+/// hardcoded 2 that silently ignored the env), defaulting to 2.
+/// `RunConfig::from_bench_env` funnels through this too, so probe and
+/// bench agree on what the knob means.
+pub fn overhead_warmup() -> usize {
+    parse_overhead_warmup(std::env::var("PHI_BENCH_WARMUP").ok())
+}
+
+/// Parse rule behind [`overhead_warmup`] (separate so tests never have
+/// to mutate process-global env vars).
+pub(crate) fn parse_overhead_warmup(v: Option<String>) -> usize {
+    v.and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+
+/// Worker-thread count for scheduling tests: `PHI_THREADS` if set (the
+/// CI matrix runs the suite at 1 and 4 to exercise both the serial and
+/// the contended paths), else `default`.
+pub fn test_threads(default: usize) -> usize {
+    parse_test_threads(std::env::var("PHI_THREADS").ok(), default)
+}
+
+/// Parse rule behind [`test_threads`]: nonsense values (unparsable, or
+/// 0 — pools need at least one worker) fall back to the default.
+pub(crate) fn parse_test_threads(v: Option<String>, default: usize) -> usize {
+    v.and_then(|v| v.parse().ok()).filter(|&n: &usize| n >= 1).unwrap_or(default)
 }
 
 /// The partition used by static schedulers: chunk `t` of `parts` covers
@@ -94,5 +169,57 @@ mod tests {
             let len = b - a;
             assert!(len == 10 || len == 11, "chunk {t} has {len}");
         }
+    }
+
+    #[test]
+    fn default_dispatch2d_adapter_covers_exactly() {
+        // any model inherits a correct dispatch2d from its dispatch; use
+        // OpenMP through the default adapter explicitly
+        struct Adapter(OpenMpModel);
+        impl ExecutionModel for Adapter {
+            fn name(&self) -> &'static str {
+                "adapter"
+            }
+            fn workers(&self) -> usize {
+                self.0.workers()
+            }
+            fn dispatch(&self, n: usize, job: &(dyn Fn(usize, usize) + Sync)) {
+                self.0.dispatch(n, job);
+            }
+            // dispatch2d intentionally NOT overridden
+        }
+        let m = Adapter(OpenMpModel::new(3));
+        let (rows, cols) = (23, 17);
+        let hits = std::sync::Mutex::new(vec![0u32; rows * cols]);
+        m.dispatch2d(rows, cols, TileSpec::new(4, 5), &|t| {
+            let mut h = hits.lock().unwrap();
+            for i in t.r0..t.r1 {
+                for j in t.c0..t.c1 {
+                    h[i * cols + j] += 1;
+                }
+            }
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+        // empty grid: no job, no panic
+        m.dispatch2d(0, 10, TileSpec::new(4, 4), &|_| panic!("no tile expected"));
+    }
+
+    #[test]
+    fn overhead_probe_warmup_env_knob() {
+        // PHI_BENCH_WARMUP drives the probe's unrecorded runs (was a
+        // hardcoded 2); the parse rule is tested purely — mutating the
+        // process env would race parallel tests that call overhead_probe
+        assert_eq!(parse_overhead_warmup(Some("7".into())), 7);
+        assert_eq!(parse_overhead_warmup(Some("not-a-number".into())), 2);
+        assert_eq!(parse_overhead_warmup(None), 2);
+    }
+
+    #[test]
+    fn test_threads_env_knob() {
+        // pure parse rule: no process-global env mutation in tests
+        assert_eq!(parse_test_threads(Some("3".into()), 8), 3);
+        assert_eq!(parse_test_threads(Some("0".into()), 8), 8); // pools need >= 1
+        assert_eq!(parse_test_threads(Some("bogus".into()), 8), 8);
+        assert_eq!(parse_test_threads(None, 8), 8);
     }
 }

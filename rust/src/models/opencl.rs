@@ -23,7 +23,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::pool::WorkerPool;
-use super::ExecutionModel;
+use super::{ExecutionModel, Tile, TileGrid, TileSpec};
 
 pub struct OpenClModel {
     pool: WorkerPool,
@@ -64,6 +64,25 @@ impl ExecutionModel for OpenClModel {
             let r0 = g * local;
             let r1 = ((g + 1) * local).min(n);
             job(r0, r1);
+        });
+    }
+
+    fn dispatch2d(&self, rows: usize, cols: usize, tile: TileSpec, job: &(dyn Fn(Tile) + Sync)) {
+        // a 2-D NDRange: each tile IS one work-group (the tile shape
+        // plays the role `local_size` plays in 1-D dispatch), and CU
+        // threads drain groups dynamically from the command queue
+        let grid = TileGrid::new(rows, cols, tile);
+        if grid.is_empty() {
+            return; // nothing enqueued: skip the broadcast barrier
+        }
+        let ngroups = grid.len();
+        let cursor = AtomicUsize::new(0);
+        self.pool.broadcast(&|_cu| loop {
+            let g = cursor.fetch_add(1, Ordering::Relaxed);
+            if g >= ngroups {
+                break;
+            }
+            job(grid.tile(g));
         });
     }
 }
@@ -116,6 +135,46 @@ mod tests {
     fn zero_rows_is_noop() {
         let m = OpenClModel::new(2, 8);
         m.dispatch(0, &|_, _| panic!("no group expected"));
+    }
+
+    #[test]
+    fn dispatch2d_covers_exactly_once() {
+        for tile in [TileSpec::new(1, 1), TileSpec::new(5, 8), TileSpec::new(1000, 1000)] {
+            let m = OpenClModel::new(4, 16);
+            let (rows, cols) = (29, 21);
+            let hits = Mutex::new(vec![0u32; rows * cols]);
+            m.dispatch2d(rows, cols, tile, &|t| {
+                let mut h = hits.lock().unwrap();
+                for i in t.r0..t.r1 {
+                    for j in t.c0..t.c1 {
+                        h[i * cols + j] += 1;
+                    }
+                }
+            });
+            assert!(
+                hits.lock().unwrap().iter().all(|&h| h == 1),
+                "tile {}",
+                tile.label()
+            );
+        }
+    }
+
+    #[test]
+    fn dispatch2d_tiles_are_workgroups() {
+        // 10x10 in 4x4 tiles: 9 groups, interior ones exactly 4x4
+        let m = OpenClModel::new(3, 1);
+        let tiles = Mutex::new(vec![]);
+        m.dispatch2d(10, 10, TileSpec::new(4, 4), &|t| tiles.lock().unwrap().push(t));
+        let got = tiles.into_inner().unwrap();
+        assert_eq!(got.len(), 9);
+        assert!(got.iter().any(|t| t.rows() == 4 && t.cols() == 4));
+        assert!(got.iter().any(|t| t.rows() == 2 && t.cols() == 2)); // corner
+    }
+
+    #[test]
+    fn dispatch2d_empty_grid_is_noop() {
+        let m = OpenClModel::new(2, 8);
+        m.dispatch2d(0, 0, TileSpec::new(4, 4), &|_| panic!("no tile expected"));
     }
 
     #[test]

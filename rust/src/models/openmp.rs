@@ -17,7 +17,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::pool::WorkerPool;
-use super::{static_chunk, ExecutionModel};
+use super::{static_chunk, ExecutionModel, Tile, TileGrid, TileSpec};
 
 /// OpenMP loop schedules (ablation subject — the paper uses the Intel
 /// default, `static`; `dynamic`/`guided` are provided to measure what
@@ -111,6 +111,63 @@ impl ExecutionModel for OpenMpModel {
                         (r0, r0 + take)
                     };
                     job(r0, r1);
+                });
+            }
+        }
+    }
+
+    fn dispatch2d(&self, rows: usize, cols: usize, tile: TileSpec, job: &(dyn Fn(Tile) + Sync)) {
+        let grid = TileGrid::new(rows, cols, tile);
+        if grid.is_empty() {
+            return;
+        }
+        let t_total = self.pool.len();
+        match self.schedule {
+            // `#pragma omp parallel for` over the *outer* tiled loop:
+            // contiguous stripes of tile-rows per thread, so each worker
+            // touches a contiguous slab of the image (cache-friendly,
+            // like the 1-D static chunks)
+            Schedule::Static => self.pool.broadcast(&|t| {
+                let (d0, d1) = static_chunk(grid.tiles_down(), t_total, t);
+                for trow in d0..d1 {
+                    for tcol in 0..grid.tiles_across() {
+                        job(grid.tile_at(trow, tcol));
+                    }
+                }
+            }),
+            // dynamic/guided drain the row-major tile index space from a
+            // shared cursor, exactly like their 1-D row schedules
+            Schedule::Dynamic(chunk) => {
+                let n = grid.len();
+                let cursor = AtomicUsize::new(0);
+                self.pool.broadcast(&|_t| loop {
+                    let t0 = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if t0 >= n {
+                        break;
+                    }
+                    for t in t0..(t0 + chunk).min(n) {
+                        job(grid.tile(t));
+                    }
+                });
+            }
+            Schedule::Guided(min_chunk) => {
+                let n = grid.len();
+                let state = std::sync::Mutex::new(0usize); // next tile
+                self.pool.broadcast(&|_t| loop {
+                    let (t0, t1) = {
+                        let mut next = state.lock().unwrap();
+                        if *next >= n {
+                            break;
+                        }
+                        let remaining = n - *next;
+                        let take = (remaining / (2 * t_total)).max(min_chunk).min(remaining);
+                        let t0 = *next;
+                        *next += take;
+                        (t0, t0 + take)
+                    };
+                    for t in t0..t1 {
+                        job(grid.tile(t));
+                    }
                 });
             }
         }
@@ -212,6 +269,56 @@ mod tests {
         // first grab is remaining/(2T) = 100; later grabs shrink to 1
         assert!(s.iter().max().unwrap() >= &90);
         assert_eq!(*s.iter().min().unwrap(), 1);
+    }
+
+    fn hits2d(m: &OpenMpModel, rows: usize, cols: usize, tile: TileSpec) -> Vec<u32> {
+        let hits = Mutex::new(vec![0u32; rows * cols]);
+        m.dispatch2d(rows, cols, tile, &|t| {
+            let mut h = hits.lock().unwrap();
+            for i in t.r0..t.r1 {
+                for j in t.c0..t.c1 {
+                    h[i * cols + j] += 1;
+                }
+            }
+        });
+        hits.into_inner().unwrap()
+    }
+
+    #[test]
+    fn dispatch2d_covers_exactly_once_all_schedules() {
+        for schedule in [Schedule::Static, Schedule::Dynamic(3), Schedule::Guided(1)] {
+            let m = OpenMpModel::with_schedule(5, schedule);
+            for tile in [TileSpec::new(1, 1), TileSpec::new(4, 7), TileSpec::new(100, 100)] {
+                let h = hits2d(&m, 23, 19, tile);
+                assert!(
+                    h.iter().all(|&c| c == 1),
+                    "{:?} tile {}",
+                    schedule,
+                    tile.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch2d_static_stripes_tile_rows() {
+        // 4 threads, 8 tile-rows of 2 full-width tiles: each thread gets
+        // 2 contiguous tile-rows, so tiles arrive grouped per stripe
+        let m = OpenMpModel::new(4);
+        let tiles = Mutex::new(vec![]);
+        m.dispatch2d(16, 8, TileSpec::new(2, 4), &|t| tiles.lock().unwrap().push(t));
+        let mut got = tiles.into_inner().unwrap();
+        assert_eq!(got.len(), 8 * 2);
+        got.sort_unstable_by_key(|t| (t.r0, t.c0));
+        assert_eq!(got[0], Tile { r0: 0, r1: 2, c0: 0, c1: 4 });
+        assert_eq!(got[15], Tile { r0: 14, r1: 16, c0: 4, c1: 8 });
+    }
+
+    #[test]
+    fn dispatch2d_empty_grid_is_noop() {
+        let m = OpenMpModel::new(3);
+        m.dispatch2d(0, 16, TileSpec::new(4, 4), &|_| panic!("no tile expected"));
+        m.dispatch2d(16, 0, TileSpec::new(4, 4), &|_| panic!("no tile expected"));
     }
 
     #[test]

@@ -156,6 +156,42 @@ impl<'a> RowBands<'a> {
     }
 }
 
+/// Hands out disjoint mutable row-segment views of one plane buffer to
+/// tiled parallel workers — the 2-D sibling of [`RowBands`].
+///
+/// Soundness contract: callers must only request segments belonging to
+/// **disjoint** tiles (the execution models' `dispatch2d` covers are
+/// disjoint by construction; the property tests verify the
+/// decompositions). Each view is then a disjoint sub-slice of the plane.
+pub struct TileCells<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: access discipline (disjoint tiles) is the caller contract above.
+unsafe impl Send for TileCells<'_> {}
+unsafe impl Sync for TileCells<'_> {}
+
+impl<'a> TileCells<'a> {
+    pub fn new(plane: &'a mut [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(plane.len(), rows * cols);
+        Self { ptr: plane.as_mut_ptr(), rows, cols, _marker: std::marker::PhantomData }
+    }
+
+    /// Mutable view of row `i`, columns `[c0, c1)`.
+    ///
+    /// # Safety
+    /// The segment must not overlap any other outstanding view — i.e.
+    /// `[c0, c1)` of row `i` must lie inside the caller's own tile.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_seg(&self, i: usize, c0: usize, c1: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows && c0 <= c1 && c1 <= self.cols);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.cols + c0), c1 - c0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +266,24 @@ mod tests {
         drop(bands);
         assert!(plane[..12].iter().all(|&v| v == 1.0));
         assert!(plane[12..].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn tile_cells_disjoint_segments() {
+        let mut plane = vec![0f32; 4 * 6];
+        {
+            let cells = TileCells::new(&mut plane, 4, 6);
+            // two disjoint tiles: rows [0,4) × cols [0,3) and [3,6)
+            for i in 0..4 {
+                let (left, right) = unsafe { (cells.row_seg(i, 0, 3), cells.row_seg(i, 3, 6)) };
+                left.fill(1.0);
+                right.fill(2.0);
+            }
+        }
+        for i in 0..4 {
+            assert!(plane[i * 6..i * 6 + 3].iter().all(|&v| v == 1.0));
+            assert!(plane[i * 6 + 3..(i + 1) * 6].iter().all(|&v| v == 2.0));
+        }
     }
 
     #[test]

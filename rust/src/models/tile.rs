@@ -1,0 +1,246 @@
+//! Tile geometry for 2-D dispatch: the unit of task agglomeration.
+//!
+//! The paper's central scheduling result (section 6, Fig. 3) is that
+//! fusing fine-grained tasks into coarser tiles — *task agglomeration* —
+//! is what closes the gap between the task-based and loop-based models.
+//! Row-range `dispatch` can only express one granularity axis (rows per
+//! task); these types give [`super::ExecutionModel::dispatch2d`] an
+//! explicit 2-D tile, so the agglomeration factor becomes a measurable,
+//! tunable plan dimension (see [`crate::autotune`]).
+//!
+//! A [`TileSpec`] is the *requested* tile shape; a [`TileGrid`] is the
+//! resolved decomposition of a concrete `rows × cols` grid: tiles are
+//! laid out row-major, interior tiles are exactly `spec.rows ×
+//! spec.cols`, and edge tiles clamp to the grid (a spec larger than the
+//! grid degenerates to one tile covering everything). The grid is the
+//! single source of truth for the cover-exactness contract: every cell
+//! belongs to exactly one tile.
+
+use crate::util::error::Result;
+
+/// Requested tile shape in grid cells. Dimensions larger than the
+/// dispatched grid clamp at decomposition time, so "one tile per row"
+/// (`rows = 1`) and "whole image" (`usize::MAX × usize::MAX`) are both
+/// expressible without knowing the grid in advance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileSpec {
+    /// grid rows per tile (≥ 1)
+    pub rows: usize,
+    /// grid columns per tile (≥ 1)
+    pub cols: usize,
+}
+
+impl TileSpec {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// Structured validation — plan builders and request intake funnel
+    /// tile parameters through here (a zero dimension is a config error,
+    /// not a silent no-op).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rows >= 1 && self.cols >= 1,
+            "tile dimensions must be >= 1, got {}x{}",
+            self.rows,
+            self.cols
+        );
+        Ok(())
+    }
+
+    /// Stable hash-map key for plan caches.
+    pub fn cache_key(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Human-readable label for tables; `usize::MAX` prints as `full`.
+    pub fn label(&self) -> String {
+        let dim = |d: usize| {
+            if d == usize::MAX {
+                "full".to_string()
+            } else {
+                d.to_string()
+            }
+        };
+        format!("{}x{}", dim(self.rows), dim(self.cols))
+    }
+}
+
+/// One resolved tile: rows `[r0, r1)` × cols `[c0, c1)` of the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Tile {
+    pub fn rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.c1 - self.c0
+    }
+
+    /// Cells covered (edge tiles are smaller than the spec).
+    pub fn cells(&self) -> usize {
+        self.rows() * self.cols()
+    }
+}
+
+/// The row-major tile decomposition of a `rows × cols` grid under a
+/// [`TileSpec`] (clamped to the grid). An empty grid has zero tiles.
+#[derive(Debug, Clone, Copy)]
+pub struct TileGrid {
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    down: usize,
+    across: usize,
+}
+
+impl TileGrid {
+    pub fn new(rows: usize, cols: usize, spec: TileSpec) -> Self {
+        // clamp the spec to the grid; `.max(1)` keeps the div_ceil sound
+        // for degenerate (empty) grids, which resolve to zero tiles
+        let tile_rows = spec.rows.min(rows).max(1);
+        let tile_cols = spec.cols.min(cols).max(1);
+        Self {
+            rows,
+            cols,
+            tile_rows,
+            tile_cols,
+            down: rows.div_ceil(tile_rows),
+            across: cols.div_ceil(tile_cols),
+        }
+    }
+
+    /// Total number of tiles (the dispatch index space).
+    pub fn len(&self) -> usize {
+        self.down * self.across
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tile rows of the decomposition (vertical tile count).
+    pub fn tiles_down(&self) -> usize {
+        self.down
+    }
+
+    /// Tile columns of the decomposition (horizontal tile count).
+    pub fn tiles_across(&self) -> usize {
+        self.across
+    }
+
+    /// The clamped tile shape actually used.
+    pub fn tile_shape(&self) -> TileSpec {
+        TileSpec::new(self.tile_rows, self.tile_cols)
+    }
+
+    /// Tile `index` of the row-major enumeration (`index < len()`).
+    pub fn tile(&self, index: usize) -> Tile {
+        debug_assert!(index < self.len());
+        self.tile_at(index / self.across, index % self.across)
+    }
+
+    /// Tile at tile-row `trow`, tile-column `tcol`.
+    pub fn tile_at(&self, trow: usize, tcol: usize) -> Tile {
+        debug_assert!(trow < self.down && tcol < self.across);
+        Tile {
+            r0: trow * self.tile_rows,
+            r1: ((trow + 1) * self.tile_rows).min(self.rows),
+            c0: tcol * self.tile_cols,
+            c1: ((tcol + 1) * self.tile_cols).min(self.cols),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_exact_cover(rows: usize, cols: usize, spec: TileSpec) {
+        let grid = TileGrid::new(rows, cols, spec);
+        let mut hits = vec![0u32; rows * cols];
+        for t in 0..grid.len() {
+            let tile = grid.tile(t);
+            assert!(tile.r0 < tile.r1 && tile.r1 <= rows, "{tile:?}");
+            assert!(tile.c0 < tile.c1 && tile.c1 <= cols, "{tile:?}");
+            for i in tile.r0..tile.r1 {
+                for j in tile.c0..tile.c1 {
+                    hits[i * cols + j] += 1;
+                }
+            }
+        }
+        assert!(
+            hits.iter().all(|&h| h == 1),
+            "{rows}x{cols} tiled {} not an exact cover",
+            spec.label()
+        );
+    }
+
+    #[test]
+    fn grid_covers_exactly_once() {
+        for (rows, cols) in [(1usize, 1usize), (1, 37), (37, 1), (24, 20), (61, 47), (100, 3)] {
+            for spec in [
+                TileSpec::new(1, 1),
+                TileSpec::new(4, 4),
+                TileSpec::new(7, 3),
+                TileSpec::new(16, 64),
+                TileSpec::new(usize::MAX, usize::MAX),
+            ] {
+                assert_exact_cover(rows, cols, spec);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_grid_has_no_tiles() {
+        for (rows, cols) in [(0usize, 0usize), (0, 10), (10, 0)] {
+            let grid = TileGrid::new(rows, cols, TileSpec::new(4, 4));
+            assert_eq!(grid.len(), 0, "{rows}x{cols}");
+            assert!(grid.is_empty());
+        }
+    }
+
+    #[test]
+    fn oversized_spec_clamps_to_one_tile() {
+        let grid = TileGrid::new(10, 8, TileSpec::new(100, 100));
+        assert_eq!(grid.len(), 1);
+        assert_eq!(grid.tile(0), Tile { r0: 0, r1: 10, c0: 0, c1: 8 });
+        assert_eq!(grid.tile_shape(), TileSpec::new(10, 8));
+    }
+
+    #[test]
+    fn edge_tiles_clamp() {
+        let grid = TileGrid::new(10, 10, TileSpec::new(4, 6));
+        assert_eq!((grid.tiles_down(), grid.tiles_across()), (3, 2));
+        assert_eq!(grid.tile_at(2, 1), Tile { r0: 8, r1: 10, c0: 6, c1: 10 });
+        assert_eq!(grid.tile_at(2, 1).cells(), 2 * 4);
+    }
+
+    #[test]
+    fn row_major_enumeration() {
+        let grid = TileGrid::new(4, 4, TileSpec::new(2, 2));
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid.tile(0), Tile { r0: 0, r1: 2, c0: 0, c1: 2 });
+        assert_eq!(grid.tile(1), Tile { r0: 0, r1: 2, c0: 2, c1: 4 });
+        assert_eq!(grid.tile(2), Tile { r0: 2, r1: 4, c0: 0, c1: 2 });
+        assert_eq!(grid.tile(3), Tile { r0: 2, r1: 4, c0: 2, c1: 4 });
+    }
+
+    #[test]
+    fn spec_validation_and_labels() {
+        assert!(TileSpec::new(1, 1).validate().is_ok());
+        assert!(TileSpec::new(0, 4).validate().is_err());
+        assert!(TileSpec::new(4, 0).validate().is_err());
+        assert_eq!(TileSpec::new(16, 64).label(), "16x64");
+        assert_eq!(TileSpec::new(16, usize::MAX).label(), "16xfull");
+        assert_eq!(TileSpec::new(8, 8).cache_key(), (8, 8));
+    }
+}

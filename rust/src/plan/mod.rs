@@ -39,14 +39,28 @@
 //! **Scratch discipline.** Execution leases the A/B working planes from
 //! the caller's [`ScratchArena`] and returns them after the run, so a
 //! serving executor performs zero scratch allocations after its first
-//! request at a given shape (property-tested). Only the response image
-//! itself is freshly allocated.
+//! request at a given shape (property-tested) — tiled plans included:
+//! tiles carve disjoint views out of the same leased A/B planes rather
+//! than allocating per tile. Only the response image itself is freshly
+//! allocated.
+//!
+//! **Tiling.** [`PlanBuilder::tile`] switches every pass from row-band
+//! dispatch to an explicit 2-D tile decomposition ([`TileSpec`],
+//! validated at build): parallel passes go through
+//! [`crate::models::ExecutionModel::dispatch2d`], where the tile is the
+//! unit of task agglomeration (paper Fig. 3), and sequential passes walk
+//! the same grid. Pixels stay equivalent to the untiled plan (≤ 1e-6;
+//! differential suite in `tests/tiling.rs`); [`crate::autotune`] sweeps
+//! tile shapes and agglomeration factors to pick the fastest
+//! decomposition per (model, shape, kernel).
 
 use crate::util::error::Result;
 
 use crate::conv::{Algorithm, Variant};
 use crate::image::{gaussian_kernel, gaussian_kernel2d, PlanarImage};
 use crate::models::{ExecutionModel, Layout};
+
+pub use crate::models::tile::TileSpec;
 
 pub mod arena;
 mod pipeline;
@@ -113,6 +127,7 @@ pub struct PlanBuilder {
     kernel: KernelSource,
     shape: Option<(usize, usize, usize)>,
     force_generic: bool,
+    tile: Option<TileSpec>,
 }
 
 impl PlanBuilder {
@@ -124,6 +139,7 @@ impl PlanBuilder {
             kernel: KernelSource::Spec(KernelSpec::default()),
             shape: None,
             force_generic: false,
+            tile: None,
         }
     }
 
@@ -167,6 +183,24 @@ impl PlanBuilder {
         self
     }
 
+    /// Run every pass over an explicit 2-D tile decomposition instead of
+    /// row bands: parallel passes go through the execution model's
+    /// `dispatch2d` (tiles are the agglomeration unit — paper Fig. 3),
+    /// sequential passes iterate the same tile grid. Tile dimensions
+    /// larger than the image clamp; pixels are equivalent to the untiled
+    /// plan (≤ 1e-6, property-tested).
+    pub fn tile(mut self, spec: TileSpec) -> Self {
+        self.tile = Some(spec);
+        self
+    }
+
+    /// [`PlanBuilder::tile`] with an optional spec — convenience for
+    /// config plumbing (`None` keeps the untiled row-band dispatch).
+    pub fn tile_opt(mut self, spec: Option<TileSpec>) -> Self {
+        self.tile = spec;
+        self
+    }
+
     /// Validate the full combination and resolve the pass pipeline.
     pub fn build(self) -> Result<ConvPlan> {
         let (planes, rows, cols) = self
@@ -188,7 +222,15 @@ impl PlanBuilder {
         if self.algorithm == Algorithm::TwoPass && self.variant == Variant::Naive {
             bail!("the paper's naive rung is single-pass only (Opt-0)");
         }
-        let fast_path = width == 5 && self.variant != Variant::Naive && !self.force_generic;
+        if let Some(tile) = self.tile {
+            tile.validate()?;
+        }
+        // tiled pipelines run the generic-width tile primitives, so the
+        // fast-path flag is only truthful for untiled plans
+        let fast_path = width == 5
+            && self.variant != Variant::Naive
+            && !self.force_generic
+            && self.tile.is_none();
         let passes = match self.algorithm {
             Algorithm::TwoPass => vec![PassKind::Horiz, PassKind::Vert],
             Algorithm::SinglePassNoCopy => vec![PassKind::SinglePass],
@@ -213,6 +255,7 @@ impl PlanBuilder {
             width,
             passes,
             fast_path,
+            tile: self.tile,
         })
     }
 }
@@ -231,6 +274,7 @@ pub struct ConvPlan {
     width: usize,
     passes: Vec<PassKind>,
     fast_path: bool,
+    tile: Option<TileSpec>,
 }
 
 impl ConvPlan {
@@ -278,6 +322,12 @@ impl ConvPlan {
     /// True when the width-5 unrolled band primitives were selected.
     pub fn is_fast_path(&self) -> bool {
         self.fast_path
+    }
+
+    /// The 2-D tile decomposition the plan dispatches with (`None` =
+    /// untiled row bands).
+    pub fn tile(&self) -> Option<TileSpec> {
+        self.tile
     }
 
     // -- whole-image execution -------------------------------------------
@@ -757,6 +807,83 @@ mod tests {
         let mut b = a.clone();
         assert!(plan.run_plane(&mut a, &mut b).is_ok());
         assert!(plan.run_plane(&mut a[..100].to_vec(), &mut b).is_err());
+    }
+
+    #[test]
+    fn tiled_builder_contract() {
+        // zero tile dimensions are structured errors
+        assert!(ConvPlan::builder()
+            .tile(TileSpec::new(0, 4))
+            .shape(1, 16, 16)
+            .build()
+            .is_err());
+        // a tiled plan reports its spec and opts out of the W=5 fast path
+        let p = ConvPlan::builder()
+            .tile(TileSpec::new(8, 8))
+            .shape(1, 24, 24)
+            .build()
+            .unwrap();
+        assert_eq!(p.tile(), Some(TileSpec::new(8, 8)));
+        assert!(!p.is_fast_path(), "tiled plans run the generic tile engines");
+        // tile_opt(None) keeps untiled row-band dispatch
+        let p = ConvPlan::builder().tile_opt(None).shape(1, 24, 24).build().unwrap();
+        assert_eq!(p.tile(), None);
+        assert!(p.is_fast_path());
+    }
+
+    #[test]
+    fn tiled_execution_matches_untiled() {
+        let image = img(3, 30, 26);
+        let model = OpenMpModel::new(4);
+        let mut arena = ScratchArena::new();
+        for alg in [Algorithm::TwoPass, Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy]
+        {
+            for variant in [Variant::Scalar, Variant::Simd] {
+                for layout in [Layout::PerPlane, Layout::Agglomerated] {
+                    let untiled = ConvPlan::builder()
+                        .algorithm(alg)
+                        .variant(variant)
+                        .layout(layout)
+                        .shape(3, 30, 26)
+                        .build()
+                        .unwrap();
+                    let tiled = ConvPlan::builder()
+                        .algorithm(alg)
+                        .variant(variant)
+                        .layout(layout)
+                        .tile(TileSpec::new(7, 9))
+                        .shape(3, 30, 26)
+                        .build()
+                        .unwrap();
+                    let want = untiled.execute(&image, &mut arena).unwrap();
+                    let seq = tiled.execute(&image, &mut arena).unwrap();
+                    let par = tiled.execute_on(&model, &image, &mut arena).unwrap();
+                    assert!(
+                        seq.max_abs_diff(&want) <= 1e-6,
+                        "{alg:?} {variant:?} {layout:?} seq-tiled"
+                    );
+                    assert!(
+                        par.max_abs_diff(&want) <= 1e-6,
+                        "{alg:?} {variant:?} {layout:?} par-tiled"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_larger_than_image_degenerates_to_untiled_cover() {
+        let image = img(2, 20, 18);
+        let mut arena = ScratchArena::new();
+        let untiled = ConvPlan::builder().shape(2, 20, 18).build().unwrap();
+        let tiled = ConvPlan::builder()
+            .tile(TileSpec::new(usize::MAX, usize::MAX))
+            .shape(2, 20, 18)
+            .build()
+            .unwrap();
+        let want = untiled.execute(&image, &mut arena).unwrap();
+        let got = tiled.execute(&image, &mut arena).unwrap();
+        assert!(got.max_abs_diff(&want) <= 1e-6);
     }
 
     #[test]

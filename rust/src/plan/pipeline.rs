@@ -8,9 +8,10 @@
 //! it either sequentially or banded across an [`ExecutionModel`] (the
 //! row-band parallel sweep formerly private to `models::convolve`).
 
-use crate::conv::band;
 use crate::conv::Variant;
-use crate::models::{pool::RowBands, ExecutionModel};
+use crate::conv::{band, tile};
+use crate::models::pool::{RowBands, TileCells};
+use crate::models::{ExecutionModel, Tile, TileGrid, TileSpec};
 
 use super::ConvPlan;
 
@@ -67,6 +68,27 @@ fn run_banded(
     }
 }
 
+/// Run one tiled pass over the grid: every tile once for [`Exec::Seq`],
+/// a disjoint tile cover via `dispatch2d` for [`Exec::Par`] (the
+/// agglomeration-aware path — each model schedules tiles its own way).
+fn run_tiled(
+    exec: Exec<'_>,
+    rows: usize,
+    cols: usize,
+    spec: TileSpec,
+    pass: &(dyn Fn(Tile) + Sync),
+) {
+    match exec {
+        Exec::Seq => {
+            let grid = TileGrid::new(rows, cols, spec);
+            for t in 0..grid.len() {
+                pass(grid.tile(t));
+            }
+        }
+        Exec::Par(model) => model.dispatch2d(rows, cols, spec, pass),
+    }
+}
+
 impl ConvPlan {
     /// Run the whole resolved pipeline over one plane: even passes read
     /// A and write B, odd passes read B and write A (the fixed A↔B
@@ -82,7 +104,8 @@ impl ConvPlan {
     }
 
     /// Dispatch one pass to the band primitive the plan selected:
-    /// width-5 unrolled when `fast_path`, generic odd-width otherwise.
+    /// width-5 unrolled when `fast_path`, generic odd-width otherwise —
+    /// or to the tile primitives when the plan carries a [`TileSpec`].
     fn run_pass(
         &self,
         exec: Exec<'_>,
@@ -92,6 +115,10 @@ impl ConvPlan {
         rows: usize,
         cols: usize,
     ) {
+        if let Some(spec) = self.tile {
+            self.run_pass_tiled(exec, kind, src, dst, rows, cols, spec);
+            return;
+        }
         let w = self.width;
         match kind {
             PassKind::SinglePass => match (self.variant, self.fast_path) {
@@ -182,6 +209,61 @@ impl ConvPlan {
                     band::copy_back_band_scalar(s, d, cols, r0, r1)
                 }),
             },
+        }
+    }
+
+    /// The tiled twin of `run_pass`: the same pass pipeline over a 2-D
+    /// tile decomposition, writing through a [`TileCells`] accessor.
+    /// Tile primitives are generic-width (tiling and the unrolled W=5
+    /// fast path are mutually exclusive — `build()` clears `fast_path`);
+    /// accumulation order matches the banded engines so tiled and
+    /// untiled plans stay bitwise comparable.
+    #[allow(clippy::too_many_arguments)]
+    fn run_pass_tiled(
+        &self,
+        exec: Exec<'_>,
+        kind: PassKind,
+        src: &[f32],
+        dst: &mut [f32],
+        rows: usize,
+        cols: usize,
+        spec: TileSpec,
+    ) {
+        let w = self.width;
+        let cells = TileCells::new(dst, rows, cols);
+        match kind {
+            PassKind::SinglePass => match self.variant {
+                Variant::Naive => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::singlepass_tile_naive(src, &cells, rows, cols, &self.k2d, w, t)
+                }),
+                Variant::Scalar => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::singlepass_tile_scalar(src, &cells, rows, cols, &self.k2d, w, t)
+                }),
+                Variant::Simd => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::singlepass_tile_simd(src, &cells, rows, cols, &self.k2d, w, t)
+                }),
+            },
+            PassKind::Horiz => match self.variant {
+                Variant::Naive => unreachable!("naive+twopass rejected at build"),
+                Variant::Scalar => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::horiz_tile_scalar(src, &cells, rows, cols, &self.taps, t)
+                }),
+                Variant::Simd => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::horiz_tile_simd(src, &cells, rows, cols, &self.taps, t)
+                }),
+            },
+            PassKind::Vert => match self.variant {
+                Variant::Naive => unreachable!("naive+twopass rejected at build"),
+                Variant::Scalar => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::vert_tile_scalar(src, &cells, rows, cols, &self.taps, t)
+                }),
+                Variant::Simd => run_tiled(exec, rows, cols, spec, &|t| {
+                    tile::vert_tile_simd(src, &cells, rows, cols, &self.taps, t)
+                }),
+            },
+            PassKind::CopyBack => run_tiled(exec, rows, cols, spec, &|t| {
+                tile::copy_back_tile(src, &cells, cols, t)
+            }),
         }
     }
 }

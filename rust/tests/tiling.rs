@@ -1,0 +1,239 @@
+//! Tier-1 tiling battery (wired into `scripts/verify.sh`):
+//!
+//! * **cover-exactness** — `dispatch` and `dispatch2d` visit every
+//!   index/tile of their range exactly once under every model, observed
+//!   through an atomic bitmap oracle (each worker marks cells with
+//!   relaxed atomics; the assertion after the call also witnesses the
+//!   implicit barrier — a missing barrier would race the final check),
+//!   including degenerate shapes (n = 0, n < workers, 1×N, N×1, tiles
+//!   larger than the image);
+//! * **differential equivalence** — tiled and untiled plans produce the
+//!   same pixels (≤ 1e-6) across kernel widths {3, 5, 7, 9}, both
+//!   layouts and all three models, seeded via `util::prng`;
+//! * **GPRM stress** — deterministic seeded 10k-tile bursts under both
+//!   steal policies and several agglomeration factors: no lost or
+//!   double-executed tiles.
+//!
+//! Worker counts honour `PHI_THREADS` (the CI matrix runs 1 and 4).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use phi_conv::image::{synth_image, Pattern};
+use phi_conv::models::{
+    test_threads, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel, Schedule,
+    StealPolicy, TileSpec,
+};
+use phi_conv::plan::{ConvPlan, KernelSpec, ScratchArena};
+use phi_conv::util::prng::Prng;
+
+fn threads() -> usize {
+    test_threads(4)
+}
+
+fn all_models() -> Vec<Box<dyn ExecutionModel>> {
+    let t = threads();
+    vec![
+        Box::new(OpenMpModel::new(t)),
+        Box::new(OpenMpModel::with_schedule(t, Schedule::Dynamic(2))),
+        Box::new(OpenMpModel::with_schedule(t, Schedule::Guided(1))),
+        Box::new(OpenClModel::new(t, 3)),
+        Box::new(OpenClModel::new(t, 1)),
+        Box::new(GprmModel::new(t, 13)),
+        Box::new(GprmModel::with_policy(t, 50, StealPolicy::Random)),
+        Box::new(GprmModel::new(t, 7).with_agglomeration(5)),
+    ]
+}
+
+/// Atomic bitmap oracle: one relaxed counter per cell, incremented by
+/// whichever worker visits it; exactly-once is asserted after the
+/// barrier implied by the dispatch call returning.
+struct Bitmap {
+    cells: Vec<AtomicU32>,
+    cols: usize,
+}
+
+impl Bitmap {
+    fn new(rows: usize, cols: usize) -> Self {
+        Self { cells: (0..rows * cols).map(|_| AtomicU32::new(0)).collect(), cols }
+    }
+
+    fn mark(&self, i: usize, j: usize) {
+        self.cells[i * self.cols + j].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn assert_exactly_once(&self, context: &str) {
+        for (ix, c) in self.cells.iter().enumerate() {
+            let n = c.load(Ordering::SeqCst);
+            assert_eq!(n, 1, "{context}: cell {ix} visited {n} times");
+        }
+    }
+}
+
+#[test]
+fn dispatch_cover_exactness_all_models() {
+    // 1-D contract: [0, n) covered exactly once, including n = 0 and
+    // n < workers (models built once — each owns a worker pool)
+    let models = all_models();
+    for n in [0usize, 1, 3, 7, 100, 241] {
+        for m in &models {
+            let bitmap = Bitmap::new(1, n.max(1));
+            let visited = AtomicU32::new(0);
+            m.dispatch(n, &|a, b| {
+                assert!(a < b && b <= n, "{}: bad range [{a}, {b}) of {n}", m.name());
+                for j in a..b {
+                    bitmap.mark(0, j);
+                }
+                visited.fetch_add(1, Ordering::Relaxed);
+            });
+            if n == 0 {
+                assert_eq!(visited.load(Ordering::SeqCst), 0, "{}: n=0 must be a no-op", m.name());
+                continue;
+            }
+            for j in 0..n {
+                let c = bitmap.cells[j].load(Ordering::SeqCst);
+                assert_eq!(c, 1, "{}: index {j} of {n} visited {c} times", m.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch2d_cover_exactness_all_models() {
+    // 2-D contract: every cell of the grid in exactly one tile, for
+    // degenerate grids (empty, 1×N, N×1) and tiles larger than the image
+    let shapes = [(0usize, 0usize), (0, 9), (9, 0), (1, 1), (1, 37), (37, 1), (24, 20), (61, 47)];
+    let tiles = [
+        TileSpec::new(1, 1),
+        TileSpec::new(4, 4),
+        TileSpec::new(7, 3),
+        TileSpec::new(16, 64),
+        TileSpec::new(1000, 1000),
+    ];
+    let models = all_models();
+    for &(rows, cols) in &shapes {
+        for &tile in &tiles {
+            for m in &models {
+                let bitmap = Bitmap::new(rows.max(1), cols.max(1));
+                m.dispatch2d(rows, cols, tile, &|t| {
+                    assert!(
+                        t.r0 < t.r1 && t.r1 <= rows && t.c0 < t.c1 && t.c1 <= cols,
+                        "{}: bad tile {t:?} in {rows}x{cols}",
+                        m.name()
+                    );
+                    for i in t.r0..t.r1 {
+                        for j in t.c0..t.c1 {
+                            bitmap.mark(i, j);
+                        }
+                    }
+                });
+                if rows == 0 || cols == 0 {
+                    // empty grid: the assert inside the job would have
+                    // fired if any tile was produced
+                    continue;
+                }
+                bitmap.assert_exactly_once(&format!(
+                    "{} {rows}x{cols} tile {}",
+                    m.name(),
+                    tile.label()
+                ));
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_equals_untiled_across_widths_layouts_models() {
+    // differential suite: tiled plans bit-compare (≤ 1e-6) against the
+    // untiled row-band plans, shapes and tiles drawn from a seeded PRNG
+    let mut rng = Prng::new(0x711E_D1FF);
+    let models: Vec<Box<dyn ExecutionModel>> = vec![
+        Box::new(OpenMpModel::new(threads())),
+        Box::new(OpenClModel::new(threads(), 3)),
+        Box::new(GprmModel::new(threads(), 13).with_agglomeration(3)),
+    ];
+    for width in [3usize, 5, 7, 9] {
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            let rows = rng.range(24, 40);
+            let cols = rng.range(24, 40);
+            let image = synth_image(3, rows, cols, Pattern::Noise, width as u64);
+            let tile = TileSpec::new(rng.range(1, 12), rng.range(1, 12));
+            let untiled = ConvPlan::builder()
+                .layout(layout)
+                .kernel(KernelSpec::new(width, 1.0))
+                .shape(3, rows, cols)
+                .build()
+                .unwrap();
+            let tiled = ConvPlan::builder()
+                .layout(layout)
+                .kernel(KernelSpec::new(width, 1.0))
+                .tile(tile)
+                .shape(3, rows, cols)
+                .build()
+                .unwrap();
+            let mut arena = ScratchArena::new();
+            let want = untiled.execute(&image, &mut arena).unwrap();
+            for m in &models {
+                let got = tiled.execute_on(m.as_ref(), &image, &mut arena).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) <= 1e-6,
+                    "{} width {width} {layout:?} tile {} ({rows}x{cols})",
+                    m.name(),
+                    tile.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gprm_stress_10k_tile_bursts() {
+    // deterministic seeded bursts: a 200×50 grid of 1×1 tiles = 10_000
+    // tiles per dispatch, repeated, under both steal policies and
+    // several agglomeration factors — no lost or double-executed tiles
+    let (rows, cols) = (200usize, 50usize);
+    for policy in [StealPolicy::Ring, StealPolicy::Random] {
+        for agglomeration in [1usize, 7, 64] {
+            let m = GprmModel::with_policy(threads(), 64, policy).with_agglomeration(agglomeration);
+            for burst in 0..3 {
+                let bitmap = Bitmap::new(rows, cols);
+                m.dispatch2d(rows, cols, TileSpec::new(1, 1), &|t| {
+                    bitmap.mark(t.r0, t.c0);
+                });
+                bitmap.assert_exactly_once(&format!(
+                    "{policy:?} agg={agglomeration} burst {burst}"
+                ));
+            }
+        }
+    }
+}
+
+#[test]
+fn overhead_probe_samples_finite_and_counted() {
+    // regression for the old hardcoded warmup: every empty-dispatch
+    // overhead sample is finite and the summaries carry n > 0
+    let t = threads();
+    let models: Vec<Box<dyn ExecutionModel>> = vec![
+        Box::new(OpenMpModel::new(t)),
+        Box::new(OpenClModel::new(t, 16)),
+        Box::new(GprmModel::new(t, 20)),
+    ];
+    for m in models {
+        let s = m.overhead_probe(256, 4);
+        assert_eq!(s.len(), 4, "{}", m.name());
+        assert!(
+            s.samples().iter().all(|v| v.is_finite() && *v >= 0.0),
+            "{}: non-finite overhead sample",
+            m.name()
+        );
+        let summary = s.summary();
+        assert!(summary.starts_with("n=4"), "{}: {summary}", m.name());
+        assert!(!summary.contains("inf") && !summary.contains("NaN"), "{}: {summary}", m.name());
+        // explicit warmup pinning (what the harness passes from config)
+        let s = m.overhead_probe_with(64, 0, 3);
+        assert_eq!(s.len(), 3);
+        // the tile-granular probe: finite at several agglomeration shapes
+        let s = m.overhead_probe2d(64, 64, TileSpec::new(8, 8), 1, 3);
+        assert_eq!(s.len(), 3);
+        assert!(s.samples().iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+}

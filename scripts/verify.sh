@@ -20,6 +20,11 @@ echo "== cargo test -q --test queue_stress (coordinator under load)"
 # standalone so a load-path regression is named in the output)
 cargo test -q --test queue_stress
 
+echo "== cargo test -q --test tiling_suite (dispatch cover-exactness + tiled equivalence)"
+# tier-1 by policy: a scheduling bug that loses or double-executes a
+# tile corrupts pixels silently; re-run standalone so it is named
+cargo test -q --test tiling_suite
+
 echo "== cargo build --benches"
 cargo build --benches
 
