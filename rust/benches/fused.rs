@@ -1,0 +1,27 @@
+//! Bench: fused vs unfused two-pass — per-image time **and** estimated
+//! bytes moved through main memory.
+//!
+//! The unfused separable pipeline writes a full-plane horizontal
+//! intermediate and re-reads it vertically, so every image crosses
+//! memory twice; the fused rolling row-ring keeps the intermediate in
+//! an O(width×cols) per-worker ring, halving plane traffic. On
+//! bandwidth-bound hardware (the Xeon Phi of the source paper; Hofmann
+//! et al. in PAPERS.md make the general case) the traffic column — not
+//! the FLOP count — is what explains the speedup, so this bench prints
+//! both, plus the same table as JSON for machine consumption.
+//!
+//! `cargo bench --bench fused` — env overrides:
+//!   PHI_BENCH_SIZES=288,576   PHI_BENCH_REPS=5   PHI_BENCH_THREADS=8
+
+const EXHIBIT: &str = "fused";
+
+use phi_conv::config::RunConfig;
+use phi_conv::harness;
+
+fn main() {
+    let cfg = RunConfig::from_bench_env();
+    for t in harness::run_measured(EXHIBIT, &cfg).unwrap() {
+        println!("{}", t.to_text());
+        println!("{}", t.to_json());
+    }
+}

@@ -1,6 +1,17 @@
 //! Bench: Table 1 — effect of vectorisation on the parallel two-pass, 3 models,
 //! simulated at the paper sizes and measured on this host.
 //!
+//! Bounds-check elision note (ISSUE 5 satellite): `vert_band_simd`'s
+//! inner loop used to be an indexed sweep — `for jj in 0..w { out[jj] =
+//! s0[jj]*k[0] + … }` — where LLVM must prove five slice bounds per
+//! iteration before vectorising. It is now a zipped iterator over the
+//! five row slices (the same shape as the `windows()`-based horizontal
+//! engines and the generic `_w` verticals, which were already zipped),
+//! so no bounds checks survive into the loop body. The SIMD columns of
+//! this table are where the before/after shows up; the arithmetic
+//! expression and tap order are unchanged, so outputs are bitwise
+//! identical.
+//!
 //! `cargo bench --bench vectorisation` — env overrides:
 //!   PHI_BENCH_SIZES=288,576   PHI_BENCH_REPS=5   PHI_BENCH_THREADS=8
 

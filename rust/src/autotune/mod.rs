@@ -9,10 +9,11 @@
 //! that trade-off a measured, queryable quantity:
 //!
 //! * [`default_candidates`] enumerates tile decompositions for a shape —
-//!   always starting from the **untiled row-partition baseline**, so the
-//!   tuned winner can only beat or equal it — plus, for GPRM,
-//!   agglomerated variants where several tiles fuse into one task
-//!   instance (the paper's cutoff knob re-expressed per tile).
+//!   always starting from the **untiled, unfused row-partition
+//!   baseline**, so the tuned winner can only beat or equal it — plus
+//!   fused two-pass twins (the rolling row-ring pipeline, `--fuse`) and,
+//!   for GPRM, agglomerated variants where several tiles fuse into one
+//!   task instance (the paper's cutoff knob re-expressed per tile).
 //! * [`sweep_shape`] measures every candidate under all three execution
 //!   models at one image shape (total ms via plan execution, fixed
 //!   overhead via the empty-`dispatch2d` probe — the paper's Table-2
@@ -35,45 +36,65 @@ use crate::metrics::{time_reps, Table};
 use crate::models::{ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileSpec};
 use crate::plan::{ConvPlan, ScratchArena};
 
-/// One tiling configuration the tuner evaluates.
+/// One execution configuration the tuner evaluates: a tile
+/// decomposition (or untiled row bands), a GPRM agglomeration factor,
+/// and whether the two-pass pipeline is fused (`--fuse`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Candidate {
     /// `None` = the untiled row-partition baseline.
     pub tile: Option<TileSpec>,
     /// Tiles fused per task instance (GPRM only; 1 elsewhere).
     pub agglomeration: usize,
+    /// Fused rolling row-ring two-pass instead of separate passes.
+    pub fused: bool,
 }
 
 impl Candidate {
-    /// The untiled row-partition baseline every sweep starts from.
+    /// The untiled, unfused row-partition baseline every sweep starts
+    /// from.
     pub fn untiled() -> Self {
-        Self { tile: None, agglomeration: 1 }
+        Self { tile: None, agglomeration: 1, fused: false }
+    }
+
+    /// The fused twin of a candidate.
+    pub fn fused_twin(self) -> Self {
+        Self { fused: true, ..self }
     }
 
     pub fn label(&self) -> String {
-        match self.tile {
+        let mut s = match self.tile {
             None => "rows (untiled)".to_string(),
             Some(t) if self.agglomeration > 1 => {
                 format!("{} agg={}", t.label(), self.agglomeration)
             }
             Some(t) => t.label(),
+        };
+        if self.fused {
+            s.push_str(" fused");
         }
+        s
     }
 }
 
-/// Default candidate set for a `rows`-tall image: the untiled baseline,
-/// full-width stripes, squares, and (when `gprm`) agglomerated variants
-/// of the finer decompositions. Shapes that don't fit the image are
-/// dropped rather than clamped so the sweep never measures duplicates.
+/// Default candidate set for a `rows`-tall image: the untiled-unfused
+/// baseline, its fused twin, full-width stripes (fused and unfused),
+/// squares, and (when `gprm`) agglomerated variants of the finer
+/// decompositions. Shapes that don't fit the image are dropped rather
+/// than clamped so the sweep never measures duplicates. The baseline is
+/// always index 0, so the tuned winner beats or equals it by
+/// construction.
 pub fn default_candidates(rows: usize, gprm: bool) -> Vec<Candidate> {
-    let mut out = vec![Candidate::untiled()];
+    let mut out = vec![Candidate::untiled(), Candidate::untiled().fused_twin()];
     let tiled = |rows: usize, cols: usize, agg: usize| Candidate {
         tile: Some(TileSpec::new(rows, cols)),
         agglomeration: agg,
+        fused: false,
     };
     for r in [16usize, 64] {
         if r < rows {
-            out.push(tiled(r, usize::MAX, 1)); // full-width stripes
+            let stripe = tiled(r, usize::MAX, 1); // full-width stripes
+            out.push(stripe);
+            out.push(stripe.fused_twin());
         }
     }
     for s in [32usize, 128] {
@@ -171,6 +192,19 @@ impl TuningTable {
         })
     }
 
+    /// Whether the tuned winner for a configuration is fused (`None` =
+    /// never swept).
+    pub fn fused_for(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+    ) -> Option<bool> {
+        self.lookup(model, planes, rows, cols, kernel_width).map(|t| t.candidate.fused)
+    }
+
     /// The tuned tile decomposition for a configuration (`Some(None)` =
     /// "tuned, and untiled won").
     pub fn tile_for(
@@ -251,6 +285,7 @@ pub fn sweep_shape(cfg: &RunConfig, size: usize, table: &mut TuningTable) -> Res
             let plan = ConvPlan::builder()
                 .kernel(kernel)
                 .tile_opt(cand.tile)
+                .fuse(cand.fused)
                 .shape(cfg.planes, size, size)
                 .build()?;
             let ms = time_reps(
@@ -317,18 +352,27 @@ mod tests {
             assert!(c.len() >= 4);
             let has_agglomerated = c.iter().any(|x| x.agglomeration > 1);
             assert_eq!(has_agglomerated, gprm, "agglomeration is the GPRM knob");
+            assert!(c.iter().any(|x| x.fused && x.tile.is_none()), "fused row bands swept");
+            assert!(c.iter().any(|x| x.fused && x.tile.is_some()), "fused stripes swept");
         }
-        // tiny images keep only the shapes that fit
+        // tiny images keep only the shapes that fit (plus the fused twin
+        // of the baseline, which fits whenever the baseline does)
         let c = default_candidates(8, true);
-        assert_eq!(c, vec![Candidate::untiled()]);
+        assert_eq!(c, vec![Candidate::untiled(), Candidate::untiled().fused_twin()]);
     }
 
     #[test]
     fn candidate_labels() {
         assert_eq!(Candidate::untiled().label(), "rows (untiled)");
-        let c = Candidate { tile: Some(TileSpec::new(16, usize::MAX)), agglomeration: 1 };
+        assert_eq!(Candidate::untiled().fused_twin().label(), "rows (untiled) fused");
+        let c = Candidate {
+            tile: Some(TileSpec::new(16, usize::MAX)),
+            agglomeration: 1,
+            fused: false,
+        };
         assert_eq!(c.label(), "16xfull");
-        let c = Candidate { tile: Some(TileSpec::new(32, 32)), agglomeration: 4 };
+        assert_eq!(c.fused_twin().label(), "16xfull fused");
+        let c = Candidate { tile: Some(TileSpec::new(32, 32)), agglomeration: 4, fused: false };
         assert_eq!(c.label(), "32x32 agg=4");
     }
 
@@ -352,7 +396,9 @@ mod tests {
             assert!(tuned.speedup() >= 1.0);
         }
         assert!(table.tile_for("OpenMP", 3, 40, 40, 5).is_some());
+        assert!(table.fused_for("OpenMP", 3, 40, 40, 5).is_some());
         assert!(table.lookup("OpenMP", 3, 41, 41, 5).is_none());
+        assert!(table.fused_for("OpenMP", 3, 41, 41, 5).is_none());
         let summary = table.to_table();
         assert_eq!(summary.n_rows(), 3);
         assert!(summary.to_text().contains("GPRM"));

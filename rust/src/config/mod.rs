@@ -38,6 +38,11 @@ pub struct RunConfig {
     /// GPRM task-agglomeration factor under tiled dispatch: tiles fused
     /// per task instance (≥ 1; the paper's Fig. 3 knob).
     pub agglomeration: usize,
+    /// Fuse the two-pass pipeline into one rolling row-ring pass
+    /// (two-pass requests only; single-pass algorithms ignore it). The
+    /// intermediate stays in cache and plane traffic halves — the win on
+    /// bandwidth-bound hardware.
+    pub fuse: bool,
     /// Synthetic input pattern + seed.
     pub pattern: Pattern,
     pub seed: u64,
@@ -67,6 +72,7 @@ impl Default for RunConfig {
             tile_rows: 0,
             tile_cols: 0,
             agglomeration: 1,
+            fuse: false,
             pattern: Pattern::Noise,
             seed: 20170710,
             artifacts_dir: crate::runtime::manifest::default_artifacts_dir(),
@@ -99,6 +105,7 @@ impl RunConfig {
         self.tile_rows = doc.usize_or("run.tile_rows", self.tile_rows);
         self.tile_cols = doc.usize_or("run.tile_cols", self.tile_cols);
         self.agglomeration = doc.usize_or("run.agglomeration", self.agglomeration);
+        self.fuse = doc.bool_or("run.fuse", self.fuse);
         if let Some(p) = doc.get("run.pattern") {
             let s = p.as_str().context("run.pattern must be a string")?;
             self.pattern =
@@ -149,6 +156,9 @@ impl RunConfig {
         set(cli, "tile-cols", &mut self.tile_cols)?;
         set(cli, "agglomeration", &mut self.agglomeration)?;
         set(cli, "queue-capacity", &mut self.queue_capacity)?;
+        if cli.is_set("fuse") {
+            self.fuse = true; // a flag can only turn fusion on (TOML can set either)
+        }
         if let Some(v) = cli.get("deadline-ms") {
             if !v.is_empty() {
                 self.deadline_ms = v.parse()?;
@@ -261,6 +271,7 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("tile-rows", "", "tile rows for 2-D dispatch (0 = full height; default 0)")
         .opt("tile-cols", "", "tile columns for 2-D dispatch (0 = full width; default 0)")
         .opt("agglomeration", "", "GPRM tiles fused per task under tiling (default 1)")
+        .flag("fuse", "fuse the two-pass pipeline (rolling row-ring; halves plane traffic)")
         .opt("pattern", "", "input pattern: noise|ramp-x|ramp-xy|checker|disc|constant")
         .opt("seed", "", "PRNG seed (default 20170710)")
         .opt("artifacts", "", "artifacts directory (default ./artifacts)")
@@ -388,6 +399,29 @@ mod tests {
         assert_eq!((c.tile_rows, c.tile_cols, c.agglomeration), (8, 0, 2));
         // one zero dimension means "full extent", not "untiled"
         assert_eq!(c.tile_spec(), Some(crate::plan::TileSpec::new(8, usize::MAX)));
+    }
+
+    #[test]
+    fn fuse_knob_plumbs_through_cli_and_toml() {
+        assert!(!RunConfig::default().fuse, "unfused by default");
+
+        let mut c = RunConfig::default();
+        let doc = TomlDoc::parse("[run]\nfuse = true\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.fuse);
+        // TOML can also switch it back off
+        let doc = TomlDoc::parse("[run]\nfuse = false\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!(!c.fuse);
+
+        let cli = standard_cli("t", "t").parse(["--fuse".to_string()]).unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert!(c.fuse);
+        // absent flag leaves a TOML-set value alone
+        let mut c = RunConfig { fuse: true, ..Default::default() };
+        let cli = standard_cli("t", "t").parse(Vec::<String>::new()).unwrap();
+        c.apply_cli(&cli).unwrap();
+        assert!(c.fuse);
     }
 
     #[test]

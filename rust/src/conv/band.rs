@@ -62,8 +62,8 @@ pub fn singlepass_naive_band(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = width / 2;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
@@ -97,8 +97,8 @@ pub fn singlepass_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
@@ -134,8 +134,8 @@ pub fn singlepass_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
@@ -174,8 +174,8 @@ pub fn horiz_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
@@ -203,8 +203,8 @@ pub fn horiz_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
@@ -231,8 +231,8 @@ pub fn vert_band_scalar(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     for i in a..b {
@@ -248,7 +248,11 @@ pub fn vert_band_scalar(
 }
 
 /// Vertical pass, SIMD shape: five aligned row-slice FMAs per output row —
-/// columns are contiguous so this vectorises trivially.
+/// columns are contiguous so this vectorises trivially. The inner loop
+/// is a zipped sweep over the five row slices (like the `windows`-based
+/// horizontal engines) rather than an indexed `jj` loop, so every
+/// bounds check is elided; `cargo bench --bench vectorisation` is where
+/// the before/after shows up.
 pub fn vert_band_simd(
     src: &[f32],
     dst_band: &mut [f32],
@@ -260,8 +264,8 @@ pub fn vert_band_simd(
 ) {
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let h = HALO;
-    if 2 * h >= cols {
-        return; // no interior columns (also guards the `cols - h` arithmetic)
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
     }
     let (a, b) = band_range(rows, h, r0, r1);
     let w = cols - 2 * h;
@@ -275,8 +279,10 @@ pub fn vert_band_simd(
         );
         let start = (i - r0) * cols + h;
         let out = &mut dst_band[start..start + w];
-        for jj in 0..w {
-            out[jj] = s0[jj] * k[0] + s1[jj] * k[1] + s2[jj] * k[2] + s3[jj] * k[3] + s4[jj] * k[4];
+        for (((((o, &a0), &a1), &a2), &a3), &a4) in
+            out.iter_mut().zip(s0).zip(s1).zip(s2).zip(s3).zip(s4)
+        {
+            *o = a0 * k[0] + a1 * k[1] + a2 * k[2] + a3 * k[3] + a4 * k[4];
         }
     }
 }
@@ -305,7 +311,7 @@ pub fn singlepass_band_scalar_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     debug_assert_eq!(k2d.len(), width * width);
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -342,7 +348,7 @@ pub fn singlepass_band_simd_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     debug_assert_eq!(k2d.len(), width * width);
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -377,7 +383,7 @@ pub fn horiz_band_scalar_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let width = k.len();
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -408,7 +414,7 @@ pub fn horiz_band_simd_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let width = k.len();
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -436,7 +442,7 @@ pub fn vert_band_scalar_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let width = k.len();
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -466,7 +472,7 @@ pub fn vert_band_simd_w(
     debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
     let width = k.len();
     let h = width / 2;
-    if 2 * h >= cols {
+    if 2 * h >= cols || 2 * h >= rows {
         return;
     }
     let (a, b) = band_range(rows, h, r0, r1);
@@ -482,6 +488,264 @@ pub fn vert_band_simd_w(
             let row = &src[(i + u - h) * cols + h..(i + u - h) * cols + h + w];
             let ku = k[u];
             for (o, &sv) in out.iter_mut().zip(row) {
+                *o += sv * ku;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused two-pass: rolling row-ring execution. The unfused separable
+// pipeline writes a full-plane horizontal intermediate and then re-reads
+// it for the vertical pass — the whole image crosses memory twice. The
+// fused engines instead keep a `width`-deep ring of horizontally
+// filtered row buffers per band: for each output row they filter only
+// the one source row the ring has not seen yet and emit the vertical
+// combination immediately, so the intermediate never leaves cache and
+// scratch shrinks from O(rows×cols) per plane to O(width×cols) per
+// worker (the bandwidth-bound argument of Hofmann et al., PAPERS.md).
+//
+// Equivalence contract: a ring row holds exactly the value the unfused
+// pipeline would have placed in the intermediate plane B — the same
+// horizontal tap order for interior rows, the raw image pixels for the
+// halo rows B passes through via its border ring — and the emit step
+// accumulates in exactly the vertical engines' tap order, so fused
+// output is bitwise equal to unfused (the differential suite in
+// tests/fused.rs asserts ≤ 1e-6; the unit tests below assert equality).
+//
+// Each band primes its ring from its own halo rows, so banded parallel
+// dispatch is unchanged: workers recompute at most 2·halo boundary rows
+// that their neighbour also computes. `ring` must hold at least
+// `width · (cols − 2·halo)` elements; only that prefix is touched.
+// ---------------------------------------------------------------------------
+
+/// Fused two-pass, scalar shape, W=5 unrolled: per-pixel indexed
+/// arithmetic with the [`horiz_band_scalar`] fill and
+/// [`vert_band_scalar`] emit expressions.
+pub fn fused_band_scalar(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    ring: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    if a >= b {
+        return; // band entirely inside the border: ring never needed
+    }
+    let w = cols - 2 * h;
+    debug_assert!(ring.len() >= 5 * w);
+    for r in (a - h)..(b + h) {
+        // fill: source row r into its ring slot — horiz_band_scalar's
+        // 5-term expression for interior rows, the raw image for the
+        // halo rows the unfused pipeline passes through in B
+        let rr = (r % 5) * w;
+        let slot = &mut ring[rr..rr + w];
+        if r >= h && r < rows - h {
+            for j in h..cols - h {
+                let base = r * cols + j - h;
+                slot[j - h] = src[base] * k[0]
+                    + src[base + 1] * k[1]
+                    + src[base + 2] * k[2]
+                    + src[base + 3] * k[3]
+                    + src[base + 4] * k[4];
+            }
+        } else {
+            for (jj, o) in slot.iter_mut().enumerate() {
+                *o = src[r * cols + h + jj];
+            }
+        }
+        if r < a + h {
+            continue; // ring not yet primed for the first output row
+        }
+        // emit output row i = r − h: vert_band_scalar's 5-term
+        // expression over the ring instead of the intermediate plane
+        let i = r - h;
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let jj = j - h;
+            out[j] = ring[((i - 2) % 5) * w + jj] * k[0]
+                + ring[((i - 1) % 5) * w + jj] * k[1]
+                + ring[(i % 5) * w + jj] * k[2]
+                + ring[((i + 1) % 5) * w + jj] * k[3]
+                + ring[((i + 2) % 5) * w + jj] * k[4];
+        }
+    }
+}
+
+/// Fused two-pass, SIMD shape, W=5 unrolled: [`horiz_band_simd`]'s
+/// window sweep fills the ring, [`vert_band_simd`]'s five-slice zipped
+/// sweep emits.
+pub fn fused_band_simd(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32; 5],
+    ring: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let h = HALO;
+    if 2 * h >= cols || 2 * h >= rows {
+        return; // no interior (also guards the `- h` arithmetic)
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    if a >= b {
+        return; // band entirely inside the border: ring never needed
+    }
+    let w = cols - 2 * h;
+    debug_assert!(ring.len() >= 5 * w);
+    for r in (a - h)..(b + h) {
+        let rr = (r % 5) * w;
+        let slot = &mut ring[rr..rr + w];
+        if r >= h && r < rows - h {
+            let row = &src[r * cols..(r + 1) * cols];
+            for (o, win) in slot.iter_mut().zip(row.windows(5)) {
+                *o = dot5(win, k);
+            }
+        } else {
+            slot.copy_from_slice(&src[r * cols + h..r * cols + h + w]);
+        }
+        if r < a + h {
+            continue; // ring not yet primed for the first output row
+        }
+        let i = r - h;
+        let (s0, s1, s2, s3, s4) = (
+            &ring[((i - 2) % 5) * w..((i - 2) % 5) * w + w],
+            &ring[((i - 1) % 5) * w..((i - 1) % 5) * w + w],
+            &ring[(i % 5) * w..(i % 5) * w + w],
+            &ring[((i + 1) % 5) * w..((i + 1) % 5) * w + w],
+            &ring[((i + 2) % 5) * w..((i + 2) % 5) * w + w],
+        );
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        for (((((o, &a0), &a1), &a2), &a3), &a4) in
+            out.iter_mut().zip(s0).zip(s1).zip(s2).zip(s3).zip(s4)
+        {
+            *o = a0 * k[0] + a1 * k[1] + a2 * k[2] + a3 * k[3] + a4 * k[4];
+        }
+    }
+}
+
+/// Fused two-pass, scalar shape, generic odd width: the
+/// [`horiz_band_scalar_w`] fill and [`vert_band_scalar_w`] emit orders.
+pub fn fused_band_scalar_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    ring: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols || 2 * h >= rows {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    if a >= b {
+        return;
+    }
+    let w = cols - 2 * h;
+    debug_assert!(ring.len() >= width * w);
+    for r in (a - h)..(b + h) {
+        let rr = (r % width) * w;
+        let slot = &mut ring[rr..rr + w];
+        if r >= h && r < rows - h {
+            for j in h..cols - h {
+                let base = r * cols + j - h;
+                let mut s = 0.0f32;
+                for (v, &kv) in k.iter().enumerate() {
+                    s += src[base + v] * kv;
+                }
+                slot[j - h] = s;
+            }
+        } else {
+            for (jj, o) in slot.iter_mut().enumerate() {
+                *o = src[r * cols + h + jj];
+            }
+        }
+        if r < a + h {
+            continue;
+        }
+        let i = r - h;
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in h..cols - h {
+            let jj = j - h;
+            let mut s = 0.0f32;
+            for (u, &ku) in k.iter().enumerate() {
+                s += ring[((i + u - h) % width) * w + jj] * ku;
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Fused two-pass, SIMD shape, generic odd width: the
+/// [`horiz_band_simd_w`] window sweep fills the ring, the
+/// [`vert_band_simd_w`] accumulation order emits.
+pub fn fused_band_simd_w(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    ring: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    let width = k.len();
+    let h = width / 2;
+    if 2 * h >= cols || 2 * h >= rows {
+        return;
+    }
+    let (a, b) = band_range(rows, h, r0, r1);
+    if a >= b {
+        return;
+    }
+    let w = cols - 2 * h;
+    debug_assert!(ring.len() >= width * w);
+    for r in (a - h)..(b + h) {
+        let rr = (r % width) * w;
+        let slot = &mut ring[rr..rr + w];
+        if r >= h && r < rows - h {
+            let row = &src[r * cols..(r + 1) * cols];
+            for (o, win) in slot.iter_mut().zip(row.windows(width)) {
+                *o = dotw(win, k);
+            }
+        } else {
+            slot.copy_from_slice(&src[r * cols + h..r * cols + h + w]);
+        }
+        if r < a + h {
+            continue;
+        }
+        let i = r - h;
+        let start = (i - r0) * cols + h;
+        let out = &mut dst_band[start..start + w];
+        let rr0 = ((i - h) % width) * w;
+        let row0 = &ring[rr0..rr0 + w];
+        for (o, &s0) in out.iter_mut().zip(row0) {
+            *o = s0 * k[0];
+        }
+        for u in 1..width {
+            let rru = ((i + u - h) % width) * w;
+            let rowu = &ring[rru..rru + w];
+            let ku = k[u];
+            for (o, &sv) in out.iter_mut().zip(rowu) {
                 *o += sv * ku;
             }
         }
@@ -734,6 +998,167 @@ mod tests {
         horiz_band_simd_w(&src[..70], &mut d, 10, 7, &k, 0, 10);
         vert_band_scalar_w(&src[..70], &mut d, 10, 7, &k, 0, 10);
         assert!(d.iter().all(|&v| v == 5.0));
+    }
+
+    /// Unfused two-pass reference: horizontal into a copy of src (halo
+    /// rows stay raw, exactly the plan's intermediate plane B), then
+    /// vertical into a second copy — the values the fused engines must
+    /// reproduce bitwise.
+    fn twopass_reference(
+        src: &[f32],
+        horiz: impl Fn(&[f32], &mut [f32]),
+        vert: impl Fn(&[f32], &mut [f32]),
+    ) -> Vec<f32> {
+        let mut b = src.to_vec();
+        horiz(src, &mut b);
+        let mut out = src.to_vec();
+        vert(&b, &mut out);
+        out
+    }
+
+    #[test]
+    fn fused_w5_bitwise_equals_unfused_composition() {
+        let src = noise(20);
+        let (k, _) = k5();
+        let w = C - 4;
+
+        let want = twopass_reference(
+            &src,
+            |s, d| horiz_band_simd(s, d, R, C, &k, 0, R),
+            |s, d| vert_band_simd(s, d, R, C, &k, 0, R),
+        );
+        let mut got = src.clone();
+        let mut ring = vec![0f32; 5 * w];
+        fused_band_simd(&src, &mut got, R, C, &k, &mut ring, 0, R);
+        assert_eq!(got, want, "simd: same tap order ⇒ bitwise equal");
+
+        let want = twopass_reference(
+            &src,
+            |s, d| horiz_band_scalar(s, d, R, C, &k, 0, R),
+            |s, d| vert_band_scalar(s, d, R, C, &k, 0, R),
+        );
+        let mut got = src.clone();
+        let mut ring = vec![0f32; 5 * w];
+        fused_band_scalar(&src, &mut got, R, C, &k, &mut ring, 0, R);
+        assert_eq!(got, want, "scalar");
+    }
+
+    #[test]
+    fn fused_generic_bitwise_equals_unfused_composition() {
+        let src = noise(21);
+        for width in [3usize, 5, 7, 9] {
+            let k = gaussian_kernel(width, 1.3);
+            let w = C - 2 * (width / 2);
+            let want = twopass_reference(
+                &src,
+                |s, d| horiz_band_simd_w(s, d, R, C, &k, 0, R),
+                |s, d| vert_band_simd_w(s, d, R, C, &k, 0, R),
+            );
+            let mut got = src.clone();
+            let mut ring = vec![0f32; width * w];
+            fused_band_simd_w(&src, &mut got, R, C, &k, &mut ring, 0, R);
+            assert_eq!(got, want, "simd w{width}");
+
+            let want = twopass_reference(
+                &src,
+                |s, d| horiz_band_scalar_w(s, d, R, C, &k, 0, R),
+                |s, d| vert_band_scalar_w(s, d, R, C, &k, 0, R),
+            );
+            let mut got = src.clone();
+            let mut ring = vec![0f32; width * w];
+            fused_band_scalar_w(&src, &mut got, R, C, &k, &mut ring, 0, R);
+            assert_eq!(got, want, "scalar w{width}");
+        }
+    }
+
+    #[test]
+    fn fused_banded_partition_equals_full_sweep() {
+        // ring-wrap edge cases: r0 = 0 prime, bands shorter than the
+        // kernel height (1-row bands), and the r1 = rows tail — every
+        // band primes its own ring, so any disjoint cover agrees with
+        // the whole-plane sweep bitwise
+        let src = noise(22);
+        let (k, _) = k5();
+        let w = C - 4;
+        let mut full = src.clone();
+        let mut ring = vec![0f32; 5 * w];
+        fused_band_simd(&src, &mut full, R, C, &k, &mut ring, 0, R);
+
+        let cuts = [0usize, 1, 3, 4, 9, 10, R];
+        let mut parts = src.clone();
+        {
+            let mut rest = &mut parts[..];
+            let mut taken = 0;
+            for pair in cuts.windows(2) {
+                let (band, tail) = rest.split_at_mut((pair[1] - pair[0]) * C);
+                let mut ring = vec![1e9f32; 5 * w]; // poisoned: primes must overwrite
+                fused_band_simd(&src, band, R, C, &k, &mut ring, pair[0], pair[1]);
+                rest = tail;
+                taken += band.len();
+            }
+            assert_eq!(taken, R * C);
+        }
+        assert_eq!(full, parts);
+
+        // generic engine, width 7, same cover
+        let k7 = gaussian_kernel(7, 1.5);
+        let w7 = C - 6;
+        let mut full = src.clone();
+        let mut ring = vec![0f32; 7 * w7];
+        fused_band_simd_w(&src, &mut full, R, C, &k7, &mut ring, 0, R);
+        let mut parts = src.clone();
+        {
+            let mut rest = &mut parts[..];
+            for pair in cuts.windows(2) {
+                let (band, tail) = rest.split_at_mut((pair[1] - pair[0]) * C);
+                let mut ring = vec![1e9f32; 7 * w7];
+                fused_band_simd_w(&src, band, R, C, &k7, &mut ring, pair[0], pair[1]);
+                rest = tail;
+            }
+        }
+        assert_eq!(full, parts, "w7");
+    }
+
+    #[test]
+    fn fused_noop_on_degenerate_shapes() {
+        // rows or cols shorter than the kernel: untouched, no panic —
+        // and the ring is never read (zero-length ring is accepted)
+        let src = noise(23);
+        let (k, _) = k5();
+        let mut ring: Vec<f32> = vec![];
+        for (rows, cols) in [(3usize, 10usize), (10, 3), (1, 10), (10, 1), (4, 4)] {
+            let mut d = vec![7f32; rows * cols];
+            fused_band_simd(&src[..rows * cols], &mut d, rows, cols, &k, &mut ring, 0, rows);
+            fused_band_scalar(&src[..rows * cols], &mut d, rows, cols, &k, &mut ring, 0, rows);
+            assert!(d.iter().all(|&v| v == 7.0), "{rows}x{cols}");
+        }
+        // band entirely inside the border ring: no output rows
+        let mut d = vec![7f32; 2 * C];
+        fused_band_simd(&src, &mut d, R, C, &k, &mut ring, 0, 2);
+        assert!(d.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn existing_engines_noop_when_kernel_taller_than_plane() {
+        // the degenerate-shape guard symmetry: rows < kernel height is
+        // an explicit no-op for every engine, like cols already was
+        let src = noise(24);
+        let (k, k2) = k5();
+        let mut d = vec![9f32; 3 * C];
+        singlepass_band_scalar(&src[..3 * C], &mut d, 3, C, &k2, 0, 3);
+        singlepass_band_simd(&src[..3 * C], &mut d, 3, C, &k2, 0, 3);
+        singlepass_naive_band(&src[..3 * C], &mut d, 3, C, &k2, 5, 0, 3);
+        horiz_band_scalar(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        horiz_band_simd(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        vert_band_scalar(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        vert_band_simd(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        singlepass_band_scalar_w(&src[..3 * C], &mut d, 3, C, &k2, 5, 0, 3);
+        singlepass_band_simd_w(&src[..3 * C], &mut d, 3, C, &k2, 5, 0, 3);
+        horiz_band_scalar_w(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        horiz_band_simd_w(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        vert_band_scalar_w(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        vert_band_simd_w(&src[..3 * C], &mut d, 3, C, &k, 0, 3);
+        assert!(d.iter().all(|&v| v == 9.0));
     }
 
     #[test]

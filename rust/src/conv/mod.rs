@@ -35,6 +35,13 @@
 //! same scalar/simd shape. Selection between them — and all
 //! algorithm/variant/layout dispatch — lives in [`crate::plan`]; the
 //! drivers here are sequential conveniences over it.
+//!
+//! Beyond the paper's ladder, the two-pass rung also exists **fused**
+//! (`band::fused_band_*`, `tile::fused_tile_*`): one rolling row-ring
+//! pass that keeps the horizontal intermediate in an O(width×cols)
+//! per-worker ring instead of a full plane, halving memory traffic on
+//! the bandwidth-bound shapes that dominate at scale (enabled per plan
+//! via `PlanBuilder::fuse`, per run via `--fuse`).
 
 pub mod band;
 pub mod plane;

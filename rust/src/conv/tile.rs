@@ -230,6 +230,113 @@ pub fn vert_tile_simd(src: &[f32], out: &TileCells, rows: usize, cols: usize, k:
     }
 }
 
+/// Fused two-pass over one tile, scalar shape: the 2-D sibling of
+/// [`super::band::fused_band_scalar_w`]. A `width`-deep ring of
+/// horizontally filtered row segments (the tile's columns only) rolls
+/// down the tile; each output row is emitted as soon as its window is
+/// resident. Fill matches [`horiz_tile_scalar`]'s accumulation order
+/// (raw image for the halo rows the unfused pipeline passes through in
+/// B), emit matches [`vert_tile_scalar`]'s, so fused tiled output is
+/// bitwise equal to the unfused tiled pipeline. `ring` needs
+/// `width · tile_width` elements; only that prefix is touched.
+pub fn fused_tile_scalar(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    ring: &mut [f32],
+    t: Tile,
+) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    let tw = jb - ja;
+    debug_assert!(ring.len() >= width * tw);
+    for r in (a - h)..(b + h) {
+        let rr = (r % width) * tw;
+        let slot = &mut ring[rr..rr + tw];
+        if r >= h && r < rows - h {
+            for (o, j) in slot.iter_mut().zip(ja..jb) {
+                let base = r * cols + j - h;
+                let mut s = 0.0f32;
+                for (v, &kv) in k.iter().enumerate() {
+                    s += src[base + v] * kv;
+                }
+                *o = s;
+            }
+        } else {
+            for (jj, o) in slot.iter_mut().enumerate() {
+                *o = src[r * cols + ja + jj];
+            }
+        }
+        if r < a + h {
+            continue; // ring not yet primed for the first output row
+        }
+        let i = r - h;
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let jj = j - ja;
+            let mut s = 0.0f32;
+            for (u, &ku) in k.iter().enumerate() {
+                s += ring[((i + u - h) % width) * tw + jj] * ku;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Fused two-pass over one tile, SIMD shape: [`horiz_tile_simd`]'s
+/// window sweep fills the ring, [`vert_tile_simd`]'s accumulation order
+/// emits (see [`fused_tile_scalar`] for the ring discipline).
+pub fn fused_tile_simd(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k: &[f32],
+    ring: &mut [f32],
+    t: Tile,
+) {
+    let width = k.len();
+    let h = width / 2;
+    let Some((a, b, ja, jb)) = interior(rows, cols, h, t) else { return };
+    let tw = jb - ja;
+    debug_assert!(ring.len() >= width * tw);
+    for r in (a - h)..(b + h) {
+        let rr = (r % width) * tw;
+        let slot = &mut ring[rr..rr + tw];
+        if r >= h && r < rows - h {
+            let row = &src[r * cols + ja - h..r * cols + jb + h];
+            for (o, win) in slot.iter_mut().zip(row.windows(width)) {
+                *o = dotw(win, k);
+            }
+        } else {
+            slot.copy_from_slice(&src[r * cols + ja..r * cols + jb]);
+        }
+        if r < a + h {
+            continue; // ring not yet primed for the first output row
+        }
+        let i = r - h;
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        let rr0 = ((i - h) % width) * tw;
+        let row0 = &ring[rr0..rr0 + tw];
+        for (o, &s0) in out_row.iter_mut().zip(row0) {
+            *o = s0 * k[0];
+        }
+        for u in 1..width {
+            let rru = ((i + u - h) % width) * tw;
+            let rowu = &ring[rru..rru + tw];
+            let ku = k[u];
+            for (o, &sv) in out_row.iter_mut().zip(rowu) {
+                *o += sv * ku;
+            }
+        }
+    }
+}
+
 /// Copy-back over one tile (covers the whole tile — the copy-back pass
 /// has no interior clamp).
 pub fn copy_back_tile(src: &[f32], out: &TileCells, cols: usize, t: Tile) {
@@ -378,6 +485,72 @@ mod tests {
             vert_tile_simd(&src[..70], &cells, 10, 7, &k, Tile { r0: 0, r1: 10, c0: 0, c1: 7 });
         }
         assert!(dst.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn fused_tiles_match_unfused_tile_composition() {
+        // fused tiled ≡ horiz-tiles-then-vert-tiles, bitwise, across
+        // ragged grids and widths — the tiled twin of the band-level
+        // fused equivalence tests
+        let src = noise(6);
+        for width in [3usize, 5, 7] {
+            let k = gaussian_kernel(width, 1.2);
+            for spec in [TileSpec::new(5, 7), TileSpec::new(100, 3), TileSpec::new(4, 100)] {
+                for simd in [false, true] {
+                    let mut b = src.clone();
+                    sweep_tiles(spec, &mut b, |cells, t| {
+                        if simd {
+                            horiz_tile_simd(&src, cells, R, C, &k, t);
+                        } else {
+                            horiz_tile_scalar(&src, cells, R, C, &k, t);
+                        }
+                    });
+                    let mut want = src.clone();
+                    sweep_tiles(spec, &mut want, |cells, t| {
+                        if simd {
+                            vert_tile_simd(&b, cells, R, C, &k, t);
+                        } else {
+                            vert_tile_scalar(&b, cells, R, C, &k, t);
+                        }
+                    });
+                    let mut got = src.clone();
+                    let mut ring = vec![1e9f32; width * C];
+                    sweep_tiles(spec, &mut got, |cells, t| {
+                        if simd {
+                            fused_tile_simd(&src, cells, R, C, &k, &mut ring.clone(), t);
+                        } else {
+                            fused_tile_scalar(&src, cells, R, C, &k, &mut ring.clone(), t);
+                        }
+                    });
+                    assert_eq!(want, got, "w{width} {} simd={simd}", spec.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_border_tiles_and_degenerate_planes_are_noops() {
+        let src = noise(7);
+        let k = gaussian_kernel(5, 1.0);
+        let mut ring = vec![0f32; 5 * C];
+        let mut dst = vec![9f32; R * C];
+        {
+            let cells = TileCells::new(&mut dst, R, C);
+            let top = Tile { r0: 0, r1: 2, c0: 0, c1: C };
+            fused_tile_simd(&src, &cells, R, C, &k, &mut ring, top);
+            let left = Tile { r0: 0, r1: R, c0: 0, c1: 2 };
+            fused_tile_scalar(&src, &cells, R, C, &k, &mut ring, left);
+        }
+        assert!(dst.iter().all(|&v| v == 9.0));
+        // kernel taller/wider than the plane
+        let k9 = gaussian_kernel(9, 2.0);
+        let mut d = vec![5f32; 10 * 7];
+        {
+            let cells = TileCells::new(&mut d, 10, 7);
+            let whole = Tile { r0: 0, r1: 10, c0: 0, c1: 7 };
+            fused_tile_simd(&src[..70], &cells, 10, 7, &k9, &mut ring, whole);
+        }
+        assert!(d.iter().all(|&v| v == 5.0));
     }
 
     #[test]

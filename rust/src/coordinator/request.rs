@@ -27,8 +27,13 @@ pub struct ConvRequest {
     /// `None` → the coordinator's configured tile decomposition (untiled
     /// row bands unless `--tile-rows`/`--tile-cols` were set). A request
     /// may carry its own tile; executors cache one plan per distinct
-    /// `(algorithm, variant, layout, shape, kernel, tile)` key.
+    /// `(algorithm, variant, layout, shape, kernel, tile, fuse)` key.
     pub tile: Option<TileSpec>,
+    /// `None` → the coordinator's configured default (`--fuse`).
+    /// Fusion only applies to two-pass requests; for single-pass
+    /// algorithms it is silently inapplicable rather than an error, so
+    /// a `--fuse` serving default never refuses single-pass traffic.
+    pub fuse: Option<bool>,
     /// Time-to-live from submission. `None` → the coordinator's
     /// configured default (`--deadline-ms`; no deadline if that is 0).
     /// Checked at admission, while blocked waiting for a queue slot,
@@ -49,6 +54,7 @@ impl ConvRequest {
             layout: None,
             kernel: None,
             tile: None,
+            fuse: None,
             deadline: None,
         }
     }
@@ -83,6 +89,13 @@ impl ConvRequest {
     /// coordinator's configured default); validated at plan build.
     pub fn with_tile(mut self, spec: TileSpec) -> Self {
         self.tile = Some(spec);
+        self
+    }
+
+    /// Fuse (or explicitly unfuse) this request's two-pass pipeline,
+    /// overriding the coordinator's `--fuse` default.
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = Some(fuse);
         self
     }
 
@@ -129,6 +142,7 @@ mod tests {
             .with_layout(Layout::Agglomerated)
             .with_kernel(KernelSpec::new(7, 2.0))
             .with_tile(TileSpec::new(16, 32))
+            .with_fuse(true)
             .with_deadline(Duration::from_millis(250));
         assert_eq!(r.id, 7);
         assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
@@ -137,6 +151,7 @@ mod tests {
         assert_eq!(r.layout, Some(Layout::Agglomerated));
         assert_eq!(r.kernel, Some(KernelSpec::new(7, 2.0)));
         assert_eq!(r.tile, Some(TileSpec::new(16, 32)));
+        assert_eq!(r.fuse, Some(true));
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 
@@ -148,6 +163,7 @@ mod tests {
         assert!(r.layout.is_none());
         assert!(r.kernel.is_none());
         assert!(r.tile.is_none());
+        assert!(r.fuse.is_none());
         assert!(r.deadline.is_none());
         assert_eq!(r.algorithm, Algorithm::TwoPass);
     }

@@ -14,9 +14,10 @@
 //!
 //! **Executors** run every native request through the plan layer: each
 //! executor thread owns a [`ScratchArena`] (scratch planes recycle
-//! across requests — zero scratch allocations after warm-up) and a cache
-//! of built [`ConvPlan`]s keyed by `(algorithm, variant, layout, shape,
-//! kernel)`, so repeated traffic at a shape pays plan validation once.
+//! across requests — zero scratch allocations after warm-up, fused
+//! row-rings included) and a cache of built [`ConvPlan`]s keyed by
+//! `(algorithm, variant, layout, shape, kernel, tile, fuse)`, so
+//! repeated traffic at a shape pays plan validation once.
 //!
 //! **Stats are sharded**: each executor accumulates into its own
 //! `Mutex<CoordinatorStats>` slot — uncontended on the hot path — and
@@ -101,6 +102,9 @@ struct Inner {
     /// configured default tile decomposition for native execution
     /// (requests may override; `None` = untiled row bands)
     tile: Option<TileSpec>,
+    /// configured default for two-pass fusion (requests may override
+    /// with `with_fuse`; single-pass algorithms ignore it)
+    fuse: bool,
     /// taps the PJRT path executes with: the manifest's reference
     /// kernel when PJRT is loaded, the configured default otherwise
     kernel_taps: Vec<f32>,
@@ -142,6 +146,8 @@ struct PlanKey {
     kernel: (usize, u64),
     /// tile decomposition (`None` = untiled row bands)
     tile: Option<(usize, usize)>,
+    /// two-pass fusion (always false for single-pass algorithms)
+    fused: bool,
 }
 
 /// The serving loop (see module docs).
@@ -192,6 +198,7 @@ impl Coordinator {
                 .with_agglomeration(cfg.agglomeration.max(1)),
             kernel,
             tile: cfg.tile_spec(),
+            fuse: cfg.fuse,
             kernel_taps,
             pjrt,
             shards: (0..n).map(|_| Mutex::new(CoordinatorStats::default())).collect(),
@@ -421,6 +428,10 @@ fn serve_one(
     if let Some(t) = tile {
         t.validate().context("invalid request tile")?;
     }
+    // fusion only applies to the two-pass algorithm; a fused serving
+    // default must not refuse single-pass traffic, so it is silently
+    // inapplicable there rather than a build error
+    let fuse = req.fuse.unwrap_or(inner.fuse) && req.algorithm == Algorithm::TwoPass;
 
     // the round-robin counter advances only when the policy picks the
     // backend: explicitly pinned traffic (PJRT included) must not
@@ -461,6 +472,7 @@ fn serve_one(
                 cols: req.image.cols,
                 kernel: kernel.cache_key(),
                 tile: tile.map(|t| t.cache_key()),
+                fused: fuse,
             };
             if !plans.contains_key(&key) {
                 if plans.len() >= PLAN_CACHE_MAX {
@@ -472,6 +484,7 @@ fn serve_one(
                     .layout(layout)
                     .kernel(kernel)
                     .tile_opt(tile)
+                    .fuse(fuse)
                     .shape(req.image.planes, req.image.rows, req.image.cols)
                     .build()
                     .context("invalid request plan")?;
@@ -724,6 +737,41 @@ mod tests {
                 .unwrap();
             assert!(got.image.max_abs_diff(&want.image) <= 1e-6, "{backend:?}");
         }
+    }
+
+    #[test]
+    fn fused_requests_match_unfused_pixels() {
+        // per-request fusion on a default-unfused coordinator
+        let policy = RoutePolicy::Fixed(Backend::NativeOpenMp);
+        let c = Coordinator::new(&cfg(), policy, 1, false).unwrap();
+        let img = synth_image(3, 30, 28, Pattern::Noise, 31);
+        let want = c.serve(ConvRequest::new(1, img.clone())).unwrap();
+        for backend in [Backend::NativeOpenMp, Backend::NativeOpenCl, Backend::NativeGprm] {
+            let got = c
+                .serve(ConvRequest::new(2, img.clone()).with_backend(backend).with_fuse(true))
+                .unwrap();
+            assert!(got.image.max_abs_diff(&want.image) <= 1e-6, "{backend:?}");
+        }
+        // fused composes with tiling on the serving path
+        let got = c
+            .serve(ConvRequest::new(3, img.clone()).with_fuse(true).with_tile(TileSpec::new(8, 8)))
+            .unwrap();
+        assert!(got.image.max_abs_diff(&want.image) <= 1e-6, "fused+tiled");
+
+        // a --fuse coordinator default applies to two-pass requests and
+        // is silently inapplicable to single-pass ones; with_fuse(false)
+        // opts a request back out
+        let cfg = RunConfig { fuse: true, ..cfg() };
+        let c = Coordinator::new(&cfg, policy, 1, false).unwrap();
+        let fused_default = c.serve(ConvRequest::new(4, img.clone())).unwrap();
+        assert!(fused_default.image.max_abs_diff(&want.image) <= 1e-6);
+        let opted_out = c.serve(ConvRequest::new(5, img.clone()).with_fuse(false)).unwrap();
+        assert_eq!(opted_out.image, want.image);
+        let single_pass = c
+            .serve(ConvRequest::new(6, img).with_algorithm(Algorithm::SinglePassNoCopy))
+            .unwrap();
+        assert_eq!(single_pass.backend, Backend::NativeOpenMp);
+        assert_eq!(c.stats().errors, 0, "single-pass under --fuse must not error");
     }
 
     #[test]

@@ -39,13 +39,26 @@ impl Measured {
     }
 
     /// Build the plan a measurement runs (built once, outside the timed
-    /// loop — exactly how a serving executor amortises it).
+    /// loop — exactly how a serving executor amortises it). Honours the
+    /// run's `--fuse` default for two-pass exhibits.
     fn plan(&self, img: &PlanarImage, alg: Algorithm, variant: Variant, layout: Layout) -> ConvPlan {
+        self.plan_with_fuse(img, alg, variant, layout, self.cfg.fuse && alg == Algorithm::TwoPass)
+    }
+
+    fn plan_with_fuse(
+        &self,
+        img: &PlanarImage,
+        alg: Algorithm,
+        variant: Variant,
+        layout: Layout,
+        fuse: bool,
+    ) -> ConvPlan {
         ConvPlan::builder()
             .algorithm(alg)
             .variant(variant)
             .layout(layout)
             .kernel_taps(self.kernel.clone())
+            .fuse(fuse)
             .shape(img.planes, img.rows, img.cols)
             .build()
             .expect("measured exhibit plan (validated by run_measured)")
@@ -290,6 +303,65 @@ impl Measured {
         out
     }
 
+    /// Fused-vs-unfused two-pass exhibit: per-image ms **and** the
+    /// estimated bytes each plan moves through main memory — on
+    /// bandwidth-bound hardware the traffic column, not the FLOP count,
+    /// explains the speedup (Hofmann et al., PAPERS.md). The unfused
+    /// column doubles as the correctness anchor: both plans produce
+    /// equivalent pixels (differential suite in `tests/fused.rs`).
+    pub fn fused(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Fused two-pass (measured, {} threads): rolling row-ring vs separate passes",
+                self.cfg.threads
+            ),
+            &[
+                "Image Size",
+                "Model",
+                "unfused ms",
+                "fused ms",
+                "speedup",
+                "unfused MB",
+                "fused MB",
+                "traffic",
+            ],
+        );
+        for &size in &self.cfg.sizes {
+            let img = self.image(size);
+            let (alg, var, lay) = (Algorithm::TwoPass, Variant::Simd, Layout::PerPlane);
+            let unfused = self.plan_with_fuse(&img, alg, var, lay, false);
+            let fused = self.plan_with_fuse(&img, alg, var, lay, true);
+            let (tr_u, tr_f) = (unfused.traffic_estimate(), fused.traffic_estimate());
+            let models: [&dyn ExecutionModel; 3] = [&self.openmp, &self.opencl, &self.gprm];
+            for model in models {
+                let mut arena = ScratchArena::new();
+                let u = time_reps(
+                    || unfused.execute_discard(Some(model), &img, &mut arena).unwrap(),
+                    self.cfg.warmup,
+                    self.cfg.reps,
+                )
+                .median();
+                let f = time_reps(
+                    || fused.execute_discard(Some(model), &img, &mut arena).unwrap(),
+                    self.cfg.warmup,
+                    self.cfg.reps,
+                )
+                .median();
+                t.row(vec![
+                    format!("{size}x{size}"),
+                    model.name().to_string(),
+                    format!("{u:.2}"),
+                    format!("{f:.2}"),
+                    format!("{:.2}x", if f > 0.0 { u / f } else { 1.0 }),
+                    format!("{:.1}", tr_u.total_mb()),
+                    format!("{:.1}", tr_f.total_mb()),
+                    format!("{:.2}x", tr_f.total_bytes() as f64 / tr_u.total_bytes() as f64),
+                ]);
+            }
+        }
+        t
+    }
+
     /// Thread sweep (section 7 note): single-pass-nocopy SIMD OpenMP.
     pub fn threads_sweep(&self, counts: &[usize]) -> Table {
         let mut header: Vec<String> = vec!["Image Size".into()];
@@ -370,6 +442,42 @@ mod tests {
         assert_eq!(tables.len(), 2);
         assert!(tables[0].to_text().contains("tuned"));
         assert_eq!(tables[1].n_rows(), 3, "one winner per model");
+    }
+
+    #[test]
+    fn fused_exhibit_renders_traffic_columns() {
+        let cfg =
+            RunConfig { sizes: vec![48], reps: 1, warmup: 0, threads: 2, ..Default::default() };
+        let tables = crate::harness::run_measured("fused", &cfg).unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.n_rows(), 3, "one row per model at one size");
+        let text = t.to_text();
+        assert!(text.contains("OpenMP") && text.contains("GPRM"));
+        assert!(text.contains("0.50x"), "fused plans move half the bytes: {text}");
+        // the JSON dump round-trips (the machine-readable satellite)
+        let json = t.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("rows").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn measured_exhibits_honour_fuse_default() {
+        // --fuse flows into every two-pass exhibit plan without
+        // disturbing single-pass exhibits
+        let cfg = RunConfig {
+            fuse: true,
+            sizes: vec![48],
+            reps: 1,
+            warmup: 0,
+            threads: 2,
+            ..Default::default()
+        };
+        let tables = crate::harness::run_measured("fig2", &cfg).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert!(tables[0].n_rows() >= 1);
+        let tables = crate::harness::run_measured("fig1", &cfg).unwrap();
+        assert_eq!(tables[0].n_rows(), 9, "ladder (single-pass rungs included) still renders");
     }
 
     #[test]

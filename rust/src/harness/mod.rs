@@ -20,8 +20,10 @@ use crate::metrics::Table;
 use crate::models::Layout;
 
 /// All exhibit names.
-pub const EXHIBITS: [&str; 10] =
-    ["fig1", "fig2", "fig3", "fig4", "table1", "table2", "threads", "ablations", "tiling", "all"];
+pub const EXHIBITS: [&str; 11] = [
+    "fig1", "fig2", "fig3", "fig4", "table1", "table2", "threads", "ablations", "tiling",
+    "fused", "all",
+];
 
 /// Generate the simulated rendition of an exhibit.
 pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
@@ -38,6 +40,10 @@ pub fn simulated(exhibit: &str) -> Result<Vec<Table>> {
         // the tiling sweep is host-measured; its simulated counterpart
         // is the paper's own agglomeration exhibit (Fig. 3)
         "tiling" => vec![sim_tables::fig3()],
+        // fusion is host-measured (a memory-traffic effect the phisim
+        // cost model does not separate); the closest simulated exhibit
+        // is the two-pass speedup figure
+        "fused" => vec![sim_tables::fig2()],
         "all" => vec![
             sim_tables::fig1(),
             sim_tables::table1(),
@@ -72,6 +78,8 @@ pub fn run_measured(exhibit: &str, cfg: &RunConfig) -> Result<Vec<Table>> {
             vec![m.threads_sweep(&counts)]
         }
         "ablations" => m.ablations(),
+        // fused-vs-unfused two-pass: time plus estimated bytes moved
+        "fused" => vec![m.fused()],
         "tiling" => {
             // the agglomeration-sweep exhibit: one table per size plus
             // the tuned-winner summary (see crate::autotune)

@@ -15,10 +15,11 @@
 //!   single-pass-no-copy (the algorithm substrate), at width 5 (unrolled
 //!   fast path) and any odd width (generic engines).
 //! * [`plan`] — the execution-plan layer: a validating builder resolves
-//!   `{algorithm, variant, layout, kernel, shape}` into a [`plan::ConvPlan`]
-//!   pass pipeline that every consumer (sequential drivers, parallel
-//!   driver, coordinator, harness, benches) executes through, against a
-//!   reusable [`plan::ScratchArena`].
+//!   `{algorithm, variant, layout, kernel, tile, fuse, shape}` into a
+//!   [`plan::ConvPlan`] pass pipeline that every consumer (sequential
+//!   drivers, parallel driver, coordinator, harness, benches) executes
+//!   through, against a reusable [`plan::ScratchArena`] (fused plans
+//!   lease per-worker row-rings from it).
 //! * [`models`] — the paper's three parallel programming models as
 //!   pluggable execution engines over a shared worker-pool substrate:
 //!   OpenMP-style fork-join static chunking, OpenCL-style NDRange

@@ -11,6 +11,7 @@
 //! Examples:
 //!   phi-conv simulate --exhibit all
 //!   phi-conv measure --exhibit table1 --sizes 288,576 --reps 5
+//!   phi-conv measure --exhibit fused --format json   # fusion traffic win
 //!   phi-conv tune --sizes 288,576 --reps 5
 //!   phi-conv validate
 //!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
@@ -37,8 +38,8 @@ fn main() {
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cli = standard_cli("phi-conv", "2D image convolution under three parallel execution models (Tousimojarad et al. 2017 reproduction)")
-        .opt("exhibit", "all", "fig1|fig2|fig3|fig4|table1|table2|threads|all")
-        .opt("format", "text", "text|markdown|csv")
+        .opt("exhibit", "all", "fig1..fig4|table1|table2|threads|ablations|tiling|fused|all")
+        .opt("format", "text", "text|markdown|csv|json")
         .opt("requests", "24", "serve: number of requests")
         .opt("executors", "2", "serve: executor threads")
         .opt("policy", "adaptive", "serve: adaptive|round-robin|openmp|opencl|gprm|pjrt")
@@ -85,6 +86,7 @@ fn print_table(t: &phi_conv::metrics::Table, format: &str) {
     match format {
         "markdown" => println!("{}", t.to_markdown()),
         "csv" => println!("{}", t.to_csv()),
+        "json" => println!("{}", t.to_json()),
         _ => println!("{}", t.to_text()),
     }
 }

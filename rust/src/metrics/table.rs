@@ -31,6 +31,20 @@ impl Table {
         self.rows.len()
     }
 
+    /// The table as a JSON object (`{"title", "header", "rows"}`) for
+    /// machine consumption of exhibit dumps — `phi-conv … --format json`
+    /// and the bench binaries emit this next to the text rendering.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let strs =
+            |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert("header".to_string(), strs(&self.header));
+        obj.insert("rows".to_string(), Json::Arr(self.rows.iter().map(|r| strs(r)).collect()));
+        Json::Obj(obj)
+    }
+
     /// Column widths for aligned text output.
     fn widths(&self) -> Vec<usize> {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
@@ -159,5 +173,16 @@ mod tests {
     fn formatters() {
         assert_eq!(ms(3.94), "3.9");
         assert_eq!(speedup(4.87), "4.9×");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        use crate::util::json::Json;
+        let parsed = Json::parse(&sample().to_json().to_string()).unwrap();
+        assert_eq!(parsed.req_str("title").unwrap(), "Table 1");
+        assert_eq!(parsed.req_arr("header").unwrap().len(), 3);
+        let rows = parsed.req_arr("rows").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_arr().unwrap()[2].as_str(), Some("216.9"));
     }
 }

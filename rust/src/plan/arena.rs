@@ -15,12 +15,17 @@
 //! hash-map-lookup cost with no locking on the serving path.
 
 use std::collections::HashMap;
+use std::sync::{Mutex, PoisonError};
 
 /// Pool of `Vec<f32>` scratch buffers keyed by exact length.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
     /// length → stack of free buffers of exactly that length
     pools: HashMap<usize, Vec<Vec<f32>>>,
+    /// recycled free-slot index stores for [`RingLease`]s, so fused
+    /// executions allocate nothing after warm-up (the `Vec<f32>` data
+    /// itself recycles through `pools`)
+    ring_indices: Vec<Vec<usize>>,
     /// total fresh allocations performed (monotone; growth after warm-up
     /// means a leak or a shape churn — the reuse tests watch this)
     allocations: usize,
@@ -61,6 +66,126 @@ impl ScratchArena {
     /// Drop every pooled buffer (e.g. after a shape-mix change).
     pub fn clear(&mut self) {
         self.pools.clear();
+        self.ring_indices.clear();
+    }
+
+    /// Lease a [`RingLease`] of `slots` disjoint ring buffers of
+    /// `slot_len` elements each — the per-worker rolling row-rings of a
+    /// fused pass (O(width × cols) per worker). The backing `Vec<f32>`
+    /// comes from the same pools as the A/B planes, so steady-state
+    /// fused serving performs zero scratch allocations.
+    pub fn take_rings(&mut self, slots: usize, slot_len: usize) -> RingLease {
+        let data = self.take(slots * slot_len);
+        let free = self.ring_indices.pop().unwrap_or_default();
+        RingLease::assemble(data, slots, slot_len, free)
+    }
+
+    /// Return a lease taken with [`ScratchArena::take_rings`]; both the
+    /// data buffer and the slot index store recycle.
+    pub fn put_rings(&mut self, lease: RingLease) {
+        let (data, free) = lease.into_parts();
+        self.put(data);
+        self.ring_indices.push(free);
+    }
+}
+
+/// A pool of `slots` disjoint per-worker ring buffers carved out of one
+/// arena-leased `Vec<f32>`, handed out to concurrently running band/tile
+/// jobs via [`RingLease::acquire`].
+///
+/// Soundness: a free-list of slot indices guarantees two outstanding
+/// [`RingSlot`]s never alias (each index is held by at most one guard;
+/// `Drop` returns it). The execution models invoke at most `workers()`
+/// jobs concurrently, so leases sized to `workers()` never overflow; if
+/// a foreign [`crate::models::ExecutionModel`] exceeds that, `acquire`
+/// stays correct by handing out a freshly allocated overflow buffer
+/// instead of panicking.
+#[derive(Debug)]
+pub struct RingLease {
+    /// owns the slot storage; accessed only through `ptr`
+    data: Vec<f32>,
+    slots: usize,
+    slot_len: usize,
+    ptr: *mut f32,
+    free: Mutex<Vec<usize>>,
+}
+
+// SAFETY: all shared-access discipline is the free-list above — a slot's
+// `&mut` view exists only while its index is checked out.
+unsafe impl Send for RingLease {}
+unsafe impl Sync for RingLease {}
+
+impl RingLease {
+    fn assemble(mut data: Vec<f32>, slots: usize, slot_len: usize, mut free: Vec<usize>) -> Self {
+        debug_assert!(data.len() >= slots * slot_len);
+        free.clear();
+        free.extend(0..slots);
+        let ptr = data.as_mut_ptr();
+        Self { data, slots, slot_len, ptr, free: Mutex::new(free) }
+    }
+
+    /// Arena-less construction for the expert `run_plane` path (one
+    /// fresh allocation; serving goes through [`ScratchArena::take_rings`]).
+    pub fn fresh(slots: usize, slot_len: usize) -> Self {
+        Self::assemble(vec![0.0; slots * slot_len], slots, slot_len, Vec::new())
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Elements per slot (`width · interior-cols` for a fused plan).
+    pub fn slot_len(&self) -> usize {
+        self.slot_len
+    }
+
+    /// Check out one ring buffer; returned to the free list when the
+    /// guard drops.
+    pub fn acquire(&self) -> RingSlot<'_> {
+        let idx = self.free.lock().unwrap_or_else(PoisonError::into_inner).pop();
+        match idx {
+            Some(i) => RingSlot { lease: self, idx: Some(i), overflow: Vec::new() },
+            // more concurrent jobs than advertised workers: stay
+            // correct at the cost of one allocation
+            None => RingSlot { lease: self, idx: None, overflow: vec![0.0; self.slot_len] },
+        }
+    }
+
+    fn into_parts(self) -> (Vec<f32>, Vec<usize>) {
+        let free = self.free.into_inner().unwrap_or_else(PoisonError::into_inner);
+        (self.data, free)
+    }
+}
+
+/// Checked-out view of one ring buffer (see [`RingLease::acquire`]).
+pub struct RingSlot<'a> {
+    lease: &'a RingLease,
+    idx: Option<usize>,
+    overflow: Vec<f32>,
+}
+
+impl RingSlot<'_> {
+    /// The slot's buffer (`slot_len` elements).
+    pub fn buf(&mut self) -> &mut [f32] {
+        match self.idx {
+            // SAFETY: `idx` is checked out to this guard alone (free-list
+            // discipline), so the view aliases no other slot.
+            Some(i) => unsafe {
+                std::slice::from_raw_parts_mut(
+                    self.lease.ptr.add(i * self.lease.slot_len),
+                    self.lease.slot_len,
+                )
+            },
+            None => &mut self.overflow,
+        }
+    }
+}
+
+impl Drop for RingSlot<'_> {
+    fn drop(&mut self) {
+        if let Some(i) = self.idx {
+            self.lease.free.lock().unwrap_or_else(PoisonError::into_inner).push(i);
+        }
     }
 }
 
@@ -109,6 +234,72 @@ mod tests {
         }
         assert_eq!(a.allocations(), 2);
         assert_eq!(a.pooled(), 2);
+    }
+
+    #[test]
+    fn ring_lease_recycles_without_allocating() {
+        let mut a = ScratchArena::new();
+        let lease = a.take_rings(4, 32);
+        assert_eq!((lease.slots(), lease.slot_len()), (4, 32));
+        assert_eq!(a.allocations(), 1, "one backing buffer");
+        a.put_rings(lease);
+        for _ in 0..20 {
+            let lease = a.take_rings(4, 32);
+            a.put_rings(lease);
+        }
+        assert_eq!(a.allocations(), 1, "steady state leases without allocating");
+    }
+
+    #[test]
+    fn ring_slots_are_disjoint_and_returned() {
+        let lease = RingLease::fresh(3, 8);
+        {
+            let mut s0 = lease.acquire();
+            let mut s1 = lease.acquire();
+            let mut s2 = lease.acquire();
+            s0.buf().fill(1.0);
+            s1.buf().fill(2.0);
+            s2.buf().fill(3.0);
+            assert!(s0.buf().iter().all(|&v| v == 1.0), "no cross-slot clobbering");
+            // all slots checked out: the overflow fallback still works
+            let mut s3 = lease.acquire();
+            assert_eq!(s3.buf().len(), 8);
+            s3.buf().fill(9.0);
+            assert!(s1.buf().iter().all(|&v| v == 2.0));
+        }
+        // guards dropped: all three pooled slots are available again
+        let mut again = lease.acquire();
+        assert_eq!(again.buf().len(), 8);
+    }
+
+    #[test]
+    fn ring_slots_usable_across_threads() {
+        let lease = RingLease::fresh(2, 16);
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let lease = &lease;
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        let mut slot = lease.acquire();
+                        slot.buf().fill(t as f32);
+                        let v = slot.buf()[0];
+                        assert_eq!(v, t as f32, "slot is private while held");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn zero_sized_ring_lease_is_fine() {
+        // a fused plan on a plane with no interior leases a zero-length
+        // ring; the engines never touch it
+        let mut a = ScratchArena::new();
+        let lease = a.take_rings(2, 0);
+        let mut slot = lease.acquire();
+        assert!(slot.buf().is_empty());
+        drop(slot);
+        a.put_rings(lease);
     }
 
     #[test]

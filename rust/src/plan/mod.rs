@@ -53,6 +53,19 @@
 //! differential suite in `tests/tiling.rs`); [`crate::autotune`] sweeps
 //! tile shapes and agglomeration factors to pick the fastest
 //! decomposition per (model, shape, kernel).
+//!
+//! **Fusion.** [`PlanBuilder::fuse`] collapses the two separable passes
+//! into one rolling row-ring pass: instead of writing a full-plane
+//! horizontal intermediate and re-reading it vertically (the image
+//! crosses memory twice), each worker keeps a `width`-deep ring of
+//! horizontally filtered rows in cache and emits every output row
+//! immediately. Scratch shrinks to O(width × cols) per worker
+//! ([`ConvPlan::ring_footprint`], leased from the arena with zero
+//! steady-state allocations), traffic halves
+//! ([`ConvPlan::traffic_estimate`]), and pixels stay equivalent ≤ 1e-6
+//! across models, widths, layouts and tiled/untiled dispatch
+//! (`tests/fused.rs`). Composes with tiling; [`crate::autotune`] sweeps
+//! fused candidates alongside tiled ones.
 
 use crate::util::error::Result;
 
@@ -65,7 +78,7 @@ pub use crate::models::tile::TileSpec;
 pub mod arena;
 mod pipeline;
 
-pub use arena::ScratchArena;
+pub use arena::{RingLease, RingSlot, ScratchArena};
 pub use pipeline::PassKind;
 
 use pipeline::{Exec, ResultHome};
@@ -128,6 +141,7 @@ pub struct PlanBuilder {
     shape: Option<(usize, usize, usize)>,
     force_generic: bool,
     tile: Option<TileSpec>,
+    fuse: bool,
 }
 
 impl PlanBuilder {
@@ -140,6 +154,7 @@ impl PlanBuilder {
             shape: None,
             force_generic: false,
             tile: None,
+            fuse: false,
         }
     }
 
@@ -201,6 +216,22 @@ impl PlanBuilder {
         self
     }
 
+    /// Fuse the two-pass pipeline into one rolling row-ring pass: instead
+    /// of a horizontal pass that writes a full-plane intermediate and a
+    /// vertical pass that re-reads it, each worker keeps a `width`-deep
+    /// ring of horizontally filtered rows and emits every output row
+    /// immediately. The intermediate stays in cache (scratch shrinks to
+    /// O(width × cols) per worker, see [`ConvPlan::ring_footprint`]) and
+    /// the image crosses memory once instead of twice — the decisive cost
+    /// on bandwidth-bound hardware ([`ConvPlan::traffic_estimate`]).
+    /// Pixels are equivalent to the unfused plan (≤ 1e-6; differential
+    /// suite in `tests/fused.rs`). Two-pass algorithm only: `build()`
+    /// rejects fused single-pass plans.
+    pub fn fuse(mut self, yes: bool) -> Self {
+        self.fuse = yes;
+        self
+    }
+
     /// Validate the full combination and resolve the pass pipeline.
     pub fn build(self) -> Result<ConvPlan> {
         let (planes, rows, cols) = self
@@ -222,6 +253,12 @@ impl PlanBuilder {
         if self.algorithm == Algorithm::TwoPass && self.variant == Variant::Naive {
             bail!("the paper's naive rung is single-pass only (Opt-0)");
         }
+        if self.fuse && self.algorithm != Algorithm::TwoPass {
+            bail!(
+                "fusion applies to the separable two-pass algorithm only, got {:?}",
+                self.algorithm
+            );
+        }
         if let Some(tile) = self.tile {
             tile.validate()?;
         }
@@ -231,10 +268,13 @@ impl PlanBuilder {
             && self.variant != Variant::Naive
             && !self.force_generic
             && self.tile.is_none();
-        let passes = match self.algorithm {
-            Algorithm::TwoPass => vec![PassKind::Horiz, PassKind::Vert],
-            Algorithm::SinglePassNoCopy => vec![PassKind::SinglePass],
-            Algorithm::SinglePassCopyBack => vec![PassKind::SinglePass, PassKind::CopyBack],
+        let passes = match (self.algorithm, self.fuse) {
+            (Algorithm::TwoPass, true) => vec![PassKind::Fused],
+            (Algorithm::TwoPass, false) => vec![PassKind::Horiz, PassKind::Vert],
+            (Algorithm::SinglePassNoCopy, _) => vec![PassKind::SinglePass],
+            (Algorithm::SinglePassCopyBack, _) => {
+                vec![PassKind::SinglePass, PassKind::CopyBack]
+            }
         };
         // only the direct single-pass engines read the 2-D kernel; the
         // separable passes use the 1-D taps alone
@@ -256,6 +296,7 @@ impl PlanBuilder {
             passes,
             fast_path,
             tile: self.tile,
+            fused: self.fuse,
         })
     }
 }
@@ -275,6 +316,28 @@ pub struct ConvPlan {
     passes: Vec<PassKind>,
     fast_path: bool,
     tile: Option<TileSpec>,
+    fused: bool,
+}
+
+/// Estimated main-memory traffic of one plan execution — see
+/// [`ConvPlan::traffic_estimate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Traffic {
+    /// bytes the pass pipeline reads from plane buffers
+    pub read_bytes: usize,
+    /// bytes the pass pipeline writes to plane buffers
+    pub write_bytes: usize,
+}
+
+impl Traffic {
+    pub fn total_bytes(&self) -> usize {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Total traffic in MiB (table-friendly).
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes() as f64 / (1024.0 * 1024.0)
+    }
 }
 
 impl ConvPlan {
@@ -328,6 +391,69 @@ impl ConvPlan {
     /// untiled row bands).
     pub fn tile(&self) -> Option<TileSpec> {
         self.tile
+    }
+
+    /// True when the two passes are fused into one rolling row-ring
+    /// pass ([`PlanBuilder::fuse`]).
+    pub fn fused(&self) -> bool {
+        self.fused
+    }
+
+    /// Ring elements per worker for a fused pass dispatched over `cols`
+    /// columns (tile-clamped for tiled plans).
+    fn ring_slot_len(&self, cols: usize) -> usize {
+        let interior = cols.saturating_sub(2 * self.halo());
+        let cap = match self.tile {
+            Some(spec) => interior.min(spec.cols),
+            None => interior,
+        };
+        self.width * cap
+    }
+
+    /// Per-worker fused scratch footprint in `f32` elements — the whole
+    /// point of fusion: O(width × cols) per worker instead of the
+    /// O(rows × cols) intermediate plane the unfused two-pass writes.
+    /// 0 for unfused plans (their intermediate is a full B plane).
+    pub fn ring_footprint(&self) -> usize {
+        if !self.fused {
+            return 0;
+        }
+        let cols_eff = match self.layout {
+            Layout::PerPlane => self.cols,
+            Layout::Agglomerated => self.planes * self.cols,
+        };
+        self.ring_slot_len(cols_eff)
+    }
+
+    /// Estimated main-memory traffic of one execution: per pass, one
+    /// full read of the source plane plus one write of the interior
+    /// (copy-back reads and writes whole planes). The fused pipeline is
+    /// a single pass, so it moves half of what the unfused two-pass
+    /// moves; its row-ring is excluded because it stays resident in
+    /// L1/L2 (the fusion argument — Hofmann et al., PAPERS.md). The
+    /// initial image→scratch copy is identical for every plan and is
+    /// not counted.
+    pub fn traffic_estimate(&self) -> Traffic {
+        const F32: usize = std::mem::size_of::<f32>();
+        let (planes_eff, rows, cols) = match self.layout {
+            Layout::PerPlane => (self.planes, self.rows, self.cols),
+            Layout::Agglomerated => (1, self.rows, self.planes * self.cols),
+        };
+        let h = self.halo();
+        let plane = rows * cols * F32;
+        let interior = rows.saturating_sub(2 * h) * cols.saturating_sub(2 * h) * F32;
+        let (mut read, mut written) = (0usize, 0usize);
+        for &pass in &self.passes {
+            let (r, w) = match pass {
+                PassKind::Horiz | PassKind::Vert | PassKind::SinglePass | PassKind::Fused => {
+                    (plane, interior)
+                }
+                PassKind::CopyBack => (plane, plane),
+            };
+            read += r;
+            written += w;
+        }
+        Traffic { read_bytes: planes_eff * read, write_bytes: planes_eff * written }
     }
 
     // -- whole-image execution -------------------------------------------
@@ -442,7 +568,7 @@ impl ConvPlan {
                 for p in 0..self.planes {
                     let ap = &mut a[p * plane_len..(p + 1) * plane_len];
                     let bp = &mut b[p * plane_len..(p + 1) * plane_len];
-                    self.run_passes(exec, ap, bp, self.rows, self.cols);
+                    self.run_passes(exec, ap, bp, self.rows, self.cols, Some(&mut *arena));
                 }
             }
             Layout::Agglomerated => {
@@ -456,7 +582,7 @@ impl ConvPlan {
                     }
                 }
                 b.copy_from_slice(&a);
-                self.run_passes(exec, &mut a, &mut b, rows, wc);
+                self.run_passes(exec, &mut a, &mut b, rows, wc, Some(&mut *arena));
             }
         }
         let result: &[f32] = match self.result_home() {
@@ -494,6 +620,11 @@ impl ConvPlan {
     }
 
     fn result_home(&self) -> ResultHome {
+        // the fused pipeline is a single A→B pass, so like no-copy its
+        // result lives in B (whose border ring carries the pass-through)
+        if self.fused {
+            return ResultHome::B;
+        }
         match self.algorithm {
             Algorithm::SinglePassNoCopy => ResultHome::B,
             _ => ResultHome::A,
@@ -504,11 +635,14 @@ impl ConvPlan {
 
     /// Run the pipeline over one caller-owned plane pair, sequentially.
     ///
-    /// `a` is the source (and, except for no-copy, the result); `b` is
-    /// scratch that must start as a copy of `a` at least on its border
-    /// ring. Requires a single-plane plan (`shape(1, rows, cols)`); the
-    /// dispatch width is the plan's `cols` (pass the widened column
-    /// count for agglomerated planes).
+    /// `a` is the source (and, except for no-copy and fused plans, the
+    /// result); `b` is scratch that must start as a copy of `a` at least
+    /// on its border ring. Requires a single-plane plan
+    /// (`shape(1, rows, cols)`); the dispatch width is the plan's `cols`
+    /// (pass the widened column count for agglomerated planes). Fused
+    /// plans allocate their row-ring per call on this arena-less expert
+    /// path — use `execute*` with a [`ScratchArena`] for zero-alloc
+    /// serving.
     pub fn run_plane(&self, a: &mut [f32], b: &mut [f32]) -> Result<()> {
         self.run_plane_exec(Exec::Seq, a, b)
     }
@@ -536,7 +670,7 @@ impl ConvPlan {
             a.len(),
             b.len()
         );
-        self.run_passes(exec, a, b, self.rows, self.cols);
+        self.run_passes(exec, a, b, self.rows, self.cols, None);
         Ok(())
     }
 }
@@ -884,6 +1018,120 @@ mod tests {
         let want = untiled.execute(&image, &mut arena).unwrap();
         let got = tiled.execute(&image, &mut arena).unwrap();
         assert!(got.max_abs_diff(&want) <= 1e-6);
+    }
+
+    #[test]
+    fn fused_builder_contract() {
+        // fused two-pass resolves to the single fused pass, result in B
+        let p = ConvPlan::builder().fuse(true).shape(1, 24, 24).build().unwrap();
+        assert!(p.fused());
+        assert_eq!(p.passes(), &[PassKind::Fused]);
+        assert!(p.is_fast_path(), "W=5 untiled fused keeps the unrolled fast path");
+        assert_eq!(p.ring_footprint(), 5 * (24 - 4));
+        // fuse(false) is the unfused default
+        let p = ConvPlan::builder().fuse(false).shape(1, 24, 24).build().unwrap();
+        assert!(!p.fused());
+        assert_eq!(p.ring_footprint(), 0, "unfused plans lease no ring");
+        // fusion is a two-pass-only knob
+        for alg in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+            assert!(
+                ConvPlan::builder().algorithm(alg).fuse(true).shape(1, 24, 24).build().is_err(),
+                "{alg:?}"
+            );
+        }
+        // tiled fused: ring is clamped to the tile width
+        let p = ConvPlan::builder()
+            .fuse(true)
+            .tile(TileSpec::new(8, 6))
+            .shape(1, 24, 24)
+            .build()
+            .unwrap();
+        assert_eq!(p.ring_footprint(), 5 * 6);
+        // agglomerated: the ring spans the widened plane
+        let p = ConvPlan::builder()
+            .fuse(true)
+            .layout(Layout::Agglomerated)
+            .shape(3, 24, 24)
+            .build()
+            .unwrap();
+        assert_eq!(p.ring_footprint(), 5 * (3 * 24 - 4));
+    }
+
+    #[test]
+    fn fused_execution_matches_unfused() {
+        let image = img(3, 30, 26);
+        let model = OpenMpModel::new(4);
+        let mut arena = ScratchArena::new();
+        for variant in [Variant::Scalar, Variant::Simd] {
+            for layout in [Layout::PerPlane, Layout::Agglomerated] {
+                let unfused = ConvPlan::builder()
+                    .variant(variant)
+                    .layout(layout)
+                    .shape(3, 30, 26)
+                    .build()
+                    .unwrap();
+                let fused = ConvPlan::builder()
+                    .variant(variant)
+                    .layout(layout)
+                    .fuse(true)
+                    .shape(3, 30, 26)
+                    .build()
+                    .unwrap();
+                let want = unfused.execute(&image, &mut arena).unwrap();
+                let seq = fused.execute(&image, &mut arena).unwrap();
+                let par = fused.execute_on(&model, &image, &mut arena).unwrap();
+                assert_eq!(seq, want, "{variant:?} {layout:?} seq: same tap order ⇒ bitwise");
+                assert_eq!(par, want, "{variant:?} {layout:?} par");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_arena_stops_allocating_after_warmup() {
+        let image = img(3, 32, 28);
+        let plan = ConvPlan::builder().fuse(true).shape(3, 32, 28).build().unwrap();
+        let model = OpenMpModel::new(4);
+        let mut arena = ScratchArena::new();
+        plan.execute_on(&model, &image, &mut arena).unwrap();
+        let warm = arena.allocations();
+        for _ in 0..10 {
+            plan.execute_on(&model, &image, &mut arena).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm, "ring leases must recycle");
+    }
+
+    #[test]
+    fn fused_degenerate_shapes_pass_through() {
+        let mut arena = ScratchArena::new();
+        for (rows, cols) in [(1usize, 1usize), (3, 1), (1, 3), (3, 3), (16, 2), (2, 16), (4, 4)] {
+            let image = synth_image(2, rows, cols, Pattern::Noise, 8);
+            let plan = ConvPlan::builder().fuse(true).shape(2, rows, cols).build().unwrap();
+            let out = plan.execute(&image, &mut arena).unwrap();
+            assert_eq!(out, image, "{rows}x{cols} fused two-pass");
+        }
+    }
+
+    #[test]
+    fn traffic_estimate_shows_the_fusion_halving() {
+        let unfused = ConvPlan::builder().shape(3, 256, 256).build().unwrap();
+        let fused = ConvPlan::builder().fuse(true).shape(3, 256, 256).build().unwrap();
+        let (tu, tf) = (unfused.traffic_estimate(), fused.traffic_estimate());
+        assert_eq!(tu.read_bytes, 2 * tf.read_bytes);
+        assert_eq!(tu.write_bytes, 2 * tf.write_bytes);
+        assert_eq!(tu.total_bytes(), 2 * tf.total_bytes());
+        assert!(tf.total_mb() > 0.0);
+        // copy-back moves more than no-copy at the same shape
+        let cb = ConvPlan::builder()
+            .algorithm(Algorithm::SinglePassCopyBack)
+            .shape(3, 256, 256)
+            .build()
+            .unwrap();
+        let nc = ConvPlan::builder()
+            .algorithm(Algorithm::SinglePassNoCopy)
+            .shape(3, 256, 256)
+            .build()
+            .unwrap();
+        assert!(cb.traffic_estimate().total_bytes() > nc.traffic_estimate().total_bytes());
     }
 
     #[test]

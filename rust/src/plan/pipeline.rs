@@ -13,7 +13,8 @@ use crate::conv::{band, tile};
 use crate::models::pool::{RowBands, TileCells};
 use crate::models::{ExecutionModel, Tile, TileGrid, TileSpec};
 
-use super::ConvPlan;
+use super::arena::RingLease;
+use super::{ConvPlan, ScratchArena};
 
 /// One resolved pass of a convolution pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +23,10 @@ pub enum PassKind {
     Horiz,
     /// separable vertical sweep (two-pass, second phase)
     Vert,
+    /// both separable sweeps in one rolling row-ring pass (`--fuse`):
+    /// the intermediate stays in a per-worker O(width×cols) ring
+    /// instead of crossing memory as a full plane
+    Fused,
     /// direct 2-D convolution (single-pass algorithms)
     SinglePass,
     /// copy B back over A (the paper's copy-back epilogue)
@@ -68,6 +73,61 @@ fn run_banded(
     }
 }
 
+/// [`run_banded`] for the fused pass: every job invocation additionally
+/// checks a rolling row-ring out of the lease (disjoint per band, at
+/// most `workers()` outstanding — see [`RingLease`]).
+fn run_banded_fused(
+    exec: Exec<'_>,
+    rows: usize,
+    cols: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    rings: &RingLease,
+    pass: &(dyn Fn(&[f32], &mut [f32], &mut [f32], usize, usize) + Sync),
+) {
+    match exec {
+        Exec::Seq => {
+            let mut slot = rings.acquire();
+            pass(src, dst, slot.buf(), 0, rows);
+        }
+        Exec::Par(model) => {
+            let bands = RowBands::new(dst, rows, cols);
+            model.dispatch(rows, &|r0, r1| {
+                // SAFETY: execution models dispatch disjoint covers of
+                // [0, rows) (property-tested), so bands never overlap.
+                let band = unsafe { bands.band(r0, r1) };
+                let mut slot = rings.acquire();
+                pass(src, band, slot.buf(), r0, r1);
+            });
+        }
+    }
+}
+
+/// [`run_tiled`] for the fused pass: one ring checkout per tile job
+/// (sequential grids reuse a single slot).
+fn run_tiled_fused(
+    exec: Exec<'_>,
+    rows: usize,
+    cols: usize,
+    spec: TileSpec,
+    rings: &RingLease,
+    pass: &(dyn Fn(Tile, &mut [f32]) + Sync),
+) {
+    match exec {
+        Exec::Seq => {
+            let grid = TileGrid::new(rows, cols, spec);
+            let mut slot = rings.acquire();
+            for t in 0..grid.len() {
+                pass(grid.tile(t), slot.buf());
+            }
+        }
+        Exec::Par(model) => model.dispatch2d(rows, cols, spec, &|t| {
+            let mut slot = rings.acquire();
+            pass(t, slot.buf());
+        }),
+    }
+}
+
 /// Run one tiled pass over the grid: every tile once for [`Exec::Seq`],
 /// a disjoint tile cover via `dispatch2d` for [`Exec::Par`] (the
 /// agglomeration-aware path — each model schedules tiles its own way).
@@ -93,12 +153,98 @@ impl ConvPlan {
     /// Run the whole resolved pipeline over one plane: even passes read
     /// A and write B, odd passes read B and write A (the fixed A↔B
     /// ping-pong every algorithm in the paper follows).
-    pub(super) fn run_passes(&self, exec: Exec<'_>, a: &mut [f32], b: &mut [f32], rows: usize, cols: usize) {
+    ///
+    /// Fused plans have exactly one pass (A → B) and additionally lease
+    /// per-worker row-rings: from `arena` when the caller has one (the
+    /// serving path — zero allocations after warm-up), freshly otherwise
+    /// (the arena-less `run_plane` expert path).
+    pub(super) fn run_passes(
+        &self,
+        exec: Exec<'_>,
+        a: &mut [f32],
+        b: &mut [f32],
+        rows: usize,
+        cols: usize,
+        arena: Option<&mut ScratchArena>,
+    ) {
+        if self.fused {
+            let slots = match exec {
+                Exec::Seq => 1,
+                Exec::Par(model) => model.workers(),
+            };
+            let slot_len = self.ring_slot_len(cols);
+            match arena {
+                Some(arena) => {
+                    let lease = arena.take_rings(slots, slot_len);
+                    self.run_pass_fused(exec, a, b, rows, cols, &lease);
+                    arena.put_rings(lease);
+                }
+                None => {
+                    let lease = RingLease::fresh(slots, slot_len);
+                    self.run_pass_fused(exec, a, b, rows, cols, &lease);
+                }
+            }
+            return;
+        }
         for (i, &kind) in self.passes.iter().enumerate() {
             if i % 2 == 0 {
                 self.run_pass(exec, kind, a, b, rows, cols);
             } else {
                 self.run_pass(exec, kind, b, a, rows, cols);
+            }
+        }
+    }
+
+    /// Dispatch the fused pass: W=5 unrolled engines on the fast path,
+    /// generic odd-width twins otherwise, fused tile primitives when the
+    /// plan carries a [`TileSpec`] (tiling and the unrolled fast path
+    /// are mutually exclusive, as for the unfused passes).
+    #[allow(clippy::too_many_arguments)]
+    fn run_pass_fused(
+        &self,
+        exec: Exec<'_>,
+        src: &[f32],
+        dst: &mut [f32],
+        rows: usize,
+        cols: usize,
+        rings: &RingLease,
+    ) {
+        if let Some(spec) = self.tile {
+            let cells = TileCells::new(dst, rows, cols);
+            match self.variant {
+                Variant::Naive => unreachable!("naive+twopass rejected at build"),
+                Variant::Scalar => run_tiled_fused(exec, rows, cols, spec, rings, &|t, ring| {
+                    tile::fused_tile_scalar(src, &cells, rows, cols, &self.taps, ring, t)
+                }),
+                Variant::Simd => run_tiled_fused(exec, rows, cols, spec, rings, &|t, ring| {
+                    tile::fused_tile_simd(src, &cells, rows, cols, &self.taps, ring, t)
+                }),
+            }
+            return;
+        }
+        match (self.variant, self.fast_path) {
+            (Variant::Naive, _) => unreachable!("naive+twopass rejected at build"),
+            (Variant::Scalar, true) => {
+                let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                run_banded_fused(exec, rows, cols, src, dst, rings, &|s, d, ring, r0, r1| {
+                    band::fused_band_scalar(s, d, rows, cols, k5, ring, r0, r1)
+                });
+            }
+            (Variant::Scalar, false) => {
+                run_banded_fused(exec, rows, cols, src, dst, rings, &|s, d, ring, r0, r1| {
+                    band::fused_band_scalar_w(s, d, rows, cols, &self.taps, ring, r0, r1)
+                });
+            }
+            (Variant::Simd, true) => {
+                let k5: &[f32; 5] = self.taps.as_slice().try_into().expect("width-5 kernel");
+                run_banded_fused(exec, rows, cols, src, dst, rings, &|s, d, ring, r0, r1| {
+                    band::fused_band_simd(s, d, rows, cols, k5, ring, r0, r1)
+                });
+            }
+            (Variant::Simd, false) => {
+                run_banded_fused(exec, rows, cols, src, dst, rings, &|s, d, ring, r0, r1| {
+                    band::fused_band_simd_w(s, d, rows, cols, &self.taps, ring, r0, r1)
+                });
             }
         }
     }
@@ -121,6 +267,7 @@ impl ConvPlan {
         }
         let w = self.width;
         match kind {
+            PassKind::Fused => unreachable!("fused plans run through run_pass_fused"),
             PassKind::SinglePass => match (self.variant, self.fast_path) {
                 (Variant::Naive, _) => {
                     run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
@@ -232,6 +379,7 @@ impl ConvPlan {
         let w = self.width;
         let cells = TileCells::new(dst, rows, cols);
         match kind {
+            PassKind::Fused => unreachable!("fused plans run through run_pass_fused"),
             PassKind::SinglePass => match self.variant {
                 Variant::Naive => run_tiled(exec, rows, cols, spec, &|t| {
                     tile::singlepass_tile_naive(src, &cells, rows, cols, &self.k2d, w, t)

@@ -1,0 +1,271 @@
+//! Tier-1 fused-pipeline suite (run standalone by `scripts/verify.sh`).
+//!
+//! The fused rolling row-ring two-pass must be indistinguishable from
+//! the unfused pipeline everywhere it is reachable: a seeded
+//! differential sweep across kernel widths {3,5,7,9} × layouts × all
+//! three execution models × tiled/untiled dispatch (≤ 1e-6), ring-wrap
+//! edge cases (bands shorter than the kernel height, the r0 = 0 prime,
+//! the r1 = rows tail), degenerate planes, and the scratch contract:
+//! ring leases are O(width×cols) per worker and the arena performs zero
+//! allocations after warm-up.
+//!
+//! Worker counts honour `PHI_THREADS` (the CI scheduling matrix runs
+//! this suite at 1 and 4 — the fused leg).
+
+use phi_conv::config::RunConfig;
+use phi_conv::conv::band;
+use phi_conv::conv::{Algorithm, Variant};
+use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
+use phi_conv::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
+use phi_conv::models::{
+    test_threads, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+use phi_conv::plan::{ConvPlan, KernelSpec, ScratchArena, TileSpec};
+
+fn threads() -> usize {
+    test_threads(4)
+}
+
+fn all_models() -> (OpenMpModel, OpenClModel, GprmModel) {
+    let t = threads();
+    // small OpenCL groups and a 2-D-ish GPRM cutoff so several jobs per
+    // worker exercise ring slot recycling
+    (OpenMpModel::new(t), OpenClModel::new(t, 4), GprmModel::new(t, 12))
+}
+
+fn plan_for(
+    width: usize,
+    variant: Variant,
+    layout: Layout,
+    fuse: bool,
+    tile: Option<TileSpec>,
+    (p, r, c): (usize, usize, usize),
+) -> ConvPlan {
+    ConvPlan::builder()
+        .algorithm(Algorithm::TwoPass)
+        .variant(variant)
+        .layout(layout)
+        .kernel(KernelSpec::new(width, 1.0))
+        .fuse(fuse)
+        .tile_opt(tile)
+        .shape(p, r, c)
+        .build()
+        .unwrap()
+}
+
+fn image() -> PlanarImage {
+    synth_image(3, 40, 36, Pattern::Noise, 501)
+}
+
+#[test]
+fn fused_matches_unfused_across_widths_layouts_models() {
+    let img = image();
+    let shape = (3, 40, 36);
+    let (omp, ocl, gprm) = all_models();
+    let models: [&dyn ExecutionModel; 3] = [&omp, &ocl, &gprm];
+    let mut arena = ScratchArena::new();
+    for width in [3usize, 5, 7, 9] {
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            for variant in [Variant::Scalar, Variant::Simd] {
+                let want = plan_for(width, variant, layout, false, None, shape)
+                    .execute(&img, &mut arena)
+                    .unwrap();
+                let fused = plan_for(width, variant, layout, true, None, shape);
+                let seq = fused.execute(&img, &mut arena).unwrap();
+                assert!(
+                    seq.max_abs_diff(&want) <= 1e-6,
+                    "w{width} {layout:?} {variant:?} sequential"
+                );
+                for model in models {
+                    let par = fused.execute_on(model, &img, &mut arena).unwrap();
+                    assert!(
+                        par.max_abs_diff(&want) <= 1e-6,
+                        "w{width} {layout:?} {variant:?} {}",
+                        model.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_tiled_matches_unfused_untiled() {
+    let img = image();
+    let shape = (3, 40, 36);
+    let (omp, ocl, gprm) = all_models();
+    let models: [&dyn ExecutionModel; 3] = [&omp, &ocl, &gprm];
+    let mut arena = ScratchArena::new();
+    for width in [3usize, 5, 7] {
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            for variant in [Variant::Scalar, Variant::Simd] {
+                let want = plan_for(width, variant, layout, false, None, shape)
+                    .execute(&img, &mut arena)
+                    .unwrap();
+                for tile in [TileSpec::new(7, 9), TileSpec::new(64, 64)] {
+                    let fused = plan_for(width, variant, layout, true, Some(tile), shape);
+                    let seq = fused.execute(&img, &mut arena).unwrap();
+                    assert!(
+                        seq.max_abs_diff(&want) <= 1e-6,
+                        "w{width} {layout:?} {variant:?} {} seq",
+                        tile.label()
+                    );
+                    for model in models {
+                        let par = fused.execute_on(model, &img, &mut arena).unwrap();
+                        assert!(
+                            par.max_abs_diff(&want) <= 1e-6,
+                            "w{width} {layout:?} {variant:?} {} {}",
+                            tile.label(),
+                            model.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_wrap_edge_cases_band_level() {
+    // every band primes its own ring: a cover of 1-row bands (all
+    // shorter than the kernel height), the r0 = 0 prime and the
+    // r1 = rows tail must agree with the whole-plane sweep bitwise
+    const R: usize = 17;
+    const C: usize = 15;
+    let img = synth_image(1, R, C, Pattern::Noise, 77);
+    let src = &img.data;
+    for width in [3usize, 5, 7, 9] {
+        let k = gaussian_kernel(width, 1.0);
+        let w = C - 2 * (width / 2);
+        let mut full = src.clone();
+        let mut ring = vec![0f32; width * w];
+        band::fused_band_simd_w(src, &mut full, R, C, &k, &mut ring, 0, R);
+
+        let mut parts = src.clone();
+        {
+            let mut rest = &mut parts[..];
+            for r0 in 0..R {
+                let (bandbuf, tail) = rest.split_at_mut(C);
+                let mut ring = vec![f32::MAX; width * w]; // prime must overwrite
+                band::fused_band_simd_w(src, bandbuf, R, C, &k, &mut ring, r0, r0 + 1);
+                rest = tail;
+            }
+        }
+        assert_eq!(full, parts, "w{width}: 1-row bands == full sweep");
+    }
+}
+
+#[test]
+fn fused_with_more_workers_than_rows() {
+    // bands degenerate to ≤ 1 row each; ring slots outnumber output
+    // rows — the prime/tail logic must hold under every model
+    let img = synth_image(2, 9, 30, Pattern::Noise, 13);
+    let shape = (2, 9, 30);
+    let t = threads().max(8);
+    let omp = OpenMpModel::new(t);
+    let ocl = OpenClModel::new(t, 1);
+    let gprm = GprmModel::new(t, 16);
+    let models: [&dyn ExecutionModel; 3] = [&omp, &ocl, &gprm];
+    let mut arena = ScratchArena::new();
+    let want = plan_for(5, Variant::Simd, Layout::PerPlane, false, None, shape)
+        .execute(&img, &mut arena)
+        .unwrap();
+    let fused = plan_for(5, Variant::Simd, Layout::PerPlane, true, None, shape);
+    for model in models {
+        let got = fused.execute_on(model, &img, &mut arena).unwrap();
+        assert!(got.max_abs_diff(&want) <= 1e-6, "{}", model.name());
+    }
+}
+
+#[test]
+fn degenerate_planes_pass_through_fused() {
+    // rows < kernel height, 1×N and N×1 planes: the fused plan returns
+    // the input unchanged, never panics
+    let mut arena = ScratchArena::new();
+    for (rows, cols) in [(1usize, 1usize), (1, 8), (8, 1), (3, 8), (8, 3), (4, 4)] {
+        let img = synth_image(2, rows, cols, Pattern::Noise, 3);
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let plan = plan_for(5, variant, Layout::PerPlane, true, None, (2, rows, cols));
+            let out = plan.execute(&img, &mut arena).unwrap();
+            assert_eq!(out, img, "{rows}x{cols} {variant:?}");
+        }
+        // width 7 (kernel taller/wider than every shape here), tiled fused
+        let tile = Some(TileSpec::new(2, 2));
+        let plan = plan_for(7, Variant::Simd, Layout::PerPlane, true, tile, (2, rows, cols));
+        let out = plan.execute(&img, &mut arena).unwrap();
+        assert_eq!(out, img, "{rows}x{cols} tiled w7");
+    }
+}
+
+#[test]
+fn ring_leases_are_width_by_cols_and_never_grow_the_arena() {
+    let shape = (3, 48, 44);
+    let img = synth_image(3, 48, 44, Pattern::Noise, 99);
+
+    // the acceptance assertion: fused scratch is O(width × cols) per
+    // worker, exposed through the plan's ring footprint
+    for width in [3usize, 5, 7, 9] {
+        let plan = plan_for(width, Variant::Simd, Layout::PerPlane, true, None, shape);
+        assert_eq!(plan.ring_footprint(), width * (44 - 2 * (width / 2)), "w{width}");
+    }
+    // tiled rings clamp to the tile width; agglomerated spans the wide plane
+    let tile = Some(TileSpec::new(8, 12));
+    let plan = plan_for(5, Variant::Simd, Layout::PerPlane, true, tile, shape);
+    assert_eq!(plan.ring_footprint(), 5 * 12);
+    let plan = plan_for(5, Variant::Simd, Layout::Agglomerated, true, None, shape);
+    assert_eq!(plan.ring_footprint(), 5 * (3 * 44 - 4));
+    // unfused plans have no ring at all
+    let plan = plan_for(5, Variant::Simd, Layout::PerPlane, false, None, shape);
+    assert_eq!(plan.ring_footprint(), 0);
+
+    // arena no-growth: rings recycle like the A/B planes
+    let (omp, _, gprm) = all_models();
+    for model in [&omp as &dyn ExecutionModel, &gprm] {
+        let mut arena = ScratchArena::new();
+        let fused = plan_for(5, Variant::Simd, Layout::PerPlane, true, None, shape);
+        fused.execute_on(model, &img, &mut arena).unwrap();
+        let warm = arena.allocations();
+        for _ in 0..8 {
+            fused.execute_on(model, &img, &mut arena).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm, "{}: fused steady state allocates", model.name());
+    }
+}
+
+#[test]
+fn coordinator_serves_fused_traffic() {
+    let cfg = RunConfig { threads: threads(), fuse: true, ..Default::default() };
+    let c = Coordinator::new(&cfg, RoutePolicy::RoundRobin, 2, false).unwrap();
+    let img = synth_image(3, 32, 30, Pattern::Noise, 55);
+    let k = gaussian_kernel(5, 1.0);
+    let want =
+        phi_conv::conv::convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+    // fused default across the backend rotation
+    for i in 0..6u64 {
+        let resp = c.serve(ConvRequest::new(i, img.clone())).unwrap();
+        assert!(resp.image.max_abs_diff(&want) <= 1e-6, "request {i} via {:?}", resp.backend);
+    }
+    // per-request opt-out and explicit opt-in coexist in the plan cache
+    let off = c.serve(ConvRequest::new(10, img.clone()).with_fuse(false)).unwrap();
+    assert!(off.image.max_abs_diff(&want) <= 1e-6);
+    let on = c
+        .serve(ConvRequest::new(11, img.clone()).with_fuse(true).with_backend(Backend::NativeGprm))
+        .unwrap();
+    assert!(on.image.max_abs_diff(&want) <= 1e-6);
+    // single-pass requests are served (fusion silently inapplicable)
+    let sp = c
+        .serve(ConvRequest::new(12, img).with_algorithm(Algorithm::SinglePassNoCopy))
+        .unwrap();
+    assert!(sp.service_ms >= 0.0);
+    let st = c.stats();
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.served, 9);
+}
+
+#[test]
+fn fused_plans_reject_single_pass_algorithms() {
+    for alg in [Algorithm::SinglePassCopyBack, Algorithm::SinglePassNoCopy] {
+        let e = ConvPlan::builder().algorithm(alg).fuse(true).shape(1, 16, 16).build();
+        assert!(e.is_err(), "{alg:?}");
+    }
+}

@@ -25,6 +25,11 @@ echo "== cargo test -q --test tiling_suite (dispatch cover-exactness + tiled equ
 # tile corrupts pixels silently; re-run standalone so it is named
 cargo test -q --test tiling_suite
 
+echo "== cargo test -q --test fused_suite (fused ≡ unfused differential + ring leases)"
+# tier-1 by policy: a fused-pipeline bug corrupts pixels silently and a
+# ring-lease bug races workers; re-run standalone so it is named
+cargo test -q --test fused_suite
+
 echo "== cargo build --benches"
 cargo build --benches
 
