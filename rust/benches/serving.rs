@@ -1,0 +1,164 @@
+//! Bench: coordinator serving throughput — plan-keyed batching vs the
+//! unbatched baseline.
+//!
+//! The paper's agglomeration result (amortise per-task overhead across
+//! more work) applied to the serving layer: one executor drains its
+//! queue either one request at a time (`batch_max = 1`, the PR 3
+//! behaviour) or in `PlanKey`-coalesced batches served through a single
+//! `ConvPlan::execute_batch` call — one plan lookup, one warm arena,
+//! one dispatch ramp per batch. Reports requests/sec per `batch_max`
+//! plus a batch-size histogram, text + JSON, and writes the repo's
+//! first `BENCH_*.json` perf-trajectory file.
+//!
+//! Correctness is asserted, timing is only reported: every batched
+//! response is compared bitwise against the unbatched baseline, and a
+//! skewed-mix leg checks a rare shape is served within its deadline
+//! behind a hot-shape flood. Timing asserts would flake on loaded CI
+//! runners, so throughput is a column to read, not a test to fail.
+//!
+//! `cargo bench --bench serving` — env overrides:
+//!   PHI_SERVING_REQS=48   PHI_SERVING_SIZE=160   PHI_BENCH_THREADS=8
+//!   PHI_SERVING_JSON=BENCH_serving.json   (empty string = don't write)
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use phi_conv::config::{default_threads, RunConfig};
+use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
+use phi_conv::image::{synth_image, Pattern, PlanarImage};
+use phi_conv::metrics::Table;
+use phi_conv::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct RunResult {
+    wall_ms: f64,
+    /// responses in submission order (bitwise-compared across runs)
+    images: Vec<PlanarImage>,
+    /// batch_len -> number of responses served at that coalescing level
+    hist: BTreeMap<usize, usize>,
+}
+
+/// Serve every image through a fresh 1-executor coordinator at the
+/// given `batch_max`; one executor makes the batched-vs-single
+/// comparison clean (no cross-shard scheduling noise).
+fn run_once(batch_max: usize, imgs: &[PlanarImage], threads: usize) -> RunResult {
+    let cfg = RunConfig {
+        threads,
+        queue_capacity: imgs.len() + 8,
+        batch_max,
+        ..RunConfig::default()
+    };
+    let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+        .expect("coordinator");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| c.submit(ConvRequest::new(i as u64, img.clone())).expect("admitted"))
+        .collect();
+    let mut images = Vec::with_capacity(rxs.len());
+    let mut hist = BTreeMap::new();
+    for rx in rxs {
+        let resp = rx.recv().expect("reply").expect("served");
+        *hist.entry(resp.batch_len).or_insert(0usize) += 1;
+        images.push(resp.image);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(c.stats().errors, 0, "no serve errors");
+    RunResult { wall_ms, images, hist }
+}
+
+/// The fairness backstop under a skewed mix: a minority shape queued
+/// behind a hot-shape flood must still be served within its deadline —
+/// coalescing removes only matching jobs and preserves FIFO for the
+/// rest, so a rare `PlanKey` is never starved.
+fn fairness_leg(size: usize, threads: usize) {
+    let cfg =
+        RunConfig { threads, queue_capacity: 64, batch_max: 8, ..RunConfig::default() };
+    let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+        .expect("coordinator");
+    let hot = synth_image(3, size, size, Pattern::Noise, 1);
+    let rare = synth_image(3, size / 2, size / 2 + 4, Pattern::Noise, 2);
+    let mut rxs = Vec::new();
+    for i in 0..32u64 {
+        let req = if i % 8 == 7 {
+            ConvRequest::new(i, rare.clone()).with_deadline(Duration::from_secs(60))
+        } else {
+            ConvRequest::new(i, hot.clone())
+        };
+        rxs.push(c.submit(req).expect("admitted"));
+    }
+    for rx in rxs {
+        rx.recv().expect("reply").expect("rare shape must not starve behind the hot flood");
+    }
+    assert_eq!(c.stats().expired, 0, "no deadline lapses in the skewed mix");
+}
+
+fn main() {
+    let reqs = env_usize("PHI_SERVING_REQS", 48);
+    let size = env_usize("PHI_SERVING_SIZE", 160);
+    let threads = env_usize("PHI_BENCH_THREADS", default_threads());
+    let imgs: Vec<PlanarImage> = (0..reqs)
+        .map(|i| synth_image(3, size, size, Pattern::Noise, 1000 + i as u64))
+        .collect();
+
+    let base = run_once(1, &imgs, threads);
+    let base_rps = reqs as f64 / (base.wall_ms / 1e3);
+    let mut results = vec![(1usize, base)];
+    for bm in [4usize, 8] {
+        let r = run_once(bm, &imgs, threads);
+        for (i, (got, want)) in r.images.iter().zip(&results[0].1.images).enumerate() {
+            assert_eq!(got, want, "request {i}: batched pixels must equal singly-served");
+        }
+        results.push((bm, r));
+    }
+
+    let mut tput = Table::new(
+        format!("Serving throughput, {reqs} hot-shape requests (3x{size}x{size}), 1 executor"),
+        &["batch_max", "wall ms", "req/s", "speedup", "max batch"],
+    );
+    let mut hist_t = Table::new(
+        "Batch-size histogram (responses per coalescing level)",
+        &["batch_max", "batch size", "responses"],
+    );
+    for (bm, r) in &results {
+        let rps = reqs as f64 / (r.wall_ms / 1e3);
+        let max_batch = r.hist.keys().max().copied().unwrap_or(1);
+        tput.row(vec![
+            format!("{bm}"),
+            format!("{:.1}", r.wall_ms),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / base_rps),
+            format!("{max_batch}"),
+        ]);
+        for (sz, n) in &r.hist {
+            hist_t.row(vec![format!("{bm}"), format!("{sz}"), format!("{n}")]);
+        }
+    }
+    println!("{}", tput.to_text());
+    println!("{}", tput.to_json());
+    println!("{}", hist_t.to_text());
+    println!("{}", hist_t.to_json());
+
+    fairness_leg(size, threads);
+    println!("fairness: rare shape served within deadline behind the hot flood");
+
+    let path =
+        std::env::var("PHI_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    if !path.is_empty() {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("serving".into()));
+        obj.insert("hot_shape".to_string(), Json::Str(format!("3x{size}x{size}")));
+        obj.insert("requests".to_string(), Json::Num(reqs as f64));
+        obj.insert("threads".to_string(), Json::Num(threads as f64));
+        obj.insert("unbatched_req_per_s".to_string(), Json::Num(base_rps));
+        obj.insert("throughput".to_string(), tput.to_json());
+        obj.insert("histogram".to_string(), hist_t.to_json());
+        std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

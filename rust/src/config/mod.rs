@@ -56,6 +56,18 @@ pub struct RunConfig {
     /// request whose TTL lapses before execution is refused with a
     /// structured `DeadlineExceeded` error.
     pub deadline_ms: u64,
+    /// Most jobs one executor coalesces into a single
+    /// `ConvPlan::execute_batch` call when their `PlanKey`s match the
+    /// head of its queue (1 = serve singly, the pre-batching behaviour).
+    pub batch_max: usize,
+    /// How long (µs) an executor holds a short batch open waiting for
+    /// matching stragglers (0 = never wait; only meaningful with
+    /// `batch_max > 1`). The wait is capped by the head job's deadline.
+    pub batch_wait_us: u64,
+    /// Pin each executor thread to a core (best-effort, Linux/x86-64
+    /// only) so a shard's plan cache and scratch arena stay near one
+    /// core's cache. Off by default: a hint, never a requirement.
+    pub pin_cores: bool,
 }
 
 impl Default for RunConfig {
@@ -78,6 +90,9 @@ impl Default for RunConfig {
             artifacts_dir: crate::runtime::manifest::default_artifacts_dir(),
             queue_capacity: 256,
             deadline_ms: 0,
+            batch_max: 1,
+            batch_wait_us: 0,
+            pin_cores: false,
         }
     }
 }
@@ -128,6 +143,18 @@ impl RunConfig {
             );
             self.deadline_ms = n as u64;
         }
+        self.batch_max = doc.usize_or("run.batch_max", self.batch_max);
+        // strict for the same reason as deadline_ms: u64, and a negative
+        // or fractional wait must error rather than coerce to 0
+        if let Some(v) = doc.get("run.batch_wait_us") {
+            let n = v.as_f64().context("run.batch_wait_us must be a number")?;
+            ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "run.batch_wait_us must be a non-negative integer, got {n}"
+            );
+            self.batch_wait_us = n as u64;
+        }
+        self.pin_cores = doc.bool_or("run.pin_cores", self.pin_cores);
         Ok(())
     }
 
@@ -156,12 +183,21 @@ impl RunConfig {
         set(cli, "tile-cols", &mut self.tile_cols)?;
         set(cli, "agglomeration", &mut self.agglomeration)?;
         set(cli, "queue-capacity", &mut self.queue_capacity)?;
+        set(cli, "batch-max", &mut self.batch_max)?;
         if cli.is_set("fuse") {
             self.fuse = true; // a flag can only turn fusion on (TOML can set either)
+        }
+        if cli.is_set("pin-cores") {
+            self.pin_cores = true; // flag turns pinning on (TOML can set either)
         }
         if let Some(v) = cli.get("deadline-ms") {
             if !v.is_empty() {
                 self.deadline_ms = v.parse()?;
+            }
+        }
+        if let Some(v) = cli.get("batch-wait-us") {
+            if !v.is_empty() {
+                self.batch_wait_us = v.parse()?;
             }
         }
         if let Some(s) = cli.get("sigma") {
@@ -213,6 +249,7 @@ impl RunConfig {
         ensure!(self.sizes.iter().all(|&s| s >= 1), "every size must be >= 1, got {:?}", self.sizes);
         ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
         ensure!(self.agglomeration >= 1, "agglomeration must be >= 1");
+        ensure!(self.batch_max >= 1, "batch_max must be >= 1");
         Ok(())
     }
 
@@ -277,6 +314,9 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("artifacts", "", "artifacts directory (default ./artifacts)")
         .opt("queue-capacity", "", "coordinator admission-queue capacity (default 256)")
         .opt("deadline-ms", "", "per-request deadline in ms, 0 = none (default 0)")
+        .opt("batch-max", "", "max jobs coalesced per plan-keyed batch (default 1 = serve singly)")
+        .opt("batch-wait-us", "", "straggler wait in microseconds before closing a short batch (default 0)")
+        .flag("pin-cores", "pin executor threads to cores (best-effort, Linux/x86-64)")
 }
 
 #[cfg(test)]
@@ -431,6 +471,61 @@ mod tests {
             .unwrap();
         let e = RunConfig::resolve(&cli).unwrap_err();
         assert!(format!("{e:#}").contains("agglomeration"), "got: {e:#}");
+    }
+
+    #[test]
+    fn batching_knobs_plumb_through_cli_and_toml() {
+        let c = RunConfig::default();
+        assert_eq!(c.batch_max, 1, "serve singly by default");
+        assert_eq!(c.batch_wait_us, 0);
+        assert!(!c.pin_cores);
+
+        let mut c = RunConfig::default();
+        let doc = TomlDoc::parse(
+            "[run]\nbatch_max = 8\nbatch_wait_us = 150\npin_cores = true\n",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!((c.batch_max, c.batch_wait_us, c.pin_cores), (8, 150, true));
+        // TOML can switch pinning back off
+        let doc = TomlDoc::parse("[run]\npin_cores = false\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!(!c.pin_cores);
+
+        let cli = standard_cli("t", "t")
+            .parse([
+                "--batch-max".to_string(),
+                "4".to_string(),
+                "--batch-wait-us".to_string(),
+                "50".to_string(),
+                "--pin-cores".to_string(),
+            ])
+            .unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert_eq!((c.batch_max, c.batch_wait_us, c.pin_cores), (4, 50, true));
+        // absent flag leaves a TOML-set value alone
+        let mut c = RunConfig { pin_cores: true, ..Default::default() };
+        let cli = standard_cli("t", "t").parse(Vec::<String>::new()).unwrap();
+        c.apply_cli(&cli).unwrap();
+        assert!(c.pin_cores);
+    }
+
+    #[test]
+    fn zero_batch_max_is_structured_error() {
+        let cli = standard_cli("t", "t")
+            .parse(["--batch-max".to_string(), "0".to_string()])
+            .unwrap();
+        let e = RunConfig::resolve(&cli).unwrap_err();
+        assert!(format!("{e:#}").contains("batch_max"), "got: {e:#}");
+    }
+
+    #[test]
+    fn negative_or_fractional_toml_batch_wait_rejected() {
+        for bad in ["batch_wait_us = -10", "batch_wait_us = 1.5"] {
+            let mut c = RunConfig::default();
+            let doc = TomlDoc::parse(&format!("[run]\n{bad}\n")).unwrap();
+            assert!(c.apply_toml(&doc).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! algorithm choice) enter a **bounded admission queue** (capacity and
 //! per-request deadlines from `RunConfig`; overload is shed with
 //! structured `QueueFull` / `DeadlineExceeded` / `Shutdown` errors,
-//! never a panic — see [`queue`]); executor threads drain it and run
-//! each request on a backend —
+//! never a panic — see [`queue`]); requests are sharded by `PlanKey`
+//! hash across per-executor queues, and each executor drains its shard
+//! in plan-keyed batches (up to `--batch-max` coalesced per
+//! `ConvPlan::execute_batch` call) running on a backend —
 //!
 //! * **native** engines under any of the three execution models, or
 //! * the **PJRT** path: the AOT-compiled Pallas artifacts loaded by
@@ -19,12 +21,13 @@
 //! very large images where GPRM shows better performance after using
 //! task agglomeration").
 
+mod affinity;
 pub mod queue;
 mod request;
 mod router;
 mod server;
 
-pub use queue::{AdmissionQueue, Pop, QueueCounters, Rejected};
+pub use queue::{AdmissionQueue, Batch, Pop, PopBatch, QueueCounters, Rejected};
 pub use request::{ConvRequest, ConvResponse};
 pub use router::{Backend, RoutePolicy};
 pub use server::{Coordinator, CoordinatorStats, ReplyReceiver};

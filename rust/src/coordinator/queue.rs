@@ -74,6 +74,26 @@ pub enum Pop<T> {
     Closed,
 }
 
+/// One keyed multi-pop outcome: the head item plus every queued item
+/// whose key matched it (see [`AdmissionQueue::pop_batch`]).
+pub struct Batch<T> {
+    /// live same-key items in FIFO order — execute them together
+    pub jobs: Vec<T>,
+    /// same-key items whose deadline lapsed while queued (plus the head
+    /// itself when *it* lapsed — then `jobs` is empty) — reject them
+    pub expired: Vec<T>,
+}
+
+/// One [`AdmissionQueue::pop_batch`] outcome.
+pub enum PopBatch<T> {
+    /// At least one item (`jobs` + `expired` together are non-empty).
+    Batch(Batch<T>),
+    /// The bounded idle wait elapsed with nothing queued.
+    Empty,
+    /// The queue is closed and fully drained — the consumer exits.
+    Closed,
+}
+
 /// Monotonic intake counters, exported into `CoordinatorStats`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueueCounters {
@@ -184,11 +204,15 @@ impl<T> AdmissionQueue<T> {
         deadline: Option<Instant>,
         wait: Duration,
     ) -> Result<(), Rejected<T>> {
-        let st = relock(self.state.lock());
+        // the give-up instant is computed BEFORE taking the lock: under
+        // contention the acquisition itself takes time, and charging it
+        // to the caller would stretch the effective bound to
+        // lock-wait + `wait` (regression: it used to be computed after)
         let give_up = match Instant::now().checked_add(wait) {
             Some(g) => AdmitWait::Until(g),
             None => AdmitWait::Forever,
         };
+        let st = relock(self.state.lock());
         self.admit(st, item, deadline, give_up)
     }
 
@@ -296,6 +320,190 @@ impl<T> AdmissionQueue<T> {
             }
             st = relock(self.not_empty.wait(st));
         }
+    }
+
+    /// Keyed multi-pop: the batching dequeue. Blocks until an item is
+    /// queued (bounded by `idle_wait`: `None` waits indefinitely,
+    /// `Some(ZERO)` is non-blocking, `Some(d)` polls at most `d` before
+    /// returning [`PopBatch::Empty`]), takes the head item, then drains
+    /// up to `max - 1` additional queued items whose `key_of` value
+    /// equals the head's. Matches come out in FIFO order; non-matching
+    /// items keep their ring positions and their FIFO order, so
+    /// coalescing can never starve a minority key past its normal turn.
+    ///
+    /// A head whose deadline already lapsed anchors no batch: it is
+    /// returned alone in [`Batch::expired`] so the next call re-evaluates
+    /// a fresh head. Matching items that lapsed while queued also land in
+    /// `expired` (counted here) and do not consume batch room.
+    ///
+    /// With room left after the first drain, `straggler_wait` — bounded
+    /// additionally by the head's own deadline — lets late same-key
+    /// arrivals join before execution; freed slots are handed to blocked
+    /// producers *before* the wait, so the awaited stragglers can
+    /// actually be admitted. An `idle_wait` so large that `now + wait`
+    /// overflows `Instant` degrades to an unbounded wait, mirroring
+    /// [`push_timeout`](Self::push_timeout).
+    pub fn pop_batch<K, F>(
+        &self,
+        max: usize,
+        straggler_wait: Option<Duration>,
+        idle_wait: Option<Duration>,
+        key_of: &F,
+    ) -> PopBatch<T>
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+    {
+        let max = max.max(1);
+        // idle bound computed before locking (same discipline as
+        // push_timeout: lock contention must not stretch it)
+        let idle_until = idle_wait.and_then(|w| Instant::now().checked_add(w));
+        let mut st = relock(self.state.lock());
+        loop {
+            if st.len > 0 {
+                break;
+            }
+            if st.closed {
+                return PopBatch::Closed;
+            }
+            match (idle_wait, idle_until) {
+                (None, _) | (Some(_), None) => st = relock(self.not_empty.wait(st)),
+                (Some(_), Some(until)) => {
+                    let now = Instant::now();
+                    if until <= now {
+                        return PopBatch::Empty;
+                    }
+                    st = match self.not_empty.wait_timeout(st, until - now) {
+                        Ok((g, _)) => g,
+                        Err(p) => p.into_inner().0,
+                    };
+                }
+            }
+        }
+
+        let head = st.head;
+        let slot = st.ring[head].take().expect("occupied slot in [head, head+len)");
+        st.head = (head + 1) % self.capacity;
+        st.len -= 1;
+        let mut freed = 1usize;
+        if slot.deadline.is_some_and(|d| d <= Instant::now()) {
+            st.expired += 1;
+            drop(st);
+            self.not_full.notify_one();
+            return PopBatch::Batch(Batch { jobs: vec![], expired: vec![slot.item] });
+        }
+        let head_deadline = slot.deadline;
+        let key = key_of(&slot.item);
+        let mut jobs = vec![slot.item];
+        let mut expired = Vec::new();
+        if max > 1 {
+            freed += self.drain_matching(&mut st, &key, key_of, max - 1, &mut jobs, &mut expired);
+        }
+
+        if let Some(wait) = straggler_wait {
+            if jobs.len() < max && !wait.is_zero() && !st.closed {
+                // hand the freed slots to blocked producers before
+                // sleeping, or the awaited stragglers can't be admitted
+                self.not_full.notify_all();
+                freed = 0;
+                // the window never outlasts the head's own deadline —
+                // waiting for company must not expire the whole batch
+                let give_up = Instant::now().checked_add(wait).map(|g| match head_deadline {
+                    Some(d) => g.min(d),
+                    None => g,
+                });
+                while let Some(g) = give_up {
+                    let now = Instant::now();
+                    if now >= g || jobs.len() >= max || st.closed {
+                        break;
+                    }
+                    let timed_out;
+                    (st, timed_out) = match self.not_empty.wait_timeout(st, g - now) {
+                        Ok((g, t)) => (g, t.timed_out()),
+                        Err(p) => {
+                            let (g, t) = p.into_inner();
+                            (g, t.timed_out())
+                        }
+                    };
+                    freed += self.drain_matching(
+                        &mut st,
+                        &key,
+                        key_of,
+                        max - jobs.len(),
+                        &mut jobs,
+                        &mut expired,
+                    );
+                    if timed_out {
+                        break;
+                    }
+                }
+            }
+        }
+        drop(st);
+        if freed > 1 {
+            self.not_full.notify_all();
+        } else if freed == 1 {
+            self.not_full.notify_one();
+        }
+        PopBatch::Batch(Batch { jobs, expired })
+    }
+
+    /// Scan the ring FIFO-first, pulling out up to `room` live items
+    /// whose key matches and every matching item that expired en route
+    /// (classified into `expired`, counted, no batch room consumed);
+    /// non-matching items compact toward the head preserving order.
+    /// Returns how many slots were freed. The compaction writes only
+    /// into cells already vacated by `take()`, so the ring invariant
+    /// (cells outside `[head, head+len)` are `None`) is preserved.
+    fn drain_matching<K, F>(
+        &self,
+        st: &mut State<T>,
+        key: &K,
+        key_of: &F,
+        room: usize,
+        jobs: &mut Vec<T>,
+        expired: &mut Vec<T>,
+    ) -> usize
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+    {
+        if room == 0 || st.len == 0 {
+            return 0;
+        }
+        let now = Instant::now();
+        let (head, len) = (st.head, st.len);
+        let mut write = 0usize;
+        let mut taken_live = 0usize;
+        for read in 0..len {
+            let ri = (head + read) % self.capacity;
+            let matches = {
+                let slot = st.ring[ri].as_ref().expect("occupied slot in [head, head+len)");
+                key_of(&slot.item) == *key
+            };
+            if matches {
+                let slot = st.ring[ri].take().expect("occupied slot in [head, head+len)");
+                if slot.deadline.is_some_and(|d| d <= now) {
+                    st.expired += 1;
+                    expired.push(slot.item);
+                    continue;
+                }
+                if taken_live < room {
+                    taken_live += 1;
+                    jobs.push(slot.item);
+                    continue;
+                }
+                // no room left for this live match: it stays queued
+                st.ring[ri] = Some(slot);
+            }
+            if write != read {
+                let wi = (head + write) % self.capacity;
+                st.ring[wi] = st.ring[ri].take();
+            }
+            write += 1;
+        }
+        st.len = write;
+        len - write
     }
 
     /// Begin shutdown: new pushes are refused with `Shutdown`; consumers
@@ -574,5 +782,233 @@ mod tests {
         all.sort_unstable();
         let want: Vec<u64> = (0..producers * per).collect();
         assert_eq!(all, want, "every item delivered exactly once");
+    }
+
+    #[test]
+    fn push_timeout_bound_excludes_lock_acquisition() {
+        // regression: the give-up instant used to be computed after
+        // acquiring the state lock, so a contended lock stretched the
+        // effective bound to lock-wait + `wait`. With the bound fixed
+        // before locking, a bounded submit into a full queue hammered by
+        // other threads still returns within a small multiple of its
+        // timeout.
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(0u64, None).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let contenders: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let _ = q.try_push(9, None);
+                        let _ = q.depth();
+                    }
+                })
+            })
+            .collect();
+        let t0 = Instant::now();
+        let rej = q.push_timeout(1u64, None, ms(30)).unwrap_err();
+        let waited = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        for h in contenders {
+            h.join().unwrap();
+        }
+        assert_eq!(rej.kind, ErrorKind::QueueFull);
+        assert!(waited >= ms(30), "must wait its full bound: {waited:?}");
+        assert!(waited < ms(500), "bound must not stretch under contention: {waited:?}");
+    }
+
+    // key for the pop_batch tests: the tens digit, so 10/11/12 coalesce
+    // while 20 does not
+    fn tens(v: &u64) -> u64 {
+        *v / 10
+    }
+
+    #[test]
+    fn pop_batch_coalesces_matching_run_and_keeps_fifo() {
+        let q = AdmissionQueue::new(8);
+        for v in [10u64, 11, 20, 12] {
+            q.try_push(v, None).unwrap();
+        }
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => {
+                assert_eq!(b.jobs, vec![10, 11, 12], "matches drain in FIFO order");
+                assert!(b.expired.is_empty());
+            }
+            _ => panic!("expected a batch"),
+        }
+        // the non-matching item kept its place as the new head
+        assert_eq!(q.depth(), 1);
+        assert!(matches!(q.pop(), Pop::Job(20)));
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = AdmissionQueue::new(8);
+        for v in 10..15u64 {
+            q.try_push(v, None).unwrap();
+        }
+        match q.pop_batch(3, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10, 11, 12]),
+            _ => panic!("expected a batch"),
+        }
+        match q.pop_batch(3, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![13, 14], "overflow stays FIFO"),
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn pop_batch_of_one_degrades_to_plain_pop() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(10u64, None).unwrap();
+        q.try_push(11, None).unwrap();
+        match q.pop_batch(1, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10], "max 1 never coalesces"),
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn pop_batch_classifies_expired_members() {
+        let q = AdmissionQueue::new(8);
+        q.try_push(10u64, None).unwrap();
+        q.try_push(11, Some(Instant::now() + ms(2))).unwrap();
+        q.try_push(12, None).unwrap();
+        std::thread::sleep(ms(10));
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => {
+                assert_eq!(b.jobs, vec![10, 12], "live members in FIFO order");
+                assert_eq!(b.expired, vec![11], "lapsed member classified, not executed");
+            }
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(q.counters().expired, 1);
+    }
+
+    #[test]
+    fn pop_batch_expired_head_anchors_no_batch() {
+        let q = AdmissionQueue::new(8);
+        q.try_push(10u64, Some(Instant::now() + ms(2))).unwrap();
+        q.try_push(11, None).unwrap();
+        std::thread::sleep(ms(10));
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => {
+                assert!(b.jobs.is_empty(), "an expired head must not drag a batch");
+                assert_eq!(b.expired, vec![10]);
+            }
+            _ => panic!("expected the expired head"),
+        }
+        // the live item behind it anchors the next batch
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![11]),
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(q.counters().expired, 1);
+    }
+
+    #[test]
+    fn pop_batch_empty_and_closed() {
+        let q = AdmissionQueue::<u64>::new(4);
+        assert!(matches!(q.pop_batch(4, None, Some(Duration::ZERO), &tens), PopBatch::Empty));
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_batch(4, None, Some(ms(10)), &tens), PopBatch::Empty));
+        assert!(t0.elapsed() >= ms(5), "bounded idle wait must actually wait");
+        q.close();
+        assert!(matches!(q.pop_batch(4, None, Some(Duration::ZERO), &tens), PopBatch::Closed));
+        assert!(matches!(q.pop_batch(4, None, None, &tens), PopBatch::Closed));
+    }
+
+    #[test]
+    fn pop_batch_straggler_wait_picks_up_late_arrival() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        q.try_push(10u64, None).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(ms(10));
+            q2.try_push(11u64, None).unwrap();
+        });
+        // the window is generous; the batch tops up to max and returns
+        // as soon as the straggler lands, well before 5 s
+        match q.pop_batch(2, Some(Duration::from_secs(5)), Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10, 11], "straggler joined"),
+            _ => panic!("expected a batch"),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn pop_batch_straggler_wait_is_bounded() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(10u64, None).unwrap();
+        let t0 = Instant::now();
+        match q.pop_batch(4, Some(ms(20)), Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10]),
+            _ => panic!("expected a batch"),
+        }
+        let waited = t0.elapsed();
+        assert!(waited >= ms(15), "must have held the straggler window: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "window must be bounded: {waited:?}");
+    }
+
+    #[test]
+    fn pop_batch_straggler_window_capped_by_head_deadline() {
+        // head carries a 20 ms TTL; a 10 s straggler window must not
+        // hold it past that (the wait is min'd with the head deadline),
+        // and the head must come back live, not expired
+        let q = AdmissionQueue::new(4);
+        q.try_push(10u64, Some(Instant::now() + ms(20))).unwrap();
+        let t0 = Instant::now();
+        match q.pop_batch(4, Some(Duration::from_secs(10)), Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10], "head stays live"),
+            _ => panic!("expected a batch"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "window capped by head TTL");
+    }
+
+    #[test]
+    fn pop_batch_wraparound_compaction_preserves_order() {
+        // force the ring to wrap, then coalesce out of the middle: the
+        // survivors must compact toward the head in their original order
+        let q = AdmissionQueue::new(4);
+        for v in [90u64, 91] {
+            q.try_push(v, None).unwrap();
+        }
+        assert!(matches!(q.pop(), Pop::Job(90)));
+        assert!(matches!(q.pop(), Pop::Job(91)));
+        // head is now at index 2; these four wrap around the ring end
+        for v in [10u64, 20, 11, 21] {
+            q.try_push(v, None).unwrap();
+        }
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10, 11]),
+            _ => panic!("expected a batch"),
+        }
+        assert!(matches!(q.pop(), Pop::Job(20)), "survivors keep FIFO order");
+        assert!(matches!(q.pop(), Pop::Job(21)));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn pop_batch_frees_slots_for_blocked_producers() {
+        // a full queue, a blocked producer: a draining pop_batch must
+        // hand the freed slots on (notify_all), or the producer sleeps
+        // through them
+        let q = Arc::new(AdmissionQueue::new(2));
+        q.try_push(10u64, None).unwrap();
+        q.try_push(11, None).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(12u64, None).is_ok());
+        std::thread::sleep(ms(10)); // let the producer park
+        match q.pop_batch(8, None, Some(Duration::ZERO), &tens) {
+            PopBatch::Batch(b) => assert_eq!(b.jobs, vec![10, 11]),
+            _ => panic!("expected a batch"),
+        }
+        assert!(h.join().unwrap(), "blocked producer admitted into a freed slot");
+        assert_eq!(q.depth(), 1);
     }
 }

@@ -115,10 +115,16 @@ pub struct ConvResponse {
     /// which backend actually ran it
     pub backend: Backend,
     pub layout: Layout,
-    /// time spent waiting in the queue
+    /// time spent waiting in the queue (for batched members this
+    /// includes any straggler window the executor held the batch open)
     pub queue_ms: f64,
-    /// time spent convolving
+    /// time spent convolving; members of one coalesced batch share its
+    /// wall time evenly (the amortised per-request cost)
     pub service_ms: f64,
+    /// how many requests the executor coalesced into the plan batch
+    /// that produced this response (`1` = served singly, which is the
+    /// default until `--batch-max` is raised)
+    pub batch_len: usize,
 }
 
 impl ConvResponse {

@@ -1,10 +1,14 @@
-//! The coordinator itself: bounded admission queue, executor threads,
-//! sharded metrics.
+//! The coordinator itself: sharded admission queues, batching executor
+//! threads, sharded metrics.
 //!
-//! **Intake** goes through the [`AdmissionQueue`]: capacity and the
-//! default per-request deadline come from `RunConfig`
-//! (`--queue-capacity` / `--deadline-ms`), and every refusal is a
-//! structured error — [`ErrorKind::QueueFull`] when shedding,
+//! **Intake** goes through per-executor [`AdmissionQueue`] shards:
+//! requests are resolved (routing, effective kernel/tile/fuse) at
+//! submit and land on the shard their [`PlanKey`] hashes to, so
+//! repeated traffic at one shape keeps hitting one executor's plan
+//! cache and arena. Total capacity and the default per-request deadline
+//! come from `RunConfig` (`--queue-capacity`, split ceiling-wise across
+//! shards, / `--deadline-ms`), and every refusal is a structured error
+//! — [`ErrorKind::QueueFull`] when shedding,
 //! [`ErrorKind::DeadlineExceeded`] when a TTL lapses,
 //! [`ErrorKind::Shutdown`] once the coordinator is dropped. Nothing on
 //! the submit path panics; [`Coordinator::submit`] returns
@@ -12,18 +16,26 @@
 //! (`submit` blocks for space, `try_submit` sheds immediately,
 //! `submit_timeout` bounds the wait).
 //!
-//! **Executors** run every native request through the plan layer: each
-//! executor thread owns a [`ScratchArena`] (scratch planes recycle
-//! across requests — zero scratch allocations after warm-up, fused
-//! row-rings included) and a cache of built [`ConvPlan`]s keyed by
-//! `(algorithm, variant, layout, shape, kernel, tile, fuse)`, so
-//! repeated traffic at a shape pays plan validation once.
+//! **Executors batch**: at dequeue an executor drains up to
+//! `--batch-max` queued jobs whose `PlanKey` (and backend) match the
+//! head job — optionally holding the batch open `--batch-wait-us` for
+//! stragglers — and serves them through one [`ConvPlan::execute_batch`]
+//! call: one plan lookup, one warm [`ScratchArena`], one dispatch ramp
+//! for the whole batch (the paper's agglomeration argument applied to
+//! serving). Non-matching jobs keep their FIFO positions and deadlines
+//! stay the fairness backstop: every member's TTL is re-checked at
+//! execution start. Each executor owns a single-entry-LRU cache of
+//! built [`ConvPlan`]s keyed by `(algorithm, variant, layout, shape,
+//! kernel, tile, fuse)`, so repeated traffic at a shape pays plan
+//! validation once. With `--pin-cores`, executor threads pin to cores
+//! (best-effort) so shard-affine state stays cache-warm.
 //!
 //! **Stats are sharded**: each executor accumulates into its own
 //! `Mutex<CoordinatorStats>` slot — uncontended on the hot path — and
-//! the shards are only merged (plus the queue's own counters) when
-//! [`Coordinator::stats`] is called. The old design took one global
-//! lock per request, serializing all executors on metrics bookkeeping.
+//! the shards are only merged (plus the queues' own counters, which
+//! accumulate rather than overwrite) when [`Coordinator::stats`] is
+//! called. The old design took one global lock per request, serializing
+//! all executors on metrics bookkeeping.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,16 +53,32 @@ use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
 use crate::plan::{ConvPlan, KernelSpec, ScratchArena, TileSpec};
 use crate::runtime::{Manifest, PjrtHandle};
 
-use super::queue::{AdmissionQueue, Pop};
+use super::affinity;
+use super::queue::{AdmissionQueue, Batch, PopBatch};
 use super::request::{ConvRequest, ConvResponse};
 use super::router::{Backend, RoutePolicy};
 
 /// Receiver side of a submitted job's reply channel.
 pub type ReplyReceiver = Receiver<Result<ConvResponse>>;
 
+/// A queued request, fully resolved at submit time: routing, effective
+/// kernel/tile/fuse and the [`PlanKey`] are decided before admission so
+/// the key can drive shard selection and dequeue-side coalescing.
+/// Validation stays executor-side (a bad kernel/tile is an execution
+/// error counted in `errors`, exactly as before).
 struct Job {
     req: ConvRequest,
+    backend: Backend,
+    layout: Layout,
+    kernel: KernelSpec,
+    tile: Option<TileSpec>,
+    fuse: bool,
+    key: PlanKey,
+    pjrt_fell_back: bool,
     enqueued: Instant,
+    /// mirror of the queue slot's deadline, for the per-member re-check
+    /// at batch execution start
+    deadline: Option<Instant>,
     reply: Sender<Result<ConvResponse>>,
 }
 
@@ -66,17 +94,27 @@ pub struct CoordinatorStats {
     pub queue_ms: SampleSet,
     /// admissions refused because the queue was at capacity
     pub shed: u64,
-    /// request deadlines lapsed (at admission, waiting, or dequeue)
+    /// request deadlines lapsed (at admission, waiting, dequeue, or the
+    /// per-member re-check at batch execution start)
     pub expired: u64,
     /// queue depth when this snapshot was taken
     pub depth: usize,
     /// high-water mark of queue depth since construction
     pub depth_peak: usize,
+    /// plans built by executors (cache misses; hot-shape traffic should
+    /// pin this near the number of distinct plan keys, not the request
+    /// count — the single-entry-LRU eviction test watches it)
+    pub plans_built: u64,
+    /// executed batch sizes, one sample per coalesced dispatch (all 1.0
+    /// until `--batch-max` is raised)
+    pub batch_sizes: SampleSet,
 }
 
 impl CoordinatorStats {
-    /// Fold another shard into this one. Counters add, sample sets
-    /// concatenate, the depth high-water mark takes the max.
+    /// Fold another shard into this one. Counters add and sample sets
+    /// concatenate, but gauges (`depth`) and high-water marks
+    /// (`depth_peak`) take the max — two snapshots that each observed
+    /// the same queued items must not double-count them.
     pub fn merge(&mut self, other: &CoordinatorStats) {
         self.served += other.served;
         self.errors += other.errors;
@@ -87,8 +125,10 @@ impl CoordinatorStats {
         }
         self.shed += other.shed;
         self.expired += other.expired;
-        self.depth += other.depth;
+        self.depth = self.depth.max(other.depth);
         self.depth_peak = self.depth_peak.max(other.depth_peak);
+        self.plans_built += other.plans_built;
+        self.batch_sizes.extend_from(&other.batch_sizes);
     }
 }
 
@@ -118,6 +158,14 @@ struct Inner {
     /// round-robin counter: advanced only when the policy itself picks
     /// a backend, so pinned traffic (PJRT included) can't skew it
     native_seq: AtomicU64,
+    /// max jobs coalesced into one plan-batched execution (total,
+    /// including the head; 1 = no coalescing)
+    batch_max: usize,
+    /// how long a dequeuing executor holds a non-full batch open for
+    /// same-key stragglers (zero = don't wait)
+    batch_wait: Duration,
+    /// pin executor threads to cores (best-effort, `--pin-cores`)
+    pin_cores: bool,
 }
 
 impl Inner {
@@ -129,8 +177,10 @@ impl Inner {
 /// Per-executor cache bounds. Shapes and kernels are request-controlled,
 /// so without a cap an adversarial mix of distinct (shape, kernel)
 /// combinations would grow the plan cache and scratch pool without
-/// bound; past the cap the whole cache is dropped (requests simply
-/// rebuild plans / re-lease scratch — correctness is unaffected).
+/// bound. At the cap the plan cache evicts exactly its least-recently-
+/// used entry (it used to drop the whole cache, so one shape-churn burst
+/// evicted every hot plan and triggered a rebuild stampede); the scratch
+/// pool still clears wholesale — buffers are cheap to re-lease.
 const PLAN_CACHE_MAX: usize = 64;
 const ARENA_POOL_MAX: usize = 16;
 
@@ -150,10 +200,70 @@ struct PlanKey {
     fused: bool,
 }
 
+/// Per-executor plan cache, bounded at [`PLAN_CACHE_MAX`] with
+/// single-entry LRU eviction: inserting past the cap removes exactly the
+/// least-recently-used plan, so a hot shape's plan survives arbitrary
+/// cold-shape churn (the old clear-everything eviction rebuilt every hot
+/// plan after each burst).
+struct PlanCache {
+    /// key → (plan, last-used tick)
+    plans: HashMap<PlanKey, (ConvPlan, u64)>,
+    tick: u64,
+    /// plans built so far (monotone; mirrored into `plans_built`)
+    built: u64,
+}
+
+impl PlanCache {
+    fn new() -> Self {
+        Self { plans: HashMap::new(), tick: 0, built: 0 }
+    }
+
+    fn built(&self) -> u64 {
+        self.built
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The plan for `key`, building (and caching) it on a miss. Every
+    /// hit refreshes the entry's recency.
+    fn get_or_build(
+        &mut self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<ConvPlan>,
+    ) -> Result<&ConvPlan> {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.plans.contains_key(key) {
+            if self.plans.len() >= PLAN_CACHE_MAX {
+                let lru = self
+                    .plans
+                    .iter()
+                    .min_by_key(|(_, &(_, used))| used)
+                    .map(|(&k, _)| k)
+                    .expect("cache at cap is non-empty");
+                self.plans.remove(&lru);
+            }
+            let plan = build()?;
+            self.built += 1;
+            self.plans.insert(*key, (plan, tick));
+        }
+        let entry = self.plans.get_mut(key).expect("present or just inserted");
+        entry.1 = tick;
+        Ok(&entry.0)
+    }
+}
+
 /// The serving loop (see module docs).
 pub struct Coordinator {
     inner: Arc<Inner>,
-    queue: Arc<AdmissionQueue<Job>>,
+    /// one intake shard per executor; a request lands on the shard its
+    /// `PlanKey` hashes to (shard affinity is the contract — there is
+    /// deliberately no work stealing, so a shape's traffic always meets
+    /// the same warm plan cache and arena)
+    queues: Vec<Arc<AdmissionQueue<Job>>>,
     executors: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -205,12 +315,19 @@ impl Coordinator {
             default_deadline: (cfg.deadline_ms > 0)
                 .then(|| Duration::from_millis(cfg.deadline_ms)),
             native_seq: AtomicU64::new(0),
+            batch_max: cfg.batch_max.max(1),
+            batch_wait: Duration::from_micros(cfg.batch_wait_us),
+            pin_cores: cfg.pin_cores,
         });
-        let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
+        // the configured capacity divides (ceiling) across the intake
+        // shards: a single hot key sees its shard's slice, never the sum
+        let per_shard = cfg.queue_capacity.div_ceil(n).max(1);
+        let queues: Vec<Arc<AdmissionQueue<Job>>> =
+            (0..n).map(|_| Arc::new(AdmissionQueue::new(per_shard))).collect();
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
             let inner = inner.clone();
-            let queue_ref = queue.clone();
+            let queue_ref = queues[i].clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("phi-conv-executor-{i}"))
                 .spawn(move || executor_loop(inner, queue_ref, i));
@@ -219,9 +336,11 @@ impl Coordinator {
                 Err(e) => {
                     // wake and join whatever already spawned before
                     // surfacing the error, or those executors would
-                    // block on the queue forever (no Coordinator means
-                    // no Drop to close it)
-                    queue.close();
+                    // block on their queues forever (no Coordinator
+                    // means no Drop to close them)
+                    for q in &queues {
+                        q.close();
+                    }
                     for h in handles {
                         let _ = h.join();
                     }
@@ -229,7 +348,7 @@ impl Coordinator {
                 }
             }
         }
-        Ok(Self { inner, queue, executors: handles })
+        Ok(Self { inner, queues, executors: handles })
     }
 
     /// The request's effective admission deadline: its own TTL, or the
@@ -243,33 +362,99 @@ impl Coordinator {
             .and_then(|ttl| Instant::now().checked_add(ttl))
     }
 
-    fn job(req: ConvRequest) -> (Job, ReplyReceiver) {
+    /// Resolve a request at admission: routing, effective
+    /// kernel/tile/fuse, and the [`PlanKey`] that drives shard selection
+    /// and dequeue-side coalescing. Resolution moved from serve-time to
+    /// submit-time in the batching PR; the routing rules themselves are
+    /// unchanged, and the round-robin counter still advances in
+    /// submission order — exactly what serve-time resolution observed,
+    /// since executors dequeued in FIFO order.
+    fn job(&self, req: ConvRequest, deadline: Option<Instant>) -> (Job, ReplyReceiver) {
+        let inner = &self.inner;
+        let kernel = req.kernel.unwrap_or(inner.kernel);
+        let tile = req.tile.or(inner.tile);
+        // fusion only applies to the two-pass algorithm; a fused serving
+        // default must not refuse single-pass traffic, so it is silently
+        // inapplicable there rather than a build error
+        let fuse = req.fuse.unwrap_or(inner.fuse) && req.algorithm == Algorithm::TwoPass;
+        // the round-robin counter advances only when the policy picks
+        // the backend: explicitly pinned traffic (PJRT included) must
+        // not consume native cycle slots, or the rotation silently skips
+        // backends whenever pinned requests interleave
+        let (mut backend, mut layout) = match (req.backend, req.layout) {
+            (Some(b), Some(l)) => (b, l),
+            (Some(b), None) => (b, inner.policy.route(req.image.rows, 0).1),
+            (None, Some(l)) => (inner.policy.route(req.image.rows, inner.next_seq()).0, l),
+            (None, None) => inner.policy.route(req.image.rows, inner.next_seq()),
+        };
+        // PJRT can only serve shapes it has artifacts for (and only the
+        // kernel the artifacts were lowered with); fall back to the
+        // adaptive native choice otherwise
+        let mut pjrt_fell_back = false;
+        if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
+            pjrt_fell_back = true;
+            let (b, l) = RoutePolicy::paper_default().route(req.image.rows, 0);
+            backend = b;
+            layout = l;
+        }
+        let key = PlanKey {
+            algorithm: req.algorithm,
+            variant: req.variant,
+            layout,
+            planes: req.image.planes,
+            rows: req.image.rows,
+            cols: req.image.cols,
+            kernel: kernel.cache_key(),
+            tile: tile.map(|t| t.cache_key()),
+            fused: fuse,
+        };
         let (reply, rx) = channel();
-        (Job { req, enqueued: Instant::now(), reply }, rx)
+        let job = Job {
+            req,
+            backend,
+            layout,
+            kernel,
+            tile,
+            fuse,
+            key,
+            pjrt_fell_back,
+            enqueued: Instant::now(),
+            deadline,
+            reply,
+        };
+        (job, rx)
+    }
+
+    /// The intake shard a plan key's traffic lands on. The backend is
+    /// deliberately not hashed: one shape = one shard = one warm plan
+    /// cache, whichever backend each request resolves to.
+    fn shard_of(&self, key: &PlanKey) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.queues.len()
     }
 
     /// Enqueue a request; the receiver yields the response (or a
-    /// structured error) when served. Blocks while the queue is at
+    /// structured error) when served. Blocks while the shard is at
     /// capacity — backpressure — bounded by the request's deadline.
     /// Never panics: refusals are `QueueFull` / `DeadlineExceeded` /
     /// `Shutdown` errors.
     pub fn submit(&self, req: ConvRequest) -> Result<ReplyReceiver> {
         let deadline = self.deadline_of(&req);
-        let (job, rx) = Self::job(req);
-        self.queue
-            .push(job, deadline)
-            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        let (job, rx) = self.job(req, deadline);
+        let q = &self.queues[self.shard_of(&job.key)];
+        q.push(job, deadline).map_err(|r| r.to_error(q.capacity()))?;
         Ok(rx)
     }
 
     /// Non-blocking admission: sheds immediately with `QueueFull` when
-    /// the queue is at capacity.
+    /// the shard is at capacity.
     pub fn try_submit(&self, req: ConvRequest) -> Result<ReplyReceiver> {
         let deadline = self.deadline_of(&req);
-        let (job, rx) = Self::job(req);
-        self.queue
-            .try_push(job, deadline)
-            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        let (job, rx) = self.job(req, deadline);
+        let q = &self.queues[self.shard_of(&job.key)];
+        q.try_push(job, deadline).map_err(|r| r.to_error(q.capacity()))?;
         Ok(rx)
     }
 
@@ -277,10 +462,9 @@ impl Coordinator {
     /// no slot frees in time.
     pub fn submit_timeout(&self, req: ConvRequest, wait: Duration) -> Result<ReplyReceiver> {
         let deadline = self.deadline_of(&req);
-        let (job, rx) = Self::job(req);
-        self.queue
-            .push_timeout(job, deadline, wait)
-            .map_err(|r| r.to_error(self.queue.capacity()))?;
+        let (job, rx) = self.job(req, deadline);
+        let q = &self.queues[self.shard_of(&job.key)];
+        q.push_timeout(job, deadline, wait).map_err(|r| r.to_error(q.capacity()))?;
         Ok(rx)
     }
 
@@ -305,22 +489,41 @@ impl Coordinator {
             let guard = shard.lock().unwrap_or_else(PoisonError::into_inner);
             total.merge(&guard);
         }
-        let q = self.queue.counters();
-        total.shed = q.shed;
-        total.expired = q.expired;
-        total.depth = q.depth;
-        total.depth_peak = q.depth_peak;
+        // the queues' counters ACCUMULATE into the shard totals —
+        // executors tally their own expiries (batch members re-checked
+        // at execution start), and overwriting used to discard them.
+        // Counters add; `depth` is a gauge but the shard queues are
+        // disjoint, so the instantaneous total is their sum; the
+        // high-water marks peaked at different instants and can only be
+        // combined by max.
+        for q in &self.queues {
+            let c = q.counters();
+            total.shed += c.shed;
+            total.expired += c.expired;
+            total.depth += c.depth;
+            total.depth_peak = total.depth_peak.max(c.depth_peak);
+        }
         total
     }
 
-    /// Items currently waiting for an executor.
+    /// Items currently waiting for an executor (all shards).
     pub fn queue_depth(&self) -> usize {
-        self.queue.depth()
+        self.queues.iter().map(|q| q.depth()).sum()
     }
 
-    /// The admission queue's capacity.
+    /// Total admission capacity (summed over the per-executor shards;
+    /// the ceiling split means this can slightly exceed the configured
+    /// `queue_capacity`, never undercut it).
     pub fn queue_capacity(&self) -> usize {
-        self.queue.capacity()
+        self.queues.iter().map(|q| q.capacity()).sum()
+    }
+
+    /// Test-only: mutate one executor shard's stats in place, simulating
+    /// executor-side tallies without racing real timing.
+    #[cfg(test)]
+    fn bump_shard(&self, shard: usize, f: impl FnOnce(&mut CoordinatorStats)) {
+        let mut st = self.inner.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
+        f(&mut st);
     }
 
     /// True when the PJRT backend is loaded.
@@ -360,7 +563,9 @@ impl Drop for Coordinator {
     /// structured `DeadlineExceeded` errors, live ones complete), then
     /// join them. Every outstanding reply channel resolves.
     fn drop(&mut self) {
-        self.queue.close();
+        for q in &self.queues {
+            q.close();
+        }
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
@@ -368,138 +573,185 @@ impl Drop for Coordinator {
 }
 
 fn executor_loop(inner: Arc<Inner>, queue: Arc<AdmissionQueue<Job>>, shard: usize) {
+    if inner.pin_cores {
+        // best-effort: shard i → core i (mod cores); a refused pin (odd
+        // cgroup mask, non-linux target) leaves the executor floating.
+        // Note the compute pools inside the execution models are shared
+        // across executors, so pinning covers the executor threads (and
+        // whatever runs inline on them), not the pool workers.
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let _ = affinity::pin_current_thread(shard % cores);
+    }
     // per-executor state: scratch planes recycle across requests (zero
     // scratch allocations after warm-up) and plans are built once per
-    // distinct request configuration
+    // distinct request configuration, evicted one LRU entry at a time
     let mut arena = ScratchArena::new();
-    let mut plans: HashMap<PlanKey, ConvPlan> = HashMap::new();
+    let mut cache = PlanCache::new();
+    // coalescing key: the plan key plus the backend — a batch must be
+    // servable by one plan on one execution model
+    let key_of = |j: &Job| (j.key, j.backend);
+    let straggler =
+        (inner.batch_max > 1 && !inner.batch_wait.is_zero()).then_some(inner.batch_wait);
     loop {
-        let job = match queue.pop() {
-            Pop::Closed => return, // drained and shut down
-            Pop::Expired(job) => {
-                let waited = job.enqueued.elapsed().as_secs_f64() * 1e3;
-                let _ = job.reply.send(Err(Error::with_kind(
-                    ErrorKind::DeadlineExceeded,
-                    format!("request deadline exceeded after {waited:.1} ms in queue"),
-                )));
-                continue;
-            }
-            Pop::Job(job) => job,
-        };
-        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let mut pjrt_fell_back = false;
-        let result =
-            serve_one(&inner, &mut arena, &mut plans, &mut pjrt_fell_back, job.req, queue_ms);
-        // this executor's own shard: uncontended unless stats() is
-        // merging, and never held across the convolution above
-        let mut st = inner.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
-        if pjrt_fell_back {
-            st.pjrt_fallbacks += 1;
+        match queue.pop_batch(inner.batch_max, straggler, None, &key_of) {
+            PopBatch::Closed => return, // own shard drained and shut down
+            PopBatch::Empty => continue, // unreachable: the idle wait is unbounded
+            PopBatch::Batch(batch) => serve_batch(&inner, &mut arena, &mut cache, shard, batch),
         }
-        match &result {
-            Ok(resp) => {
-                st.served += 1;
-                st.queue_ms.push(resp.queue_ms);
-                st.service_ms
-                    .entry(resp.backend.label())
-                    .or_default()
-                    .push(resp.service_ms);
-            }
-            Err(_) => st.errors += 1,
-        }
-        drop(st);
-        let _ = job.reply.send(result); // receiver may have gone away
     }
 }
 
-fn serve_one(
+/// Reply `DeadlineExceeded` to members whose TTL lapsed in queue or at
+/// the execution boundary.
+fn reject_expired(jobs: Vec<Job>) {
+    for job in jobs {
+        let waited = job.enqueued.elapsed().as_secs_f64() * 1e3;
+        let _ = job.reply.send(Err(Error::with_kind(
+            ErrorKind::DeadlineExceeded,
+            format!("request deadline exceeded after {waited:.1} ms in queue"),
+        )));
+    }
+}
+
+/// Serve one coalesced batch: reject its expired members, execute the
+/// live ones through a single plan dispatch, record stats (under the
+/// shard lock, *before* any reply is sent — a caller that observed its
+/// reply must find it already counted), then reply to every member.
+fn serve_batch(
     inner: &Inner,
     arena: &mut ScratchArena,
-    plans: &mut HashMap<PlanKey, ConvPlan>,
-    pjrt_fell_back: &mut bool,
-    req: ConvRequest,
-    queue_ms: f64,
-) -> Result<ConvResponse> {
-    // request intake validation: a bad kernel or tile spec is a
-    // structured error before any routing or execution happens
-    let kernel = req.kernel.unwrap_or(inner.kernel);
-    kernel.validate().context("invalid request kernel")?;
-    let tile = req.tile.or(inner.tile);
-    if let Some(t) = tile {
+    cache: &mut PlanCache,
+    shard: usize,
+    batch: Batch<Job>,
+) {
+    // queue-side expiries first (the queue already counted them): their
+    // rejection must not wait for the batch's convolution
+    reject_expired(batch.expired);
+
+    // the fairness backstop: every member's TTL is re-checked at
+    // execution start — a member that lapsed during the straggler
+    // window (or behind a slow predecessor) is rejected, not executed
+    let now = Instant::now();
+    let (live, late): (Vec<Job>, Vec<Job>) =
+        batch.jobs.into_iter().partition(|j| !j.deadline.is_some_and(|d| d <= now));
+    let exec_expired = late.len() as u64;
+    if live.is_empty() {
+        if exec_expired > 0 {
+            let mut st = inner.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
+            st.expired += exec_expired;
+        }
+        reject_expired(late);
+        return;
+    }
+
+    let n = live.len();
+    let built_before = cache.built();
+    // per-member queue time, measured at execution start: it includes
+    // any in-batch straggler wait (time spent not-yet-executing)
+    let queue_ms: Vec<f64> =
+        live.iter().map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3).collect();
+    let t0 = Instant::now();
+    let outcome = execute_batch_jobs(inner, arena, cache, &live);
+    // members share the batch's wall time evenly: the amortised
+    // per-request cost is exactly what coalescing buys
+    let service_each = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+
+    {
+        // this executor's own shard: uncontended unless stats() is
+        // merging, and never held across the convolution above
+        let mut st = inner.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
+        st.expired += exec_expired;
+        st.plans_built += cache.built() - built_before;
+        st.batch_sizes.push(n as f64);
+        for job in &live {
+            if job.pjrt_fell_back {
+                st.pjrt_fallbacks += 1;
+            }
+        }
+        match &outcome {
+            Ok(_) => {
+                st.served += n as u64;
+                for (job, q) in live.iter().zip(&queue_ms) {
+                    st.queue_ms.push(*q);
+                    st.service_ms.entry(job.backend.label()).or_default().push(service_each);
+                }
+            }
+            Err(_) => st.errors += n as u64,
+        }
+    }
+
+    reject_expired(late);
+    match outcome {
+        // execute_batch maps inputs to outputs in order, so zipping
+        // restores each member's own pixels
+        Ok(images) => {
+            for ((job, image), q) in live.into_iter().zip(images).zip(queue_ms) {
+                let resp = ConvResponse {
+                    id: job.req.id,
+                    image,
+                    backend: job.backend,
+                    layout: job.layout,
+                    queue_ms: q,
+                    service_ms: service_each,
+                    batch_len: n,
+                };
+                let _ = job.reply.send(Ok(resp)); // receiver may have gone away
+            }
+        }
+        Err(e) => {
+            // Error is not Clone: reconstruct one per member, preserving
+            // the kind and the full context chain callers match on
+            let kind = e.kind();
+            let msg = format!("{e:#}");
+            for job in live {
+                let _ = job.reply.send(Err(Error::with_kind(kind, msg.clone())));
+            }
+        }
+    }
+}
+
+/// Execute a batch of same-key jobs through one plan. The head job
+/// defines the plan (all members share its `PlanKey` and backend);
+/// kernel/tile validation happens here so a bad spec is a structured
+/// execution error counted in `errors`, exactly as single serving did.
+fn execute_batch_jobs(
+    inner: &Inner,
+    arena: &mut ScratchArena,
+    cache: &mut PlanCache,
+    jobs: &[Job],
+) -> Result<Vec<PlanarImage>> {
+    let head = &jobs[0];
+    head.kernel.validate().context("invalid request kernel")?;
+    if let Some(t) = head.tile {
         t.validate().context("invalid request tile")?;
     }
-    // fusion only applies to the two-pass algorithm; a fused serving
-    // default must not refuse single-pass traffic, so it is silently
-    // inapplicable there rather than a build error
-    let fuse = req.fuse.unwrap_or(inner.fuse) && req.algorithm == Algorithm::TwoPass;
-
-    // the round-robin counter advances only when the policy picks the
-    // backend: explicitly pinned traffic (PJRT included) must not
-    // consume native cycle slots, or the rotation silently skips
-    // backends whenever pinned requests interleave
-    let (mut backend, mut layout) = match (req.backend, req.layout) {
-        (Some(b), Some(l)) => (b, l),
-        (Some(b), None) => (b, inner.policy.route(req.image.rows, 0).1),
-        (None, Some(l)) => (inner.policy.route(req.image.rows, inner.next_seq()).0, l),
-        (None, None) => inner.policy.route(req.image.rows, inner.next_seq()),
-    };
-
-    // PJRT can only serve shapes it has artifacts for (and only the
-    // configured default kernel the artifacts were lowered with); fall
-    // back to the adaptive native choice otherwise.
-    if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
-        *pjrt_fell_back = true;
-        let (b, l) = RoutePolicy::paper_default().route(req.image.rows, 0);
-        backend = b;
-        layout = l;
-    }
-
-    let t0 = Instant::now();
-    let image = match backend {
-        Backend::Pjrt => run_pjrt(inner, &req, layout)?,
+    match head.backend {
+        Backend::Pjrt => jobs.iter().map(|j| run_pjrt(inner, &j.req, j.layout)).collect(),
         Backend::NativeOpenMp | Backend::NativeOpenCl | Backend::NativeGprm => {
-            let model: &dyn crate::models::ExecutionModel = match backend {
+            let model: &dyn crate::models::ExecutionModel = match head.backend {
                 Backend::NativeOpenMp => &inner.openmp,
                 Backend::NativeOpenCl => &inner.opencl,
                 _ => &inner.gprm,
             };
-            let key = PlanKey {
-                algorithm: req.algorithm,
-                variant: req.variant,
-                layout,
-                planes: req.image.planes,
-                rows: req.image.rows,
-                cols: req.image.cols,
-                kernel: kernel.cache_key(),
-                tile: tile.map(|t| t.cache_key()),
-                fused: fuse,
-            };
-            if !plans.contains_key(&key) {
-                if plans.len() >= PLAN_CACHE_MAX {
-                    plans.clear();
-                }
-                let plan = ConvPlan::builder()
-                    .algorithm(req.algorithm)
-                    .variant(req.variant)
-                    .layout(layout)
-                    .kernel(kernel)
-                    .tile_opt(tile)
-                    .fuse(fuse)
-                    .shape(req.image.planes, req.image.rows, req.image.cols)
+            let plan = cache.get_or_build(&head.key, || {
+                ConvPlan::builder()
+                    .algorithm(head.req.algorithm)
+                    .variant(head.req.variant)
+                    .layout(head.layout)
+                    .kernel(head.kernel)
+                    .tile_opt(head.tile)
+                    .fuse(head.fuse)
+                    .shape(head.req.image.planes, head.req.image.rows, head.req.image.cols)
                     .build()
-                    .context("invalid request plan")?;
-                plans.insert(key, plan);
-            }
-            let plan = plans.get(&key).expect("plan just cached");
-            let image = plan.execute_on(model, &req.image, arena)?;
+                    .context("invalid request plan")
+            })?;
+            let images = plan.execute_batch(Some(model), jobs.iter().map(|j| &j.req.image), arena)?;
             if arena.pooled() > ARENA_POOL_MAX {
                 arena.clear();
             }
-            image
+            Ok(images)
         }
-    };
-    let service_ms = t0.elapsed().as_secs_f64() * 1e3;
-    Ok(ConvResponse { id: req.id, image, backend, layout, queue_ms, service_ms })
+    }
 }
 
 fn pjrt_artifact_name(req: &ConvRequest, layout: Layout) -> Option<String> {
@@ -864,10 +1116,223 @@ mod tests {
         b.queue_ms.push(3.0);
         b.service_ms.entry("openmp").or_default().push(4.0);
         b.service_ms.entry("gprm").or_default().push(5.0);
+        b.plans_built = 2;
+        b.batch_sizes.push(3.0);
         a.merge(&b);
         assert_eq!((a.served, a.errors, a.pjrt_fallbacks), (5, 1, 4));
         assert_eq!(a.queue_ms.len(), 2);
         assert_eq!(a.service_ms["openmp"].len(), 2);
         assert_eq!(a.service_ms["gprm"].len(), 1);
+        assert_eq!(a.plans_built, 2);
+        assert_eq!(a.batch_sizes.len(), 1);
+    }
+
+    #[test]
+    fn stats_merge_treats_depth_as_gauge_not_counter() {
+        // regression: merge used to sum `depth`, so folding two
+        // snapshots double-counted queue depth. Gauges and high-water
+        // marks combine by max; monotone counters still add.
+        let a0 = CoordinatorStats {
+            depth: 3,
+            depth_peak: 5,
+            shed: 1,
+            expired: 2,
+            ..Default::default()
+        };
+        let b = CoordinatorStats {
+            depth: 2,
+            depth_peak: 9,
+            shed: 4,
+            expired: 1,
+            ..Default::default()
+        };
+        let mut a = a0.clone();
+        a.merge(&b);
+        assert_eq!(a.depth, 3, "gauge takes the max, never the sum");
+        assert_eq!(a.depth_peak, 9);
+        assert_eq!((a.shed, a.expired), (5, 3), "counters still accumulate");
+        // merging the other way agrees on the gauge
+        let mut c = b.clone();
+        c.merge(&a0);
+        assert_eq!(c.depth, 3);
+    }
+
+    #[test]
+    fn executor_side_tallies_survive_into_stats() {
+        // regression: stats() used to overwrite shed/expired/depth_peak
+        // with the queue counters, discarding anything an executor
+        // tallied on its shard (batch members rejected at execution
+        // start land exactly there)
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 2, false)
+            .unwrap();
+        c.bump_shard(0, |st| {
+            st.expired += 2;
+            st.shed += 1;
+            st.depth_peak = st.depth_peak.max(7);
+        });
+        // a queue-side expiry on top: both sources must accumulate
+        let img = synth_image(3, 24, 24, Pattern::Noise, 40);
+        let e = c.submit(ConvRequest::new(1, img).with_deadline(Duration::ZERO)).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+        let st = c.stats();
+        assert_eq!(st.expired, 3, "executor-side 2 + queue-side 1");
+        assert_eq!(st.shed, 1);
+        assert!(st.depth_peak >= 7, "shard peak survives: {}", st.depth_peak);
+    }
+
+    #[test]
+    fn plan_cache_evicts_single_lru_entry() {
+        // regression: at PLAN_CACHE_MAX the cache used to clear()
+        // wholesale, so churn evicted the hot plan and every burst
+        // triggered a rebuild stampede
+        let mut cache = PlanCache::new();
+        let build = |rows: usize| {
+            ConvPlan::builder()
+                .kernel(KernelSpec::new(5, 1.0))
+                .shape(1, rows, 16)
+                .build()
+                .unwrap()
+        };
+        let key = |rows: usize| PlanKey {
+            algorithm: Algorithm::TwoPass,
+            variant: Variant::Simd,
+            layout: Layout::PerPlane,
+            planes: 1,
+            rows,
+            cols: 16,
+            kernel: KernelSpec::new(5, 1.0).cache_key(),
+            tile: None,
+            fused: false,
+        };
+        let hot = key(1000);
+        cache.get_or_build(&hot, || Ok(build(1000))).unwrap();
+        // cold churn well past the cap, re-touching the hot key so its
+        // recency keeps it off the LRU end
+        let churn = PLAN_CACHE_MAX + 8;
+        for r in 0..churn {
+            cache.get_or_build(&key(8 + r), || Ok(build(8 + r))).unwrap();
+            cache.get_or_build(&hot, || Ok(build(1000))).unwrap();
+        }
+        assert_eq!(cache.len(), PLAN_CACHE_MAX, "size pinned at the cap");
+        assert_eq!(
+            cache.built(),
+            1 + churn as u64,
+            "one build per distinct key — the hot plan was never rebuilt"
+        );
+    }
+
+    #[test]
+    fn hot_plan_survives_shape_churn_past_the_cache_cap() {
+        // end-to-end flavour of the eviction fix: a hot shape keeps
+        // serving through cold churn past PLAN_CACHE_MAX and its plan is
+        // built exactly once (plans_built counts cache misses)
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+            .unwrap();
+        let hot = synth_image(1, 200, 200, Pattern::Noise, 50);
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let want = convolve_image(hot.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        assert_eq!(c.serve(ConvRequest::new(0, hot.clone())).unwrap().image, want);
+        let churn = PLAN_CACHE_MAX + 10;
+        for i in 0..churn {
+            let size = 8 + i;
+            let img = synth_image(1, size, size, Pattern::Noise, size as u64);
+            c.serve(ConvRequest::new(i as u64, img)).unwrap();
+            if i % 8 == 0 {
+                // keep the hot plan recent — and correct
+                assert_eq!(c.serve(ConvRequest::new(900, hot.clone())).unwrap().image, want);
+            }
+        }
+        let st = c.stats();
+        assert_eq!(st.errors, 0);
+        assert_eq!(
+            st.plans_built,
+            1 + churn as u64,
+            "hot plan built once; every churn shape built once"
+        );
+    }
+
+    #[test]
+    fn unbatched_default_reports_batch_len_one() {
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+            .unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 60);
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert_eq!(resp.batch_len, 1);
+        let st = c.stats();
+        assert_eq!(st.batch_sizes.len(), 1);
+        assert_eq!(st.batch_sizes.max(), 1.0, "no coalescing until --batch-max is raised");
+    }
+
+    #[test]
+    fn hot_shape_jobs_coalesce_into_one_batch() {
+        // one executor pinned on a big blocker while six same-key small
+        // requests pile up: with batch_max 8 they must coalesce (the
+        // batch-size histogram shows > 1) and every member's pixels must
+        // match the oracle
+        let cfg = RunConfig { queue_capacity: 32, batch_max: 8, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+            .unwrap();
+        let blocker = c.submit(ConvRequest::new(0, synth_image(3, 512, 512, Pattern::Noise, 70)))
+            .unwrap();
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 1..=6u64 {
+            let img = synth_image(3, 48, 48, Pattern::Noise, 70 + i);
+            wants.push(convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap());
+            rxs.push(c.submit(ConvRequest::new(i, img)).unwrap());
+        }
+        assert!(blocker.recv().unwrap().is_ok());
+        let mut max_batch = 0usize;
+        for (rx, want) in rxs.into_iter().zip(&wants) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.image, *want, "batched pixels match the oracle");
+            max_batch = max_batch.max(resp.batch_len);
+        }
+        assert!(max_batch >= 2, "queued same-key jobs must coalesce, got {max_batch}");
+        let st = c.stats();
+        assert_eq!((st.served, st.errors), (7, 0));
+        assert!(st.batch_sizes.max() >= 2.0);
+        assert_eq!(st.plans_built, 2, "one blocker plan + one shared hot plan");
+    }
+
+    #[test]
+    fn same_shape_lands_on_one_shard() {
+        // PlanKey-hash sharding without stealing: repeated traffic at
+        // one shape is served by a single executor, so exactly one plan
+        // is ever built across 4 executors
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 4, false)
+            .unwrap();
+        let img = synth_image(3, 26, 26, Pattern::Noise, 80);
+        for i in 0..8u64 {
+            assert!(c.serve(ConvRequest::new(i, img.clone())).is_ok());
+        }
+        let st = c.stats();
+        assert_eq!(st.served, 8);
+        assert_eq!(st.plans_built, 1, "one shard, one warm plan cache");
+    }
+
+    #[test]
+    fn pinned_coordinator_serves_normally() {
+        // --pin-cores is a best-effort hint: serving must be identical
+        // whether or not the pin takes on this host
+        let cfg = RunConfig { pin_cores: true, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 2, false)
+            .unwrap();
+        let img = synth_image(3, 24, 24, Pattern::Noise, 90);
+        for i in 0..4u64 {
+            assert!(c.serve(ConvRequest::new(i, img.clone())).is_ok());
+        }
+        assert_eq!(c.stats().served, 4);
+    }
+
+    #[test]
+    fn total_capacity_splits_across_shards() {
+        let cfg = RunConfig { queue_capacity: 7, ..cfg() };
+        let c = Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 3, false)
+            .unwrap();
+        // ceil(7/3) = 3 per shard, 9 total: never undercuts the config
+        assert_eq!(c.queue_capacity(), 9);
+        assert_eq!(c.queue_depth(), 0);
     }
 }

@@ -476,17 +476,37 @@ impl ConvPlan {
 
     /// Convolve a batch of images under one plan (all must match the
     /// plan's shape). `model: None` runs sequentially.
-    pub fn execute_batch(
+    ///
+    /// Every member's shape is checked **up front**, so a mismatched
+    /// image refuses the whole batch before any pixels are produced —
+    /// the coordinator's batched serve path relies on all-or-nothing
+    /// semantics rather than a half-convolved batch. Accepts any
+    /// iterable of image refs (slices, `Vec<&_>`, job iterators).
+    pub fn execute_batch<'a>(
         &self,
         model: Option<&dyn ExecutionModel>,
-        imgs: &[PlanarImage],
+        imgs: impl IntoIterator<Item = &'a PlanarImage>,
         arena: &mut ScratchArena,
     ) -> Result<Vec<PlanarImage>> {
+        let imgs: Vec<&PlanarImage> = imgs.into_iter().collect();
+        for (i, img) in imgs.iter().enumerate() {
+            ensure!(
+                (img.planes, img.rows, img.cols) == (self.planes, self.rows, self.cols),
+                "batch member {}: image {}x{}x{} does not match plan shape {}x{}x{}",
+                i,
+                img.planes,
+                img.rows,
+                img.cols,
+                self.planes,
+                self.rows,
+                self.cols
+            );
+        }
         let exec = match model {
             Some(m) => Exec::Par(m),
             None => Exec::Seq,
         };
-        imgs.iter().map(|img| self.execute_image(exec, img, arena)).collect()
+        imgs.into_iter().map(|img| self.execute_image(exec, img, arena)).collect()
     }
 
     /// Convolve into a caller-owned output buffer — plane-major
@@ -871,6 +891,19 @@ mod tests {
             let single = plan.execute(image, &mut arena).unwrap();
             assert_eq!(*one, single);
         }
+    }
+
+    #[test]
+    fn execute_batch_rejects_shape_mismatch_up_front() {
+        let good = img(2, 20, 18);
+        let bad = img(2, 18, 20);
+        let plan = ConvPlan::builder().shape(2, 20, 18).build().unwrap();
+        let mut arena = ScratchArena::new();
+        let e = plan.execute_batch(None, [&good, &bad], &mut arena).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("batch member 1"), "names the offender: {msg}");
+        // the good member alone still serves
+        assert!(plan.execute_batch(None, [&good], &mut arena).is_ok());
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! * shutdown while the queue is still draining (every outstanding
 //!   reply resolves to a response or a structured `Shutdown` /
 //!   `DeadlineExceeded` error — never a hung `recv`),
-//! * deadlines lapsing while jobs wait behind a busy executor.
+//! * deadlines lapsing while jobs wait behind a busy executor,
+//! * plan-keyed batching fairness: a rare shape behind a hot-shape
+//!   flood still serves within its deadline, and batched responses are
+//!   bitwise-equal to the same requests served singly.
 
 use std::time::Duration;
 
@@ -138,6 +141,76 @@ fn deadlines_lapse_behind_a_busy_executor() {
     let st = coord.stats();
     assert_eq!(st.expired, 8);
     assert_eq!(st.served, 1);
+}
+
+#[test]
+fn rare_shape_behind_hot_flood_is_served_within_deadline() {
+    // batching fairness: coalescing removes only PlanKey-matching jobs
+    // from the queue, so a minority shape buried in a flood of hot
+    // traffic keeps its FIFO position and is served within its deadline
+    // — the hot batches must not starve it
+    let cfg = RunConfig { batch_max: 8, ..cfg(64) };
+    let coord =
+        Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+    let hot = synth_image(3, 96, 96, Pattern::Noise, 11);
+    let mut hot_rxs = Vec::new();
+    for i in 0..24u64 {
+        hot_rxs.push(coord.submit(ConvRequest::new(i, hot.clone())).unwrap());
+    }
+    let rare = synth_image(3, 80, 72, Pattern::Noise, 12);
+    let rare_rx = coord
+        .submit(ConvRequest::new(99, rare).with_deadline(Duration::from_secs(30)))
+        .unwrap();
+    let resp = rare_rx
+        .recv()
+        .expect("reply must arrive")
+        .expect("rare shape must be served, not starved past its deadline");
+    assert_eq!(resp.id, 99);
+    for rx in hot_rxs {
+        assert!(rx.recv().unwrap().is_ok(), "hot traffic serves too");
+    }
+    let st = coord.stats();
+    assert_eq!(st.served, 25);
+    assert_eq!(st.expired, 0, "nothing may lapse in this mix");
+}
+
+#[test]
+fn batched_responses_bitwise_equal_singly_served() {
+    // the acceptance bar for coalescing: a batch member's pixels are
+    // indistinguishable from the same request served alone
+    let imgs: Vec<PlanarImage> =
+        (0..6u64).map(|s| synth_image(3, 64, 64, Pattern::Noise, 40 + s)).collect();
+
+    // baseline: default batch_max = 1 serves each request singly
+    let single =
+        Coordinator::new(&cfg(32), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+            .unwrap();
+    let wants: Vec<PlanarImage> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| single.serve(ConvRequest::new(i as u64, img.clone())).unwrap().image)
+        .collect();
+
+    // batched: a big blocker pins the executor while the six same-key
+    // requests queue up, so they coalesce when it comes free
+    let cfg = RunConfig { batch_max: 8, ..cfg(32) };
+    let batched =
+        Coordinator::new(&cfg, RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+    let blocker =
+        batched.submit(ConvRequest::new(100, synth_image(3, 512, 512, Pattern::Noise, 9))).unwrap();
+    let rxs: Vec<_> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| batched.submit(ConvRequest::new(i as u64, img.clone())).unwrap())
+        .collect();
+    assert!(blocker.recv().unwrap().is_ok());
+    let mut max_batch = 0usize;
+    for (rx, want) in rxs.into_iter().zip(&wants) {
+        let resp = rx.recv().expect("reply").expect("batch member serves");
+        assert_eq!(resp.image, *want, "batched output must be bitwise-equal");
+        max_batch = max_batch.max(resp.batch_len);
+    }
+    assert!(max_batch >= 2, "the six queued same-key jobs must coalesce, got {max_batch}");
 }
 
 #[test]
