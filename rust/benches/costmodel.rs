@@ -1,0 +1,122 @@
+//! Bench: cost-model prediction accuracy on held-out shapes.
+//!
+//! Trains the regression cost model from a real autotune sweep (several
+//! sizes × kernel widths, all candidate tiles/fusion states), then
+//! scores it on a holdout shape grid **disjoint from the training
+//! sweep**: for each (model, holdout size) the predicted-cheapest
+//! candidate is built and measured, and the table reports predicted vs
+//! measured milliseconds with relative error. Accuracy is a column to
+//! read, not a test to fail — timing asserts would flake on loaded CI
+//! runners. What *is* asserted is the persistence contract: the written
+//! `BENCH_costmodel.json` reloads, carries at least one finite-R² group,
+//! and predicts bitwise-identically to the in-memory fit.
+//!
+//! `cargo bench --bench costmodel` — env overrides:
+//!   PHI_TUNE_SMOKE=1    small sizes + 2 reps (the CI verify leg)
+//!   PHI_BENCH_THREADS=8 PHI_BENCH_REPS=5 PHI_BENCH_WARMUP=2
+//!   PHI_COSTMODEL_JSON=BENCH_costmodel.json   (empty string = don't write)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use phi_conv::autotune::{sweep_shape_sampled, TuningTable};
+use phi_conv::config::RunConfig;
+use phi_conv::costmodel::{accuracy_table, CostModel, Sample};
+use phi_conv::models::TileSpec;
+use phi_conv::util::json::Json;
+
+fn main() {
+    let smoke = std::env::var("PHI_TUNE_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let mut cfg = RunConfig::from_bench_env();
+    let (train_sizes, widths): (Vec<usize>, Vec<usize>) = if smoke {
+        cfg.reps = 2;
+        (vec![40, 56, 72, 96], vec![3, 5])
+    } else {
+        (vec![96, 160, 224, 288], vec![3, 5, 7])
+    };
+    // holdout: 3/4 of each training size, excluding anything trained on
+    let holdout: Vec<usize> = train_sizes
+        .iter()
+        .map(|s| s * 3 / 4)
+        .filter(|s| *s >= 16 && !train_sizes.contains(s))
+        .collect();
+    eprintln!(
+        "training sweep: sizes {train_sizes:?} × widths {widths:?}, {} threads, {} reps; holdout {holdout:?}",
+        cfg.threads, cfg.reps
+    );
+
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut table = TuningTable::new();
+    for &w in &widths {
+        let mut cfg_w = cfg.clone();
+        cfg_w.kernel_width = w;
+        for &size in &train_sizes {
+            sweep_shape_sampled(&cfg_w, size, &mut table, &mut samples)
+                .unwrap_or_else(|e| panic!("sweep {size} w{w}: {e:#}"));
+        }
+    }
+    eprintln!("collected {} samples", samples.len());
+
+    let model = CostModel::fit(samples, cfg.r2_min);
+    println!("{}", model.to_table().to_text());
+
+    let acc = accuracy_table(&cfg, &model, &holdout).expect("accuracy table");
+    println!("{}", acc.to_text());
+    println!("{}", acc.to_json());
+
+    let path =
+        std::env::var("PHI_COSTMODEL_JSON").unwrap_or_else(|_| "BENCH_costmodel.json".into());
+    if path.is_empty() {
+        return;
+    }
+    let mut obj = match model.to_json() {
+        Json::Obj(m) => m,
+        other => panic!("costmodel JSON root must be an object, got {other}"),
+    };
+    obj.insert(
+        "provenance".to_string(),
+        Json::Str(format!(
+            "cargo bench --bench costmodel (smoke={smoke}), {} threads, {} reps",
+            cfg.threads, cfg.reps
+        )),
+    );
+    obj.insert(
+        "train_sizes".to_string(),
+        Json::Arr(train_sizes.iter().map(|s| Json::Num(*s as f64)).collect()),
+    );
+    obj.insert(
+        "holdout_sizes".to_string(),
+        Json::Arr(holdout.iter().map(|s| Json::Num(*s as f64)).collect()),
+    );
+    obj.insert("accuracy".to_string(), acc.to_json());
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+
+    // persistence contract, asserted on the real artifact: it reloads
+    // (extra provenance keys are ignored), carries at least one
+    // finite-R² group, and predicts bitwise-identically.
+    let reloaded = CostModel::load(Path::new(&path)).expect("reload written artifact");
+    assert!(
+        reloaded
+            .groups()
+            .iter()
+            .any(|g| g.fit.as_ref().is_some_and(|f| f.r2.is_finite())),
+        "written artifact must carry at least one finite-R² model"
+    );
+    let probe_tile = TileSpec::new(32, 32);
+    for g in model.groups() {
+        let tile = if g.tiled { Some(probe_tile) } else { None };
+        let a = model.predict_ms(&g.model, g.fused, tile, 3, 123, 131, cfg.kernel_width, cfg.threads);
+        let b = reloaded.predict_ms(&g.model, g.fused, tile, 3, 123, 131, cfg.kernel_width, cfg.threads);
+        assert_eq!(
+            a.map(f64::to_bits),
+            b.map(f64::to_bits),
+            "{} fused={} tiled={}: save/load must preserve predictions bitwise",
+            g.model,
+            g.fused,
+            g.tiled
+        );
+    }
+    println!("save/load self-check: predictions bitwise-identical after round-trip");
+}

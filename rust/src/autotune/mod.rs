@@ -21,16 +21,30 @@
 //!   paper's agglomeration exhibit.
 //! * [`TuningTable`] persists the per-(model, shape, kernel) winners in
 //!   memory, for lookups by serving code and for the `phi-conv tune`
-//!   subcommand's summary.
+//!   subcommand's summary. On a lookup miss it consults an optional
+//!   predictive tier — a fitted [`crate::costmodel::CostModel`] — via
+//!   [`TuningTable::choose`], so never-swept shapes still get a
+//!   tile/fusion decision (R²-gated: a poor fit falls back to `None`,
+//!   i.e. empirical sweeping).
+//! * [`sweep_shape_sampled`] additionally records every (model,
+//!   candidate) measurement as a self-describing
+//!   [`crate::costmodel::Sample`] (repeats, warmup, worker count ride
+//!   along) — the training data the cost model is fitted from. Warmup
+//!   for both the timed runs and the overhead probes comes from
+//!   `cfg.warmup`, which `RunConfig::from_bench_env` funnels through
+//!   `models::overhead_warmup()` — so `PHI_BENCH_WARMUP` means the same
+//!   thing to the sweep, the probes, and the recorded samples.
 //!
 //! Reproduce with `phi-conv tune` (sizes/reps/threads from the standard
-//! config) or `cargo bench --bench tiling`.
+//! config) or `cargo bench --bench tiling`; fit + persist with
+//! `phi-conv tune --save` / `cargo bench --bench costmodel`.
 
 use std::collections::HashMap;
 
 use crate::util::error::Result;
 
 use crate::config::RunConfig;
+use crate::costmodel::{dispatch_units, CostModel, Prediction, Sample};
 use crate::image::synth_image;
 use crate::metrics::{time_reps, Table};
 use crate::models::{ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileSpec};
@@ -149,11 +163,23 @@ impl Tuned {
     }
 }
 
+/// How a plan decision was reached: an exact swept winner from this
+/// table, or a cost-model prediction for a never-swept shape.
+#[derive(Debug, Clone, Copy)]
+pub enum PlanDecision<'a> {
+    /// Exact hit: this (model, shape, kernel) was empirically swept.
+    Swept(&'a Tuned),
+    /// Lookup miss, but the fitted cost model predicts a winner.
+    Predicted(Prediction),
+}
+
 /// Small in-memory table of tuned winners, keyed by
-/// (model, planes, rows, cols, kernel width).
+/// (model, planes, rows, cols, kernel width), with an optional
+/// cost-model predictive tier for lookup misses.
 #[derive(Debug, Default)]
 pub struct TuningTable {
     entries: HashMap<TuneKey, Tuned>,
+    cost_model: Option<CostModel>,
 }
 
 impl TuningTable {
@@ -172,6 +198,37 @@ impl TuningTable {
     /// Record a winner (later sweeps at the same key overwrite).
     pub fn record(&mut self, key: TuneKey, tuned: Tuned) {
         self.entries.insert(key, tuned);
+    }
+
+    /// Install (or replace) the predictive tier consulted on lookup
+    /// misses.
+    pub fn set_cost_model(&mut self, cm: CostModel) {
+        self.cost_model = Some(cm);
+    }
+
+    pub fn cost_model(&self) -> Option<&CostModel> {
+        self.cost_model.as_ref()
+    }
+
+    /// Tiered plan decision: an exact swept winner if this
+    /// configuration was measured, else the cost model's predicted
+    /// winner, else `None` — which means "sweep empirically" (no cost
+    /// model installed, or its fit for this model's groups failed the
+    /// R² gate).
+    pub fn choose(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+        workers: usize,
+    ) -> Option<PlanDecision<'_>> {
+        if let Some(tuned) = self.lookup(model, planes, rows, cols, kernel_width) {
+            return Some(PlanDecision::Swept(tuned));
+        }
+        let cm = self.cost_model.as_ref()?;
+        cm.choose(model, planes, rows, cols, kernel_width, workers).map(PlanDecision::Predicted)
     }
 
     /// The tuned winner for a configuration, if one was swept.
@@ -246,6 +303,21 @@ impl TuningTable {
 /// size, render the paper-style agglomeration table, and record each
 /// model's winner in `table`.
 pub fn sweep_shape(cfg: &RunConfig, size: usize, table: &mut TuningTable) -> Result<Table> {
+    sweep_shape_sampled(cfg, size, table, &mut Vec::new())
+}
+
+/// [`sweep_shape`], additionally appending one self-describing
+/// [`Sample`] per (model, candidate) measurement to `samples` — the
+/// training set [`CostModel::fit`](crate::costmodel::CostModel::fit)
+/// consumes. Each sample carries the repeats, warmup, and worker count
+/// it was measured under, so persisted sample sets can be audited or
+/// re-fit without the config that produced them.
+pub fn sweep_shape_sampled(
+    cfg: &RunConfig,
+    size: usize,
+    table: &mut TuningTable,
+    samples: &mut Vec<Sample>,
+) -> Result<Table> {
     cfg.validate()?;
     let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
     let kernel = cfg.kernel_spec();
@@ -301,6 +373,21 @@ pub fn sweep_shape(cfg: &RunConfig, size: usize, table: &mut TuningTable) -> Res
                 }
                 None => model.overhead_probe_with(size, cfg.warmup, cfg.reps).median(),
             };
+            samples.push(Sample {
+                model: base.name().to_string(),
+                planes: cfg.planes,
+                rows: size,
+                cols: size,
+                kernel_width: cfg.kernel_width,
+                tile: cand.tile,
+                fused: cand.fused,
+                agglomeration: cand.agglomeration,
+                units: dispatch_units(size, size, cand.tile, model.workers()),
+                workers: model.workers(),
+                ms,
+                reps: cfg.reps,
+                warmup: cfg.warmup,
+            });
             measured.push((cand, ms, overhead));
         }
         // baseline is always index 0 (untiled); winner = min total ms
@@ -408,5 +495,121 @@ mod tests {
     fn sweep_rejects_invalid_config() {
         let cfg = RunConfig { kernel_width: 4, ..tiny_cfg() };
         assert!(sweep_shape(&cfg, 40, &mut TuningTable::new()).is_err());
+    }
+
+    #[test]
+    fn sweep_samples_are_self_describing() {
+        let cfg = tiny_cfg();
+        let mut table = TuningTable::new();
+        let mut samples = Vec::new();
+        let rendered = sweep_shape_sampled(&cfg, 40, &mut table, &mut samples).unwrap();
+        assert_eq!(samples.len(), rendered.n_rows(), "one sample per measured row");
+        for s in &samples {
+            assert!(
+                matches!(s.model.as_str(), "OpenMP" | "OpenCL" | "GPRM"),
+                "unknown model {:?}",
+                s.model
+            );
+            assert_eq!((s.planes, s.rows, s.cols), (cfg.planes, 40, 40));
+            assert_eq!(s.kernel_width, cfg.kernel_width);
+            assert_eq!(s.reps, cfg.reps, "samples carry the repeats they were measured under");
+            assert_eq!(s.warmup, cfg.warmup, "samples carry the warmup they were measured under");
+            assert_eq!(s.workers, cfg.threads);
+            assert!(s.units >= 1);
+            assert!(s.ms.is_finite() && s.ms >= 0.0);
+            if s.tile.is_none() {
+                assert_eq!(s.units, s.workers.max(1), "untiled units = one band per worker");
+            }
+        }
+        // the untiled baseline sample exists for every model
+        for model in ["OpenMP", "OpenCL", "GPRM"] {
+            assert!(samples.iter().any(|s| s.model == model && s.tile.is_none() && !s.fused));
+        }
+    }
+
+    #[test]
+    fn bench_env_warmup_matches_probe_warmup() {
+        // `PHI_BENCH_WARMUP` must mean the same thing to the sweep's
+        // timed runs (cfg.warmup) and to the overhead probes — both
+        // funnel through `models::overhead_warmup()`. No env mutation
+        // here: both sides read the same live environment.
+        assert_eq!(RunConfig::from_bench_env().warmup, crate::models::overhead_warmup());
+    }
+
+    /// Noise-free linear samples for one model so choose() has a fitted
+    /// predictive tier: fused+tiled is constructed 4x cheaper than the
+    /// untiled baseline.
+    fn synthetic_samples(model: &str) -> Vec<Sample> {
+        let mut out = Vec::new();
+        let tiles = [None, Some(TileSpec::new(16, usize::MAX)), Some(TileSpec::new(32, 32))];
+        for (rows, cols) in [(64, 64), (80, 96), (96, 128), (128, 128), (160, 96), (192, 192)] {
+            for width in [3usize, 5, 7] {
+                for tile in tiles {
+                    for fused in [false, true] {
+                        let units = dispatch_units(rows, cols, tile, 4);
+                        let pixels = (3 * rows * cols) as f64;
+                        let base = 0.2 + 1.5e-6 * pixels + 2.0e-7 * pixels * width as f64
+                            + 1e-3 * units as f64;
+                        let mult = match (fused, tile.is_some()) {
+                            (false, false) => 4.0,
+                            (true, false) => 3.0,
+                            (false, true) => 2.0,
+                            (true, true) => 1.0,
+                        };
+                        out.push(Sample {
+                            model: model.to_string(),
+                            planes: 3,
+                            rows,
+                            cols,
+                            kernel_width: width,
+                            tile,
+                            fused,
+                            agglomeration: 1,
+                            units,
+                            workers: 4,
+                            ms: base * mult,
+                            reps: 3,
+                            warmup: 1,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn choose_tiers_swept_then_predicted_then_sweep_fallback() {
+        let mut table = TuningTable::new();
+        // tier 3: nothing installed → None → caller sweeps
+        assert!(table.choose("OpenMP", 3, 100, 100, 5, 4).is_none());
+
+        // tier 2: cost model predicts for the lookup miss
+        table.set_cost_model(CostModel::fit(synthetic_samples("OpenMP"), 0.8));
+        assert!(table.cost_model().is_some());
+        match table.choose("OpenMP", 3, 100, 100, 5, 4) {
+            Some(PlanDecision::Predicted(p)) => {
+                assert!(p.candidate.fused && p.candidate.tile.is_some());
+                assert!(p.ms <= p.baseline_ms);
+            }
+            other => panic!("expected Predicted, got {other:?}"),
+        }
+        // a model the fit never saw still falls back to sweeping
+        assert!(table.choose("GPRM", 3, 100, 100, 5, 4).is_none());
+
+        // tier 1: an exact swept entry takes precedence over prediction
+        let key = TuneKey {
+            model: "OpenMP".into(),
+            planes: 3,
+            rows: 100,
+            cols: 100,
+            kernel_width: 5,
+        };
+        let tuned = Tuned { candidate: Candidate::untiled(), ms: 9.0, baseline_ms: 9.0 };
+        table.record(key, tuned);
+        match table.choose("OpenMP", 3, 100, 100, 5, 4) {
+            Some(PlanDecision::Swept(t)) => assert_eq!(t.candidate, Candidate::untiled()),
+            other => panic!("expected Swept, got {other:?}"),
+        }
     }
 }

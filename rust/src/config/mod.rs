@@ -68,6 +68,11 @@ pub struct RunConfig {
     /// only) so a shard's plan cache and scratch arena stay near one
     /// core's cache. Off by default: a hint, never a requirement.
     pub pin_cores: bool,
+    /// Cost-model R² acceptance threshold in [0, 1]: a fitted
+    /// per-(model, fused, tiled) group whose R² falls below this is
+    /// never used for prediction — the planner falls back to empirical
+    /// sweeping / configured defaults instead.
+    pub r2_min: f64,
 }
 
 impl Default for RunConfig {
@@ -93,6 +98,7 @@ impl Default for RunConfig {
             batch_max: 1,
             batch_wait_us: 0,
             pin_cores: false,
+            r2_min: 0.8,
         }
     }
 }
@@ -155,6 +161,7 @@ impl RunConfig {
             self.batch_wait_us = n as u64;
         }
         self.pin_cores = doc.bool_or("run.pin_cores", self.pin_cores);
+        self.r2_min = doc.f64_or("run.r2_min", self.r2_min);
         Ok(())
     }
 
@@ -205,6 +212,11 @@ impl RunConfig {
                 self.sigma = s.parse()?;
             }
         }
+        if let Some(s) = cli.get("r2-min") {
+            if !s.is_empty() {
+                self.r2_min = s.parse()?;
+            }
+        }
         if let Some(p) = cli.get("pattern") {
             if !p.is_empty() {
                 self.pattern =
@@ -250,6 +262,11 @@ impl RunConfig {
         ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
         ensure!(self.agglomeration >= 1, "agglomeration must be >= 1");
         ensure!(self.batch_max >= 1, "batch_max must be >= 1");
+        ensure!(
+            (0.0..=1.0).contains(&self.r2_min),
+            "r2_min must be in [0, 1], got {}",
+            self.r2_min
+        );
         Ok(())
     }
 
@@ -317,6 +334,7 @@ pub fn standard_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("batch-max", "", "max jobs coalesced per plan-keyed batch (default 1 = serve singly)")
         .opt("batch-wait-us", "", "straggler wait in microseconds before closing a short batch (default 0)")
         .flag("pin-cores", "pin executor threads to cores (best-effort, Linux/x86-64)")
+        .opt("r2-min", "", "cost-model R² acceptance threshold in [0,1] (default 0.8)")
 }
 
 #[cfg(test)]
@@ -525,6 +543,33 @@ mod tests {
             let mut c = RunConfig::default();
             let doc = TomlDoc::parse(&format!("[run]\n{bad}\n")).unwrap();
             assert!(c.apply_toml(&doc).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn r2_min_plumbs_through_cli_and_toml() {
+        assert!((RunConfig::default().r2_min - 0.8).abs() < 1e-12, "default gate is 0.8");
+
+        let mut c = RunConfig::default();
+        let doc = TomlDoc::parse("[run]\nr2_min = 0.95\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!((c.r2_min - 0.95).abs() < 1e-12);
+
+        let cli = standard_cli("t", "t")
+            .parse(["--r2-min".to_string(), "0.5".to_string()])
+            .unwrap();
+        let c = RunConfig::resolve(&cli).unwrap();
+        assert!((c.r2_min - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_r2_min_is_structured_error() {
+        for bad in ["1.5", "-0.1"] {
+            let cli = standard_cli("t", "t")
+                .parse(["--r2-min".to_string(), bad.to_string()])
+                .unwrap();
+            let e = RunConfig::resolve(&cli).unwrap_err();
+            assert!(format!("{e:#}").contains("r2_min"), "{bad}: got {e:#}");
         }
     }
 

@@ -20,6 +20,13 @@
 //! ("in terms of performance, OpenMP is the winning model, except for
 //! very large images where GPRM shows better performance after using
 //! task agglomeration").
+//!
+//! With a tuning tier installed (`Coordinator::set_tuning`), admission
+//! additionally resolves tile/fusion for requests that pin neither:
+//! exact swept winners first, then the fitted cost model's prediction
+//! for never-before-seen shapes ([`crate::costmodel`]) — zero warm-up
+//! sweeps — with `CoordinatorStats` counters distinguishing predicted,
+//! swept, and default decisions.
 
 mod affinity;
 pub mod queue;

@@ -24,12 +24,16 @@ pub struct ConvRequest {
     /// may carry its own Gaussian spec; executors cache one plan per
     /// distinct `(algorithm, variant, layout, shape, kernel)` key.
     pub kernel: Option<KernelSpec>,
-    /// `None` → the coordinator's configured tile decomposition (untiled
-    /// row bands unless `--tile-rows`/`--tile-cols` were set). A request
-    /// may carry its own tile; executors cache one plan per distinct
+    /// `None` → the coordinator's tuning tier (swept winner or
+    /// cost-model prediction, when installed via
+    /// `Coordinator::set_tuning`) and otherwise its configured tile
+    /// decomposition (untiled row bands unless
+    /// `--tile-rows`/`--tile-cols` were set). A request may carry its
+    /// own tile; executors cache one plan per distinct
     /// `(algorithm, variant, layout, shape, kernel, tile, fuse)` key.
     pub tile: Option<TileSpec>,
-    /// `None` → the coordinator's configured default (`--fuse`).
+    /// `None` → the coordinator's tuning tier (see `tile` above) and
+    /// otherwise its configured default (`--fuse`).
     /// Fusion only applies to two-pass requests; for single-pass
     /// algorithms it is silently inapplicable rather than an error, so
     /// a `--fuse` serving default never refuses single-pass traffic.

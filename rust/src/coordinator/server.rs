@@ -45,11 +45,12 @@ use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Error, ErrorKind, Result};
 
+use crate::autotune::{PlanDecision, TuningTable};
 use crate::config::RunConfig;
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::metrics::SampleSet;
-use crate::models::{GprmModel, Layout, OpenClModel, OpenMpModel};
+use crate::models::{ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel};
 use crate::plan::{ConvPlan, KernelSpec, ScratchArena, TileSpec};
 use crate::runtime::{Manifest, PjrtHandle};
 
@@ -108,6 +109,15 @@ pub struct CoordinatorStats {
     /// executed batch sizes, one sample per coalesced dispatch (all 1.0
     /// until `--batch-max` is raised)
     pub batch_sizes: SampleSet,
+    /// tile/fusion decisions taken from the cost model's prediction for
+    /// a never-swept shape (tuning tier installed via `set_tuning`)
+    pub plans_predicted: u64,
+    /// tile/fusion decisions taken from an exact swept tuning entry
+    pub plans_swept: u64,
+    /// tuning tier consulted but declined (no usable fit — low R² —
+    /// for this shape's groups): config defaults applied, i.e. the
+    /// empirical-sweep fallback path
+    pub plans_default: u64,
 }
 
 impl CoordinatorStats {
@@ -129,6 +139,9 @@ impl CoordinatorStats {
         self.depth_peak = self.depth_peak.max(other.depth_peak);
         self.plans_built += other.plans_built;
         self.batch_sizes.extend_from(&other.batch_sizes);
+        self.plans_predicted += other.plans_predicted;
+        self.plans_swept += other.plans_swept;
+        self.plans_default += other.plans_default;
     }
 }
 
@@ -265,6 +278,15 @@ pub struct Coordinator {
     /// the same warm plan cache and arena)
     queues: Vec<Arc<AdmissionQueue<Job>>>,
     executors: Vec<std::thread::JoinHandle<()>>,
+    /// optional tuning tier (swept winners + cost-model predictions)
+    /// consulted at admission for requests that pin neither tile nor
+    /// fusion; installed with [`Coordinator::set_tuning`]
+    tuning: Option<TuningTable>,
+    /// admission-side decision counters (the submit path is `&self`
+    /// from many threads, so these are atomics, not shard tallies)
+    plans_predicted: AtomicU64,
+    plans_swept: AtomicU64,
+    plans_default: AtomicU64,
 }
 
 impl Coordinator {
@@ -348,7 +370,29 @@ impl Coordinator {
                 }
             }
         }
-        Ok(Self { inner, queues, executors: handles })
+        Ok(Self {
+            inner,
+            queues,
+            executors: handles,
+            tuning: None,
+            plans_predicted: AtomicU64::new(0),
+            plans_swept: AtomicU64::new(0),
+            plans_default: AtomicU64::new(0),
+        })
+    }
+
+    /// Install the tuning tier (swept winners plus an optional fitted
+    /// cost model) consulted at admission for native two-pass SIMD
+    /// requests that pin neither tile nor fusion. With this installed,
+    /// a never-before-seen shape gets a tiled/fused plan from the cost
+    /// model's prediction with zero warm-up sweeps — the serving path
+    /// has no sweep entry point at all.
+    pub fn set_tuning(&mut self, tuning: TuningTable) {
+        self.tuning = Some(tuning);
+    }
+
+    pub fn tuning(&self) -> Option<&TuningTable> {
+        self.tuning.as_ref()
     }
 
     /// The request's effective admission deadline: its own TTL, or the
@@ -372,11 +416,6 @@ impl Coordinator {
     fn job(&self, req: ConvRequest, deadline: Option<Instant>) -> (Job, ReplyReceiver) {
         let inner = &self.inner;
         let kernel = req.kernel.unwrap_or(inner.kernel);
-        let tile = req.tile.or(inner.tile);
-        // fusion only applies to the two-pass algorithm; a fused serving
-        // default must not refuse single-pass traffic, so it is silently
-        // inapplicable there rather than a build error
-        let fuse = req.fuse.unwrap_or(inner.fuse) && req.algorithm == Algorithm::TwoPass;
         // the round-robin counter advances only when the policy picks
         // the backend: explicitly pinned traffic (PJRT included) must
         // not consume native cycle slots, or the rotation silently skips
@@ -397,6 +436,23 @@ impl Coordinator {
             backend = b;
             layout = l;
         }
+        // Tile/fusion resolve after the backend so the tuning tier can
+        // key on the resolved execution model. Precedence: a request's
+        // explicit tile/fuse always wins; then a swept or predicted
+        // tuning decision; then the configured defaults.
+        let tuned = if req.tile.is_none() && req.fuse.is_none() {
+            self.tuned_decision(&req, backend, &kernel)
+        } else {
+            None
+        };
+        let (tile, fuse) = match tuned {
+            Some(decision) => decision,
+            None => (req.tile.or(inner.tile), req.fuse.unwrap_or(inner.fuse)),
+        };
+        // fusion only applies to the two-pass algorithm; a fused serving
+        // default must not refuse single-pass traffic, so it is silently
+        // inapplicable there rather than a build error
+        let fuse = fuse && req.algorithm == Algorithm::TwoPass;
         let key = PlanKey {
             algorithm: req.algorithm,
             variant: req.variant,
@@ -423,6 +479,58 @@ impl Coordinator {
             reply,
         };
         (job, rx)
+    }
+
+    /// Consult the tuning tier for a request that pinned neither tile
+    /// nor fusion. Only native two-pass SIMD traffic is tuned — that is
+    /// what the sweeps and the cost model measure; PJRT executes fixed
+    /// artifacts and other algorithm/variant mixes keep the configured
+    /// defaults without touching the counters. A swept candidate's GPRM
+    /// agglomeration factor is a model-level knob (the serving pool is
+    /// built once from config), so only its tile and fusion apply here.
+    /// Returns the (tile, fuse) to build with, or `None` to fall
+    /// through to the config defaults.
+    fn tuned_decision(
+        &self,
+        req: &ConvRequest,
+        backend: Backend,
+        kernel: &KernelSpec,
+    ) -> Option<(Option<TileSpec>, bool)> {
+        let table = self.tuning.as_ref()?;
+        if backend == Backend::Pjrt
+            || req.algorithm != Algorithm::TwoPass
+            || req.variant != Variant::Simd
+        {
+            return None;
+        }
+        let inner = &self.inner;
+        let (name, workers) = match backend {
+            Backend::NativeOpenMp => (inner.openmp.name(), inner.openmp.workers()),
+            Backend::NativeOpenCl => (inner.opencl.name(), inner.opencl.workers()),
+            Backend::NativeGprm => (inner.gprm.name(), inner.gprm.workers()),
+            Backend::Pjrt => return None,
+        };
+        match table.choose(
+            name,
+            req.image.planes,
+            req.image.rows,
+            req.image.cols,
+            kernel.width,
+            workers,
+        ) {
+            Some(PlanDecision::Swept(t)) => {
+                self.plans_swept.fetch_add(1, Ordering::Relaxed);
+                Some((t.candidate.tile, t.candidate.fused))
+            }
+            Some(PlanDecision::Predicted(p)) => {
+                self.plans_predicted.fetch_add(1, Ordering::Relaxed);
+                Some((p.candidate.tile, p.candidate.fused))
+            }
+            None => {
+                self.plans_default.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
     /// The intake shard a plan key's traffic lands on. The backend is
@@ -503,6 +611,11 @@ impl Coordinator {
             total.depth += c.depth;
             total.depth_peak = total.depth_peak.max(c.depth_peak);
         }
+        // admission-side decision counters live on the coordinator, not
+        // in the executor shards (decisions happen at submit)
+        total.plans_predicted += self.plans_predicted.load(Ordering::Relaxed);
+        total.plans_swept += self.plans_swept.load(Ordering::Relaxed);
+        total.plans_default += self.plans_default.load(Ordering::Relaxed);
         total
     }
 
@@ -1107,6 +1220,145 @@ mod tests {
         assert_eq!(c.stats().pjrt_fallbacks, 1);
     }
 
+    /// Noise-free linear training samples for one execution model, with
+    /// fused+tiled constructed 4x cheaper than the untiled baseline so
+    /// the predictive tier has a decisive winner.
+    fn synthetic_samples(model: &str, workers: usize) -> Vec<crate::costmodel::Sample> {
+        use crate::costmodel::{dispatch_units, Sample};
+        let mut out = Vec::new();
+        let tiles = [None, Some(TileSpec::new(16, usize::MAX)), Some(TileSpec::new(32, 32))];
+        for (rows, cols) in [(64, 64), (80, 96), (96, 128), (128, 128), (160, 96), (192, 192)] {
+            for width in [3usize, 5, 7] {
+                for tile in tiles {
+                    for fused in [false, true] {
+                        let units = dispatch_units(rows, cols, tile, workers);
+                        let pixels = (3 * rows * cols) as f64;
+                        let base = 0.2 + 1.5e-6 * pixels + 2.0e-7 * pixels * width as f64
+                            + 1e-3 * units as f64;
+                        let mult = match (fused, tile.is_some()) {
+                            (false, false) => 4.0,
+                            (true, false) => 3.0,
+                            (false, true) => 2.0,
+                            (true, true) => 1.0,
+                        };
+                        out.push(Sample {
+                            model: model.to_string(),
+                            planes: 3,
+                            rows,
+                            cols,
+                            kernel_width: width,
+                            tile,
+                            fused,
+                            agglomeration: 1,
+                            units,
+                            workers,
+                            ms: base * mult,
+                            reps: 3,
+                            warmup: 1,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn predicted_decision_serves_unseen_shape_without_sweep() {
+        use crate::costmodel::CostModel;
+        let mut c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let mut table = TuningTable::new();
+        table.set_cost_model(CostModel::fit(synthetic_samples("OpenMP", 4), 0.8));
+        c.set_tuning(table);
+        // 3x100x100 w5 appears in no swept entry and no training row;
+        // the cost model must hand admission a fused+tiled plan. The
+        // serving path has no sweep entry point at all, so the predicted
+        // counter incrementing (and swept/default staying zero) *is* the
+        // no-sweep guarantee.
+        let decision = c.tuning().unwrap().choose("OpenMP", 3, 100, 100, 5, 4);
+        match decision {
+            Some(PlanDecision::Predicted(p)) => {
+                assert!(p.candidate.fused && p.candidate.tile.is_some(), "{:?}", p.candidate);
+                assert!(p.ms <= p.baseline_ms);
+            }
+            other => panic!("expected a prediction, got {other:?}"),
+        }
+        let img = synth_image(3, 100, 100, Pattern::Noise, 99);
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert!(
+            resp.image.max_abs_diff(&want) <= 1e-6,
+            "predicted fused+tiled plan matches the oracle"
+        );
+        let st = c.stats();
+        assert_eq!(st.plans_predicted, 1, "exactly one predicted decision");
+        assert_eq!((st.plans_swept, st.plans_default), (0, 0));
+        assert_eq!(st.plans_built, 1, "one plan, built once, no sweep");
+        assert_eq!((st.served, st.errors), (1, 0));
+    }
+
+    #[test]
+    fn swept_entry_takes_precedence_over_prediction() {
+        use crate::autotune::{Candidate, TuneKey, Tuned};
+        use crate::costmodel::CostModel;
+        let mut c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let mut table = TuningTable::new();
+        table.set_cost_model(CostModel::fit(synthetic_samples("OpenMP", 4), 0.8));
+        table.record(
+            TuneKey { model: "OpenMP".into(), planes: 3, rows: 40, cols: 40, kernel_width: 5 },
+            Tuned { candidate: Candidate::untiled(), ms: 1.0, baseline_ms: 1.0 },
+        );
+        c.set_tuning(table);
+        let img = synth_image(3, 40, 40, Pattern::Noise, 41);
+        assert!(c.serve(ConvRequest::new(1, img)).is_ok());
+        let st = c.stats();
+        assert_eq!(st.plans_swept, 1, "the exact swept winner was used");
+        assert_eq!((st.plans_predicted, st.plans_default), (0, 0));
+    }
+
+    #[test]
+    fn unusable_tuning_falls_back_to_defaults_and_counts() {
+        // a tuning tier with no cost model (or a low-R² one) declines:
+        // config defaults apply and plans_default records the fallback
+        let mut c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        c.set_tuning(TuningTable::new());
+        let img = synth_image(3, 24, 24, Pattern::Noise, 42);
+        let k = crate::image::gaussian_kernel(5, 1.0);
+        let want = convolve_image(img.clone(), &k, Algorithm::TwoPass, Variant::Simd).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img)).unwrap();
+        assert_eq!(resp.image, want, "default untiled path unchanged");
+        let st = c.stats();
+        assert_eq!(st.plans_default, 1);
+        assert_eq!((st.plans_predicted, st.plans_swept), (0, 0));
+    }
+
+    #[test]
+    fn explicit_tile_or_fuse_bypasses_tuning_counters() {
+        use crate::costmodel::CostModel;
+        let mut c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let mut table = TuningTable::new();
+        table.set_cost_model(CostModel::fit(synthetic_samples("OpenMP", 4), 0.8));
+        c.set_tuning(table);
+        let img = synth_image(3, 100, 100, Pattern::Noise, 43);
+        // a request that pins its own tile (or fusion) is never second-
+        // guessed by the tuning tier
+        assert!(c
+            .serve(ConvRequest::new(1, img.clone()).with_tile(TileSpec::new(8, 8)))
+            .is_ok());
+        assert!(c.serve(ConvRequest::new(2, img).with_fuse(false)).is_ok());
+        let st = c.stats();
+        assert_eq!(
+            (st.plans_predicted, st.plans_swept, st.plans_default),
+            (0, 0, 0),
+            "explicit requests never touch the decision counters"
+        );
+    }
+
     #[test]
     fn stats_merge_folds_shards() {
         let mut a = CoordinatorStats { served: 3, errors: 1, ..Default::default() };
@@ -1118,6 +1370,10 @@ mod tests {
         b.service_ms.entry("gprm").or_default().push(5.0);
         b.plans_built = 2;
         b.batch_sizes.push(3.0);
+        b.plans_predicted = 3;
+        b.plans_swept = 2;
+        b.plans_default = 1;
+        a.plans_predicted = 1;
         a.merge(&b);
         assert_eq!((a.served, a.errors, a.pjrt_fallbacks), (5, 1, 4));
         assert_eq!(a.queue_ms.len(), 2);
@@ -1125,6 +1381,7 @@ mod tests {
         assert_eq!(a.service_ms["gprm"].len(), 1);
         assert_eq!(a.plans_built, 2);
         assert_eq!(a.batch_sizes.len(), 1);
+        assert_eq!((a.plans_predicted, a.plans_swept, a.plans_default), (4, 2, 1));
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! In-tree least-squares regression core for the cost model.
+//!
+//! Fits `predicted_ms = c0 + c1·pixels + c2·width + c3·pixels·width +
+//! c4·units` by normal equations — four features plus an intercept is
+//! well inside the regime where that is numerically fine *provided* the
+//! design is not rank-deficient. Real tune data is rank-deficient all
+//! the time (one tune run holds the kernel width constant, so the width
+//! column is collinear with the intercept and pixels·width with pixels),
+//! so [`fit`] prunes dependent columns by greedy Gram–Schmidt before
+//! solving and reports the dropped columns as exact-zero coefficients.
+//! Degenerate designs never panic: they come back as `None` (too few
+//! samples for the surviving columns, singular system) or as a model
+//! whose R² fails [`LinearModel::usable`] (zero-variance targets → NaN
+//! R²), and every `None`/unusable outcome routes the caller back to
+//! empirical sweeping.
+
+/// Number of regression features (the intercept is implicit and comes
+/// first in [`LinearModel::coeffs`]).
+pub const NFEATURES: usize = 4;
+
+/// Feature names, in the exact order of the feature vector. Persisted
+/// artifacts embed this list so a loader can reject files written for a
+/// different feature layout.
+pub const FEATURE_NAMES: [&str; NFEATURES] = ["pixels", "width", "pixels_width", "units"];
+
+/// A fitted linear model for one (model, fused, tiled) sample group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearModel {
+    /// `NFEATURES + 1` coefficients, intercept first. Columns pruned as
+    /// linearly dependent during fitting hold exactly `0.0`.
+    pub coeffs: Vec<f64>,
+    /// Coefficient of determination on the training set. `NaN` when the
+    /// targets had zero variance (all-identical samples) — NaN fails
+    /// every `>=` comparison, so such a model is never usable, and it
+    /// serializes as JSON `null`, which the loader maps back to an
+    /// invalid model rather than to zero.
+    pub r2: f64,
+    /// Number of training samples.
+    pub n: usize,
+}
+
+impl LinearModel {
+    /// Predicted milliseconds for a feature vector. Fixed evaluation
+    /// order (intercept, then features in declaration order) so a
+    /// saved-then-loaded model reproduces in-memory predictions
+    /// bitwise.
+    pub fn predict(&self, feats: &[f64; NFEATURES]) -> f64 {
+        let mut ms = self.coeffs[0];
+        for (i, f) in feats.iter().enumerate() {
+            ms += self.coeffs[i + 1] * f;
+        }
+        ms
+    }
+
+    /// Whether the fit is trustworthy at an acceptance threshold.
+    /// NaN R² (degenerate fit, or a `null` in a loaded artifact) is
+    /// never usable.
+    pub fn usable(&self, r2_min: f64) -> bool {
+        self.r2.is_finite() && self.r2 >= r2_min
+    }
+}
+
+/// Least-squares fit of `ys` against the feature rows `xs`.
+///
+/// Returns `None` — the structured "fall back to sweeping" signal —
+/// when the design cannot support a fit at all: mismatched or empty
+/// input, fewer samples than surviving columns + 2, a singular system,
+/// or non-finite fitted coefficients. Rank deficiency short of that is
+/// handled by pruning: columns are max-abs scaled, then admitted in
+/// order (intercept, then features) only if their residual after
+/// projecting onto the already-kept columns exceeds `1e-6` of their own
+/// norm; pruned columns get coefficient exactly `0.0`.
+pub fn fit(xs: &[[f64; NFEATURES]], ys: &[f64]) -> Option<LinearModel> {
+    let n = xs.len();
+    if n == 0 || ys.len() != n {
+        return None;
+    }
+    if xs.iter().flatten().any(|v| !v.is_finite()) || ys.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+
+    // Design matrix columns: intercept first, then the features.
+    let ncols = NFEATURES + 1;
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(ncols);
+    cols.push(vec![1.0; n]);
+    for j in 0..NFEATURES {
+        cols.push(xs.iter().map(|row| row[j]).collect());
+    }
+
+    // Max-abs scaling keeps the Gram matrix conditioned despite feature
+    // magnitudes spanning ~1 (width) to ~1e7 (pixels·width).
+    let mut scale = vec![0.0f64; ncols];
+    for (j, col) in cols.iter_mut().enumerate() {
+        let m = col.iter().fold(0.0f64, |acc, v| acc.max(v.abs()));
+        scale[j] = m;
+        if m > 0.0 {
+            for v in col.iter_mut() {
+                *v /= m;
+            }
+        }
+    }
+
+    // Greedy Gram–Schmidt column pruning: keep a column only if it adds
+    // direction beyond the columns already kept. A constant feature
+    // folds into the intercept; pixels·width under constant width folds
+    // into pixels; an all-zero column never survives scaling.
+    const PRUNE_REL: f64 = 1e-6;
+    let mut kept: Vec<usize> = Vec::with_capacity(ncols);
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(ncols);
+    for (j, col) in cols.iter().enumerate() {
+        if scale[j] == 0.0 {
+            continue;
+        }
+        let norm0 = dot(col, col).sqrt();
+        if norm0 == 0.0 {
+            continue;
+        }
+        let mut resid = col.clone();
+        for q in &basis {
+            let proj = dot(&resid, q);
+            for (r, qv) in resid.iter_mut().zip(q) {
+                *r -= proj * qv;
+            }
+        }
+        let rnorm = dot(&resid, &resid).sqrt();
+        if rnorm <= PRUNE_REL * norm0 {
+            continue;
+        }
+        for v in resid.iter_mut() {
+            *v /= rnorm;
+        }
+        basis.push(resid);
+        kept.push(j);
+    }
+    let k = kept.len();
+    // Require a little slack beyond exact interpolation; an exactly- or
+    // under-determined system has no error structure to trust.
+    if k == 0 || n < k + 2 {
+        return None;
+    }
+
+    // Normal equations on the kept, scaled columns.
+    let mut a = vec![vec![0.0f64; k]; k];
+    let mut b = vec![0.0f64; k];
+    for (ri, &ci) in kept.iter().enumerate() {
+        for (rj, &cj) in kept.iter().enumerate() {
+            a[ri][rj] = dot(&cols[ci], &cols[cj]);
+        }
+        b[ri] = dot(&cols[ci], ys);
+    }
+    let solved = solve(&mut a, &mut b)?;
+
+    // Unscale back to raw-feature coefficients; pruned columns are
+    // exactly zero.
+    let mut coeffs = vec![0.0f64; ncols];
+    for (ri, &ci) in kept.iter().enumerate() {
+        coeffs[ci] = solved[ri] / scale[ci];
+    }
+    if coeffs.iter().any(|c| !c.is_finite()) {
+        return None;
+    }
+
+    // R² on the training set, computed from the raw features in the
+    // same order predict() uses.
+    let mean = ys.iter().sum::<f64>() / n as f64;
+    let mut ss_res = 0.0f64;
+    let mut ss_tot = 0.0f64;
+    let model = LinearModel { coeffs, r2: f64::NAN, n };
+    for (row, &y) in xs.iter().zip(ys) {
+        let e = y - model.predict(row);
+        ss_res += e * e;
+        let d = y - mean;
+        ss_tot += d * d;
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { f64::NAN };
+    Some(LinearModel { r2, ..model })
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Gaussian elimination with partial pivoting; `None` on a (near-)
+/// singular pivot. Column pruning should prevent that, but measured
+/// noise can still produce pathological Gram matrices.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let k = b.len();
+    for col in 0..k {
+        let pivot = (col..k)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .expect("non-empty pivot range");
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..k {
+            let f = a[row][col] / a[col][col];
+            for c in col..k {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; k];
+    for col in (0..k).rev() {
+        let mut v = b[col];
+        for c in col + 1..k {
+            v -= a[col][c] * x[c];
+        }
+        x[col] = v / a[col][col];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth(c: [f64; NFEATURES + 1], f: &[f64; NFEATURES]) -> f64 {
+        c[0] + c[1] * f[0] + c[2] * f[1] + c[3] * f[2] + c[4] * f[3]
+    }
+
+    fn grid() -> Vec<[f64; NFEATURES]> {
+        let mut xs = Vec::new();
+        for s in [64.0f64, 96.0, 128.0, 192.0] {
+            for w in [3.0f64, 5.0, 7.0] {
+                for units in [4.0f64, 16.0, 64.0] {
+                    let pixels = 3.0 * s * s;
+                    xs.push([pixels, w, pixels * w, units]);
+                }
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn recovers_known_coefficients() {
+        let c = [0.4, 2.5e-6, 0.02, 3.0e-7, 0.005];
+        let xs = grid();
+        let ys: Vec<f64> = xs.iter().map(|f| truth(c, f)).collect();
+        let m = fit(&xs, &ys).expect("full-rank design fits");
+        assert!(m.r2 > 0.999999, "noise-free fit: r2 = {}", m.r2);
+        assert!(m.usable(0.8));
+        assert_eq!(m.n, xs.len());
+        for (got, want) in m.coeffs.iter().zip(&c) {
+            assert!(
+                (got - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "coefficient {got} vs {want}"
+            );
+        }
+        let probe = [3.0 * 100.0 * 100.0, 5.0, 3.0 * 100.0 * 100.0 * 5.0, 8.0];
+        let err = (m.predict(&probe) - truth(c, &probe)).abs();
+        assert!(err <= 1e-6 * truth(c, &probe), "held-out prediction error {err}");
+    }
+
+    #[test]
+    fn constant_width_folds_into_intercept_and_pixels() {
+        // One tune run: width fixed at 5 → width collinear with the
+        // intercept, pixels·width exactly collinear with pixels. Naive
+        // normal equations are singular here; pruning must absorb both
+        // into the kept columns and still predict perfectly at width 5.
+        let c = [0.4, 2.5e-6, 0.02, 3.0e-7, 0.005];
+        let xs: Vec<[f64; NFEATURES]> = grid().into_iter().filter(|f| f[1] == 5.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|f| truth(c, f)).collect();
+        let m = fit(&xs, &ys).expect("rank-deficient design still fits after pruning");
+        assert!(m.r2 > 0.999999, "r2 = {}", m.r2);
+        assert_eq!(m.coeffs[2], 0.0, "width column pruned to exact zero");
+        assert_eq!(m.coeffs[3], 0.0, "pixels·width column pruned to exact zero");
+        for f in &xs {
+            let err = (m.predict(f) - truth(c, f)).abs();
+            assert!(err <= 1e-6 * truth(c, f), "in-slice prediction error {err}");
+        }
+    }
+
+    #[test]
+    fn fewer_samples_than_columns_is_structured_none() {
+        let c = [0.4, 2.5e-6, 0.02, 3.0e-7, 0.005];
+        let xs: Vec<[f64; NFEATURES]> = grid().into_iter().take(4).collect();
+        let ys: Vec<f64> = xs.iter().map(|f| truth(c, f)).collect();
+        assert!(fit(&xs, &ys).is_none(), "n < kept + 2 must refuse, not panic");
+        assert!(fit(&[], &[]).is_none());
+        assert!(fit(&xs, &ys[..2]).is_none(), "length mismatch refuses");
+    }
+
+    #[test]
+    fn identical_samples_yield_unusable_model_not_panic() {
+        let f = [3.0 * 64.0 * 64.0, 5.0, 3.0 * 64.0 * 64.0 * 5.0, 4.0];
+        let xs = vec![f; 8];
+        let ys = vec![1.25f64; 8];
+        // Every feature column is constant → pruned into the intercept;
+        // zero target variance → NaN R² → unusable at any threshold.
+        let m = fit(&xs, &ys).expect("intercept-only fit succeeds");
+        assert!(m.r2.is_nan(), "zero-variance targets give NaN R²");
+        assert!(!m.usable(0.0));
+        assert!(!m.usable(0.8));
+        assert!((m.predict(&f) - 1.25).abs() < 1e-12, "intercept carries the mean");
+    }
+
+    #[test]
+    fn non_finite_inputs_refused() {
+        let xs = grid();
+        let mut ys: Vec<f64> = xs.iter().map(|f| truth([0.4, 1e-6, 0.0, 0.0, 0.0], f)).collect();
+        ys[3] = f64::NAN;
+        assert!(fit(&xs, &ys).is_none());
+        let mut xs2 = xs.clone();
+        xs2[0][0] = f64::INFINITY;
+        let ys2 = vec![1.0; xs2.len()];
+        assert!(fit(&xs2, &ys2).is_none());
+    }
+}

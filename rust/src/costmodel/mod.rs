@@ -1,0 +1,728 @@
+//! Learned cost model: regression-fit plan selection with persistent
+//! tuning artifacts.
+//!
+//! `autotune` rediscovers the paper's central result — that granularity
+//! and fusion choice dominate performance — by brute-force sweeping, and
+//! forgets everything at process exit. This module makes that knowledge
+//! cheap and durable, following the vm-cost-model approach (linear
+//! regression over bench samples with R²-gated validity):
+//!
+//! * [`Sample`] — one (model, shape, kernel, candidate) timing
+//!   observation, self-describing (repeats, warmup, worker count ride
+//!   along) so persisted sample sets can be audited and re-fit.
+//! * [`CostModel`] — groups samples by (model, fused, tiled), fits one
+//!   [`fit::LinearModel`] per group (`predicted_ms = c0 + c1·pixels +
+//!   c2·width + c3·pixels·width + c4·units`), and answers
+//!   [`CostModel::choose`]: the predicted-cheapest tile/fusion candidate
+//!   for a *never-before-seen* shape, with the untiled baseline always
+//!   in the comparison set. Groups whose fit fails or whose R² is below
+//!   `r2_min` are unusable; a shape whose baseline group is unusable
+//!   yields `None`, which routes the caller back to empirical sweeping.
+//! * JSON persistence ([`CostModel::save`] / [`CostModel::load`])
+//!   following the `BENCH_*.json` convention (`BENCH_costmodel.json`):
+//!   raw samples and fitted coefficients travel together, and a loaded
+//!   model reproduces the in-memory fit's predictions bitwise because
+//!   coefficients are restored verbatim, never re-fit.
+//!
+//! Consumers: `TuningTable::choose` (predictive tier on lookup miss),
+//! coordinator admission (`Coordinator::set_tuning`), `phi-conv tune
+//! --save/--load/--predict`, and `cargo bench --bench costmodel`.
+
+pub mod fit;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use crate::autotune::{default_candidates, Candidate};
+use crate::config::RunConfig;
+use crate::image::synth_image;
+use crate::metrics::{time_reps, Table};
+use crate::models::{
+    ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileGrid, TileSpec,
+};
+use crate::plan::{ConvPlan, ScratchArena};
+
+pub use fit::{LinearModel, FEATURE_NAMES, NFEATURES};
+
+/// One timing observation from an autotune sweep, self-describing
+/// enough to audit (or re-fit) after a save/load cycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// execution-model name ("OpenMP" / "OpenCL" / "GPRM")
+    pub model: String,
+    pub planes: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub kernel_width: usize,
+    /// `None` = the untiled row-partition baseline.
+    pub tile: Option<TileSpec>,
+    pub fused: bool,
+    /// GPRM tiles-per-task factor (1 elsewhere).
+    pub agglomeration: usize,
+    /// Dispatch units the candidate decomposes into (tile count, or
+    /// worker count for the untiled row partition).
+    pub units: usize,
+    /// Worker threads in the model's pool when measured.
+    pub workers: usize,
+    /// Median total milliseconds.
+    pub ms: f64,
+    /// Timed repetitions behind the median.
+    pub reps: usize,
+    /// Warmup repetitions discarded before timing.
+    pub warmup: usize,
+}
+
+/// Number of dispatch units a candidate decomposition produces: the
+/// tile-grid cardinality, or the worker count for the untiled row
+/// partition (one band per worker).
+pub fn dispatch_units(rows: usize, cols: usize, tile: Option<TileSpec>, workers: usize) -> usize {
+    match tile {
+        Some(t) => TileGrid::new(rows, cols, t).len(),
+        None => workers,
+    }
+    .max(1)
+}
+
+/// The regression feature vector, in [`FEATURE_NAMES`] order.
+pub fn features(
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    kernel_width: usize,
+    units: usize,
+) -> [f64; NFEATURES] {
+    let pixels = (planes * rows * cols) as f64;
+    let width = kernel_width as f64;
+    [pixels, width, pixels * width, units as f64]
+}
+
+/// One fitted (model, fused, tiled) group. `fit: None` is the
+/// structured low-rank/degenerate outcome; a present fit can still be
+/// unusable if its R² misses the acceptance threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupFit {
+    pub model: String,
+    pub fused: bool,
+    pub tiled: bool,
+    pub n_samples: usize,
+    pub fit: Option<LinearModel>,
+}
+
+impl GroupFit {
+    pub fn usable(&self, r2_min: f64) -> bool {
+        self.fit.as_ref().is_some_and(|f| f.usable(r2_min))
+    }
+}
+
+/// The predicted-cheapest execution configuration for a shape, plus the
+/// predicted baseline it was compared against (mirrors
+/// [`crate::autotune::Tuned`] for the measured path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub candidate: Candidate,
+    /// predicted ms of the chosen candidate
+    pub ms: f64,
+    /// predicted ms of the untiled row-partition baseline
+    pub baseline_ms: f64,
+}
+
+/// Fitted cost model over a sample set: per-(model, fused, tiled)
+/// linear models with R²-gated validity and JSON persistence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    r2_min: f64,
+    samples: Vec<Sample>,
+    groups: Vec<GroupFit>,
+}
+
+impl CostModel {
+    /// Fit one linear model per (model, fused, tiled) group. Grouping
+    /// is a `BTreeMap` so group order — and therefore artifact bytes —
+    /// is deterministic.
+    pub fn fit(samples: Vec<Sample>, r2_min: f64) -> Self {
+        let mut grouped: BTreeMap<(String, bool, bool), (Vec<[f64; NFEATURES]>, Vec<f64>)> =
+            BTreeMap::new();
+        for s in &samples {
+            let key = (s.model.clone(), s.fused, s.tile.is_some());
+            let entry = grouped.entry(key).or_default();
+            entry.0.push(features(s.planes, s.rows, s.cols, s.kernel_width, s.units));
+            entry.1.push(s.ms);
+        }
+        let groups = grouped
+            .into_iter()
+            .map(|((model, fused, tiled), (xs, ys))| GroupFit {
+                model,
+                fused,
+                tiled,
+                n_samples: xs.len(),
+                fit: fit::fit(&xs, &ys),
+            })
+            .collect();
+        Self { r2_min, samples, groups }
+    }
+
+    pub fn r2_min(&self) -> f64 {
+        self.r2_min
+    }
+
+    /// Override the acceptance threshold (e.g. with the config's
+    /// `--r2-min` after loading a persisted artifact).
+    pub fn set_r2_min(&mut self, r2_min: f64) {
+        self.r2_min = r2_min;
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    pub fn groups(&self) -> &[GroupFit] {
+        &self.groups
+    }
+
+    /// Number of groups whose fit passes the R² gate.
+    pub fn usable_groups(&self) -> usize {
+        self.groups.iter().filter(|g| g.usable(self.r2_min)).count()
+    }
+
+    fn group(&self, model: &str, fused: bool, tiled: bool) -> Option<&GroupFit> {
+        self.groups
+            .iter()
+            .find(|g| g.model == model && g.fused == fused && g.tiled == tiled)
+    }
+
+    /// Predicted milliseconds for one concrete configuration, or `None`
+    /// when the matching group is missing or fails the R² gate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_ms(
+        &self,
+        model: &str,
+        fused: bool,
+        tile: Option<TileSpec>,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+        workers: usize,
+    ) -> Option<f64> {
+        let g = self.group(model, fused, tile.is_some())?;
+        if !g.usable(self.r2_min) {
+            return None;
+        }
+        let units = dispatch_units(rows, cols, tile, workers);
+        Some(g.fit.as_ref()?.predict(&features(planes, rows, cols, kernel_width, units)))
+    }
+
+    /// The predicted-cheapest candidate for a shape, over the same
+    /// candidate set the empirical sweep uses (baseline always index
+    /// 0). `None` — fall back to sweeping — when the untiled baseline
+    /// group itself is unpredictable; candidates whose group is
+    /// unusable are skipped rather than guessed at. Deterministic:
+    /// candidates are scanned in order with a strict `<`, so ties keep
+    /// the earlier (coarser/baseline-first) candidate.
+    pub fn choose(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+        workers: usize,
+    ) -> Option<Prediction> {
+        let baseline_ms =
+            self.predict_ms(model, false, None, planes, rows, cols, kernel_width, workers)?;
+        let mut best = (Candidate::untiled(), baseline_ms);
+        for cand in default_candidates(rows, model == "GPRM") {
+            let Some(ms) = self.predict_ms(
+                model,
+                cand.fused,
+                cand.tile,
+                planes,
+                rows,
+                cols,
+                kernel_width,
+                workers,
+            ) else {
+                continue;
+            };
+            if ms < best.1 {
+                best = (cand, ms);
+            }
+        }
+        Some(Prediction { candidate: best.0, ms: best.1, baseline_ms })
+    }
+
+    // -- persistence -------------------------------------------------------
+
+    /// Serialize samples + fitted groups following the `BENCH_*.json`
+    /// convention. Tile dimensions persist as integers with `0` meaning
+    /// full extent (`usize::MAX` does not survive the f64 JSON number
+    /// space); `null` tile fields mean untiled. Non-finite R² (and any
+    /// non-finite coefficient) serializes as `null`, which
+    /// [`CostModel::from_json`] maps back to an *invalid* model — never
+    /// to zero.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("costmodel".into()));
+        root.insert("r2_min".into(), Json::Num(self.r2_min));
+        root.insert(
+            "features".into(),
+            Json::Arr(FEATURE_NAMES.iter().map(|n| Json::Str((*n).into())).collect()),
+        );
+        root.insert(
+            "samples".into(),
+            Json::Arr(self.samples.iter().map(sample_to_json).collect()),
+        );
+        root.insert(
+            "models".into(),
+            Json::Arr(self.groups.iter().map(group_to_json).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    /// Rebuild a model from its JSON form. Coefficients are restored
+    /// verbatim — never re-fit — so a saved-then-loaded model predicts
+    /// bitwise-identically to the in-memory fit. Groups whose
+    /// coefficients are `null` (non-finite at save time, or hand-edited)
+    /// come back as `fit: None`; a `null` R² comes back as NaN, which
+    /// fails every usability check.
+    pub fn from_json(v: &Json) -> Result<CostModel> {
+        ensure!(
+            v.get("bench").as_str() == Some("costmodel"),
+            "not a costmodel artifact (bench field is {:?})",
+            v.get("bench")
+        );
+        let feats = v.req_arr("features")?;
+        let names: Vec<&str> = feats.iter().filter_map(|f| f.as_str()).collect();
+        ensure!(
+            names == FEATURE_NAMES,
+            "feature layout mismatch: artifact has {names:?}, this build expects {FEATURE_NAMES:?}"
+        );
+        let r2_min = v.req_f64("r2_min")?;
+        let mut samples = Vec::new();
+        for (i, s) in v.req_arr("samples")?.iter().enumerate() {
+            samples.push(sample_from_json(s).with_context(|| format!("samples[{i}]"))?);
+        }
+        let mut groups = Vec::new();
+        for (i, g) in v.req_arr("models")?.iter().enumerate() {
+            groups.push(group_from_json(g).with_context(|| format!("models[{i}]"))?);
+        }
+        Ok(CostModel { r2_min, samples, groups })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<CostModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v).with_context(|| format!("loading cost model {}", path.display()))
+    }
+
+    /// Render the fit summary as a harness table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Cost model: per-(model, fused, tiled) linear fits over {} samples (R² gate {})",
+                self.samples.len(),
+                self.r2_min
+            ),
+            &["Model", "Fused", "Tiled", "Samples", "R²", "Status"],
+        );
+        for g in &self.groups {
+            let (r2, status) = match &g.fit {
+                Some(f) if f.usable(self.r2_min) => (format!("{:.4}", f.r2), "ok".to_string()),
+                Some(f) if f.r2.is_finite() => {
+                    (format!("{:.4}", f.r2), "fallback: R² below gate".to_string())
+                }
+                Some(_) => ("NaN".to_string(), "fallback: degenerate targets".to_string()),
+                None => ("-".to_string(), "fallback: no fit (rank/samples)".to_string()),
+            };
+            t.row(vec![
+                g.model.clone(),
+                g.fused.to_string(),
+                g.tiled.to_string(),
+                g.n_samples.to_string(),
+                r2,
+                status,
+            ]);
+        }
+        t
+    }
+}
+
+fn tile_dim_to_json(d: usize) -> Json {
+    // usize::MAX means "full extent" and cannot round-trip through the
+    // f64 JSON number space; persist it as 0 (never a valid tile dim).
+    Json::Num(if d == usize::MAX { 0.0 } else { d as f64 })
+}
+
+fn tile_dim_from_json(v: &Json) -> Result<usize> {
+    let d = v.as_usize().ok_or_else(|| err!("tile dimension not an unsigned integer"))?;
+    Ok(if d == 0 { usize::MAX } else { d })
+}
+
+fn sample_to_json(s: &Sample) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("model".into(), Json::Str(s.model.clone()));
+    m.insert("planes".into(), Json::Num(s.planes as f64));
+    m.insert("rows".into(), Json::Num(s.rows as f64));
+    m.insert("cols".into(), Json::Num(s.cols as f64));
+    m.insert("kernel_width".into(), Json::Num(s.kernel_width as f64));
+    match s.tile {
+        Some(t) => {
+            m.insert("tile_rows".into(), tile_dim_to_json(t.rows));
+            m.insert("tile_cols".into(), tile_dim_to_json(t.cols));
+        }
+        None => {
+            m.insert("tile_rows".into(), Json::Null);
+            m.insert("tile_cols".into(), Json::Null);
+        }
+    }
+    m.insert("fused".into(), Json::Bool(s.fused));
+    m.insert("agglomeration".into(), Json::Num(s.agglomeration as f64));
+    m.insert("units".into(), Json::Num(s.units as f64));
+    m.insert("workers".into(), Json::Num(s.workers as f64));
+    m.insert("ms".into(), Json::Num(s.ms));
+    m.insert("reps".into(), Json::Num(s.reps as f64));
+    m.insert("warmup".into(), Json::Num(s.warmup as f64));
+    Json::Obj(m)
+}
+
+fn sample_from_json(v: &Json) -> Result<Sample> {
+    let tile = match (v.get("tile_rows"), v.get("tile_cols")) {
+        (Json::Null, Json::Null) => None,
+        (r, c) => Some(TileSpec::new(tile_dim_from_json(r)?, tile_dim_from_json(c)?)),
+    };
+    Ok(Sample {
+        model: v.req_str("model")?.to_string(),
+        planes: v.req_usize("planes")?,
+        rows: v.req_usize("rows")?,
+        cols: v.req_usize("cols")?,
+        kernel_width: v.req_usize("kernel_width")?,
+        tile,
+        fused: v.req_bool("fused")?,
+        agglomeration: v.req_usize("agglomeration")?,
+        units: v.req_usize("units")?,
+        workers: v.req_usize("workers")?,
+        ms: v.req_f64("ms")?,
+        reps: v.req_usize("reps")?,
+        warmup: v.req_usize("warmup")?,
+    })
+}
+
+fn group_to_json(g: &GroupFit) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("model".into(), Json::Str(g.model.clone()));
+    m.insert("fused".into(), Json::Bool(g.fused));
+    m.insert("tiled".into(), Json::Bool(g.tiled));
+    m.insert("n_samples".into(), Json::Num(g.n_samples as f64));
+    match &g.fit {
+        Some(f) => {
+            m.insert("coeffs".into(), Json::Arr(f.coeffs.iter().map(|c| Json::Num(*c)).collect()));
+            m.insert("r2".into(), Json::Num(f.r2));
+            m.insert("n".into(), Json::Num(f.n as f64));
+        }
+        None => {
+            m.insert("coeffs".into(), Json::Null);
+            m.insert("r2".into(), Json::Null);
+            m.insert("n".into(), Json::Null);
+        }
+    }
+    Json::Obj(m)
+}
+
+fn group_from_json(v: &Json) -> Result<GroupFit> {
+    // `null` coefficients — whether the whole array or any entry (a
+    // non-finite coefficient serializes as null) — mean *invalid
+    // model*, never zero: silently zeroing a coefficient would turn a
+    // known-bad fit into confidently wrong predictions.
+    let fit = match v.get("coeffs") {
+        Json::Null => None,
+        Json::Arr(cs) => {
+            let coeffs: Vec<f64> = cs.iter().filter_map(|c| c.as_f64()).collect();
+            if coeffs.len() != NFEATURES + 1 || cs.len() != NFEATURES + 1 {
+                None
+            } else {
+                // null r2 (NaN at save time) loads as NaN → unusable.
+                let r2 = v.get("r2").as_f64().unwrap_or(f64::NAN);
+                let n = v.get("n").as_usize().unwrap_or(0);
+                Some(LinearModel { coeffs, r2, n })
+            }
+        }
+        other => bail!("coeffs is neither null nor an array: {other}"),
+    };
+    Ok(GroupFit {
+        model: v.req_str("model")?.to_string(),
+        fused: v.req_bool("fused")?,
+        tiled: v.req_bool("tiled")?,
+        n_samples: v.req_usize("n_samples")?,
+        fit,
+    })
+}
+
+/// Predicted-vs-measured accuracy table over a shape set (shared by
+/// `phi-conv tune --predict` and `cargo bench --bench costmodel`). For
+/// each (model, size) the cost model's chosen candidate is built as a
+/// real plan and measured; rows report predicted ms, measured ms, and
+/// relative error — or name the low-R² sweep fallback when the model
+/// declines to predict.
+pub fn accuracy_table(cfg: &RunConfig, cm: &CostModel, sizes: &[usize]) -> Result<Table> {
+    cfg.validate()?;
+    let kernel = cfg.kernel_spec();
+    let mut out = Table::new(
+        format!(
+            "Cost-model accuracy: predicted vs measured ms ({} planes, w{} kernel, {} threads)",
+            cfg.planes, cfg.kernel_width, cfg.threads
+        ),
+        &["Model", "Shape", "Chosen config", "Predicted ms", "Measured ms", "Rel err"],
+    );
+    let openmp = OpenMpModel::new(cfg.threads);
+    let opencl = OpenClModel::new(cfg.threads, 16);
+    let gprm = GprmModel::new(cfg.threads, cfg.cutoff).with_agglomeration(cfg.agglomeration.max(1));
+    let mut gprm_variants: std::collections::HashMap<usize, GprmModel> =
+        std::collections::HashMap::new();
+    for &size in sizes {
+        let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+        for model_ix in 0..3usize {
+            let base: &dyn ExecutionModel = match model_ix {
+                0 => &openmp,
+                1 => &opencl,
+                _ => &gprm,
+            };
+            let shape = format!("{}x{size}x{size} w{}", cfg.planes, cfg.kernel_width);
+            let Some(pred) = cm.choose(
+                base.name(),
+                cfg.planes,
+                size,
+                size,
+                cfg.kernel_width,
+                base.workers(),
+            ) else {
+                out.row(vec![
+                    base.name().to_string(),
+                    shape,
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "low-R² fallback (sweep)".to_string(),
+                ]);
+                continue;
+            };
+            let cand = pred.candidate;
+            let model: &dyn ExecutionModel = if model_ix == 2 && cand.agglomeration > 1 {
+                &*gprm_variants
+                    .entry(cand.agglomeration)
+                    .or_insert_with(|| gprm.respawn_with_agglomeration(cand.agglomeration))
+            } else {
+                base
+            };
+            let plan = ConvPlan::builder()
+                .kernel(kernel)
+                .tile_opt(cand.tile)
+                .fuse(cand.fused)
+                .shape(cfg.planes, size, size)
+                .build()?;
+            let mut arena = ScratchArena::new();
+            let measured = time_reps(
+                || plan.execute_discard(Some(model), &img, &mut arena).expect("accuracy execution"),
+                cfg.warmup,
+                cfg.reps,
+            )
+            .median();
+            let rel = if measured > 0.0 { (pred.ms - measured).abs() / measured } else { 0.0 };
+            out.row(vec![
+                base.name().to_string(),
+                shape,
+                cand.label(),
+                format!("{:.3}", pred.ms),
+                format!("{measured:.3}"),
+                format!("{:.1}%", rel * 100.0),
+            ]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(
+        model: &str,
+        rows: usize,
+        cols: usize,
+        width: usize,
+        tile: Option<TileSpec>,
+        fused: bool,
+        ms: f64,
+    ) -> Sample {
+        let workers = 4;
+        Sample {
+            model: model.to_string(),
+            planes: 3,
+            rows,
+            cols,
+            kernel_width: width,
+            tile,
+            fused,
+            agglomeration: 1,
+            units: dispatch_units(rows, cols, tile, workers),
+            workers,
+            ms,
+            reps: 3,
+            warmup: 1,
+        }
+    }
+
+    /// Linear ground truth used by the synthetic tests; the multiplier
+    /// makes (fused=false, tiled=false) the most expensive group so
+    /// choose() has a real decision to make.
+    fn truth_ms(fused: bool, tiled: bool, f: &[f64; NFEATURES]) -> f64 {
+        let base = 0.2 + 1.5e-6 * f[0] + 2.0e-7 * f[2] + 1e-3 * f[3];
+        let mult = match (fused, tiled) {
+            (false, false) => 4.0,
+            (true, false) => 3.0,
+            (false, true) => 2.0,
+            (true, true) => 1.0,
+        };
+        base * mult
+    }
+
+    fn synthetic_samples(model: &str) -> Vec<Sample> {
+        let mut out = Vec::new();
+        let tiles = [None, Some(TileSpec::new(16, usize::MAX)), Some(TileSpec::new(32, 32))];
+        for (rows, cols) in [(64, 64), (80, 96), (96, 128), (128, 128), (160, 96), (192, 192)] {
+            for width in [3usize, 5, 7] {
+                for tile in tiles {
+                    for fused in [false, true] {
+                        let units = dispatch_units(rows, cols, tile, 4);
+                        let f = features(3, rows, cols, width, units);
+                        let ms = truth_ms(fused, tile.is_some(), &f);
+                        out.push(sample(model, rows, cols, width, tile, fused, ms));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_groups_and_predicts_noise_free_truth() {
+        let cm = CostModel::fit(synthetic_samples("OpenMP"), 0.8);
+        assert_eq!(cm.groups().len(), 4, "2 fused × 2 tiled groups");
+        assert_eq!(cm.usable_groups(), 4);
+        for g in cm.groups() {
+            let f = g.fit.as_ref().expect("noise-free fit");
+            assert!(f.r2 > 0.999999, "{:?}: r2 {}", (g.fused, g.tiled), f.r2);
+        }
+        // Held-out shape: 100x100 is not in the training grid.
+        for fused in [false, true] {
+            for tile in [None, Some(TileSpec::new(32, 32))] {
+                let units = dispatch_units(100, 100, tile, 4);
+                let want = truth_ms(fused, tile.is_some(), &features(3, 100, 100, 5, units));
+                let got = cm
+                    .predict_ms("OpenMP", fused, tile, 3, 100, 100, 5, 4)
+                    .expect("usable group");
+                assert!(
+                    (got - want).abs() <= 1e-6 * want,
+                    "fused={fused} tile={tile:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn choose_prefers_cheapest_group_and_keeps_baseline_comparison() {
+        let cm = CostModel::fit(synthetic_samples("OpenMP"), 0.8);
+        let p = cm.choose("OpenMP", 3, 100, 100, 5, 4).expect("predictable");
+        // truth makes fused+tiled 4x cheaper than the untiled baseline
+        assert!(p.candidate.fused, "fused wins by construction: {:?}", p.candidate);
+        assert!(p.candidate.tile.is_some(), "tiled wins by construction: {:?}", p.candidate);
+        assert!(p.ms <= p.baseline_ms, "winner never predicted worse than baseline");
+        assert!(p.baseline_ms / p.ms > 2.0, "the 4x multiplier should show through");
+        // unknown model name → no baseline group → sweep fallback
+        assert!(cm.choose("NoSuchModel", 3, 100, 100, 5, 4).is_none());
+    }
+
+    #[test]
+    fn low_r2_gate_forces_fallback() {
+        // Noise swamps the signal → R² collapses → choose() declines.
+        let mut prng = crate::util::prng::Prng::new(0xbad_f17);
+        let mut samples = synthetic_samples("OpenMP");
+        for s in &mut samples {
+            let u = (prng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            s.ms = 1.0 + 100.0 * u; // unrelated to the features
+        }
+        let cm = CostModel::fit(samples, 0.8);
+        assert_eq!(cm.usable_groups(), 0, "noise must not pass an 0.8 R² gate");
+        assert!(cm.choose("OpenMP", 3, 100, 100, 5, 4).is_none());
+        // the fits exist but are gated — to_table names the fallback
+        let text = cm.to_table().to_text();
+        assert!(text.contains("fallback"), "table: {text}");
+    }
+
+    #[test]
+    fn json_roundtrip_is_bitwise_for_predictions() {
+        let cm = CostModel::fit(synthetic_samples("GPRM"), 0.8);
+        let reloaded = CostModel::from_json(&Json::parse(&cm.to_json().to_string()).unwrap())
+            .expect("artifact loads");
+        assert_eq!(reloaded.samples().len(), cm.samples().len());
+        assert_eq!(reloaded.groups(), cm.groups(), "coefficients restored verbatim");
+        for fused in [false, true] {
+            for tile in [None, Some(TileSpec::new(16, usize::MAX))] {
+                let a = cm.predict_ms("GPRM", fused, tile, 3, 100, 100, 5, 4).unwrap();
+                let b = reloaded.predict_ms("GPRM", fused, tile, 3, 100, 100, 5, 4).unwrap();
+                assert_eq!(a.to_bits(), b.to_bits(), "bitwise-identical predictions");
+            }
+        }
+        assert_eq!(cm.choose("GPRM", 3, 100, 100, 5, 4), reloaded.choose("GPRM", 3, 100, 100, 5, 4));
+    }
+
+    #[test]
+    fn null_coefficients_load_as_invalid_model_not_zero() {
+        let text = r#"{
+            "bench": "costmodel", "r2_min": 0.8,
+            "features": ["pixels", "width", "pixels_width", "units"],
+            "samples": [],
+            "models": [
+                {"model": "OpenMP", "fused": false, "tiled": false,
+                 "n_samples": 9, "coeffs": null, "r2": null, "n": null},
+                {"model": "OpenMP", "fused": true, "tiled": false,
+                 "n_samples": 9, "coeffs": [0.1, null, 0.0, 0.0, 0.0],
+                 "r2": 0.99, "n": 9}
+            ]
+        }"#;
+        let cm = CostModel::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cm.groups().len(), 2);
+        assert!(cm.groups()[0].fit.is_none(), "null coeffs → no model");
+        assert!(cm.groups()[1].fit.is_none(), "a null entry inside coeffs → no model, not zero");
+        assert_eq!(cm.usable_groups(), 0);
+        assert!(cm.choose("OpenMP", 3, 100, 100, 5, 4).is_none());
+    }
+
+    #[test]
+    fn loader_rejects_wrong_feature_layout() {
+        let text = r#"{"bench": "costmodel", "r2_min": 0.8,
+            "features": ["pixels", "width"], "samples": [], "models": []}"#;
+        assert!(CostModel::from_json(&Json::parse(text).unwrap()).is_err());
+        let text = r#"{"bench": "serving"}"#;
+        assert!(CostModel::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn tile_dims_roundtrip_including_full_extent() {
+        let s = sample("OpenCL", 64, 64, 5, Some(TileSpec::new(16, usize::MAX)), true, 1.0);
+        let back = sample_from_json(&sample_to_json(&s)).unwrap();
+        assert_eq!(back, s, "usize::MAX tile extent survives via the 0 convention");
+        let s = sample("OpenCL", 64, 64, 5, None, false, 1.0);
+        assert_eq!(sample_from_json(&sample_to_json(&s)).unwrap(), s);
+    }
+}

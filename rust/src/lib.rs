@@ -30,6 +30,11 @@
 //!   (model, image shape, kernel width), mirrors the paper's
 //!   agglomeration experiment as a harness table, and keeps the winners
 //!   in an in-memory tuning table (`phi-conv tune`).
+//! * [`costmodel`] — regression-fit plan selection: per-(model, fused,
+//!   tiled) linear cost models fitted from autotune samples with
+//!   R²-gated validity, persisted as `BENCH_costmodel.json`, consulted
+//!   by the tuning table and coordinator admission for
+//!   never-before-seen shapes (`phi-conv tune --save/--load/--predict`).
 //! * [`phisim`] — a calibrated analytic timing model of the Xeon Phi
 //!   5110P that regenerates the paper's Tables 1–2 and Figures 1–4
 //!   (the hardware substitute; DESIGN.md §1).
@@ -69,6 +74,7 @@ pub mod autotune;
 pub mod config;
 pub mod conv;
 pub mod coordinator;
+pub mod costmodel;
 pub mod harness;
 pub mod image;
 pub mod metrics;

@@ -13,6 +13,8 @@
 //!   phi-conv measure --exhibit table1 --sizes 288,576 --reps 5
 //!   phi-conv measure --exhibit fused --format json   # fusion traffic win
 //!   phi-conv tune --sizes 288,576 --reps 5
+//!   phi-conv tune --sizes 96,192,288 --save BENCH_costmodel.json
+//!   phi-conv tune --load BENCH_costmodel.json --predict --sizes 144,432
 //!   phi-conv validate
 //!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
 //!   phi-conv info
@@ -44,6 +46,9 @@ fn run() -> Result<()> {
         .opt("executors", "2", "serve: executor threads")
         .opt("policy", "adaptive", "serve: adaptive|round-robin|openmp|opencl|gprm|pjrt")
         .flag("no-pjrt", "serve: skip the PJRT backend")
+        .opt("save", "", "tune: write samples + fitted cost model to this JSON path")
+        .opt("load", "", "tune/serve: seed from a saved cost model JSON")
+        .flag("predict", "tune: print predicted-vs-measured error for --sizes (needs --load)")
         .parse(args)?;
 
     let cfg = RunConfig::resolve(&cli)?;
@@ -64,7 +69,13 @@ fn run() -> Result<()> {
                 print_table(&t, cli.str_of("format")?);
             }
         }
-        "tune" => tune(&cfg, cli.str_of("format")?)?,
+        "tune" => tune(
+            &cfg,
+            cli.str_of("format")?,
+            cli.str_of("save")?,
+            cli.str_of("load")?,
+            cli.is_set("predict"),
+        )?,
         "validate" => validate(&cfg)?,
         "serve" => serve(
             &cfg,
@@ -72,6 +83,7 @@ fn run() -> Result<()> {
             cli.usize_of("executors")?,
             cli.str_of("policy")?,
             !cli.is_set("no-pjrt"),
+            cli.str_of("load")?,
         )?,
         "info" => info(&cfg)?,
         _ => {
@@ -93,18 +105,62 @@ fn print_table(t: &phi_conv::metrics::Table, format: &str) {
 
 /// The agglomeration auto-tune: sweep tile shapes (and, for GPRM,
 /// tiles-per-task factors) per model at each configured size, print the
-/// paper-style sweep tables, and finish with the tuned-winner summary.
-fn tune(cfg: &RunConfig, format: &str) -> Result<()> {
+/// paper-style sweep tables, fit the cost model over the collected
+/// samples, and finish with the tuned-winner + fit summaries.
+///
+/// `--load` seeds the sample pool from a saved artifact (the new sweep
+/// extends it); `--save` persists samples + fitted coefficients;
+/// `--predict` skips sweeping entirely and instead reports
+/// predicted-vs-measured error for `--sizes` under the loaded model.
+fn tune(cfg: &RunConfig, format: &str, save: &str, load: &str, predict: bool) -> Result<()> {
+    use phi_conv::costmodel::CostModel;
+
+    let loaded = if load.is_empty() {
+        None
+    } else {
+        let mut cm = CostModel::load(std::path::Path::new(load))?;
+        cm.set_r2_min(cfg.r2_min);
+        eprintln!(
+            "loaded cost model {load}: {} samples, {} of {} groups usable at r2_min {}",
+            cm.samples().len(),
+            cm.usable_groups(),
+            cm.groups().len(),
+            cfg.r2_min
+        );
+        Some(cm)
+    };
+
+    if predict {
+        let cm = loaded.context("--predict needs --load <path> (a saved cost model)")?;
+        print_table(&cm.to_table(), format);
+        let t = phi_conv::costmodel::accuracy_table(cfg, &cm, &cfg.sizes)?;
+        print_table(&t, format);
+        return Ok(());
+    }
+
     eprintln!(
         "tuning tile/agglomeration on host: sizes {:?}, {} threads, {} reps",
         cfg.sizes, cfg.threads, cfg.reps
     );
+    let mut samples: Vec<phi_conv::costmodel::Sample> =
+        loaded.map(|cm| cm.samples().to_vec()).unwrap_or_default();
     let mut table = phi_conv::autotune::TuningTable::new();
     for &size in &cfg.sizes {
-        let t = phi_conv::autotune::sweep_shape(cfg, size, &mut table)?;
+        let t = phi_conv::autotune::sweep_shape_sampled(cfg, size, &mut table, &mut samples)?;
         print_table(&t, format);
     }
     print_table(&table.to_table(), format);
+
+    let model = CostModel::fit(samples, cfg.r2_min);
+    print_table(&model.to_table(), format);
+    if !save.is_empty() {
+        model.save(std::path::Path::new(save))?;
+        eprintln!(
+            "saved cost model ({} samples, {} groups) to {save}",
+            model.samples().len(),
+            model.groups().len()
+        );
+    }
     Ok(())
 }
 
@@ -171,7 +227,14 @@ fn validate(cfg: &RunConfig) -> Result<()> {
 }
 
 /// Serving demo: synthetic request mix through the coordinator.
-fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_pjrt: bool) -> Result<()> {
+fn serve(
+    cfg: &RunConfig,
+    requests: usize,
+    executors: usize,
+    policy: &str,
+    with_pjrt: bool,
+    load: &str,
+) -> Result<()> {
     let policy = match policy {
         "adaptive" => RoutePolicy::paper_default(),
         "round-robin" => RoutePolicy::RoundRobin,
@@ -180,7 +243,7 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
             None => bail!("unknown policy {other:?}"),
         },
     };
-    let coord = match Coordinator::new(cfg, policy, executors, with_pjrt) {
+    let mut coord = match Coordinator::new(cfg, policy, executors, with_pjrt) {
         Ok(c) => c,
         Err(e) if with_pjrt && !matches!(policy, RoutePolicy::Fixed(Backend::Pjrt)) => {
             // PJRT is an optional backend (feature-gated, needs artifacts):
@@ -190,6 +253,19 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
         }
         Err(e) => return Err(e),
     };
+    if !load.is_empty() {
+        let mut cm = phi_conv::costmodel::CostModel::load(std::path::Path::new(load))?;
+        cm.set_r2_min(cfg.r2_min);
+        eprintln!(
+            "loaded cost model {load}: {} of {} groups usable at r2_min {}",
+            cm.usable_groups(),
+            cm.groups().len(),
+            cfg.r2_min
+        );
+        let mut tuning = phi_conv::autotune::TuningTable::new();
+        tuning.set_cost_model(cm);
+        coord.set_tuning(tuning);
+    }
     println!(
         "coordinator up: {} executors, policy {policy:?}, pjrt={}",
         executors,
@@ -239,6 +315,12 @@ fn serve(cfg: &RunConfig, requests: usize, executors: usize, policy: &str, with_
     }
     if stats.pjrt_fallbacks > 0 {
         println!("  ({} requests fell back from PJRT)", stats.pjrt_fallbacks);
+    }
+    if coord.tuning().is_some() {
+        println!(
+            "plan decisions: {} predicted · {} swept · {} default",
+            stats.plans_predicted, stats.plans_swept, stats.plans_default
+        );
     }
     println!(
         "queue: depth peak {} of {} · {} shed · {} expired · {} refused replies",

@@ -49,6 +49,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
@@ -98,6 +105,12 @@ impl Json {
             .as_arr()
             .ok_or_else(|| err!("field {key:?} missing or not an array"))
     }
+
+    pub fn req_bool(&self, key: &str) -> Result<bool> {
+        self.get(key)
+            .as_bool()
+            .ok_or_else(|| err!("field {key:?} missing or not a boolean"))
+    }
 }
 
 impl fmt::Display for Json {
@@ -112,7 +125,15 @@ impl fmt::Display for Json {
                     // Rust Display forms ("NaN", "inf") would produce
                     // output this parser itself rejects
                     write!(f, "null")
-                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                } else if n.fract() == 0.0
+                    && n.abs() < 1e15
+                    && !(*n == 0.0 && n.is_sign_negative())
+                {
+                    // -0.0 must skip this fast path: `-0.0 as i64` is 0,
+                    // which parses back as +0.0 and breaks the bit-exact
+                    // round-trip the cost-model artifacts rely on. Rust's
+                    // f64 Display prints "-0", which `parse::<f64>()`
+                    // restores with the sign bit intact.
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -390,12 +411,77 @@ mod tests {
 
     #[test]
     fn accessors() {
-        let v = Json::parse(r#"{"n": 7, "s": "x", "f": 1.5}"#).unwrap();
+        let v = Json::parse(r#"{"n": 7, "s": "x", "f": 1.5, "b": true}"#).unwrap();
         assert_eq!(v.req_usize("n").unwrap(), 7);
         assert_eq!(v.req_str("s").unwrap(), "x");
         assert!((v.req_f64("f").unwrap() - 1.5).abs() < 1e-12);
+        assert!(v.req_bool("b").unwrap());
+        assert_eq!(v.get("b").as_bool(), Some(true));
         assert!(v.req_usize("f").is_err()); // fractional
         assert!(v.req_str("n").is_err()); // wrong type
         assert!(v.req_arr("missing").is_err());
+        assert!(v.req_bool("n").is_err()); // wrong type
+    }
+
+    /// Bitwise emit→parse round-trip of one finite f64.
+    fn roundtrip_bits(v: f64) {
+        let text = Json::Num(v).to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} (from {v:e}): {e}"))
+            .as_f64()
+            .unwrap();
+        assert_eq!(
+            back.to_bits(),
+            v.to_bits(),
+            "round-trip changed {v:e} (emitted {text:?}) to {back:e}"
+        );
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bitwise() {
+        // regression: the integer fast path printed "-0.0 as i64" = "0",
+        // silently flipping the sign bit on reload
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        roundtrip_bits(-0.0);
+        roundtrip_bits(0.0);
+    }
+
+    #[test]
+    fn special_values_roundtrip_bitwise() {
+        for v in [
+            f64::MIN,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324,             // smallest subnormal
+            1e15,               // integer fast-path boundary
+            1e15 - 1.0,         // last value inside the fast path
+            9007199254740992.0, // 2^53
+            0.1,
+            1.0 / 3.0,
+            -2.5e-6,
+            123456789.123456,
+        ] {
+            roundtrip_bits(v);
+            roundtrip_bits(-v);
+        }
+    }
+
+    #[test]
+    fn random_finite_f64_roundtrip_property() {
+        // Rust's f64 Display is shortest-round-trip, so every finite
+        // value the serializer emits must reparse to identical bits —
+        // the cost model's save→load bitwise-prediction guarantee rests
+        // on this. Drive it with PRNG bit patterns across the full
+        // exponent range.
+        let mut prng = crate::util::prng::Prng::new(0x5eed_c0de);
+        let mut checked = 0usize;
+        while checked < 4000 {
+            let v = f64::from_bits(prng.next_u64());
+            if !v.is_finite() {
+                continue; // non-finite serializes as null by design
+            }
+            roundtrip_bits(v);
+            checked += 1;
+        }
     }
 }

@@ -30,6 +30,12 @@ echo "== cargo test -q --test fused_suite (fused ≡ unfused differential + ring
 # ring-lease bug races workers; re-run standalone so it is named
 cargo test -q --test fused_suite
 
+echo "== cargo test -q --test costmodel_suite (regression core + predictive admission)"
+# tier-1 by policy: a cost-model bug silently mis-plans every unseen
+# shape and a persistence bug corrupts tuning artifacts; re-run
+# standalone so it is named
+cargo test -q --test costmodel_suite
+
 echo "== cargo build --benches"
 cargo build --benches
 
