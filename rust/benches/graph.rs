@@ -1,0 +1,117 @@
+//! Bench: multi-stage chains — per-chain time **and** estimated bytes
+//! moved for 2/3/4-stage chains, fused inter-stage streaming vs
+//! materialised intermediates.
+//!
+//! A k-stage materialised chain crosses memory 2k times (each stage
+//! reads its input plane and writes its output plane); the streamed
+//! cascade crosses twice, so the traffic column scales the PR 5 fusion
+//! argument by chain length. Correctness is asserted before timing:
+//! streamed and materialised execution must agree within 1e-6.
+//!
+//! `cargo bench --bench graph` — env overrides:
+//!   PHI_GRAPH_SIZE=288   PHI_BENCH_REPS=5   PHI_BENCH_THREADS=8
+//!   PHI_GRAPH_JSON=BENCH_graph.json   (empty string = don't write)
+
+use std::collections::BTreeMap;
+
+use phi_conv::config::default_threads;
+use phi_conv::image::{synth_image, Pattern};
+use phi_conv::metrics::{time_reps, Table};
+use phi_conv::models::OpenMpModel;
+use phi_conv::plan::{FilterGraph, KernelSpec, ScratchArena};
+use phi_conv::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn chain_widths(n: usize) -> &'static [usize] {
+    match n {
+        2 => &[5, 9],
+        3 => &[3, 5, 9],
+        _ => &[3, 5, 7, 9],
+    }
+}
+
+fn chain(n: usize, planes: usize, size: usize, streamed: bool) -> FilterGraph {
+    let mut b = FilterGraph::builder().shape(planes, size, size);
+    for (i, &w) in chain_widths(n).iter().enumerate() {
+        b = b.stage(&format!("s{i}"), KernelSpec::new(w, 0.4 + w as f64 / 4.0));
+        if !streamed {
+            b = b.materialized();
+        }
+    }
+    b.build().expect("chain builds")
+}
+
+fn main() {
+    let size = env_usize("PHI_GRAPH_SIZE", 288);
+    let reps = env_usize("PHI_BENCH_REPS", 5);
+    let threads = env_usize("PHI_BENCH_THREADS", default_threads());
+    let planes = 3;
+    let img = synth_image(planes, size, size, Pattern::Noise, 42);
+    let model = OpenMpModel::new(threads);
+    let mut arena = ScratchArena::new();
+
+    let mut t = Table::new(
+        format!("FilterGraph chains on {planes}x{size}x{size}, {threads} threads, {reps} reps"),
+        &["stages", "mode", "ms (median)", "est MiB moved", "traffic saved"],
+    );
+    for n in [2usize, 3, 4] {
+        let s = chain(n, planes, size, true);
+        let m = chain(n, planes, size, false);
+        // correctness before timing
+        let a = s.execute_on(&model, &img, &mut arena).expect("streamed");
+        let b = m.execute_on(&model, &img, &mut arena).expect("materialized");
+        let d = a[0].max_abs_diff(&b[0]);
+        assert!(d <= 1e-6, "{n} stages: streamed vs materialized diverged by {d}");
+
+        let ts = time_reps(
+            || {
+                s.execute_on(&model, &img, &mut arena).expect("streamed");
+            },
+            1,
+            reps,
+        )
+        .median();
+        let tm = time_reps(
+            || {
+                m.execute_on(&model, &img, &mut arena).expect("materialized");
+            },
+            1,
+            reps,
+        )
+        .median();
+        let tr = s.traffic_estimate();
+        let (mb_s, mb_m) = (tr.total.total_mb(), tr.materialized_total.total_mb());
+        t.row(vec![
+            format!("{n}"),
+            "streamed".to_string(),
+            format!("{ts:.3}"),
+            format!("{mb_s:.2}"),
+            format!("{:.0}%", (1.0 - mb_s / mb_m) * 100.0),
+        ]);
+        t.row(vec![
+            format!("{n}"),
+            "materialized".to_string(),
+            format!("{tm:.3}"),
+            format!("{mb_m:.2}"),
+            "-".to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("{}", t.to_json());
+
+    let path = std::env::var("PHI_GRAPH_JSON").unwrap_or_else(|_| "BENCH_graph.json".into());
+    if !path.is_empty() {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("graph".into()));
+        obj.insert("shape".to_string(), Json::Str(format!("{planes}x{size}x{size}")));
+        obj.insert("threads".to_string(), Json::Num(threads as f64));
+        obj.insert("reps".to_string(), Json::Num(reps as f64));
+        obj.insert("chains".to_string(), t.to_json());
+        std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

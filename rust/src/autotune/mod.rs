@@ -48,7 +48,7 @@ use crate::costmodel::{dispatch_units, CostModel, Prediction, Sample};
 use crate::image::synth_image;
 use crate::metrics::{time_reps, Table};
 use crate::models::{ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileSpec};
-use crate::plan::{ConvPlan, ScratchArena};
+use crate::plan::{ConvPlan, EdgePolicy, FilterGraph, KernelSpec, ScratchArena};
 
 /// One execution configuration the tuner evaluates: a tile
 /// decomposition (or untiled row bands), a GPRM agglomeration factor,
@@ -128,6 +128,118 @@ pub fn default_candidates(rows: usize, gprm: bool) -> Vec<Candidate> {
         }
     }
     out
+}
+
+/// Per-edge buffer-policy candidates for a `stages`-long linear chain
+/// (`stages - 1` inter-stage edges): the **all-materialised baseline
+/// first** (every sweep's reference, by the same invariant as
+/// [`default_candidates`]), then the fully streamed chain, then — for
+/// chains with several edges — one split per edge (all streamed except
+/// that edge). Per-edge fuse decisions are thus swept exactly like tile
+/// shapes are.
+pub fn chain_policy_candidates(stages: usize) -> Vec<Vec<EdgePolicy>> {
+    let edges = stages.saturating_sub(1);
+    let mut out = vec![vec![EdgePolicy::Materialized; edges]];
+    if edges == 0 {
+        return out;
+    }
+    out.push(vec![EdgePolicy::Streamed; edges]);
+    if edges >= 2 {
+        for i in 0..edges {
+            let mut cand = vec![EdgePolicy::Streamed; edges];
+            cand[i] = EdgePolicy::Materialized;
+            out.push(cand);
+        }
+    }
+    out
+}
+
+/// Compact label for a chain-policy candidate: one letter per
+/// inter-stage edge (`S` streamed, `M` materialised).
+pub fn chain_policy_label(policies: &[EdgePolicy]) -> String {
+    if policies.is_empty() {
+        return "single stage".to_string();
+    }
+    policies
+        .iter()
+        .map(|p| match p {
+            EdgePolicy::Streamed => "S",
+            EdgePolicy::Materialized => "M",
+        })
+        .collect::<Vec<_>>()
+        .join("\u{00b7}")
+}
+
+/// A linear chain graph with explicit per-edge policies (`policies[i]`
+/// is the edge into stage `i + 1`; the source edge materialises by
+/// construction).
+fn chain_graph(
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    specs: &[KernelSpec],
+    policies: &[EdgePolicy],
+) -> Result<FilterGraph> {
+    let mut b = FilterGraph::builder().shape(planes, rows, cols);
+    for (i, spec) in specs.iter().enumerate() {
+        b = b.stage(&format!("s{i}"), *spec);
+        if i >= 1 {
+            b = b.policy(policies[i - 1]);
+        }
+    }
+    b.build()
+}
+
+/// Sweep every per-edge policy candidate of a chain under OpenMP at one
+/// square size: measured ms plus the traffic estimate per candidate,
+/// winner marked, the all-materialised baseline always row 0 (`phi-conv
+/// graph --tune`).
+pub fn sweep_chain(cfg: &RunConfig, size: usize, specs: &[KernelSpec]) -> Result<Table> {
+    cfg.validate()?;
+    ensure!(!specs.is_empty(), "chain sweep needs at least one stage");
+    let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+    let model = OpenMpModel::new(cfg.threads);
+    let mut arena = ScratchArena::new();
+    let mut out = Table::new(
+        format!(
+            "Chain edge-policy sweep: {} stages on {size}x{size}x{} planes, {} threads",
+            specs.len(),
+            cfg.planes,
+            cfg.threads
+        ),
+        &["Edge policies", "total ms", "est MiB moved", "vs materialized", ""],
+    );
+    let mut measured: Vec<(Vec<EdgePolicy>, f64, f64)> = Vec::new();
+    for cand in chain_policy_candidates(specs.len()) {
+        let graph = chain_graph(cfg.planes, size, size, specs, &cand)?;
+        let ms = time_reps(
+            || {
+                graph.execute_on(&model, &img, &mut arena).expect("chain sweep execution");
+            },
+            cfg.warmup,
+            cfg.reps,
+        )
+        .median();
+        let mb = graph.traffic_estimate().total.total_mb();
+        measured.push((cand, ms, mb));
+    }
+    let baseline_ms = measured[0].1;
+    let best = measured
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    for (i, (cand, ms, mb)) in measured.iter().enumerate() {
+        out.row(vec![
+            chain_policy_label(cand),
+            format!("{ms:.3}"),
+            format!("{mb:.2}"),
+            format!("{:.2}x", if *ms > 0.0 { baseline_ms / ms } else { 1.0 }),
+            if i == best { "\u{25c0} tuned".to_string() } else { String::new() },
+        ]);
+    }
+    Ok(out)
 }
 
 /// What a winner was tuned for.
@@ -446,6 +558,33 @@ mod tests {
         // of the baseline, which fits whenever the baseline does)
         let c = default_candidates(8, true);
         assert_eq!(c, vec![Candidate::untiled(), Candidate::untiled().fused_twin()]);
+    }
+
+    #[test]
+    fn chain_policy_candidates_start_from_materialized_baseline() {
+        // the baseline-first invariant extends to per-edge fuse sweeps
+        assert_eq!(chain_policy_candidates(1), vec![Vec::<EdgePolicy>::new()]);
+        let two = chain_policy_candidates(2);
+        assert_eq!(two[0], vec![EdgePolicy::Materialized], "baseline first");
+        assert_eq!(two, vec![vec![EdgePolicy::Materialized], vec![EdgePolicy::Streamed]]);
+        let three = chain_policy_candidates(3);
+        assert_eq!(three[0], vec![EdgePolicy::Materialized; 2]);
+        assert_eq!(three[1], vec![EdgePolicy::Streamed; 2]);
+        assert_eq!(three.len(), 4, "baseline + all-streamed + one split per edge");
+        assert_eq!(chain_policy_label(&three[2]), "M\u{00b7}S");
+        assert_eq!(chain_policy_label(&[]), "single stage");
+    }
+
+    #[test]
+    fn chain_sweep_measures_every_candidate() {
+        let cfg = tiny_cfg();
+        let specs = [KernelSpec::new(3, 0.8), KernelSpec::new(5, 1.0), KernelSpec::new(7, 1.4)];
+        let rendered = sweep_chain(&cfg, 40, &specs).unwrap();
+        assert_eq!(rendered.n_rows(), 4, "one row per policy candidate");
+        let text = rendered.to_text();
+        assert!(text.contains("tuned"), "{text}");
+        assert!(text.contains("S\u{00b7}S"), "{text}");
+        assert!(sweep_chain(&cfg, 40, &[]).is_err());
     }
 
     #[test]

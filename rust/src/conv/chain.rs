@@ -1,0 +1,470 @@
+//! N-stage streamed convolution cascade: the engine under
+//! [`crate::plan::FilterGraph`].
+//!
+//! PR 5's fused engines keep the horizontal intermediate of *one*
+//! separable stage in a `width`-deep rolling row-ring. This module
+//! generalises the pattern to a chain of stages: stage `i+1` consumes
+//! rows as stage `i` retires them, so a k-stage chain reads the source
+//! plane once and writes the destination plane once — 2 plane crossings
+//! instead of the 2k a materialised chain pays (and the 4k an unfused
+//! one would).
+//!
+//! Each [`StageStream`] is a push-based streamer holding three small
+//! per-stage buffers:
+//!
+//! * `filt` — the PR 5 ring: `width` horizontally-filtered interior
+//!   rows (halo rows enter as raw pass-through, exactly like the fused
+//!   band engines fill their ring),
+//! * `raw`  — the last `halo + 1` input rows, so border rows and border
+//!   columns can pass through verbatim (a materialised stage reads them
+//!   from its input plane; a streamed stage no longer has one),
+//! * `out`  — one assembled output row handed to the next stage.
+//!
+//! Pushing input row `r` fills ring slot `r % width`; output row `i`
+//! retires as soon as row `i + halo` has been pushed (border rows as
+//! soon as row `i` itself has). The accumulation order of every fill
+//! and emit expression matches the generic-width fused band engines
+//! term for term, so a streamed chain is bitwise-comparable to running
+//! the same stages back to back through their own plans.
+//!
+//! **Banded parallelism.** A band `[r0, r1)` of *final* rows is
+//! computed by propagating ranges backwards through the chain — stage
+//! k's input range is its output range expanded by its effective halo —
+//! and running a private cascade over the expanded source range. Bands
+//! recompute at most `Σ halo_k` boundary rows each, the multi-stage
+//! analogue of the single-stage engines re-reading their 2·halo
+//! neighbour rows, and identical expressions make the banded result
+//! bitwise equal to the sequential one.
+//!
+//! **Degenerate stages.** A stage whose kernel doesn't fit the plane
+//! (`2·halo >= rows` or `>= cols`) is the identity, matching
+//! `load_border_ring`'s whole-plane pass-through for single plans; its
+//! effective halo is 0.
+
+use super::band::dotw;
+use super::Variant;
+
+/// One stage of a streamed chain: separable odd-width taps plus the
+/// scalar/simd expression shape to evaluate them with.
+pub struct ChainStage<'k> {
+    taps: &'k [f32],
+    simd: bool,
+}
+
+impl<'k> ChainStage<'k> {
+    /// `taps.len()` must be odd (the plan layer validates; the engine
+    /// debug-asserts). [`Variant::Naive`] maps to the scalar shape —
+    /// the graph builder only admits two-pass-able stages.
+    pub fn new(taps: &'k [f32], variant: Variant) -> Self {
+        debug_assert!(taps.len() % 2 == 1, "kernel width must be odd");
+        Self { taps, simd: variant == Variant::Simd }
+    }
+
+    pub fn width(&self) -> usize {
+        self.taps.len()
+    }
+
+    pub fn halo(&self) -> usize {
+        self.taps.len() / 2
+    }
+
+    /// True when the kernel doesn't fit the plane: the stage is the
+    /// identity (single-stage plans pass the plane through via
+    /// `load_border_ring`; the streamer does the same row by row).
+    pub fn is_identity(&self, rows: usize, cols: usize) -> bool {
+        let h = self.halo();
+        2 * h >= rows || 2 * h >= cols
+    }
+
+    /// Halo the stage adds to the chain's boundary recomputation: 0 for
+    /// identity stages, `width / 2` otherwise.
+    pub fn effective_halo(&self, rows: usize, cols: usize) -> usize {
+        if self.is_identity(rows, cols) {
+            0
+        } else {
+            self.halo()
+        }
+    }
+}
+
+/// Scratch floats one stage's streamer needs at this plane shape.
+fn stage_scratch_len(stage: &ChainStage<'_>, rows: usize, cols: usize) -> usize {
+    if stage.is_identity(rows, cols) {
+        // raw ring (depth 1) + assembled output row
+        2 * cols
+    } else {
+        let (width, h) = (stage.width(), stage.halo());
+        width * (cols - 2 * h) + (h + 1) * cols + cols
+    }
+}
+
+/// Scratch floats a whole chain needs per concurrent band job — the
+/// slot length of the graph-scoped ring lease
+/// ([`crate::plan::ScratchArena::take_rings`]).
+pub fn chain_scratch_len(stages: &[ChainStage<'_>], rows: usize, cols: usize) -> usize {
+    stages.iter().map(|s| stage_scratch_len(s, rows, cols)).sum()
+}
+
+/// Accumulated effective halo of the chain: how far a final output row
+/// depends on source rows, and the per-band recompute overhead bound.
+pub fn chain_halo(stages: &[ChainStage<'_>], rows: usize, cols: usize) -> usize {
+    stages.iter().map(|s| s.effective_halo(rows, cols)).sum()
+}
+
+/// Push-based streamer for one stage (see module docs). Buffers are
+/// carved out of one caller-provided scratch slab, so a chain of
+/// streamers is one ring-lease slot, not per-stage allocations.
+struct StageStream<'a> {
+    taps: &'a [f32],
+    simd: bool,
+    identity: bool,
+    rows: usize,
+    cols: usize,
+    h: usize,
+    /// interior width `cols - 2h` (0 for identity stages)
+    w: usize,
+    /// rows of `raw` retained (`h + 1`, or 1 for identity stages)
+    raw_depth: usize,
+    /// next input row index expected by `push`
+    next_in: usize,
+    /// next output row index `next_ready` will emit
+    next_out: usize,
+    /// one past the last output row this streamer emits
+    out_end: usize,
+    filt: &'a mut [f32],
+    raw: &'a mut [f32],
+    out: &'a mut [f32],
+}
+
+impl<'a> StageStream<'a> {
+    fn new(
+        stage: &ChainStage<'a>,
+        rows: usize,
+        cols: usize,
+        in_start: usize,
+        out_range: (usize, usize),
+        scratch: &'a mut [f32],
+    ) -> Self {
+        let identity = stage.is_identity(rows, cols);
+        let h = stage.halo();
+        let (w, raw_depth) = if identity { (0, 1) } else { (cols - 2 * h, h + 1) };
+        let width = stage.taps.len();
+        let (filt, rest) = scratch.split_at_mut(if identity { 0 } else { width * w });
+        let (raw, rest) = rest.split_at_mut(raw_depth * cols);
+        let (out, _) = rest.split_at_mut(cols);
+        Self {
+            taps: stage.taps,
+            simd: stage.simd,
+            identity,
+            rows,
+            cols,
+            h,
+            w,
+            raw_depth,
+            next_in: in_start,
+            next_out: out_range.0,
+            out_end: out_range.1,
+            filt,
+            raw,
+            out,
+        }
+    }
+
+    /// Accept the next input row (index `self.next_in`): retain it in
+    /// the raw ring and, for non-identity stages, fill ring slot
+    /// `r % width` — horizontally filtered for interior rows, raw
+    /// interior pass-through for halo rows — exactly like the fused
+    /// band engines fill theirs.
+    fn push(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols);
+        let r = self.next_in;
+        let rslot = (r % self.raw_depth) * self.cols;
+        self.raw[rslot..rslot + self.cols].copy_from_slice(row);
+        if !self.identity {
+            let width = self.taps.len();
+            let fslot = (r % width) * self.w;
+            let slot = &mut self.filt[fslot..fslot + self.w];
+            if r >= self.h && r < self.rows - self.h {
+                if self.simd {
+                    for (o, win) in slot.iter_mut().zip(row.windows(width)) {
+                        *o = dotw(win, self.taps);
+                    }
+                } else {
+                    for j in self.h..self.cols - self.h {
+                        let base = j - self.h;
+                        let mut s = 0.0f32;
+                        for (v, &kv) in self.taps.iter().enumerate() {
+                            s += row[base + v] * kv;
+                        }
+                        slot[j - self.h] = s;
+                    }
+                }
+            } else {
+                slot.copy_from_slice(&row[self.h..self.h + self.w]);
+            }
+        }
+        self.next_in = r + 1;
+    }
+
+    /// The next output row, if enough input has been pushed: border
+    /// rows (and identity stages) pass through verbatim as soon as row
+    /// `i` itself arrived; interior row `i` retires once row `i + h`
+    /// arrived, combining the ring rows `i-h ..= i+h` in tap order with
+    /// the same expressions as the fused band engines' emit step.
+    fn next_ready(&mut self) -> Option<(usize, &[f32])> {
+        if self.next_out >= self.out_end {
+            return None;
+        }
+        let i = self.next_out;
+        let last = self.next_in.checked_sub(1)?;
+        let interior = !self.identity && i >= self.h && i < self.rows - self.h;
+        let need = if interior { i + self.h } else { i };
+        if last < need {
+            return None;
+        }
+        let cols = self.cols;
+        let rslot = (i % self.raw_depth) * cols;
+        let raw_row = &self.raw[rslot..rslot + cols];
+        let out = &mut *self.out;
+        if !interior {
+            out.copy_from_slice(raw_row);
+        } else {
+            // border columns pass through from the stage's input row
+            out[..self.h].copy_from_slice(&raw_row[..self.h]);
+            out[cols - self.h..].copy_from_slice(&raw_row[cols - self.h..]);
+            let width = self.taps.len();
+            let w = self.w;
+            let inner = &mut out[self.h..self.h + w];
+            if self.simd {
+                let rr0 = ((i - self.h) % width) * w;
+                for (o, &s0) in inner.iter_mut().zip(&self.filt[rr0..rr0 + w]) {
+                    *o = s0 * self.taps[0];
+                }
+                for (u, &ku) in self.taps.iter().enumerate().skip(1) {
+                    let rru = ((i + u - self.h) % width) * w;
+                    for (o, &sv) in inner.iter_mut().zip(&self.filt[rru..rru + w]) {
+                        *o += sv * ku;
+                    }
+                }
+            } else {
+                for (jj, o) in inner.iter_mut().enumerate() {
+                    let mut s = 0.0f32;
+                    for (u, &ku) in self.taps.iter().enumerate() {
+                        s += self.filt[((i + u - self.h) % width) * w + jj] * ku;
+                    }
+                    *o = s;
+                }
+            }
+        }
+        self.next_out = i + 1;
+        Some((i, &*self.out))
+    }
+}
+
+/// Recursive cascade step: push `row` into the first streamer, then
+/// forward every row it retires into the rest of the chain (the last
+/// streamer's rows go to `sink`). `split_first_mut` keeps the borrows
+/// disjoint, so a retired row can be fed onward while its producer
+/// stays mutable for the next iteration.
+fn feed(streams: &mut [StageStream<'_>], row: &[f32], sink: &mut dyn FnMut(usize, &[f32])) {
+    let Some((first, rest)) = streams.split_first_mut() else {
+        return;
+    };
+    first.push(row);
+    if rest.is_empty() {
+        while let Some((i, out)) = first.next_ready() {
+            sink(i, out);
+        }
+    } else {
+        while let Some((i, out)) = first.next_ready() {
+            debug_assert_eq!(i, rest[0].next_in, "stage handoff must be gapless");
+            feed(rest, out, sink);
+        }
+    }
+}
+
+/// Run the whole chain for final rows `[r0, r1)` of one plane,
+/// writing every row (borders included — they pass through the
+/// streamers) into `dst`, which holds exactly `r1 - r0` rows.
+///
+/// `scratch` must hold at least [`chain_scratch_len`] floats and is the
+/// band job's private slab (one ring-lease slot on the parallel path).
+/// Sequential execution is the single band `[0, rows)`.
+#[allow(clippy::too_many_arguments)]
+pub fn chain_band(
+    src: &[f32],
+    dst: &mut [f32],
+    rows: usize,
+    cols: usize,
+    stages: &[ChainStage<'_>],
+    scratch: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert!(r1 <= rows && r0 <= r1);
+    debug_assert_eq!(dst.len(), (r1 - r0) * cols);
+    if r0 >= r1 || stages.is_empty() {
+        return;
+    }
+    // backward range propagation: stage k's input rows are its output
+    // rows expanded by its effective halo, and stage k-1 must produce
+    // exactly that range
+    let m = stages.len();
+    let mut out_ranges = vec![(0usize, 0usize); m];
+    let (mut lo, mut hi) = (r0, r1);
+    for k in (0..m).rev() {
+        out_ranges[k] = (lo, hi);
+        let he = stages[k].effective_halo(rows, cols);
+        lo = lo.saturating_sub(he);
+        hi = (hi + he).min(rows);
+    }
+    // (lo, hi) is now the source row range stage 0 consumes
+    let mut streams = Vec::with_capacity(m);
+    let mut rest: &mut [f32] = scratch;
+    for (k, stage) in stages.iter().enumerate() {
+        let len = stage_scratch_len(stage, rows, cols);
+        let (slab, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        rest = tail;
+        let in_start = if k == 0 { lo } else { out_ranges[k - 1].0 };
+        streams.push(StageStream::new(stage, rows, cols, in_start, out_ranges[k], slab));
+    }
+    let mut sink = |i: usize, row: &[f32]| {
+        let off = (i - r0) * cols;
+        dst[off..off + cols].copy_from_slice(row);
+    };
+    for r in lo..hi {
+        feed(&mut streams, &src[r * cols..(r + 1) * cols], &mut sink);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{convolve_image, Algorithm};
+    use crate::image::{gaussian_kernel, synth_image, Pattern, PlanarImage};
+    use crate::models::pool::RowBands;
+    use crate::models::ExecutionModel;
+    use crate::models::OpenMpModel;
+
+    /// Materialised reference: each stage through the existing two-pass
+    /// plane driver, intermediates as full planes.
+    fn staged_reference(img: &PlanarImage, kernels: &[Vec<f32>], variant: Variant) -> PlanarImage {
+        let mut cur = img.clone();
+        for k in kernels {
+            cur = convolve_image(cur, k, Algorithm::TwoPass, variant).unwrap();
+        }
+        cur
+    }
+
+    fn run_chain_seq(img: &PlanarImage, kernels: &[Vec<f32>], variant: Variant) -> PlanarImage {
+        let (rows, cols) = (img.rows, img.cols);
+        let stages: Vec<ChainStage<'_>> =
+            kernels.iter().map(|k| ChainStage::new(k, variant)).collect();
+        let mut scratch = vec![0.0f32; chain_scratch_len(&stages, rows, cols)];
+        let mut out = img.clone();
+        for p in 0..img.planes {
+            let src = img.plane(p).to_vec();
+            chain_band(&src, out.plane_mut(p), rows, cols, &stages, &mut scratch, 0, rows);
+        }
+        out
+    }
+
+    /// Generic-width chains (no W=5 fast path on either side) are
+    /// bitwise equal to stage-by-stage materialised execution, for 2-,
+    /// 3- and 4-stage chains, both variants.
+    #[test]
+    fn streamed_chain_matches_materialized_bitwise() {
+        let chains: [&[usize]; 3] = [&[3, 7], &[7, 3, 9], &[3, 9, 3, 7]];
+        for (case, widths) in chains.iter().enumerate() {
+            let kernels: Vec<Vec<f32>> =
+                widths.iter().map(|&w| gaussian_kernel(w, 0.4 + w as f64 / 4.0)).collect();
+            let img = synth_image(2, 46, 41, Pattern::Noise, 900 + case as u64);
+            for variant in [Variant::Scalar, Variant::Simd] {
+                let want = staged_reference(&img, &kernels, variant);
+                let got = run_chain_seq(&img, &kernels, variant);
+                assert_eq!(got, want, "case {case} {widths:?} {variant:?}");
+            }
+        }
+    }
+
+    /// Chains containing width-5 stages stay within 1e-6 of the
+    /// materialised reference (whose W=5 stages take the unrolled fast
+    /// path; the streamer always evaluates the generic expressions).
+    #[test]
+    fn streamed_chain_matches_width5_fast_path() {
+        let kernels =
+            vec![gaussian_kernel(5, 1.0), gaussian_kernel(5, 2.0), gaussian_kernel(3, 0.8)];
+        let img = synth_image(3, 40, 37, Pattern::Noise, 42);
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let want = staged_reference(&img, &kernels, variant);
+            let got = run_chain_seq(&img, &kernels, variant);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-6, "{variant:?}: {d}");
+        }
+    }
+
+    /// A stage whose kernel doesn't fit the plane is the identity —
+    /// matching the single-plan pass-through — and contributes no halo.
+    #[test]
+    fn degenerate_stage_is_identity_in_chain() {
+        let kernels =
+            vec![gaussian_kernel(3, 0.8), gaussian_kernel(31, 4.0), gaussian_kernel(3, 0.8)];
+        let img = synth_image(1, 12, 14, Pattern::Noise, 7);
+        let want = staged_reference(&img, &kernels, Variant::Simd);
+        let got = run_chain_seq(&img, &kernels, Variant::Simd);
+        assert_eq!(got, want);
+        let stages: Vec<ChainStage<'_>> =
+            kernels.iter().map(|k| ChainStage::new(k, Variant::Simd)).collect();
+        assert_eq!(chain_halo(&stages, 12, 14), 2, "identity stage adds no halo");
+    }
+
+    /// Banded parallel execution over an execution model's dispatch is
+    /// bitwise equal to the sequential single band.
+    #[test]
+    fn banded_chain_matches_sequential_bitwise() {
+        let kernels =
+            vec![gaussian_kernel(9, 1.8), gaussian_kernel(3, 0.8), gaussian_kernel(7, 1.4)];
+        let img = synth_image(1, 57, 33, Pattern::Noise, 11);
+        let (rows, cols) = (img.rows, img.cols);
+        for variant in [Variant::Scalar, Variant::Simd] {
+            let want = run_chain_seq(&img, &kernels, variant);
+            let stages: Vec<ChainStage<'_>> =
+                kernels.iter().map(|k| ChainStage::new(k, variant)).collect();
+            let slot_len = chain_scratch_len(&stages, rows, cols);
+            for threads in [2usize, 5] {
+                let model = OpenMpModel::new(threads);
+                let mut out = img.clone();
+                let n_slabs = model.workers() + 1;
+                let slabs = std::sync::Mutex::new(vec![vec![0.0f32; slot_len]; n_slabs]);
+                let bands = RowBands::new(out.plane_mut(0), rows, cols);
+                model.dispatch(rows, &|r0, r1| {
+                    // SAFETY: dispatch covers [0, rows) disjointly
+                    let band = unsafe { bands.band(r0, r1) };
+                    let mut slab = slabs.lock().unwrap().pop().expect("enough slabs");
+                    chain_band(img.plane(0), band, rows, cols, &stages, &mut slab, r0, r1);
+                    slabs.lock().unwrap().push(slab);
+                });
+                assert_eq!(out, want, "{variant:?} threads {threads}");
+            }
+        }
+    }
+
+    /// Single-stage chains reduce to the fused plan semantics: every
+    /// row written, borders passed through.
+    #[test]
+    fn single_stage_chain_matches_plane_driver() {
+        for width in [3usize, 5, 9] {
+            let k = gaussian_kernel(width, width as f64 / 4.0);
+            let img = synth_image(1, 30, 26, Pattern::Noise, width as u64);
+            let want = staged_reference(&img, std::slice::from_ref(&k), Variant::Simd);
+            let got = run_chain_seq(&img, std::slice::from_ref(&k), Variant::Simd);
+            if width == 5 {
+                let d = got.max_abs_diff(&want);
+                assert!(d <= 1e-6, "w5: {d}");
+            } else {
+                assert_eq!(got, want, "w{width}");
+            }
+        }
+    }
+}

@@ -41,9 +41,13 @@
 //! pass that keeps the horizontal intermediate in an O(width×cols)
 //! per-worker ring instead of a full plane, halving memory traffic on
 //! the bandwidth-bound shapes that dominate at scale (enabled per plan
-//! via `PlanBuilder::fuse`, per run via `--fuse`).
+//! via `PlanBuilder::fuse`, per run via `--fuse`). The [`chain`] module
+//! generalises that ring to N stages: a whole filter chain streams
+//! row-by-row through cascaded rings, crossing memory twice instead of
+//! 2k times (driven by `plan::FilterGraph`).
 
 pub mod band;
+pub mod chain;
 pub mod plane;
 pub mod tile;
 

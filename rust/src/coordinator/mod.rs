@@ -35,6 +35,6 @@ mod router;
 mod server;
 
 pub use queue::{AdmissionQueue, Batch, Pop, PopBatch, QueueCounters, Rejected};
-pub use request::{ConvRequest, ConvResponse};
+pub use request::{ConvRequest, ConvResponse, GraphSpec};
 pub use router::{Backend, RoutePolicy};
 pub use server::{Coordinator, CoordinatorStats, ReplyReceiver};

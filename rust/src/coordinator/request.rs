@@ -1,13 +1,99 @@
 //! Request/response types of the serving API.
 
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
 use std::time::Duration;
 
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::models::Layout;
-use crate::plan::{KernelSpec, TileSpec};
+use crate::plan::{FilterGraph, KernelSpec, TileSpec};
+use crate::util::error::Result;
 
 use super::router::Backend;
+
+/// A multi-stage filter chain carried by one request: Gaussian stages
+/// applied in order, streamed through the row-ring cascade by default.
+/// The whole chain is one admission-queue entry with one deadline;
+/// executors cache one built [`FilterGraph`] per distinct
+/// [`GraphSpec::digest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    /// stages in application order (each feeds the next)
+    pub stages: Vec<KernelSpec>,
+    /// `false` materialises every inter-stage plane (the differential /
+    /// traffic baseline); `true` streams every eligible edge
+    pub streamed: bool,
+}
+
+impl GraphSpec {
+    /// A streamed linear chain of Gaussian stages.
+    pub fn chain(stages: Vec<KernelSpec>) -> Self {
+        Self { stages, streamed: true }
+    }
+
+    pub fn materialized(mut self) -> Self {
+        self.streamed = false;
+        self
+    }
+
+    /// Intake validation: non-empty, every stage an odd positive-sigma
+    /// Gaussian (same rules as single-kernel requests).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.stages.is_empty(), "graph request has no stages");
+        for spec in &self.stages {
+            spec.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Inter-stage edges a built chain streams: all of them when
+    /// `streamed` (a linear chain resolves to one cascade segment —
+    /// matches [`FilterGraph::streamed_edges`], since demotions only
+    /// arise from fan-out, which a linear spec cannot express), none
+    /// otherwise. Feeds the coordinator's `stages_fused` counter.
+    pub fn streamed_edges(&self) -> usize {
+        if self.streamed {
+            self.stages.len().saturating_sub(1)
+        } else {
+            0
+        }
+    }
+
+    /// Stable identity of the chain (stage widths/sigmas + policy) —
+    /// the graph-shaped component of the executor `PlanKey`, so equal
+    /// chains batch together and cache one built graph.
+    pub fn digest(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.streamed.hash(&mut h);
+        for spec in &self.stages {
+            spec.cache_key().hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Build the executable [`FilterGraph`] for a concrete shape: a
+    /// linear chain `s0 -> s1 -> ...`, every edge streamed or every
+    /// edge materialised per the spec.
+    pub fn build(
+        &self,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        variant: Variant,
+        layout: Layout,
+    ) -> Result<FilterGraph> {
+        let mut b =
+            FilterGraph::builder().shape(planes, rows, cols).variant(variant).layout(layout);
+        for (i, spec) in self.stages.iter().enumerate() {
+            b = b.stage(&format!("s{i}"), *spec);
+            if !self.streamed {
+                b = b.materialized();
+            }
+        }
+        b.build()
+    }
+}
 
 /// One convolution job.
 #[derive(Debug, Clone)]
@@ -44,6 +130,13 @@ pub struct ConvRequest {
     /// and again at dequeue — a lapsed request is refused with a
     /// structured `DeadlineExceeded` error instead of executing.
     pub deadline: Option<Duration>,
+    /// `Some` turns this into a multi-stage graph request: the chain is
+    /// served end-to-end as this one queue entry under this one
+    /// deadline, and `kernel`/`tile`/`fuse` are ignored in favour of
+    /// the chain's own stages and edge policies. Graph requests run on
+    /// the native backends (PJRT executes single plans only, so routing
+    /// falls back rather than refusing).
+    pub graph: Option<GraphSpec>,
 }
 
 impl ConvRequest {
@@ -60,6 +153,7 @@ impl ConvRequest {
             tile: None,
             fuse: None,
             deadline: None,
+            graph: None,
         }
     }
 
@@ -107,6 +201,13 @@ impl ConvRequest {
     /// coordinator's `--deadline-ms` default).
     pub fn with_deadline(mut self, ttl: Duration) -> Self {
         self.deadline = Some(ttl);
+        self
+    }
+
+    /// Serve a multi-stage filter chain instead of a single kernel;
+    /// validated at intake.
+    pub fn with_graph(mut self, graph: GraphSpec) -> Self {
+        self.graph = Some(graph);
         self
     }
 }
@@ -175,6 +276,31 @@ mod tests {
         assert!(r.tile.is_none());
         assert!(r.fuse.is_none());
         assert!(r.deadline.is_none());
+        assert!(r.graph.is_none());
         assert_eq!(r.algorithm, Algorithm::TwoPass);
+    }
+
+    #[test]
+    fn graph_spec_digest_and_validation() {
+        let spec = GraphSpec::chain(vec![KernelSpec::new(9, 1.8), KernelSpec::new(5, 1.0)]);
+        spec.validate().unwrap();
+        assert_eq!(spec.digest(), spec.clone().digest(), "deterministic");
+        assert_ne!(
+            spec.digest(),
+            spec.clone().materialized().digest(),
+            "policy is part of the identity"
+        );
+        assert_ne!(
+            spec.digest(),
+            GraphSpec::chain(vec![KernelSpec::new(5, 1.0), KernelSpec::new(9, 1.8)]).digest(),
+            "stage order is part of the identity"
+        );
+        assert!(GraphSpec::chain(vec![]).validate().is_err());
+        assert!(GraphSpec::chain(vec![KernelSpec::new(4, 1.0)]).validate().is_err());
+        let g = spec.build(1, 20, 20, Variant::Simd, Layout::PerPlane).unwrap();
+        assert_eq!(g.stages().len(), 2);
+        assert_eq!(g.streamed_edges(), 1);
+        let m = spec.materialized().build(1, 20, 20, Variant::Simd, Layout::PerPlane).unwrap();
+        assert_eq!(m.streamed_edges(), 0);
     }
 }

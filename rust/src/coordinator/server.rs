@@ -51,7 +51,7 @@ use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::metrics::SampleSet;
 use crate::models::{ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel};
-use crate::plan::{ConvPlan, KernelSpec, ScratchArena, TileSpec};
+use crate::plan::{ConvPlan, FilterGraph, KernelSpec, ScratchArena, TileSpec};
 use crate::runtime::{Manifest, PjrtHandle};
 
 use super::affinity;
@@ -118,6 +118,13 @@ pub struct CoordinatorStats {
     /// for this shape's groups): config defaults applied, i.e. the
     /// empirical-sweep fallback path
     pub plans_default: u64,
+    /// multi-stage graph requests served end-to-end (each was one
+    /// admission-queue entry under one deadline; also counted in
+    /// `served`)
+    pub graphs_served: u64,
+    /// inter-stage edges executed streamed (row-ring handoffs instead
+    /// of materialised intermediate planes), summed over served graphs
+    pub stages_fused: u64,
 }
 
 impl CoordinatorStats {
@@ -142,6 +149,8 @@ impl CoordinatorStats {
         self.plans_predicted += other.plans_predicted;
         self.plans_swept += other.plans_swept;
         self.plans_default += other.plans_default;
+        self.graphs_served += other.graphs_served;
+        self.stages_fused += other.stages_fused;
     }
 }
 
@@ -211,16 +220,29 @@ struct PlanKey {
     tile: Option<(usize, usize)>,
     /// two-pass fusion (always false for single-pass algorithms)
     fused: bool,
+    /// `Some(digest)` for multi-stage graph requests — the chain's
+    /// [`super::request::GraphSpec::digest`] — so equal chains batch
+    /// together and cache one built [`FilterGraph`]; `kernel`/`tile`/
+    /// `fused` are normalised (default/`None`/`false`) for graph keys
+    graph: Option<u64>,
+}
+
+/// What an executor caches per [`PlanKey`]: a single convolution plan,
+/// or a whole built filter graph for multi-stage requests.
+enum CachedExec {
+    Single(ConvPlan),
+    Graph(FilterGraph),
 }
 
 /// Per-executor plan cache, bounded at [`PLAN_CACHE_MAX`] with
 /// single-entry LRU eviction: inserting past the cap removes exactly the
 /// least-recently-used plan, so a hot shape's plan survives arbitrary
 /// cold-shape churn (the old clear-everything eviction rebuilt every hot
-/// plan after each burst).
+/// plan after each burst). Graph entries live in the same cache under
+/// the same policy — one graph-shaped key, one validated `FilterGraph`.
 struct PlanCache {
-    /// key → (plan, last-used tick)
-    plans: HashMap<PlanKey, (ConvPlan, u64)>,
+    /// key → (plan or graph, last-used tick)
+    plans: HashMap<PlanKey, (CachedExec, u64)>,
     tick: u64,
     /// plans built so far (monotone; mirrored into `plans_built`)
     built: u64,
@@ -240,13 +262,13 @@ impl PlanCache {
         self.plans.len()
     }
 
-    /// The plan for `key`, building (and caching) it on a miss. Every
-    /// hit refreshes the entry's recency.
+    /// The plan (or graph) for `key`, building (and caching) it on a
+    /// miss. Every hit refreshes the entry's recency.
     fn get_or_build(
         &mut self,
         key: &PlanKey,
-        build: impl FnOnce() -> Result<ConvPlan>,
-    ) -> Result<&ConvPlan> {
+        build: impl FnOnce() -> Result<CachedExec>,
+    ) -> Result<&CachedExec> {
         self.tick += 1;
         let tick = self.tick;
         if !self.plans.contains_key(key) {
@@ -427,10 +449,14 @@ impl Coordinator {
             (None, None) => inner.policy.route(req.image.rows, inner.next_seq()),
         };
         // PJRT can only serve shapes it has artifacts for (and only the
-        // kernel the artifacts were lowered with); fall back to the
-        // adaptive native choice otherwise
+        // kernel the artifacts were lowered with) and executes single
+        // plans only, so graph requests fall back like unservable
+        // shapes; the adaptive native choice takes over
+        let graph_digest = req.graph.as_ref().map(|g| g.digest());
         let mut pjrt_fell_back = false;
-        if backend == Backend::Pjrt && !pjrt_can_serve(inner, &req, layout) {
+        if backend == Backend::Pjrt
+            && (graph_digest.is_some() || !pjrt_can_serve(inner, &req, layout))
+        {
             pjrt_fell_back = true;
             let (b, l) = RoutePolicy::paper_default().route(req.image.rows, 0);
             backend = b;
@@ -439,8 +465,10 @@ impl Coordinator {
         // Tile/fusion resolve after the backend so the tuning tier can
         // key on the resolved execution model. Precedence: a request's
         // explicit tile/fuse always wins; then a swept or predicted
-        // tuning decision; then the configured defaults.
-        let tuned = if req.tile.is_none() && req.fuse.is_none() {
+        // tuning decision; then the configured defaults. Graph requests
+        // skip all of it — the chain's own stages and edge policies are
+        // the plan, so single-plan knobs normalise out of the key.
+        let tuned = if graph_digest.is_none() && req.tile.is_none() && req.fuse.is_none() {
             self.tuned_decision(&req, backend, &kernel)
         } else {
             None
@@ -452,7 +480,8 @@ impl Coordinator {
         // fusion only applies to the two-pass algorithm; a fused serving
         // default must not refuse single-pass traffic, so it is silently
         // inapplicable there rather than a build error
-        let fuse = fuse && req.algorithm == Algorithm::TwoPass;
+        let fuse = fuse && req.algorithm == Algorithm::TwoPass && graph_digest.is_none();
+        let tile = if graph_digest.is_some() { None } else { tile };
         let key = PlanKey {
             algorithm: req.algorithm,
             variant: req.variant,
@@ -463,6 +492,7 @@ impl Coordinator {
             kernel: kernel.cache_key(),
             tile: tile.map(|t| t.cache_key()),
             fused: fuse,
+            graph: graph_digest,
         };
         let (reply, rx) = channel();
         let job = Job {
@@ -787,6 +817,10 @@ fn serve_batch(
                 for (job, q) in live.iter().zip(&queue_ms) {
                     st.queue_ms.push(*q);
                     st.service_ms.entry(job.backend.label()).or_default().push(service_each);
+                    if let Some(g) = &job.req.graph {
+                        st.graphs_served += 1;
+                        st.stages_fused += g.streamed_edges() as u64;
+                    }
                 }
             }
             Err(_) => st.errors += n as u64,
@@ -846,8 +880,20 @@ fn execute_batch_jobs(
                 Backend::NativeOpenCl => &inner.opencl,
                 _ => &inner.gprm,
             };
-            let plan = cache.get_or_build(&head.key, || {
-                ConvPlan::builder()
+            let exec = cache.get_or_build(&head.key, || match &head.req.graph {
+                Some(spec) => {
+                    spec.validate().context("invalid request graph")?;
+                    spec.build(
+                        head.req.image.planes,
+                        head.req.image.rows,
+                        head.req.image.cols,
+                        head.req.variant,
+                        head.layout,
+                    )
+                    .context("invalid request graph")
+                    .map(CachedExec::Graph)
+                }
+                None => ConvPlan::builder()
                     .algorithm(head.req.algorithm)
                     .variant(head.req.variant)
                     .layout(head.layout)
@@ -857,8 +903,23 @@ fn execute_batch_jobs(
                     .shape(head.req.image.planes, head.req.image.rows, head.req.image.cols)
                     .build()
                     .context("invalid request plan")
+                    .map(CachedExec::Single),
             })?;
-            let images = plan.execute_batch(Some(model), jobs.iter().map(|j| &j.req.image), arena)?;
+            let images = match exec {
+                CachedExec::Single(plan) => {
+                    plan.execute_batch(Some(model), jobs.iter().map(|j| &j.req.image), arena)?
+                }
+                // a graph member is one deadline-scoped queue entry whose
+                // whole chain executes in a single serve; members share
+                // the cached graph and the warm arena
+                CachedExec::Graph(graph) => {
+                    let mut out = Vec::with_capacity(jobs.len());
+                    for j in jobs {
+                        out.push(graph.execute_single(Some(model), &j.req.image, arena)?);
+                    }
+                    out
+                }
+            };
             if arena.pooled() > ARENA_POOL_MAX {
                 arena.clear();
             }
@@ -928,6 +989,49 @@ mod tests {
         assert_eq!(resp.image, want);
         assert_eq!(resp.backend, Backend::NativeOpenMp);
         assert!(resp.service_ms >= 0.0);
+    }
+
+    #[test]
+    fn serves_graph_request_end_to_end() {
+        use crate::coordinator::GraphSpec;
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 2, false)
+            .unwrap();
+        let img = synth_image(2, 30, 26, Pattern::Noise, 8);
+        let spec = GraphSpec::chain(vec![KernelSpec::new(3, 0.8), KernelSpec::new(7, 1.5)]);
+        // oracle: the same stages, one materialised plan at a time
+        let mut arena = ScratchArena::new();
+        let want = spec
+            .build(2, 30, 26, Variant::Simd, Layout::PerPlane)
+            .unwrap()
+            .execute_materialized(None, &img, &mut arena)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let resp = c.serve(ConvRequest::new(1, img.clone()).with_graph(spec.clone())).unwrap();
+        assert_eq!(resp.image, want, "streamed chain serving is bitwise for generic widths");
+        assert_eq!(resp.batch_len, 1, "one chain = one queue entry");
+        // a second identical chain hits the cached FilterGraph
+        let resp2 = c.serve(ConvRequest::new(2, img).with_graph(spec)).unwrap();
+        assert_eq!(resp2.image, want);
+        let st = c.stats();
+        assert_eq!(st.served, 2);
+        assert_eq!(st.graphs_served, 2);
+        assert_eq!(st.stages_fused, 2, "one streamed edge per chain");
+        assert_eq!(st.plans_built, 1, "the graph was built once and cached");
+        assert_eq!(st.errors, 0);
+    }
+
+    #[test]
+    fn graph_request_with_bad_stage_is_a_structured_error() {
+        use crate::coordinator::GraphSpec;
+        let c = Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+            .unwrap();
+        let img = synth_image(1, 16, 16, Pattern::Noise, 9);
+        let spec = GraphSpec::chain(vec![KernelSpec::new(4, 1.0)]); // even width
+        let e = c.serve(ConvRequest::new(1, img).with_graph(spec)).unwrap_err();
+        assert!(format!("{e:#}").contains("invalid request graph"), "{e:#}");
+        assert_eq!(c.stats().errors, 1);
+        assert_eq!(c.stats().graphs_served, 0);
     }
 
     #[test]
@@ -1460,15 +1564,16 @@ mod tests {
             kernel: KernelSpec::new(5, 1.0).cache_key(),
             tile: None,
             fused: false,
+            graph: None,
         };
         let hot = key(1000);
-        cache.get_or_build(&hot, || Ok(build(1000))).unwrap();
+        cache.get_or_build(&hot, || Ok(CachedExec::Single(build(1000)))).unwrap();
         // cold churn well past the cap, re-touching the hot key so its
         // recency keeps it off the LRU end
         let churn = PLAN_CACHE_MAX + 8;
         for r in 0..churn {
-            cache.get_or_build(&key(8 + r), || Ok(build(8 + r))).unwrap();
-            cache.get_or_build(&hot, || Ok(build(1000))).unwrap();
+            cache.get_or_build(&key(8 + r), || Ok(CachedExec::Single(build(8 + r)))).unwrap();
+            cache.get_or_build(&hot, || Ok(CachedExec::Single(build(1000)))).unwrap();
         }
         assert_eq!(cache.len(), PLAN_CACHE_MAX, "size pinned at the cap");
         assert_eq!(

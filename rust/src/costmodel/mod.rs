@@ -215,6 +215,31 @@ impl CostModel {
         Some(g.fit.as_ref()?.predict(&features(planes, rows, cols, kernel_width, units)))
     }
 
+    /// Predicted milliseconds for a streamed k-stage filter chain: the
+    /// sum of per-stage fused untiled fits, since a streamed segment
+    /// executes each stage as a fused row-ring pass over the same
+    /// shape. `None` when any stage's group is missing or fails the R²
+    /// gate — a chain prediction is only as trustworthy as its
+    /// worst-fitted stage.
+    pub fn predict_chain_ms(
+        &self,
+        model: &str,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        widths: &[usize],
+        workers: usize,
+    ) -> Option<f64> {
+        if widths.is_empty() {
+            return None;
+        }
+        let mut total = 0.0;
+        for &w in widths {
+            total += self.predict_ms(model, true, None, planes, rows, cols, w, workers)?;
+        }
+        Some(total)
+    }
+
     /// The predicted-cheapest candidate for a shape, over the same
     /// candidate set the empirical sweep uses (baseline always index
     /// 0). `None` — fall back to sweeping — when the untiled baseline
@@ -637,6 +662,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn chain_prediction_is_the_sum_of_stage_fits() {
+        let cm = CostModel::fit(synthetic_samples("OpenMP"), 0.8);
+        let widths = [3usize, 5, 7];
+        let want: f64 = widths
+            .iter()
+            .map(|&w| cm.predict_ms("OpenMP", true, None, 3, 100, 100, w, 4).unwrap())
+            .sum();
+        let got = cm.predict_chain_ms("OpenMP", 3, 100, 100, &widths, 4).expect("usable fits");
+        assert_eq!(got.to_bits(), want.to_bits(), "chain = sum of fused stage fits");
+        // any unpredictable stage poisons the whole chain prediction
+        assert!(cm.predict_chain_ms("NoSuchModel", 3, 100, 100, &widths, 4).is_none());
+        assert!(cm.predict_chain_ms("OpenMP", 3, 100, 100, &[], 4).is_none());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //!   simulate     regenerate a paper exhibit from the Xeon Phi cost model
 //!   measure      run the same exhibit measured on this host
 //!   tune         sweep tile shapes + agglomeration factors per model
+//!   graph        run a multi-stage filter chain (streamed vs materialized)
 //!   validate     cross-check PJRT artifacts vs the native engines
 //!   serve        start the coordinator and push a synthetic workload
 //!   info         artifact manifest + configuration summary
@@ -15,6 +16,9 @@
 //!   phi-conv tune --sizes 288,576 --reps 5
 //!   phi-conv tune --sizes 96,192,288 --save BENCH_costmodel.json
 //!   phi-conv tune --load BENCH_costmodel.json --predict --sizes 144,432
+//!   phi-conv graph --stages blur:9,sharpen:5,edge:3 --explain
+//!   phi-conv graph --exhibit dog                     # fan-out exhibit
+//!   phi-conv graph --stages blur:5,blur:9 --sweep    # per-edge policies
 //!   phi-conv validate
 //!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
 //!   phi-conv info
@@ -25,8 +29,9 @@ use phi_conv::config::{standard_cli, RunConfig};
 use phi_conv::conv::{convolve_image, Algorithm, Variant};
 use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
 use phi_conv::harness;
-use phi_conv::image::synth_image;
-use phi_conv::metrics::SampleSet;
+use phi_conv::image::{gaussian_kernel, synth_image, PlanarImage};
+use phi_conv::metrics::{time_reps, SampleSet, Table};
+use phi_conv::plan::{FilterGraph, KernelSpec, ScratchArena};
 use phi_conv::runtime::Manifest;
 use phi_conv::util::prng::Prng;
 
@@ -40,7 +45,11 @@ fn main() {
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cli = standard_cli("phi-conv", "2D image convolution under three parallel execution models (Tousimojarad et al. 2017 reproduction)")
-        .opt("exhibit", "all", "fig1..fig4|table1|table2|threads|ablations|tiling|fused|all")
+        .opt(
+            "exhibit",
+            "all",
+            "fig1..fig4|table1|table2|threads|ablations|tiling|fused|all (graph: unsharp|dog)",
+        )
         .opt("format", "text", "text|markdown|csv|json")
         .opt("requests", "24", "serve: number of requests")
         .opt("executors", "2", "serve: executor threads")
@@ -49,6 +58,10 @@ fn run() -> Result<()> {
         .opt("save", "", "tune: write samples + fitted cost model to this JSON path")
         .opt("load", "", "tune/serve: seed from a saved cost model JSON")
         .flag("predict", "tune: print predicted-vs-measured error for --sizes (needs --load)")
+        .opt("stages", "", "graph: kind:width chain, e.g. blur:9,sharpen:5,edge:3")
+        .flag("explain", "graph: print the per-stage traffic breakdown")
+        .flag("check", "graph: fail unless streamed == materialized bitwise")
+        .flag("sweep", "graph: sweep per-edge streaming policies (Gaussian stages only)")
         .parse(args)?;
 
     let cfg = RunConfig::resolve(&cli)?;
@@ -76,6 +89,15 @@ fn run() -> Result<()> {
             cli.str_of("load")?,
             cli.is_set("predict"),
         )?,
+        "graph" => graph_cmd(
+            &cfg,
+            cli.str_of("stages")?,
+            cli.str_of("exhibit")?,
+            cli.str_of("format")?,
+            cli.is_set("explain"),
+            cli.is_set("check"),
+            cli.is_set("sweep"),
+        )?,
         "validate" => validate(&cfg)?,
         "serve" => serve(
             &cfg,
@@ -87,7 +109,9 @@ fn run() -> Result<()> {
         )?,
         "info" => info(&cfg)?,
         _ => {
-            println!("usage: phi-conv <simulate|measure|tune|validate|serve|info> [options]");
+            println!(
+                "usage: phi-conv <simulate|measure|tune|graph|validate|serve|info> [options]"
+            );
             println!("       phi-conv --help        for the option list");
         }
     }
@@ -160,6 +184,295 @@ fn tune(cfg: &RunConfig, format: &str, save: &str, load: &str, predict: bool) ->
             model.samples().len(),
             model.groups().len()
         );
+    }
+    Ok(())
+}
+
+/// Multi-stage filter chains ([`FilterGraph`]): build the requested
+/// `--stages` chain (or a canned `--exhibit`), run it with every
+/// eligible edge streamed and again with every edge materialised, and
+/// report median times + estimated memory traffic for both. `--check`
+/// turns any streamed-vs-materialised mismatch into a hard error (the
+/// verify.sh smoke), `--explain` adds the per-stage traffic table, and
+/// `--sweep` measures every per-edge policy candidate instead.
+fn graph_cmd(
+    cfg: &RunConfig,
+    stages: &str,
+    exhibit: &str,
+    format: &str,
+    explain: bool,
+    check: bool,
+    sweep: bool,
+) -> Result<()> {
+    if !stages.is_empty() {
+        let parsed = parse_stages(stages)?;
+        if sweep {
+            return sweep_stages(cfg, &parsed, format);
+        }
+        for &size in &cfg.sizes {
+            let streamed = build_chain(cfg, size, &parsed, true)?;
+            let twin = build_chain(cfg, size, &parsed, false)?;
+            run_graph_pair(cfg, stages, &streamed, &twin, format, explain, check)?;
+        }
+        return Ok(());
+    }
+    ensure!(!sweep, "--sweep needs --stages (a Gaussian chain to sweep)");
+    let which: &[&str] = match exhibit {
+        "all" => &["unsharp", "dog"],
+        "unsharp" => &["unsharp"],
+        "dog" => &["dog"],
+        other => bail!("unknown graph exhibit {other:?} (unsharp|dog|all; or pass --stages)"),
+    };
+    for name in which {
+        graph_exhibit(cfg, name, format, explain, check)?;
+    }
+    Ok(())
+}
+
+/// `--stages blur:9,sharpen:5,edge:3` → (kind, width) pairs.
+fn parse_stages(s: &str) -> Result<Vec<(String, usize)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (kind, width) = part.split_once(':').context(format!(
+            "stage {part:?} is not kind:width (e.g. blur:9)"
+        ))?;
+        let width: usize = width
+            .trim()
+            .parse()
+            .ok()
+            .context(format!("stage {part:?} has a non-numeric width"))?;
+        out.push((kind.trim().to_string(), width));
+    }
+    ensure!(!out.is_empty(), "--stages is empty");
+    Ok(out)
+}
+
+/// Default Gaussian scale for a named stage: the kernel covers ±2.5σ.
+fn stage_sigma(width: usize) -> f64 {
+    (width as f64 / 5.0).max(0.5)
+}
+
+/// Separable taps for a named stage kind at the given odd width.
+fn stage_taps(kind: &str, width: usize) -> Result<Vec<f32>> {
+    ensure!(
+        width % 2 == 1 && width >= 3,
+        "stage width must be odd and >= 3, got {width}"
+    );
+    let g = gaussian_kernel(width, stage_sigma(width));
+    let c = width / 2;
+    Ok(match kind {
+        "blur" | "gauss" => g,
+        "sharpen" => {
+            // 2·identity − blur: boosts what the blur removes
+            let mut t: Vec<f32> = g.iter().map(|v| -v).collect();
+            t[c] += 2.0;
+            t
+        }
+        "edge" => {
+            // derivative-of-Gaussian, normalised to Σ|t| = 1
+            let mut t: Vec<f32> =
+                g.iter().enumerate().map(|(i, v)| (i as f32 - c as f32) * v).collect();
+            let norm: f32 = t.iter().map(|v| v.abs()).sum();
+            ensure!(norm > 0.0, "degenerate edge stage at width {width}");
+            for v in &mut t {
+                *v /= norm;
+            }
+            t
+        }
+        other => bail!("unknown stage kind {other:?} (blur|gauss|sharpen|edge)"),
+    })
+}
+
+/// A linear chain over the configured planes at `size`×`size`, every
+/// eligible edge streamed or every edge materialised.
+fn build_chain(
+    cfg: &RunConfig,
+    size: usize,
+    stages: &[(String, usize)],
+    streamed: bool,
+) -> Result<FilterGraph> {
+    let mut b = FilterGraph::builder().shape(cfg.planes, size, size);
+    for (i, (kind, width)) in stages.iter().enumerate() {
+        b = b.stage_taps(&format!("{kind}{i}"), stage_taps(kind, *width)?);
+        if !streamed {
+            b = b.materialized();
+        }
+    }
+    b.build()
+}
+
+/// `--sweep`: measure every per-edge policy candidate. Needs Gaussian
+/// stages — the policy cost depends on stage widths (halos), which
+/// blur/gauss stages cover.
+fn sweep_stages(cfg: &RunConfig, stages: &[(String, usize)], format: &str) -> Result<()> {
+    let mut specs = Vec::with_capacity(stages.len());
+    for (kind, width) in stages {
+        ensure!(
+            kind == "blur" || kind == "gauss",
+            "--sweep accepts Gaussian stages only, got {kind:?}"
+        );
+        specs.push(KernelSpec::new(*width, stage_sigma(*width)));
+    }
+    for &size in &cfg.sizes {
+        let t = phi_conv::autotune::sweep_chain(cfg, size, &specs)?;
+        print_table(&t, format);
+    }
+    Ok(())
+}
+
+/// Time a graph against its all-materialised twin on the synthetic
+/// image, differential-check the outputs, and print the comparison.
+/// Returns the streamed outputs so exhibits can post-process them.
+fn run_graph_pair(
+    cfg: &RunConfig,
+    title: &str,
+    streamed: &FilterGraph,
+    twin: &FilterGraph,
+    format: &str,
+    explain: bool,
+    check: bool,
+) -> Result<Vec<PlanarImage>> {
+    let (planes, rows, cols) = streamed.shape();
+    let img = synth_image(planes, rows, cols, cfg.pattern, cfg.seed);
+    let model = phi_conv::models::OpenMpModel::new(cfg.threads);
+    let mut arena = ScratchArena::new();
+
+    // first runs propagate build/shape errors before timing starts
+    let mut got = streamed.execute_on(&model, &img, &mut arena)?;
+    let mut want = twin.execute_on(&model, &img, &mut arena)?;
+    let t_s = time_reps(
+        || got = streamed.execute_on(&model, &img, &mut arena).expect("streamed graph"),
+        cfg.warmup,
+        cfg.reps,
+    )
+    .median();
+    let t_m = time_reps(
+        || want = twin.execute_on(&model, &img, &mut arena).expect("materialized graph"),
+        cfg.warmup,
+        cfg.reps,
+    )
+    .median();
+
+    let mut max_diff = 0f32;
+    let mut bitwise = true;
+    for (a, b) in got.iter().zip(&want) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            max_diff = max_diff.max((x - y).abs());
+            bitwise &= x.to_bits() == y.to_bits();
+        }
+    }
+    ensure!(
+        max_diff < 1e-6,
+        "{title}: streamed vs materialized diverged by {max_diff:e}"
+    );
+    if check {
+        ensure!(
+            bitwise,
+            "{title}: streamed vs materialized not bitwise (max diff {max_diff:e})"
+        );
+    }
+
+    let traffic = streamed.traffic_estimate();
+    let mut t = Table::new(
+        format!(
+            "FilterGraph {title}: {planes}x{rows}x{cols}, {} stages, {} streamed edges, {} threads",
+            streamed.stages().len(),
+            streamed.streamed_edges(),
+            cfg.threads
+        ),
+        &["Mode", "ms (median)", "est MiB moved", "agreement"],
+    );
+    t.row(vec![
+        "streamed".to_string(),
+        format!("{t_s:.3}"),
+        format!("{:.2}", traffic.total.total_mb()),
+        if bitwise { "bitwise".to_string() } else { format!("{max_diff:.1e}") },
+    ]);
+    t.row(vec![
+        "materialized".to_string(),
+        format!("{t_m:.3}"),
+        format!("{:.2}", traffic.materialized_total.total_mb()),
+        "baseline".to_string(),
+    ]);
+    print_table(&t, format);
+    if explain {
+        print_table(&streamed.explain(), format);
+    }
+    Ok(got)
+}
+
+/// Canned graph exhibits.
+///
+/// * `unsharp` — two cascaded blurs (effective σ = √(σ1²+σ2²)) feed an
+///   unsharp mask applied afterwards: out = img + 0.6·(img − blurred).
+/// * `dog` — difference of Gaussians with the wider blur expressed as
+///   a cascade over the narrow one; the narrow blur is both consumed
+///   and a graph output, so the builder demotes that edge to
+///   materialised (visible under --explain).
+fn graph_exhibit(
+    cfg: &RunConfig,
+    which: &str,
+    format: &str,
+    explain: bool,
+    check: bool,
+) -> Result<()> {
+    let size = *cfg.sizes.last().context("no sizes configured")?;
+    let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+    match which {
+        "unsharp" => {
+            let chain = [("blur".to_string(), 5), ("blur".to_string(), 9)];
+            let streamed = build_chain(cfg, size, &chain, true)?;
+            let twin = build_chain(cfg, size, &chain, false)?;
+            let outs =
+                run_graph_pair(cfg, "unsharp mask", &streamed, &twin, format, explain, check)?;
+            let blurred = outs.last().context("unsharp graph has one output")?;
+            let amount = 0.6f32;
+            let out: Vec<f32> = img
+                .data
+                .iter()
+                .zip(&blurred.data)
+                .map(|(x, b)| x + amount * (x - b))
+                .collect();
+            let (lo, hi) =
+                out.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+            println!("unsharp mask (amount {amount}): output range [{lo:.3}, {hi:.3}]");
+        }
+        "dog" => {
+            let streamed = FilterGraph::builder()
+                .shape(cfg.planes, size, size)
+                .stage_taps("narrow", stage_taps("blur", 5)?)
+                .stage_taps("widen", stage_taps("blur", 9)?)
+                .output("narrow")
+                .output("widen")
+                .build()?;
+            let twin = FilterGraph::builder()
+                .shape(cfg.planes, size, size)
+                .stage_taps("narrow", stage_taps("blur", 5)?)
+                .materialized()
+                .stage_taps("widen", stage_taps("blur", 9)?)
+                .materialized()
+                .output("narrow")
+                .output("widen")
+                .build()?;
+            let outs = run_graph_pair(
+                cfg,
+                "difference of Gaussians",
+                &streamed,
+                &twin,
+                format,
+                explain,
+                check,
+            )?;
+            let dog: f64 = outs[0]
+                .data
+                .iter()
+                .zip(&outs[1].data)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / outs[0].data.len() as f64;
+            println!("difference of Gaussians: mean band-pass energy {dog:.4}");
+        }
+        other => bail!("unknown graph exhibit {other:?}"),
     }
     Ok(())
 }

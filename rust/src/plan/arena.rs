@@ -87,6 +87,18 @@ impl ScratchArena {
         self.put(data);
         self.ring_indices.push(free);
     }
+
+    /// Graph-scoped ring lease for a `FilterGraph` execution: one slot
+    /// per concurrent band job, each sized for the *cascade* scratch of
+    /// the graph's longest streamed segment
+    /// (`conv::chain::chain_scratch_len`) rather than one pass's ring.
+    /// Identical pooling to [`ScratchArena::take_rings`] — the alias
+    /// exists so graph executions read as what they are and the
+    /// no-growth tests can name the lease they police. Return with
+    /// [`ScratchArena::put_rings`].
+    pub fn take_graph_rings(&mut self, slots: usize, slot_len: usize) -> RingLease {
+        self.take_rings(slots, slot_len)
+    }
 }
 
 /// A pool of `slots` disjoint per-worker ring buffers carved out of one
@@ -248,6 +260,21 @@ mod tests {
             a.put_rings(lease);
         }
         assert_eq!(a.allocations(), 1, "steady state leases without allocating");
+    }
+
+    #[test]
+    fn graph_ring_lease_recycles_without_allocating() {
+        // graph-scoped leases (cascade-sized slots) pool exactly like
+        // single-pass ring leases: one backing allocation, ever
+        let mut a = ScratchArena::new();
+        let lease = a.take_graph_rings(3, 96);
+        assert_eq!(a.allocations(), 1);
+        a.put_rings(lease);
+        for _ in 0..20 {
+            let lease = a.take_graph_rings(3, 96);
+            a.put_rings(lease);
+        }
+        assert_eq!(a.allocations(), 1, "graph leases recycle through the same pools");
     }
 
     #[test]

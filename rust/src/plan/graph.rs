@@ -1,0 +1,980 @@
+//! `FilterGraph`: builder-validated DAGs of convolution stages with
+//! per-edge buffer policies.
+//!
+//! Real image services run *chains* — blur → sharpen → edge — not
+//! single convolutions. A [`FilterGraph`] is a DAG of two-pass
+//! [`ConvPlan`] stages wired by name through a [`GraphBuilder`], with
+//! one buffer-policy decision per inter-stage edge:
+//!
+//! * [`EdgePolicy::Streamed`] — the consumer ingests rows as the
+//!   producer retires them through the N-stage row-ring cascade
+//!   ([`crate::conv::chain`]); the intermediate plane never exists, so
+//!   a k-stage chain crosses memory twice instead of 2k times.
+//! * [`EdgePolicy::Materialized`] — the producer writes a full
+//!   intermediate plane first (fan-out join points and graph outputs
+//!   require this; the builder demotes their edges automatically).
+//!
+//! `build()` rejects empty graphs, duplicate or reserved stage names,
+//! unknown inputs, cycles (each stage reads one input, so a cycle is a
+//! leftover in Kahn's ordering), shape-mismatched edges (stages may
+//! pin the shape they expect with [`GraphBuilder::expect_shape`]), and
+//! every kernel/variant combination the [`ConvPlan`] builder refuses —
+//! streamed stages are separable two-pass by construction. Validation
+//! also resolves the graph into maximal streamed *segments*; execution
+//! runs each segment through [`crate::conv::chain::chain_band`] with a
+//! graph-scoped ring lease ([`ScratchArena::take_graph_rings`]) whose
+//! slot is sized for the longest segment.
+//!
+//! Differential oracle: [`FilterGraph::execute_materialized`] runs the
+//! same stages one plan at a time through full intermediate planes.
+//! Streamed and materialised execution agree bitwise for generic-width
+//! chains and within 1e-6 when width-5 stages take the unrolled fast
+//! path (`tests/graph.rs`, `tests/proptests.rs`).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use crate::util::error::{Context, Result};
+
+use crate::conv::chain::{chain_band, chain_scratch_len, ChainStage};
+use crate::conv::{Algorithm, Variant};
+use crate::image::PlanarImage;
+use crate::metrics::Table;
+use crate::models::pool::RowBands;
+use crate::models::{ExecutionModel, Layout};
+
+use super::arena::RingLease;
+use super::pipeline::Exec;
+use super::{ConvPlan, KernelSpec, ScratchArena, Traffic};
+
+/// The reserved input name: a stage reading `"source"` consumes the
+/// image the graph is executed on.
+pub const SOURCE: &str = "source";
+
+/// Buffer policy of one inter-stage edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgePolicy {
+    /// consume rows as the producer retires them (row-ring cascade)
+    Streamed,
+    /// materialise the producer's full plane first
+    Materialized,
+}
+
+impl EdgePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EdgePolicy::Streamed => "streamed",
+            EdgePolicy::Materialized => "materialized",
+        }
+    }
+}
+
+enum TapsSource {
+    Spec(KernelSpec),
+    Taps(Vec<f32>),
+}
+
+struct StageDecl {
+    name: String,
+    /// `None` = the graph source
+    input: Option<String>,
+    policy: EdgePolicy,
+    kernel: TapsSource,
+    variant: Variant,
+    expect_shape: Option<(usize, usize, usize)>,
+}
+
+/// Validating builder for [`FilterGraph`] — see the module docs for the
+/// rejection rules. Stages chain linearly by default (each new stage
+/// reads the previous one, the first reads the source); [`after`]
+/// rewires the last-added stage to any named producer, which is how
+/// fan-out graphs (difference-of-Gaussians) are declared.
+///
+/// [`after`]: GraphBuilder::after
+pub struct GraphBuilder {
+    shape: Option<(usize, usize, usize)>,
+    layout: Layout,
+    variant: Variant,
+    stages: Vec<StageDecl>,
+    outputs: Vec<String>,
+    /// first misuse of a last-stage modifier with no stages yet,
+    /// surfaced at `build()` (builder methods cannot fail early)
+    defer: Option<String>,
+}
+
+impl GraphBuilder {
+    fn new() -> Self {
+        Self {
+            shape: None,
+            layout: Layout::PerPlane,
+            variant: Variant::Simd,
+            stages: Vec::new(),
+            outputs: Vec::new(),
+            defer: None,
+        }
+    }
+
+    /// Image shape every edge of the graph carries.
+    pub fn shape(mut self, planes: usize, rows: usize, cols: usize) -> Self {
+        self.shape = Some((planes, rows, cols));
+        self
+    }
+
+    pub fn layout(mut self, layout: Layout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    /// Expression variant for subsequently added stages (default SIMD).
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    /// Add a stage with a Gaussian kernel spec. Its input defaults to
+    /// the previously added stage (the source for the first one) and
+    /// its incoming edge to [`EdgePolicy::Streamed`].
+    pub fn stage(self, name: &str, spec: KernelSpec) -> Self {
+        self.push_stage(name, TapsSource::Spec(spec))
+    }
+
+    /// Add a stage with explicit separable taps (odd length, validated
+    /// at `build()`).
+    pub fn stage_taps(self, name: &str, taps: Vec<f32>) -> Self {
+        self.push_stage(name, TapsSource::Taps(taps))
+    }
+
+    fn push_stage(mut self, name: &str, kernel: TapsSource) -> Self {
+        let input = self.stages.last().map(|s| s.name.clone());
+        self.stages.push(StageDecl {
+            name: name.to_string(),
+            input,
+            policy: EdgePolicy::Streamed,
+            kernel,
+            variant: self.variant,
+            expect_shape: None,
+        });
+        self
+    }
+
+    fn last_stage(&mut self, what: &str) -> Option<&mut StageDecl> {
+        if self.stages.is_empty() {
+            if self.defer.is_none() {
+                self.defer = Some(format!("{what} called before any stage was added"));
+            }
+            return None;
+        }
+        self.stages.last_mut()
+    }
+
+    /// Rewire the last-added stage to read `input` — another stage's
+    /// name, or [`SOURCE`]. Forward references resolve at `build()`.
+    pub fn after(mut self, input: &str) -> Self {
+        if let Some(s) = self.last_stage("after()") {
+            s.input = (input != SOURCE).then(|| input.to_string());
+        }
+        self
+    }
+
+    /// Buffer policy of the last-added stage's incoming edge.
+    pub fn policy(mut self, policy: EdgePolicy) -> Self {
+        if let Some(s) = self.last_stage("policy()") {
+            s.policy = policy;
+        }
+        self
+    }
+
+    /// Shorthand for `.policy(EdgePolicy::Materialized)`.
+    pub fn materialized(self) -> Self {
+        self.policy(EdgePolicy::Materialized)
+    }
+
+    /// Pin the shape the last-added stage expects its input edge to
+    /// carry; `build()` rejects the graph when it differs from the
+    /// graph shape (every edge carries the graph shape — convolution
+    /// stages are shape-preserving).
+    pub fn expect_shape(mut self, planes: usize, rows: usize, cols: usize) -> Self {
+        if let Some(s) = self.last_stage("expect_shape()") {
+            s.expect_shape = Some((planes, rows, cols));
+        }
+        self
+    }
+
+    /// Mark a stage as a graph output (defaults to every sink).
+    pub fn output(mut self, name: &str) -> Self {
+        self.outputs.push(name.to_string());
+        self
+    }
+
+    /// Validate the whole graph and resolve its execution structure.
+    pub fn build(self) -> Result<FilterGraph> {
+        if let Some(msg) = self.defer {
+            bail!("{msg}");
+        }
+        let (planes, rows, cols) = self
+            .shape
+            .ok_or_else(|| err!("graph needs a shape: call .shape(planes, rows, cols)"))?;
+        ensure!(
+            planes >= 1 && rows >= 1 && cols >= 1,
+            "graph shape must be non-empty, got {planes}x{rows}x{cols}"
+        );
+        ensure!(!self.stages.is_empty(), "graph must have at least one stage");
+        let n = self.stages.len();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            ensure!(!s.name.is_empty(), "stage {i} has an empty name");
+            ensure!(
+                s.name != SOURCE,
+                "{SOURCE:?} names the graph input and cannot name a stage"
+            );
+            ensure!(
+                index.insert(s.name.clone(), i).is_none(),
+                "duplicate stage name {:?}",
+                s.name
+            );
+        }
+        let mut input_of: Vec<Option<usize>> = Vec::with_capacity(n);
+        for (i, s) in self.stages.iter().enumerate() {
+            let inp = match &s.input {
+                None => None,
+                Some(name) => {
+                    let &p = index
+                        .get(name)
+                        .ok_or_else(|| err!("stage {:?} reads unknown input {:?}", s.name, name))?;
+                    ensure!(p != i, "stage {:?} reads itself — graphs must be acyclic", s.name);
+                    Some(p)
+                }
+            };
+            input_of.push(inp);
+        }
+        // Kahn's ordering; each stage has exactly one input edge, so
+        // any node never reaching in-degree 0 sits on a cycle
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, &inp) in input_of.iter().enumerate() {
+            if let Some(p) = inp {
+                consumers[p].push(i);
+            }
+        }
+        let mut topo = Vec::with_capacity(n);
+        let mut ready: Vec<usize> =
+            (0..n).rev().filter(|&i| input_of[i].is_none()).collect();
+        let mut seen = vec![false; n];
+        while let Some(x) = ready.pop() {
+            topo.push(x);
+            seen[x] = true;
+            for &c in consumers[x].iter().rev() {
+                ready.push(c);
+            }
+        }
+        if topo.len() != n {
+            let stuck = (0..n).find(|&i| !seen[i]).expect("some node is unreached");
+            bail!("graph has a cycle through stage {:?}", self.stages[stuck].name);
+        }
+        // shape-mismatched edges: every edge carries the graph shape
+        for s in &self.stages {
+            if let Some((ep, er, ec)) = s.expect_shape {
+                ensure!(
+                    (ep, er, ec) == (planes, rows, cols),
+                    "stage {:?} expects shape {ep}x{er}x{ec} on its input edge \
+                     but the graph carries {planes}x{rows}x{cols}",
+                    s.name
+                );
+            }
+        }
+        // outputs: explicit (deduplicated, validated) or every sink
+        let mut outputs: Vec<usize> = Vec::new();
+        if self.outputs.is_empty() {
+            outputs.extend((0..n).filter(|&i| consumers[i].is_empty()));
+        } else {
+            for name in &self.outputs {
+                let &i = index
+                    .get(name)
+                    .ok_or_else(|| err!("unknown output stage {:?}", name))?;
+                if !outputs.contains(&i) {
+                    outputs.push(i);
+                }
+            }
+        }
+        // build each stage's plan (fused two-pass: the materialised
+        // oracle and the per-stage traffic baseline both use it); the
+        // plan builder rejects even widths, naive two-pass, etc.
+        let mut names = Vec::with_capacity(n);
+        let mut plans = Vec::with_capacity(n);
+        let mut policies = Vec::with_capacity(n);
+        for s in self.stages {
+            let builder = ConvPlan::builder()
+                .algorithm(Algorithm::TwoPass)
+                .variant(s.variant)
+                .layout(self.layout)
+                .shape(planes, rows, cols)
+                .fuse(true);
+            let builder = match s.kernel {
+                TapsSource::Spec(spec) => builder.kernel(spec),
+                TapsSource::Taps(taps) => builder.kernel_taps(taps),
+            };
+            let plan =
+                builder.build().context(format!("building graph stage {:?}", s.name))?;
+            names.push(s.name);
+            plans.push(plan);
+            policies.push(s.policy);
+        }
+        // demote edges that cannot stream: consumers of fan-out
+        // producers and of output stages read a plane that must exist
+        // in full anyway
+        for p in 0..n {
+            if consumers[p].len() >= 2 || (!consumers[p].is_empty() && outputs.contains(&p)) {
+                for &c in &consumers[p] {
+                    policies[c] = EdgePolicy::Materialized;
+                }
+            }
+        }
+        // a stage materialises when its plane is needed in full
+        let materialize: Vec<bool> = (0..n)
+            .map(|x| {
+                outputs.contains(&x)
+                    || consumers[x].is_empty()
+                    || consumers[x].iter().any(|&c| policies[c] == EdgePolicy::Materialized)
+            })
+            .collect();
+        // maximal streamed segments, in topological order
+        let mut segments: Vec<Vec<usize>> = Vec::new();
+        let mut visited = vec![false; n];
+        for &x in &topo {
+            if visited[x] {
+                continue;
+            }
+            let mut seg = vec![x];
+            visited[x] = true;
+            loop {
+                let last = *seg.last().expect("segment is non-empty");
+                if materialize[last] {
+                    break;
+                }
+                let c = consumers[last][0];
+                seg.push(c);
+                visited[c] = true;
+            }
+            segments.push(seg);
+        }
+        // resolved per-stage policy: a stage streams exactly when it is
+        // a non-head member of a segment
+        let mut resolved = vec![EdgePolicy::Materialized; n];
+        for seg in &segments {
+            for &x in &seg[1..] {
+                resolved[x] = EdgePolicy::Streamed;
+            }
+        }
+        let (rows_eff, cols_eff) = match self.layout {
+            Layout::PerPlane => (rows, cols),
+            Layout::Agglomerated => (rows, planes * cols),
+        };
+        let mut slot_len = 0usize;
+        for seg in &segments {
+            let chain: Vec<ChainStage<'_>> =
+                seg.iter().map(|&i| ChainStage::new(plans[i].taps(), plans[i].variant())).collect();
+            slot_len = slot_len.max(chain_scratch_len(&chain, rows_eff, cols_eff));
+        }
+        let mut depth = vec![0usize; n];
+        for &x in &topo {
+            let he = ChainStage::new(plans[x].taps(), plans[x].variant())
+                .effective_halo(rows_eff, cols_eff);
+            depth[x] = input_of[x].map_or(0, |p| depth[p]) + he;
+        }
+        let accumulated_halo = depth.iter().copied().max().unwrap_or(0);
+        let stages = names
+            .into_iter()
+            .zip(plans)
+            .zip(input_of)
+            .zip(resolved)
+            .map(|(((name, plan), input), policy)| GraphStage { name, plan, input, policy })
+            .collect();
+        Ok(FilterGraph {
+            planes,
+            rows,
+            cols,
+            layout: self.layout,
+            stages,
+            topo,
+            segments,
+            outputs,
+            slot_len,
+            accumulated_halo,
+        })
+    }
+}
+
+/// One resolved node of a built graph.
+pub struct GraphStage {
+    name: String,
+    plan: ConvPlan,
+    input: Option<usize>,
+    policy: EdgePolicy,
+}
+
+impl GraphStage {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn plan(&self) -> &ConvPlan {
+        &self.plan
+    }
+
+    /// Index of the producing stage (`None` = the graph source).
+    pub fn input(&self) -> Option<usize> {
+        self.input
+    }
+
+    /// Resolved incoming-edge policy: `Streamed` exactly when this
+    /// stage consumes its producer's rows through the cascade (the
+    /// builder demotes edges whose producer must materialise anyway).
+    pub fn policy(&self) -> EdgePolicy {
+        self.policy
+    }
+}
+
+/// Per-stage and whole-graph traffic under the resolved edge policies,
+/// alongside the all-materialised counterpart — the `--explain` view of
+/// what streaming saves.
+#[derive(Debug, Clone)]
+pub struct GraphTraffic {
+    pub stages: Vec<StageTraffic>,
+    /// whole-graph bytes under the resolved policies
+    pub total: Traffic,
+    /// whole-graph bytes if every edge materialised
+    pub materialized_total: Traffic,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageTraffic {
+    pub name: String,
+    pub policy: EdgePolicy,
+    /// this stage's share under the resolved policies (a streamed
+    /// segment reads one plane at its head and writes one at its tail;
+    /// interior handoffs stay ring-resident and count zero)
+    pub traffic: Traffic,
+    /// what the stage would move if its edges materialised
+    pub materialized: Traffic,
+}
+
+/// A validated multi-stage convolution DAG — see the module docs.
+pub struct FilterGraph {
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    layout: Layout,
+    stages: Vec<GraphStage>,
+    topo: Vec<usize>,
+    /// maximal streamed segments, topologically ordered; every stage
+    /// appears in exactly one
+    segments: Vec<Vec<usize>>,
+    outputs: Vec<usize>,
+    /// ring-lease slot length: the longest segment's cascade scratch
+    slot_len: usize,
+    accumulated_halo: usize,
+}
+
+impl FilterGraph {
+    pub fn builder() -> GraphBuilder {
+        GraphBuilder::new()
+    }
+
+    /// `(planes, rows, cols)` every edge carries.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.planes, self.rows, self.cols)
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Stages in declaration order.
+    pub fn stages(&self) -> &[GraphStage] {
+        &self.stages
+    }
+
+    /// Output stage indices, in declaration order.
+    pub fn outputs(&self) -> &[usize] {
+        &self.outputs
+    }
+
+    pub fn output_names(&self) -> Vec<&str> {
+        self.outputs.iter().map(|&o| self.stages[o].name.as_str()).collect()
+    }
+
+    /// Inter-stage edges that stream through the row-ring cascade (the
+    /// coordinator's `stages_fused` counter adds this per graph served).
+    pub fn streamed_edges(&self) -> usize {
+        self.segments.iter().map(|s| s.len() - 1).sum()
+    }
+
+    /// How far a final output row depends on source rows: the maximum
+    /// over stages of the summed effective halos along their input
+    /// path. Also the per-band recompute bound of banded execution.
+    pub fn accumulated_halo(&self) -> usize {
+        self.accumulated_halo
+    }
+
+    /// Elements per graph-scoped ring-lease slot (one slot per
+    /// concurrent band job, sized for the longest streamed segment).
+    pub fn ring_footprint(&self) -> usize {
+        self.slot_len
+    }
+
+    /// Stable cache key over everything execution depends on — the
+    /// graph-shaped half of the coordinator's `PlanKey`.
+    pub fn cache_key(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        (self.planes, self.rows, self.cols).hash(&mut h);
+        self.layout.hash(&mut h);
+        for s in &self.stages {
+            s.name.hash(&mut h);
+            s.input.hash(&mut h);
+            s.policy.hash(&mut h);
+            s.plan.variant().hash(&mut h);
+            for &t in s.plan.taps() {
+                t.to_bits().hash(&mut h);
+            }
+        }
+        self.outputs.hash(&mut h);
+        h.finish()
+    }
+
+    fn check_shape(&self, img: &PlanarImage) -> Result<()> {
+        ensure!(
+            (img.planes, img.rows, img.cols) == (self.planes, self.rows, self.cols),
+            "image {}x{}x{} does not match graph shape {}x{}x{}",
+            img.planes,
+            img.rows,
+            img.cols,
+            self.planes,
+            self.rows,
+            self.cols
+        );
+        Ok(())
+    }
+
+    /// Execute sequentially; one image per output, in output order.
+    pub fn execute(
+        &self,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<Vec<PlanarImage>> {
+        self.execute_exec(Exec::Seq, img, arena)
+    }
+
+    /// Execute with every segment banded across `model`'s workers.
+    pub fn execute_on(
+        &self,
+        model: &dyn ExecutionModel,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<Vec<PlanarImage>> {
+        self.execute_exec(Exec::Par(model), img, arena)
+    }
+
+    /// Execute a single-output graph (the serving path: one request,
+    /// one response image).
+    pub fn execute_single(
+        &self,
+        model: Option<&dyn ExecutionModel>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<PlanarImage> {
+        ensure!(
+            self.outputs.len() == 1,
+            "graph has {} outputs; execute_single needs exactly one",
+            self.outputs.len()
+        );
+        let mut out = match model {
+            Some(m) => self.execute_on(m, img, arena)?,
+            None => self.execute(img, arena)?,
+        };
+        Ok(out.pop().expect("one output"))
+    }
+
+    /// The differential oracle: run every stage through its own plan
+    /// with full intermediate planes, ignoring the streamed policies.
+    pub fn execute_materialized(
+        &self,
+        model: Option<&dyn ExecutionModel>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<Vec<PlanarImage>> {
+        self.check_shape(img)?;
+        let mut results: Vec<Option<PlanarImage>> = vec![None; self.stages.len()];
+        for &x in &self.topo {
+            let stage = &self.stages[x];
+            let input = match stage.input {
+                None => img,
+                Some(p) => results[p].as_ref().expect("topo order computed the input"),
+            };
+            let out = match model {
+                Some(m) => stage.plan.execute_on(m, input, arena)?,
+                None => stage.plan.execute(input, arena)?,
+            };
+            results[x] = Some(out);
+        }
+        Ok(self
+            .outputs
+            .iter()
+            .map(|&o| results[o].take().expect("outputs are computed"))
+            .collect())
+    }
+
+    fn execute_exec(
+        &self,
+        exec: Exec<'_>,
+        img: &PlanarImage,
+        arena: &mut ScratchArena,
+    ) -> Result<Vec<PlanarImage>> {
+        self.check_shape(img)?;
+        let (planes_eff, rows_eff, cols_eff) = match self.layout {
+            Layout::PerPlane => (self.planes, self.rows, self.cols),
+            Layout::Agglomerated => (1, self.rows, self.planes * self.cols),
+        };
+        let n = self.planes * self.rows * self.cols;
+        let mut src_buf = arena.take(n);
+        match self.layout {
+            Layout::PerPlane => src_buf.copy_from_slice(&img.data),
+            Layout::Agglomerated => {
+                // fold planes into the wide (R, P·C) layout in place
+                let (p_, r_, c_) = (self.planes, self.rows, self.cols);
+                for p in 0..p_ {
+                    let plane = img.plane(p);
+                    for i in 0..r_ {
+                        let off = i * (p_ * c_) + p * c_;
+                        src_buf[off..off + c_].copy_from_slice(&plane[i * c_..(i + 1) * c_]);
+                    }
+                }
+            }
+        }
+        let slots = match exec {
+            Exec::Seq => 1,
+            Exec::Par(model) => model.workers(),
+        };
+        let lease = arena.take_graph_rings(slots, self.slot_len);
+        let mut bufs: Vec<Option<Vec<f32>>> = vec![None; self.stages.len()];
+        for seg in &self.segments {
+            let head = seg[0];
+            let src: &[f32] = match self.stages[head].input {
+                None => &src_buf,
+                Some(p) => bufs[p].as_ref().expect("topo order materialised the input"),
+            };
+            let mut dst = arena.take(n);
+            self.run_segment(exec, seg, src, &mut dst, &lease, planes_eff, rows_eff, cols_eff);
+            bufs[*seg.last().expect("segment is non-empty")] = Some(dst);
+        }
+        let mut outs = Vec::with_capacity(self.outputs.len());
+        for &o in &self.outputs {
+            let buf = bufs[o].as_ref().expect("outputs materialise");
+            outs.push(match self.layout {
+                Layout::PerPlane => {
+                    PlanarImage::from_vec(self.planes, self.rows, self.cols, buf.clone())?
+                }
+                Layout::Agglomerated => {
+                    PlanarImage::from_agglomerated(self.planes, self.rows, self.cols, buf)?
+                }
+            });
+        }
+        arena.put(src_buf);
+        for buf in bufs.into_iter().flatten() {
+            arena.put(buf);
+        }
+        arena.put_rings(lease);
+        Ok(outs)
+    }
+
+    /// Run one streamed segment over every plane of the effective
+    /// layout: each band job checks a slot out of the graph-scoped ring
+    /// lease and drives the whole cascade for its final-row range.
+    #[allow(clippy::too_many_arguments)]
+    fn run_segment(
+        &self,
+        exec: Exec<'_>,
+        seg: &[usize],
+        src: &[f32],
+        dst: &mut [f32],
+        rings: &RingLease,
+        planes_eff: usize,
+        rows_eff: usize,
+        cols_eff: usize,
+    ) {
+        let chain: Vec<ChainStage<'_>> = seg
+            .iter()
+            .map(|&i| ChainStage::new(self.stages[i].plan.taps(), self.stages[i].plan.variant()))
+            .collect();
+        let plane_len = rows_eff * cols_eff;
+        for p in 0..planes_eff {
+            let sp = &src[p * plane_len..(p + 1) * plane_len];
+            let dp = &mut dst[p * plane_len..(p + 1) * plane_len];
+            match exec {
+                Exec::Seq => {
+                    let mut slot = rings.acquire();
+                    chain_band(sp, dp, rows_eff, cols_eff, &chain, slot.buf(), 0, rows_eff);
+                }
+                Exec::Par(model) => {
+                    let bands = RowBands::new(dp, rows_eff, cols_eff);
+                    model.dispatch(rows_eff, &|r0, r1| {
+                        // SAFETY: execution models dispatch disjoint
+                        // covers of [0, rows) (property-tested), so
+                        // bands never overlap.
+                        let band = unsafe { bands.band(r0, r1) };
+                        let mut slot = rings.acquire();
+                        chain_band(sp, band, rows_eff, cols_eff, &chain, slot.buf(), r0, r1);
+                    });
+                }
+            }
+        }
+    }
+
+    /// Per-stage and whole-graph traffic, resolved policies vs the
+    /// all-materialised counterpart.
+    pub fn traffic_estimate(&self) -> GraphTraffic {
+        let n = self.stages.len();
+        let mut current = vec![Traffic::ZERO; n];
+        for seg in &self.segments {
+            let head = seg[0];
+            let tail = *seg.last().expect("segment is non-empty");
+            let head_est = self.stages[head].plan.traffic_estimate();
+            let tail_est = self.stages[tail].plan.traffic_estimate();
+            current[head].read_bytes += head_est.read_bytes;
+            current[tail].write_bytes += tail_est.write_bytes;
+        }
+        let mut total = Traffic::ZERO;
+        let mut materialized_total = Traffic::ZERO;
+        let mut stages = Vec::with_capacity(n);
+        for (x, stage) in self.stages.iter().enumerate() {
+            let materialized = stage.plan.traffic_estimate();
+            total.accumulate(current[x]);
+            materialized_total.accumulate(materialized);
+            stages.push(StageTraffic {
+                name: stage.name.clone(),
+                policy: stage.policy,
+                traffic: current[x],
+                materialized,
+            });
+        }
+        GraphTraffic { stages, total, materialized_total }
+    }
+
+    /// The `--explain` table: one row per stage (width, resolved edge
+    /// policy, bytes moved under the resolved policies and if
+    /// materialised), plus the whole-graph totals.
+    pub fn explain(&self) -> Table {
+        let (p, r, c) = (self.planes, self.rows, self.cols);
+        let traffic = self.traffic_estimate();
+        let mut t = Table::new(
+            format!(
+                "FilterGraph {p}x{r}x{c} ({:?}): {} stages, {} streamed edges, halo {}",
+                self.layout,
+                self.stages.len(),
+                self.streamed_edges(),
+                self.accumulated_halo
+            ),
+            &["Stage", "Width", "Edge", "MiB moved", "MiB if materialized"],
+        );
+        for (stage, st) in self.stages.iter().zip(&traffic.stages) {
+            t.row(vec![
+                stage.name.clone(),
+                stage.plan.width().to_string(),
+                match stage.input {
+                    None => format!("{SOURCE} \u{2192} {}", st.policy.label()),
+                    Some(i) => format!("{} \u{2192} {}", self.stages[i].name, st.policy.label()),
+                },
+                format!("{:.2}", st.traffic.total_mb()),
+                format!("{:.2}", st.materialized.total_mb()),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{:.2}", traffic.total.total_mb()),
+            format!("{:.2}", traffic.materialized_total.total_mb()),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{gaussian_kernel, synth_image, Pattern};
+
+    fn shaped() -> GraphBuilder {
+        FilterGraph::builder().shape(1, 24, 22)
+    }
+
+    #[test]
+    fn rejects_empty_graph_and_missing_shape() {
+        let e = shaped().build().unwrap_err();
+        assert!(format!("{e:#}").contains("at least one stage"), "{e:#}");
+        let e = FilterGraph::builder().stage("a", KernelSpec::new(3, 1.0)).build().unwrap_err();
+        assert!(format!("{e:#}").contains("needs a shape"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_bad_names_and_unknown_inputs() {
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .stage("a", KernelSpec::new(3, 1.0))
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"), "{e:#}");
+        let e = shaped().stage(SOURCE, KernelSpec::new(3, 1.0)).build().unwrap_err();
+        assert!(format!("{e:#}").contains("cannot name a stage"), "{e:#}");
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .after("ghost")
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown input"), "{e:#}");
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .output("ghost")
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown output"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .after("a")
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("reads itself"), "{e:#}");
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .after("b")
+            .stage("b", KernelSpec::new(3, 1.0))
+            .after("a")
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("cycle"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_shape_mismatched_edges_and_bad_kernels() {
+        let e = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .expect_shape(1, 24, 23)
+            .build()
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("expects shape"), "{e:#}");
+        let e = shaped().stage_taps("a", vec![0.25; 4]).build().unwrap_err();
+        assert!(format!("{e:#}").contains("odd"), "{e:#}");
+        let e = shaped().materialized().build().unwrap_err();
+        assert!(format!("{e:#}").contains("before any stage"), "{e:#}");
+    }
+
+    #[test]
+    fn linear_chain_resolves_to_one_streamed_segment() {
+        let g = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .stage("b", KernelSpec::new(7, 1.5))
+            .stage("c", KernelSpec::new(3, 1.0))
+            .build()
+            .unwrap();
+        assert_eq!(g.streamed_edges(), 2);
+        assert_eq!(g.outputs(), &[2]);
+        assert_eq!(g.accumulated_halo(), 1 + 3 + 1);
+        assert_eq!(g.stages()[0].policy(), EdgePolicy::Materialized, "source edge");
+        assert_eq!(g.stages()[1].policy(), EdgePolicy::Streamed);
+        assert_eq!(g.stages()[2].policy(), EdgePolicy::Streamed);
+        assert!(g.ring_footprint() > 0);
+    }
+
+    #[test]
+    fn materialized_edge_splits_the_segment() {
+        let g = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .stage("b", KernelSpec::new(3, 1.0))
+            .materialized()
+            .stage("c", KernelSpec::new(3, 1.0))
+            .build()
+            .unwrap();
+        assert_eq!(g.streamed_edges(), 1, "only b->c streams");
+        assert_eq!(g.stages()[1].policy(), EdgePolicy::Materialized);
+        assert_eq!(g.stages()[2].policy(), EdgePolicy::Streamed);
+    }
+
+    #[test]
+    fn fan_out_edges_demote_to_materialized() {
+        let g = shaped()
+            .stage("narrow", KernelSpec::new(3, 1.0))
+            .after(SOURCE)
+            .stage("wide", KernelSpec::new(7, 2.0))
+            .after(SOURCE)
+            .stage("post", KernelSpec::new(3, 1.0))
+            .after("narrow")
+            .stage("post2", KernelSpec::new(3, 1.0))
+            .after("narrow")
+            .build()
+            .unwrap();
+        // "narrow" fans out to post/post2: both edges demote
+        assert_eq!(g.stages()[2].policy(), EdgePolicy::Materialized);
+        assert_eq!(g.stages()[3].policy(), EdgePolicy::Materialized);
+        assert_eq!(g.streamed_edges(), 0);
+        assert_eq!(g.outputs().len(), 3, "wide, post, post2 are sinks");
+    }
+
+    #[test]
+    fn streamed_execution_matches_materialized_oracle() {
+        let img = synth_image(2, 30, 26, Pattern::Noise, 5);
+        let g = FilterGraph::builder()
+            .shape(2, 30, 26)
+            .stage_taps("a", gaussian_kernel(3, 0.8))
+            .stage_taps("b", gaussian_kernel(7, 1.5))
+            .build()
+            .unwrap();
+        let mut arena = ScratchArena::new();
+        let streamed = g.execute(&img, &mut arena).unwrap();
+        let oracle = g.execute_materialized(None, &img, &mut arena).unwrap();
+        assert_eq!(streamed.len(), 1);
+        assert_eq!(streamed[0], oracle[0], "generic widths are bitwise");
+    }
+
+    #[test]
+    fn traffic_estimate_shows_the_streaming_saving() {
+        let g = shaped()
+            .stage("a", KernelSpec::new(3, 1.0))
+            .stage("b", KernelSpec::new(3, 1.0))
+            .stage("c", KernelSpec::new(3, 1.0))
+            .build()
+            .unwrap();
+        let t = g.traffic_estimate();
+        assert_eq!(t.stages.len(), 3);
+        assert!(
+            t.total.total_bytes() < t.materialized_total.total_bytes(),
+            "streamed chain must move fewer bytes: {} vs {}",
+            t.total.total_bytes(),
+            t.materialized_total.total_bytes()
+        );
+        // the streamed segment reads once at the head, writes once at
+        // the tail, and its interior handoff moves nothing
+        assert_eq!(t.stages[0].traffic.write_bytes, 0);
+        assert_eq!(t.stages[1].traffic.total_bytes(), 0);
+        assert_eq!(t.stages[2].traffic.read_bytes, 0);
+        let table = g.explain().to_text();
+        assert!(table.contains("TOTAL") && table.contains("streamed"), "{table}");
+    }
+
+    #[test]
+    fn cache_key_distinguishes_structure() {
+        let build = |w: usize, streamed: bool| {
+            let b = shaped()
+                .stage("a", KernelSpec::new(3, 1.0))
+                .stage("b", KernelSpec::new(w, 1.0));
+            let b = if streamed { b } else { b.materialized() };
+            b.build().unwrap()
+        };
+        let a = build(7, true);
+        assert_eq!(a.cache_key(), build(7, true).cache_key(), "deterministic");
+        assert_ne!(a.cache_key(), build(9, true).cache_key(), "taps differ");
+        assert_ne!(a.cache_key(), build(7, false).cache_key(), "policy differs");
+    }
+}

@@ -66,6 +66,11 @@
 //! across models, widths, layouts and tiled/untiled dispatch
 //! (`tests/fused.rs`). Composes with tiling; [`crate::autotune`] sweeps
 //! fused candidates alongside tiled ones.
+//!
+//! **Graphs.** [`FilterGraph`] lifts single plans into builder-validated
+//! multi-stage DAGs whose streamed edges hand rows between stages
+//! through cascaded rings ([`graph`] module docs) — a k-stage chain
+//! crosses memory twice, not 2k times.
 
 use crate::util::error::Result;
 
@@ -76,9 +81,11 @@ use crate::models::{ExecutionModel, Layout};
 pub use crate::models::tile::TileSpec;
 
 pub mod arena;
+pub mod graph;
 mod pipeline;
 
 pub use arena::{RingLease, RingSlot, ScratchArena};
+pub use graph::{EdgePolicy, FilterGraph, GraphBuilder, GraphStage, GraphTraffic, StageTraffic};
 pub use pipeline::PassKind;
 
 use pipeline::{Exec, ResultHome};
@@ -330,6 +337,17 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    /// The additive identity — graph accounting folds stage shares
+    /// onto it.
+    pub const ZERO: Traffic = Traffic { read_bytes: 0, write_bytes: 0 };
+
+    /// Element-wise sum: per-stage estimates fold into whole-graph
+    /// totals ([`FilterGraph::traffic_estimate`]).
+    pub fn accumulate(&mut self, other: Traffic) {
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+    }
+
     pub fn total_bytes(&self) -> usize {
         self.read_bytes + self.write_bytes
     }

@@ -1,0 +1,207 @@
+//! Tier-1 FilterGraph suite (run standalone by `scripts/verify.sh`).
+//!
+//! The streamed multi-stage cascade must be indistinguishable from
+//! running the same stages one materialised plan at a time: a
+//! differential sweep over 2/3/4-stage chains × both layouts × all
+//! three execution models (≤ 1e-6 everywhere; bitwise for the
+//! generic-width PerPlane chains where the engines share every
+//! accumulation expression), fan-out demotion semantics, the
+//! graph-scoped scratch contract (ring leases recycle, zero arena
+//! allocations after warm-up), and end-to-end coordinator serving of
+//! graph requests with the `graphs_served`/`stages_fused` counters.
+//!
+//! Worker counts honour `PHI_THREADS` like the other tier-1 suites.
+
+use phi_conv::config::RunConfig;
+use phi_conv::conv::Variant;
+use phi_conv::coordinator::{ConvRequest, Coordinator, GraphSpec, RoutePolicy};
+use phi_conv::image::{synth_image, Pattern};
+use phi_conv::models::{
+    test_threads, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
+};
+use phi_conv::plan::{EdgePolicy, FilterGraph, KernelSpec, ScratchArena};
+
+fn threads() -> usize {
+    test_threads(4)
+}
+
+fn chain_widths(n: usize) -> &'static [usize] {
+    match n {
+        2 => &[3, 7],
+        3 => &[3, 7, 9],
+        _ => &[3, 5, 7, 9],
+    }
+}
+
+fn build_chain(n: usize, planes: usize, rows: usize, cols: usize, layout: Layout) -> FilterGraph {
+    let mut b = FilterGraph::builder().shape(planes, rows, cols).layout(layout);
+    for (i, &w) in chain_widths(n).iter().enumerate() {
+        b = b.stage(&format!("s{i}"), KernelSpec::new(w, 0.4 + w as f64 / 4.0));
+    }
+    b.build().unwrap()
+}
+
+#[test]
+fn streamed_chains_match_materialized_across_models_and_layouts() {
+    let (p, r, c) = (2usize, 44usize, 38usize);
+    let img = synth_image(p, r, c, Pattern::Noise, 901);
+    let t = threads();
+    let omp = OpenMpModel::new(t);
+    let ocl = OpenClModel::new(t, 4);
+    let gprm = GprmModel::new(t, 12);
+    let models: [&dyn ExecutionModel; 3] = [&omp, &ocl, &gprm];
+    let mut arena = ScratchArena::new();
+    for n in [2usize, 3, 4] {
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            let g = build_chain(n, p, r, c, layout);
+            assert_eq!(g.streamed_edges(), n - 1, "{n} stages: linear chain streams fully");
+            let want = g.execute_materialized(None, &img, &mut arena).unwrap();
+            let seq = g.execute(&img, &mut arena).unwrap();
+            assert_eq!(seq.len(), 1);
+            let d = seq[0].max_abs_diff(&want[0]);
+            assert!(d <= 1e-6, "{n} stages {layout:?} seq vs oracle: {d}");
+            // generic widths share every accumulation expression with
+            // the fused plan engines; width 5 takes the plan's unrolled
+            // fast path, so only the ≤1e-6 bound is claimed there
+            if layout == Layout::PerPlane && !chain_widths(n).contains(&5) {
+                assert_eq!(seq[0].data, want[0].data, "{n} stages: generic chain is bitwise");
+            }
+            for model in models {
+                let par = g.execute_on(model, &img, &mut arena).unwrap();
+                assert_eq!(
+                    par[0].data,
+                    seq[0].data,
+                    "{n} stages {layout:?} {}: banded != sequential",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fan_out_graph_demotes_and_serves_both_outputs() {
+    // difference-of-Gaussians shape: the narrow blur feeds the wide one
+    // while being a graph output itself, so its outgoing edge must
+    // demote to materialised and both outputs must match the per-plan
+    // oracle bitwise (generic widths, PerPlane)
+    let (p, r, c) = (1usize, 30usize, 28usize);
+    let img = synth_image(p, r, c, Pattern::Noise, 5);
+    let g = FilterGraph::builder()
+        .shape(p, r, c)
+        .stage("narrow", KernelSpec::new(3, 0.8))
+        .stage("wide", KernelSpec::new(7, 1.4))
+        .output("narrow")
+        .output("wide")
+        .build()
+        .unwrap();
+    assert_eq!(g.streamed_edges(), 0, "consumed-output edge must demote");
+    assert_eq!(g.stages()[1].policy(), EdgePolicy::Materialized);
+    assert_eq!(g.output_names(), ["narrow", "wide"]);
+    let mut arena = ScratchArena::new();
+    let outs = g.execute(&img, &mut arena).unwrap();
+    let want = g.execute_materialized(None, &img, &mut arena).unwrap();
+    assert_eq!(outs.len(), 2);
+    for (i, (a, b)) in outs.iter().zip(&want).enumerate() {
+        assert_eq!(a.data, b.data, "output {i} must match the oracle bitwise");
+    }
+    let omp = OpenMpModel::new(threads());
+    let par = g.execute_on(&omp, &img, &mut arena).unwrap();
+    for (i, (a, b)) in par.iter().zip(&outs).enumerate() {
+        assert_eq!(a.data, b.data, "output {i}: banded != sequential");
+    }
+}
+
+#[test]
+fn graph_footprint_halo_and_traffic_accounting() {
+    let (p, r, c) = (1usize, 40usize, 36usize);
+    for n in [2usize, 3, 4] {
+        let g = build_chain(n, p, r, c, Layout::PerPlane);
+        let halo: usize = chain_widths(n).iter().map(|w| w / 2).sum();
+        assert_eq!(g.accumulated_halo(), halo, "{n} stages");
+        assert!(g.ring_footprint() > 0, "{n} stages: streamed chain needs a ring");
+        let t = g.traffic_estimate();
+        assert!(
+            t.total.total_mb() < t.materialized_total.total_mb(),
+            "{n} stages: streaming must reduce estimated traffic"
+        );
+        // --explain: one row per stage plus the totals row
+        assert_eq!(g.explain().n_rows(), n + 1, "{n} stages");
+    }
+}
+
+#[test]
+fn graph_execution_recycles_arena_after_warmup() {
+    let (p, r, c) = (2usize, 40usize, 36usize);
+    let img = synth_image(p, r, c, Pattern::Noise, 71);
+    let omp = OpenMpModel::new(threads());
+    for layout in [Layout::PerPlane, Layout::Agglomerated] {
+        let g = build_chain(3, p, r, c, layout);
+        let mut arena = ScratchArena::new();
+        g.execute(&img, &mut arena).unwrap();
+        g.execute_on(&omp, &img, &mut arena).unwrap();
+        let warm = arena.allocations();
+        for _ in 0..8 {
+            g.execute(&img, &mut arena).unwrap();
+            g.execute_on(&omp, &img, &mut arena).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm, "{layout:?}: graph steady state allocates");
+    }
+}
+
+#[test]
+fn coordinator_serves_graph_chains_across_backends() {
+    let cfg = RunConfig { threads: threads(), ..Default::default() };
+    let c = Coordinator::new(&cfg, RoutePolicy::RoundRobin, 2, false).unwrap();
+    let img = synth_image(2, 36, 32, Pattern::Noise, 31);
+    let spec = GraphSpec::chain(vec![KernelSpec::new(3, 0.8), KernelSpec::new(7, 1.5)]);
+    let mut arena = ScratchArena::new();
+    let want = spec
+        .build(2, 36, 32, Variant::Simd, Layout::PerPlane)
+        .unwrap()
+        .execute_materialized(None, &img, &mut arena)
+        .unwrap()
+        .pop()
+        .unwrap();
+    // streamed chains across the native backend rotation
+    for i in 0..6u64 {
+        let req = ConvRequest::new(i, img.clone())
+            .with_layout(Layout::PerPlane)
+            .with_graph(spec.clone());
+        let resp = c.serve(req).unwrap();
+        assert!(
+            resp.image.max_abs_diff(&want) <= 1e-6,
+            "request {i} via {:?}",
+            resp.backend
+        );
+    }
+    // a materialised-policy chain serves through the same path
+    let req = ConvRequest::new(9, img.clone())
+        .with_layout(Layout::PerPlane)
+        .with_graph(spec.clone().materialized());
+    let resp = c.serve(req).unwrap();
+    assert!(resp.image.max_abs_diff(&want) <= 1e-6);
+    let st = c.stats();
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.served, 7);
+    assert_eq!(st.graphs_served, 7);
+    assert_eq!(st.stages_fused, 6, "6 streamed requests x 1 streamed edge");
+}
+
+#[test]
+fn coordinator_rejects_malformed_graph_requests() {
+    let cfg = RunConfig { threads: threads(), ..Default::default() };
+    let c = Coordinator::new(&cfg, RoutePolicy::RoundRobin, 1, false).unwrap();
+    let img = synth_image(1, 24, 24, Pattern::Noise, 3);
+    // even-width stage: a structured error, not a panic, and no
+    // graphs_served credit
+    let bad = GraphSpec::chain(vec![KernelSpec::new(4, 1.0)]);
+    let e = c.serve(ConvRequest::new(1, img.clone()).with_graph(bad)).unwrap_err();
+    assert!(format!("{e:#}").contains("invalid request graph"), "{e:#}");
+    // a good request still serves afterwards
+    let good = GraphSpec::chain(vec![KernelSpec::new(3, 0.8)]);
+    c.serve(ConvRequest::new(2, img).with_graph(good)).unwrap();
+    let st = c.stats();
+    assert_eq!(st.errors, 1);
+    assert_eq!(st.graphs_served, 1);
+}

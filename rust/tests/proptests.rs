@@ -14,7 +14,7 @@ use phi_conv::models::{
     convolve_parallel, static_chunk, ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel,
 };
 use phi_conv::phisim::{simulate, Calibration, PhiMachine, SimRun, SimWorkload};
-use phi_conv::plan::{ConvPlan, KernelSpec, ScratchArena};
+use phi_conv::plan::{ConvPlan, FilterGraph, KernelSpec, ScratchArena};
 use phi_conv::util::json::Json;
 use phi_conv::util::prng::Prng;
 
@@ -450,6 +450,158 @@ fn prop_scratch_arena_never_grows_after_warmup() {
         }
     }
     assert_eq!(arena.allocations(), warm, "steady state allocated scratch");
+}
+
+// ---------------------------------------------------------------------------
+// graph layer: builder rejections + streamed chains vs a staged reference
+// ---------------------------------------------------------------------------
+
+/// The GraphBuilder rejects malformed graphs for arbitrary shapes:
+/// empty graphs, even-width stages, shape-mismatched edges, self-reads
+/// and two-stage cycles all fail `build()` with a structured error.
+#[test]
+fn prop_graph_builder_rejects_malformed_graphs() {
+    let mut rng = Prng::new(0x6AF);
+    for case in 0..CASES {
+        let rows = rng.range(8, 40);
+        let cols = rng.range(8, 40);
+        assert!(
+            FilterGraph::builder().shape(1, rows, cols).build().is_err(),
+            "case {case}: empty graph must be rejected"
+        );
+        let even = FilterGraph::builder()
+            .shape(1, rows, cols)
+            .stage("a", KernelSpec::new(2 * rng.range(1, 5), 1.0))
+            .build();
+        assert!(even.is_err(), "case {case}: even width must be rejected");
+        let mismatch = FilterGraph::builder()
+            .shape(1, rows, cols)
+            .stage("a", KernelSpec::new(3, 1.0))
+            .expect_shape(1, rows + rng.range(1, 9), cols)
+            .build();
+        assert!(mismatch.is_err(), "case {case}: edge shape mismatch must be rejected");
+        let self_read = FilterGraph::builder()
+            .shape(1, rows, cols)
+            .stage("a", KernelSpec::new(3, 1.0))
+            .after("a")
+            .build();
+        assert!(self_read.is_err(), "case {case}: self-read must be rejected");
+        let cycle = FilterGraph::builder()
+            .shape(1, rows, cols)
+            .stage("a", KernelSpec::new(3, 1.0))
+            .after("b")
+            .stage("b", KernelSpec::new(3, 1.0))
+            .build();
+        assert!(cycle.is_err(), "case {case}: 2-cycle must be rejected");
+    }
+}
+
+/// Rewiring any stage of a random linear chain to read a later stage
+/// closes a cycle (stages have one input each), which `build()` must
+/// reject via Kahn leftovers.
+#[test]
+fn prop_graph_builder_rejects_random_back_edges() {
+    let mut rng = Prng::new(0xC1C1E);
+    for case in 0..CASES {
+        let n = rng.range(2, 7);
+        let i = rng.range(0, n - 1);
+        let j = rng.range(i + 1, n);
+        let mut b = FilterGraph::builder().shape(1, 30, 30);
+        for s in 0..n {
+            b = b.stage(&format!("s{s}"), KernelSpec::new(3, 1.0));
+            if s == i {
+                // forward reference: s_i reads s_j (j > i), while
+                // s_{i+1}..s_j still chain back to s_i — a cycle
+                b = b.after(&format!("s{j}"));
+            }
+        }
+        let e = b.build();
+        assert!(e.is_err(), "case {case}: back edge s{i} -> s{j} of {n} must cycle");
+    }
+}
+
+/// Plain-loop two-pass for one stage, the semantics every engine in the
+/// repo implements: horizontal then vertical over the deep interior,
+/// everything else passing through from the *source* plane, and a
+/// kernel that doesn't fit acting as the identity.
+fn stage_twopass_reference(src: &[f32], rows: usize, cols: usize, taps: &[f32]) -> Vec<f32> {
+    let h = taps.len() / 2;
+    if 2 * h >= rows || 2 * h >= cols {
+        return src.to_vec();
+    }
+    let mut b = src.to_vec();
+    for i in h..rows - h {
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            for (v, &kv) in taps.iter().enumerate() {
+                s += src[i * cols + j - h + v] * kv;
+            }
+            b[i * cols + j] = s;
+        }
+    }
+    let mut out = src.to_vec();
+    for i in h..rows - h {
+        for j in h..cols - h {
+            let mut s = 0.0f32;
+            for (u, &ku) in taps.iter().enumerate() {
+                s += b[(i + u - h) * cols + j] * ku;
+            }
+            out[i * cols + j] = s;
+        }
+    }
+    out
+}
+
+/// Random taps for a chain stage, normalised to Σ|t| = 1 so chained
+/// stages stay well-conditioned and 1e-6 remains a meaningful bound.
+fn random_taps(rng: &mut Prng, width: usize) -> Vec<f32> {
+    let mut t: Vec<f32> =
+        (0..width).map(|_| rng.range(0, 2001) as f32 / 1000.0 - 1.0).collect();
+    t[width / 2] += 1.5;
+    let norm: f32 = t.iter().map(|v| v.abs()).sum();
+    for v in &mut t {
+        *v /= norm;
+    }
+    t
+}
+
+/// Random linear odd-width chains: the streamed FilterGraph agrees with
+/// the plain-loop staged reference within 1e-6 on arbitrary shapes,
+/// stage counts, widths and taps — and banded execution agrees with
+/// sequential bitwise.
+#[test]
+fn prop_random_chains_match_staged_reference() {
+    let mut rng = Prng::new(0x6409);
+    for case in 0..20 {
+        let rows = rng.range(14, 48);
+        let cols = rng.range(14, 48);
+        let planes = rng.range(1, 3);
+        let n = rng.range(2, 5);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, 5000 + case as u64);
+        let mut b = FilterGraph::builder().shape(planes, rows, cols);
+        let mut stages: Vec<Vec<f32>> = Vec::new();
+        for s in 0..n {
+            let taps = random_taps(&mut rng, 2 * rng.range(1, 5) + 1);
+            b = b.stage_taps(&format!("s{s}"), taps.clone());
+            stages.push(taps);
+        }
+        let g = b.build().unwrap();
+        let mut want = img.clone();
+        for taps in &stages {
+            let mut out = Vec::with_capacity(want.data.len());
+            for p in 0..planes {
+                out.extend(stage_twopass_reference(want.plane(p), rows, cols, taps));
+            }
+            want = PlanarImage::from_vec(planes, rows, cols, out).unwrap();
+        }
+        let mut arena = ScratchArena::new();
+        let seq = g.execute_single(None, &img, &mut arena).unwrap();
+        let d = seq.max_abs_diff(&want);
+        assert!(d <= 1e-6, "case {case}: {n}-stage {rows}x{cols} chain vs reference: {d}");
+        let model = OpenMpModel::new(rng.range(1, 6));
+        let par = g.execute_single(Some(&model), &img, &mut arena).unwrap();
+        assert_eq!(par.data, seq.data, "case {case}: banded != sequential");
+    }
 }
 
 /// Convolution energy property across random inputs: a normalised

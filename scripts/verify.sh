@@ -36,6 +36,17 @@ echo "== cargo test -q --test costmodel_suite (regression core + predictive admi
 # standalone so it is named
 cargo test -q --test costmodel_suite
 
+echo "== cargo test -q --test graph_suite (streamed chains ≡ materialized + graph serving)"
+# tier-1 by policy: a cascade bug corrupts every chained pixel silently
+# and a demotion bug reads half-written planes; re-run standalone so a
+# graph regression is named in the output
+cargo test -q --test graph_suite
+
+echo "== phi-conv graph --check (2-stage streamed vs materialized, bitwise)"
+# end-to-end CLI smoke on a tiny image: generic widths share every
+# accumulation expression, so --check demands bitwise equality
+cargo run --release --bin phi-conv -- graph --stages blur:3,blur:7 --sizes 48 --reps 2 --check
+
 echo "== cargo build --benches"
 cargo build --benches
 
