@@ -1,0 +1,90 @@
+//! Bench: the scale-factor load harness — the serving macro-benchmark.
+//!
+//! Drives the real coordinator with the deterministic default traffic
+//! mix (Zipf-skewed shapes, mixed kernel widths, a graph-request
+//! fraction, per-request deadlines) at each requested scale factor,
+//! under both the open-loop Poisson driver and the closed-loop worker
+//! driver, and emits the per-scale SLO curve as `BENCH_load.json` —
+//! the macro trajectory file every future perf PR should move.
+//!
+//! Correctness is asserted, timing is only reported: every issued
+//! request must resolve to a structured outcome
+//! (served + shed + expired == issued, `failed == 0`) and quoted
+//! percentiles must be ordered; p50/p95/p99 themselves are columns to
+//! read, not tests to fail (latency asserts would flake on loaded CI
+//! runners).
+//!
+//! `cargo bench --bench loadgen` — env overrides:
+//!   PHI_LOAD_SCALE=1,2   PHI_LOAD_MODE=both   PHI_LOAD_EXECUTORS=2
+//!   PHI_BENCH_THREADS=8  PHI_LOAD_JSON=BENCH_load.json  (empty = skip)
+
+use phi_conv::config::{default_threads, RunConfig};
+use phi_conv::loadgen::{report_table, results_json, run_scales, MixConfig, Mode};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let scales: Vec<usize> = env_str("PHI_LOAD_SCALE", "1,2")
+        .split(',')
+        .map(|s| s.trim().parse().expect("PHI_LOAD_SCALE: comma-separated integers"))
+        .collect();
+    let modes = Mode::parse(&env_str("PHI_LOAD_MODE", "both")).expect("PHI_LOAD_MODE");
+    let executors = env_usize("PHI_LOAD_EXECUTORS", 2);
+    let threads = env_usize("PHI_BENCH_THREADS", default_threads());
+
+    let cfg = RunConfig {
+        threads,
+        queue_capacity: 512,
+        batch_max: 8,
+        ..RunConfig::default()
+    };
+    // generous deadline: the bench measures the latency distribution;
+    // the SLO-violation path is the queue_stress suite's job
+    let mix = MixConfig { seed: cfg.seed, deadline_ms: 10_000, ..MixConfig::default() };
+
+    let results =
+        run_scales(&cfg, &mix, &scales, &modes, executors, None).expect("load harness run");
+    for r in &results {
+        assert_eq!(
+            r.resolved() as usize,
+            r.issued,
+            "scale {} {}: every request must resolve",
+            r.scale,
+            r.mode.label()
+        );
+        assert_eq!(
+            r.failed, 0,
+            "scale {} {}: refusals must be structured shed/expired",
+            r.scale,
+            r.mode.label()
+        );
+        if let (Some(p50), Some(p95), Some(p99)) =
+            (r.hist.percentile(50.0), r.hist.percentile(95.0), r.hist.percentile(99.0))
+        {
+            assert!(
+                p50.is_finite() && p50 <= p95 && p95 <= p99,
+                "scale {} {}: percentiles must be finite and ordered",
+                r.scale,
+                r.mode.label()
+            );
+        }
+    }
+
+    let t = report_table(&results);
+    println!("{}", t.to_text());
+    println!("{}", t.to_json());
+
+    let path = env_str("PHI_LOAD_JSON", "BENCH_load.json");
+    if !path.is_empty() {
+        let json = results_json(&mix, &cfg, executors, &results);
+        std::fs::write(&path, format!("{json}\n"))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

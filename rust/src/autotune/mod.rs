@@ -318,6 +318,15 @@ impl TuningTable {
         self.cost_model = Some(cm);
     }
 
+    /// A table whose only tier is the given predictive model (no swept
+    /// entries yet) — what `phi-conv serve --load` and the load
+    /// harness install at coordinator start.
+    pub fn from_cost_model(cm: CostModel) -> Self {
+        let mut t = Self::new();
+        t.set_cost_model(cm);
+        t
+    }
+
     pub fn cost_model(&self) -> Option<&CostModel> {
         self.cost_model.as_ref()
     }

@@ -44,6 +44,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Error, ErrorKind, Result};
+use crate::util::json::Json;
 
 use crate::autotune::{PlanDecision, TuningTable};
 use crate::config::RunConfig;
@@ -151,6 +152,39 @@ impl CoordinatorStats {
         self.plans_default += other.plans_default;
         self.graphs_served += other.graphs_served;
         self.stages_fused += other.stages_fused;
+    }
+
+    /// The merged snapshot as JSON — counters exact, sample-set fields
+    /// as their nullable summaries (the load harness embeds this in
+    /// `BENCH_load.json`; all counters here fit f64 exactly).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        let counters: [(&str, f64); 13] = [
+            ("served", self.served as f64),
+            ("errors", self.errors as f64),
+            ("pjrt_fallbacks", self.pjrt_fallbacks as f64),
+            ("shed", self.shed as f64),
+            ("expired", self.expired as f64),
+            ("depth", self.depth as f64),
+            ("depth_peak", self.depth_peak as f64),
+            ("plans_built", self.plans_built as f64),
+            ("plans_predicted", self.plans_predicted as f64),
+            ("plans_swept", self.plans_swept as f64),
+            ("plans_default", self.plans_default as f64),
+            ("graphs_served", self.graphs_served as f64),
+            ("stages_fused", self.stages_fused as f64),
+        ];
+        for (key, v) in counters {
+            o.insert(key.to_string(), Json::Num(v));
+        }
+        o.insert("queue_ms".to_string(), self.queue_ms.to_json());
+        o.insert("batch_sizes".to_string(), self.batch_sizes.to_json());
+        let mut svc = std::collections::BTreeMap::new();
+        for (backend, set) in &self.service_ms {
+            svc.insert(backend.to_string(), set.to_json());
+        }
+        o.insert("service_ms".to_string(), Json::Obj(svc));
+        Json::Obj(o)
     }
 }
 
@@ -659,6 +693,11 @@ impl Coordinator {
     /// `queue_capacity`, never undercut it).
     pub fn queue_capacity(&self) -> usize {
         self.queues.iter().map(|q| q.capacity()).sum()
+    }
+
+    /// Executor (= intake-shard) count.
+    pub fn executors(&self) -> usize {
+        self.queues.len()
     }
 
     /// Test-only: mutate one executor shard's stats in place, simulating
@@ -1516,6 +1555,32 @@ mod tests {
         let mut c = b.clone();
         c.merge(&a0);
         assert_eq!(c.depth, 3);
+    }
+
+    #[test]
+    fn stats_to_json_round_trips() {
+        let mut st = CoordinatorStats {
+            served: 7,
+            shed: 2,
+            expired: 1,
+            depth_peak: 5,
+            plans_default: 4,
+            graphs_served: 3,
+            ..Default::default()
+        };
+        st.batch_sizes.push(2.0);
+        st.service_ms.entry("openmp").or_default().push(1.5);
+        let parsed = Json::parse(&st.to_json().to_string()).expect("stats dump is valid JSON");
+        assert_eq!(parsed.req_usize("served").unwrap(), 7);
+        assert_eq!(parsed.req_usize("shed").unwrap(), 2);
+        assert_eq!(parsed.req_usize("depth_peak").unwrap(), 5);
+        assert_eq!(parsed.req_usize("plans_default").unwrap(), 4);
+        assert_eq!(parsed.req_usize("graphs_served").unwrap(), 3);
+        assert_eq!(parsed.get("batch_sizes").req_usize("n").unwrap(), 1);
+        assert_eq!(parsed.get("service_ms").get("openmp").req_usize("n").unwrap(), 1);
+        // empty sample sets stay nullable, not NaN
+        let empty = Json::parse(&CoordinatorStats::default().to_json().to_string()).unwrap();
+        assert_eq!(empty.get("queue_ms").get("p50"), &Json::Null);
     }
 
     #[test]

@@ -351,6 +351,17 @@ impl CostModel {
         Self::from_json(&v).with_context(|| format!("loading cost model {}", path.display()))
     }
 
+    /// Load a persisted model and apply the run's R² validity gate in
+    /// one step — the shared entry point for `tune --load`,
+    /// `serve --load` and `load --load` (group usability is evaluated
+    /// against the *consumer's* gate, not the one the artifact was
+    /// fitted under).
+    pub fn load_with_gate(path: &Path, r2_min: f64) -> Result<CostModel> {
+        let mut cm = Self::load(path)?;
+        cm.set_r2_min(r2_min);
+        Ok(cm)
+    }
+
     /// Render the fit summary as a harness table.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(

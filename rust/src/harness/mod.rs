@@ -8,6 +8,10 @@
 //!
 //! `phi-conv bench-table <exhibit> [--measured]` is the CLI entry;
 //! `cargo bench` runs the same generators under `rust/benches/`.
+//!
+//! Serving has its own macro-exhibit outside this module: the
+//! scale-factor load harness ([`crate::loadgen`], `phi-conv load`,
+//! `benches/loadgen.rs`) quotes the per-scale latency SLO curve.
 
 pub mod measured;
 pub mod paper;

@@ -43,7 +43,14 @@
 //!   request path with no Python anywhere.
 //! * [`coordinator`] — request router + batcher serving convolution jobs
 //!   through any execution model (the L3 serving loop).
-//! * [`metrics`] — timing statistics and paper-style table rendering.
+//! * [`loadgen`] — the scale-factor load harness: deterministic
+//!   Zipf-skewed traffic mixes (seeded PRNG, no wall-clock in the plan)
+//!   driving the coordinator end-to-end under open-loop Poisson or
+//!   closed-loop workers, reporting p50/p95/p99 latency, shed/expired
+//!   rates and batch/plan-decision mixes per scale factor
+//!   (`phi-conv load`, `BENCH_load.json`).
+//! * [`metrics`] — timing statistics, latency histograms and
+//!   paper-style table rendering.
 //! * [`harness`] — one generator per paper exhibit (fig1…fig4, table1,
 //!   table2) in both *simulated* (phisim) and *measured* (host) modes.
 //! * [`config`] — TOML + CLI configuration for all of the above.
@@ -77,6 +84,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod harness;
 pub mod image;
+pub mod loadgen;
 pub mod metrics;
 pub mod models;
 pub mod phisim;

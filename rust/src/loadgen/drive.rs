@@ -1,0 +1,400 @@
+//! Drivers and reporting: issue a [`RequestPlan`] against a live
+//! [`Coordinator`] and account for every request.
+//!
+//! Two driver models, the standard pair for serving benchmarks:
+//!
+//! * **open loop** — requests arrive on the plan's virtual timeline
+//!   (Poisson inter-arrival, paced against a monotonic clock that is
+//!   never reset, so a slow server faces a growing backlog instead of
+//!   a conveniently slowed generator). Admission is `try_submit`:
+//!   a full queue sheds, exactly as production overload would.
+//! * **closed loop** — `plan.workers` clients each keep one request in
+//!   flight (blocking `submit`, then wait for the reply), the
+//!   think-time-free saturation model.
+//!
+//! Latency semantics differ deliberately: the open-loop driver records
+//! the server-side `queue_ms + service_ms` (client-perceived arrival
+//! pacing is virtual), while closed-loop workers record client wall
+//! time around submit→reply. Every issued request resolves to exactly
+//! one of served / shed / expired / failed, and the suites assert
+//! `failed == 0` — refusals must be structured.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::autotune::TuningTable;
+use crate::config::RunConfig;
+use crate::coordinator::{ConvRequest, Coordinator, CoordinatorStats, RoutePolicy};
+use crate::costmodel::CostModel;
+use crate::metrics::{Histogram, SampleSet, Table};
+use crate::util::error::{ErrorKind, Result};
+use crate::util::json::Json;
+
+use super::mix::{MixConfig, RequestPlan};
+
+/// Driver model for one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Open,
+    Closed,
+}
+
+impl Mode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::Open => "open",
+            Mode::Closed => "closed",
+        }
+    }
+
+    /// CLI/env spelling → run list: `open`, `closed` or `both`.
+    pub fn parse(s: &str) -> Result<Vec<Mode>> {
+        match s {
+            "open" => Ok(vec![Mode::Open]),
+            "closed" => Ok(vec![Mode::Closed]),
+            "both" | "" => Ok(vec![Mode::Open, Mode::Closed]),
+            other => bail!("unknown load mode {other:?} (open|closed|both)"),
+        }
+    }
+}
+
+/// Everything measured for one `(scale, mode)` run.
+#[derive(Debug)]
+pub struct LoadResult {
+    pub scale: usize,
+    pub mode: Mode,
+    pub issued: usize,
+    pub served: u64,
+    pub shed: u64,
+    pub expired: u64,
+    /// refusals without a structured QueueFull/DeadlineExceeded kind —
+    /// always 0 in a healthy run (asserted by the suites).
+    pub failed: u64,
+    /// exact per-request latencies (ms).
+    pub latency: SampleSet,
+    /// the same latencies, histogram-bucketed (what reporting quotes).
+    pub hist: Histogram,
+    pub wall_ms: f64,
+    /// coordinator counters snapshot after the drain.
+    pub stats: CoordinatorStats,
+    pub plan_digest: u64,
+}
+
+impl LoadResult {
+    /// served + shed + expired + failed — must equal `issued`.
+    pub fn resolved(&self) -> u64 {
+        self.served + self.shed + self.expired + self.failed
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.served as f64 / (self.wall_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-request outcome accumulator shared by both drivers.
+#[derive(Default)]
+struct Tally {
+    served: u64,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+    latency: SampleSet,
+    hist: Histogram,
+}
+
+impl Tally {
+    fn refusal(&mut self, kind: ErrorKind) {
+        match kind {
+            ErrorKind::QueueFull => self.shed += 1,
+            ErrorKind::DeadlineExceeded => self.expired += 1,
+            _ => self.failed += 1,
+        }
+    }
+
+    fn served_ms(&mut self, ms: f64) {
+        self.served += 1;
+        self.latency.push(ms);
+        self.hist.record(ms);
+    }
+}
+
+/// Open loop: pace submissions on the plan's virtual arrival times,
+/// shed on overflow, then drain every admitted reply.
+fn drive_open(coord: &Coordinator, plan: &RequestPlan, cfg: &RunConfig) -> (Tally, f64) {
+    let reqs = plan.realize(cfg.pattern);
+    let mut tally = Tally::default();
+    let mut pending = Vec::with_capacity(reqs.len());
+    let t0 = Instant::now();
+    for (req, planned) in reqs.into_iter().zip(&plan.requests) {
+        let target = Duration::from_micros(planned.arrival_us);
+        let now = t0.elapsed();
+        if now < target {
+            std::thread::sleep(target - now);
+        }
+        match coord.try_submit(req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => tally.refusal(e.kind()),
+        }
+    }
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(resp)) => tally.served_ms(resp.latency_ms()),
+            Ok(Err(e)) => tally.refusal(e.kind()),
+            Err(_) => tally.failed += 1,
+        }
+    }
+    (tally, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Closed loop: `plan.workers` clients, each submitting its round-robin
+/// slice of the plan one request at a time (blocking admission).
+fn drive_closed(coord: &Coordinator, plan: &RequestPlan, cfg: &RunConfig) -> (Tally, f64) {
+    let reqs = plan.realize(cfg.pattern);
+    let workers = plan.workers.max(1);
+    // round-robin lanes preserve plan order within each worker
+    let mut lanes: Vec<Vec<ConvRequest>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, req) in reqs.into_iter().enumerate() {
+        lanes[i % workers].push(req);
+    }
+    let shared = Mutex::new(Tally::default());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for lane in lanes {
+            let shared = &shared;
+            s.spawn(move || {
+                for req in lane {
+                    let t = Instant::now();
+                    match coord.submit(req) {
+                        Ok(rx) => match rx.recv() {
+                            Ok(Ok(_resp)) => {
+                                let ms = t.elapsed().as_secs_f64() * 1e3;
+                                lock(shared).served_ms(ms);
+                            }
+                            Ok(Err(e)) => lock(shared).refusal(e.kind()),
+                            Err(_) => lock(shared).failed += 1,
+                        },
+                        Err(e) => lock(shared).refusal(e.kind()),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    (shared.into_inner().unwrap_or_else(|e| e.into_inner()), wall)
+}
+
+fn lock(m: &Mutex<Tally>) -> std::sync::MutexGuard<'_, Tally> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One `(plan, mode)` run against a fresh coordinator.
+///
+/// The tuning tier is installed unconditionally (with the given cost
+/// model when there is one), so the plan-decision counters are always
+/// live: an untuned run reports everything as `default`, a model-backed
+/// run splits into `predicted`/`default`. Routing is the adaptive
+/// paper policy — per-shape deterministic, so batching keys stay
+/// coherent (round-robin would scatter equal requests across backends
+/// and defeat the coalescing the mix is built to exercise).
+pub fn run_mode(
+    cfg: &RunConfig,
+    plan: &RequestPlan,
+    mode: Mode,
+    executors: usize,
+    cost_model: Option<&CostModel>,
+) -> Result<LoadResult> {
+    let mut coord = Coordinator::new(cfg, RoutePolicy::paper_default(), executors, false)?;
+    let tuning = match cost_model {
+        Some(cm) => TuningTable::from_cost_model(cm.clone()),
+        None => TuningTable::new(),
+    };
+    coord.set_tuning(tuning);
+    let (tally, wall_ms) = match mode {
+        Mode::Open => drive_open(&coord, plan, cfg),
+        Mode::Closed => drive_closed(&coord, plan, cfg),
+    };
+    // every reply was received above, so executor stat shards are final
+    let stats = coord.stats();
+    Ok(LoadResult {
+        scale: plan.scale,
+        mode,
+        issued: plan.issued(),
+        served: tally.served,
+        shed: tally.shed,
+        expired: tally.expired,
+        failed: tally.failed,
+        latency: tally.latency,
+        hist: tally.hist,
+        wall_ms,
+        stats,
+        plan_digest: plan.digest(),
+    })
+}
+
+/// The full sweep: one plan per scale factor, one fresh coordinator
+/// per `(scale, mode)` run so runs never share queue state.
+pub fn run_scales(
+    cfg: &RunConfig,
+    mix: &MixConfig,
+    scales: &[usize],
+    modes: &[Mode],
+    executors: usize,
+    cost_model: Option<&CostModel>,
+) -> Result<Vec<LoadResult>> {
+    ensure!(!scales.is_empty(), "no scale factors given");
+    ensure!(!modes.is_empty(), "no load modes given");
+    let mut out = Vec::with_capacity(scales.len() * modes.len());
+    for &scale in scales {
+        let plan = RequestPlan::generate(mix, scale)?;
+        for &mode in modes {
+            out.push(run_mode(cfg, &plan, mode, executors, cost_model)?);
+        }
+    }
+    Ok(out)
+}
+
+fn fmt_p(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.3}"),
+        None => "-".to_string(),
+    }
+}
+
+/// The per-scale SLO table (`phi-conv load` output).
+pub fn report_table(results: &[LoadResult]) -> Table {
+    let mut t = Table::new(
+        "Load harness: latency SLOs per scale factor",
+        &[
+            "scale",
+            "mode",
+            "issued",
+            "served",
+            "shed",
+            "expired",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "req/s",
+            "depth peak",
+            "batch avg/max",
+            "plans p/s/d",
+        ],
+    );
+    for r in results {
+        let batch_mix = if r.stats.batch_sizes.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.2}/{:.0}", r.stats.batch_sizes.mean(), r.stats.batch_sizes.max())
+        };
+        t.row(vec![
+            r.scale.to_string(),
+            r.mode.label().to_string(),
+            r.issued.to_string(),
+            r.served.to_string(),
+            r.shed.to_string(),
+            r.expired.to_string(),
+            fmt_p(r.hist.percentile(50.0)),
+            fmt_p(r.hist.percentile(95.0)),
+            fmt_p(r.hist.percentile(99.0)),
+            format!("{:.0}", r.throughput_rps()),
+            r.stats.depth_peak.to_string(),
+            batch_mix,
+            format!(
+                "{}/{}/{}",
+                r.stats.plans_predicted, r.stats.plans_swept, r.stats.plans_default
+            ),
+        ]);
+    }
+    t
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) if x.is_finite() => Json::Num(x),
+        _ => Json::Null,
+    }
+}
+
+/// One result as JSON (an element of `BENCH_load.json`'s `scales`).
+pub fn result_json(r: &LoadResult) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("scale".to_string(), Json::Num(r.scale as f64));
+    o.insert("mode".to_string(), Json::Str(r.mode.label().to_string()));
+    o.insert("issued".to_string(), Json::Num(r.issued as f64));
+    o.insert("served".to_string(), Json::Num(r.served as f64));
+    o.insert("shed".to_string(), Json::Num(r.shed as f64));
+    o.insert("expired".to_string(), Json::Num(r.expired as f64));
+    o.insert("failed".to_string(), Json::Num(r.failed as f64));
+    o.insert("p50_ms".to_string(), opt_num(r.hist.percentile(50.0)));
+    o.insert("p95_ms".to_string(), opt_num(r.hist.percentile(95.0)));
+    o.insert("p99_ms".to_string(), opt_num(r.hist.percentile(99.0)));
+    o.insert("mean_ms".to_string(), opt_num(r.hist.mean()));
+    o.insert("max_ms".to_string(), opt_num(r.hist.max()));
+    o.insert("wall_ms".to_string(), opt_num(Some(r.wall_ms)));
+    o.insert("req_per_s".to_string(), opt_num(Some(r.throughput_rps())));
+    // u64 digests exceed 2^53 — a JSON number would round; hex string
+    o.insert("plan_digest".to_string(), Json::Str(format!("{:016x}", r.plan_digest)));
+    o.insert("stats".to_string(), r.stats.to_json());
+    Json::Obj(o)
+}
+
+/// The whole run as JSON: the mix block (so a reader can reproduce the
+/// schedule) plus one entry per `(scale, mode)` result.
+pub fn results_json(
+    mix: &MixConfig,
+    cfg: &RunConfig,
+    executors: usize,
+    results: &[LoadResult],
+) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "shapes".to_string(),
+        Json::Arr(mix.shapes().iter().map(|s| Json::Str(s.label())).collect()),
+    );
+    m.insert("zipf_s".to_string(), Json::Num(mix.zipf_s));
+    m.insert(
+        "widths".to_string(),
+        Json::Arr(mix.widths.iter().map(|&w| Json::Num(w as f64)).collect()),
+    );
+    m.insert("graph_fraction".to_string(), Json::Num(mix.graph_fraction));
+    m.insert("deadline_ms".to_string(), Json::Num(mix.deadline_ms as f64));
+    m.insert("requests_per_scale".to_string(), Json::Num(mix.requests_per_scale as f64));
+    m.insert("rate_per_s".to_string(), Json::Num(mix.rate_per_s));
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("load".to_string()));
+    root.insert("seed".to_string(), Json::Num(mix.seed as f64));
+    root.insert("threads".to_string(), Json::Num(cfg.threads as f64));
+    root.insert("executors".to_string(), Json::Num(executors as f64));
+    root.insert("batch_max".to_string(), Json::Num(cfg.batch_max as f64));
+    root.insert("queue_capacity".to_string(), Json::Num(cfg.queue_capacity as f64));
+    root.insert("mix".to_string(), Json::Obj(m));
+    root.insert("scales".to_string(), Json::Arr(results.iter().map(result_json).collect()));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_spellings() {
+        assert_eq!(Mode::parse("open").unwrap(), vec![Mode::Open]);
+        assert_eq!(Mode::parse("closed").unwrap(), vec![Mode::Closed]);
+        assert_eq!(Mode::parse("both").unwrap(), vec![Mode::Open, Mode::Closed]);
+        assert_eq!(Mode::parse("").unwrap(), vec![Mode::Open, Mode::Closed]);
+        assert!(Mode::parse("sideways").is_err());
+    }
+
+    #[test]
+    fn empty_sweeps_are_rejected() {
+        let cfg = RunConfig::default();
+        let mix = MixConfig::default();
+        assert!(run_scales(&cfg, &mix, &[], &[Mode::Open], 1, None).is_err());
+        assert!(run_scales(&cfg, &mix, &[1], &[], 1, None).is_err());
+    }
+}

@@ -1,0 +1,452 @@
+//! Deterministic traffic-mix generation.
+//!
+//! A scale factor maps to a request schedule through seeded PRNG draws
+//! only — no wall-clock, no host entropy — so the same
+//! `(seed, scale)` pair always yields byte-identical plans
+//! ([`RequestPlan::digest`] is the regression handle). The mix models
+//! the traffic a convolution service actually sees:
+//!
+//! * a small shape set with Zipf-skewed popularity (shape 0 is the hot
+//!   shape), so plan-keyed batching and shard affinity are exercised
+//!   rather than defeated by uniform traffic;
+//! * a kernel-width distribution over odd widths;
+//! * a fraction of multi-stage graph requests;
+//! * per-request deadlines and Poisson (exponential inter-arrival)
+//!   virtual arrival times for the open-loop driver.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::time::Duration;
+
+use crate::coordinator::{ConvRequest, GraphSpec};
+use crate::image::{synth_image, Pattern, PlanarImage};
+use crate::plan::KernelSpec;
+use crate::util::error::Result;
+use crate::util::prng::Prng;
+
+/// Knobs of the traffic model. Scale-factor mapping (Snippet-2 style:
+/// every formula is `scale × constant`):
+///
+/// * requests issued  = `requests_per_scale × scale`
+/// * open-loop rate   = `rate_per_s × scale` (requests per second)
+/// * closed-loop size = `workers_base + scale` workers (capped at 16)
+///
+/// The shape set itself is derived from `seed` alone, so the same mix
+/// serves comparable request populations at every scale factor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixConfig {
+    /// PRNG seed for shapes and the request stream.
+    pub seed: u64,
+    /// planes per image (the paper's exhibits use 3).
+    pub planes: usize,
+    /// number of distinct shapes; shape 0 is the hot shape.
+    pub shape_count: usize,
+    /// square-ish shape bounds: rows and cols drawn from [min, max].
+    pub min_size: usize,
+    pub max_size: usize,
+    /// Zipf exponent for shape popularity (0 = uniform; larger =
+    /// more skew toward shape 0).
+    pub zipf_s: f64,
+    /// candidate kernel widths (odd, ≥ 3).
+    pub widths: Vec<usize>,
+    /// fraction of requests carrying a 2–3 stage graph chain.
+    pub graph_fraction: f64,
+    /// per-request deadline (0 = no deadline).
+    pub deadline_ms: u64,
+    /// requests issued per unit of scale factor.
+    pub requests_per_scale: usize,
+    /// open-loop arrival rate per unit of scale factor (req/s).
+    pub rate_per_s: f64,
+    /// closed-loop worker baseline (workers = base + scale).
+    pub workers_base: usize,
+}
+
+impl Default for MixConfig {
+    fn default() -> Self {
+        Self {
+            seed: 20170710,
+            planes: 3,
+            shape_count: 5,
+            min_size: 48,
+            max_size: 160,
+            zipf_s: 1.1,
+            widths: vec![3, 5, 7, 9],
+            graph_fraction: 0.15,
+            deadline_ms: 1000,
+            requests_per_scale: 32,
+            rate_per_s: 200.0,
+            workers_base: 2,
+        }
+    }
+}
+
+impl MixConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.planes >= 1, "mix: planes must be >= 1");
+        ensure!(self.shape_count >= 1, "mix: shape_count must be >= 1");
+        ensure!(
+            self.min_size >= 16 && self.min_size <= self.max_size,
+            "mix: need 16 <= min_size <= max_size, got [{}, {}]",
+            self.min_size,
+            self.max_size
+        );
+        ensure!(!self.widths.is_empty(), "mix: widths is empty");
+        for &w in &self.widths {
+            ensure!(w % 2 == 1 && w >= 3, "mix: kernel width {w} must be odd and >= 3");
+            ensure!(w < self.min_size, "mix: kernel width {w} exceeds min_size {}", self.min_size);
+        }
+        ensure!(
+            self.zipf_s.is_finite() && self.zipf_s >= 0.0,
+            "mix: zipf_s must be finite and >= 0"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.graph_fraction),
+            "mix: graph_fraction must be in [0, 1], got {}",
+            self.graph_fraction
+        );
+        ensure!(self.requests_per_scale >= 1, "mix: requests_per_scale must be >= 1");
+        ensure!(
+            self.rate_per_s.is_finite() && self.rate_per_s > 0.0,
+            "mix: rate_per_s must be finite and > 0"
+        );
+        ensure!(self.workers_base >= 1, "mix: workers_base must be >= 1");
+        Ok(())
+    }
+
+    pub fn requests_for(&self, scale: usize) -> usize {
+        self.requests_per_scale * scale
+    }
+
+    pub fn rate_for(&self, scale: usize) -> f64 {
+        self.rate_per_s * scale as f64
+    }
+
+    pub fn workers_for(&self, scale: usize) -> usize {
+        (self.workers_base + scale).min(16)
+    }
+
+    /// The shape set, derived from `seed` alone (stable across scale
+    /// factors, so per-scale results compare like for like). Shapes
+    /// are drawn distinct where the bounds allow it.
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut rng = Prng::new(self.seed ^ 0x5148_4150_4553); // "SHAPES"
+        let mut out: Vec<Shape> = Vec::with_capacity(self.shape_count);
+        for _ in 0..self.shape_count {
+            let mut shape = Shape {
+                planes: self.planes,
+                rows: rng.range(self.min_size, self.max_size),
+                cols: rng.range(self.min_size, self.max_size),
+            };
+            // bounded dedup: small bound spans may not have
+            // shape_count distinct pairs, so give up after 16 tries
+            for _ in 0..16 {
+                if !out.contains(&shape) {
+                    break;
+                }
+                shape.rows = rng.range(self.min_size, self.max_size);
+                shape.cols = rng.range(self.min_size, self.max_size);
+            }
+            out.push(shape);
+        }
+        out
+    }
+}
+
+/// One entry of the mix's shape set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub planes: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Shape {
+    pub fn pixels(&self) -> usize {
+        self.planes * self.rows * self.cols
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.planes, self.rows, self.cols)
+    }
+}
+
+/// Normalised Zipf weights over `n` ranks: `w_i ∝ 1/(i+1)^s`.
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    let raw: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / total).collect()
+}
+
+/// Default Gaussian scale for a drawn width (the kernel covers ±2.5σ —
+/// same rule as the `graph` subcommand's stages).
+pub fn default_sigma(width: usize) -> f64 {
+    (width as f64 / 5.0).max(0.5)
+}
+
+/// One request of the schedule, in plan form (no image data — shapes
+/// are indices into the plan's shape set until [`RequestPlan::realize`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedRequest {
+    pub id: u64,
+    /// index into [`RequestPlan::shapes`].
+    pub shape: usize,
+    /// single-stage kernel (ignored when `graph` is set).
+    pub kernel: KernelSpec,
+    /// multi-stage chain for graph requests.
+    pub graph: Option<Vec<KernelSpec>>,
+    pub deadline_ms: u64,
+    /// virtual arrival offset from the run start (open-loop pacing).
+    pub arrival_us: u64,
+}
+
+/// The full deterministic schedule for one `(mix, scale)` pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestPlan {
+    pub scale: usize,
+    pub seed: u64,
+    pub shapes: Vec<Shape>,
+    /// Zipf popularity of each shape (sums to 1; index 0 is hot).
+    pub weights: Vec<f64>,
+    pub requests: Vec<PlannedRequest>,
+    /// open-loop arrival rate for this scale (req/s).
+    pub rate_per_s: f64,
+    /// closed-loop worker count for this scale.
+    pub workers: usize,
+}
+
+impl RequestPlan {
+    /// Derive the schedule. Deterministic: PRNG draws only, seeded
+    /// from `(mix.seed, scale)` — same inputs, same plan, bitwise.
+    pub fn generate(mix: &MixConfig, scale: usize) -> Result<RequestPlan> {
+        mix.validate()?;
+        ensure!(scale >= 1, "scale factor must be >= 1, got {scale}");
+        let shapes = mix.shapes();
+        let weights = zipf_weights(shapes.len(), mix.zipf_s);
+        let cum: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w;
+                Some(*acc)
+            })
+            .collect();
+
+        let n = mix.requests_for(scale);
+        let mean_gap_us = 1e6 / mix.rate_for(scale);
+        let mut rng = Prng::new(mix.seed ^ (scale as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut arrival = 0f64;
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            let u = rng.f32() as f64;
+            let shape = cum.iter().position(|&c| u < c).unwrap_or(shapes.len() - 1);
+            let width = *rng.pick(&mix.widths);
+            let kernel = KernelSpec::new(width, default_sigma(width));
+            let graph = if (rng.f32() as f64) < mix.graph_fraction {
+                let stages = rng.range(2, 3);
+                Some(
+                    (0..stages)
+                        .map(|_| {
+                            let w = *rng.pick(&mix.widths);
+                            KernelSpec::new(w, default_sigma(w))
+                        })
+                        .collect::<Vec<_>>(),
+                )
+            } else {
+                None
+            };
+            // Poisson arrivals: exponential inter-arrival gaps,
+            // −ln(1−u)·mean with u ∈ [0,1) so the log argument is
+            // in (0,1] and the gap is finite and ≥ 0
+            let u = rng.f32() as f64;
+            arrival += -(1.0 - u).ln() * mean_gap_us;
+            requests.push(PlannedRequest {
+                id,
+                shape,
+                kernel,
+                graph,
+                deadline_ms: mix.deadline_ms,
+                arrival_us: arrival as u64,
+            });
+        }
+        Ok(RequestPlan {
+            scale,
+            seed: mix.seed,
+            shapes,
+            weights,
+            requests,
+            rate_per_s: mix.rate_for(scale),
+            workers: mix.workers_for(scale),
+        })
+    }
+
+    pub fn issued(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// How many requests target each shape index (skew diagnostics).
+    pub fn shape_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.shapes.len()];
+        for r in &self.requests {
+            counts[r.shape] += 1;
+        }
+        counts
+    }
+
+    /// Requests carrying a graph chain.
+    pub fn graph_count(&self) -> usize {
+        self.requests.iter().filter(|r| r.graph.is_some()).count()
+    }
+
+    /// Stable identity of the schedule: same `(mix, scale)` ⇒ same
+    /// digest, any drift in the generator changes it. (DefaultHasher
+    /// uses fixed keys, so this is stable across processes — the same
+    /// property `GraphSpec::digest` already relies on.)
+    pub fn digest(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.scale.hash(&mut h);
+        self.seed.hash(&mut h);
+        for s in &self.shapes {
+            s.hash(&mut h);
+        }
+        for r in &self.requests {
+            r.id.hash(&mut h);
+            r.shape.hash(&mut h);
+            r.kernel.cache_key().hash(&mut h);
+            match &r.graph {
+                Some(stages) => {
+                    true.hash(&mut h);
+                    stages.len().hash(&mut h);
+                    for k in stages {
+                        k.cache_key().hash(&mut h);
+                    }
+                }
+                None => false.hash(&mut h),
+            }
+            r.deadline_ms.hash(&mut h);
+            r.arrival_us.hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Materialise submittable requests: one synthetic image per shape
+    /// (cloned per request — the submission loop must stay cheap so
+    /// open-loop pacing is honest), builders applied per the plan.
+    pub fn realize(&self, pattern: Pattern) -> Vec<ConvRequest> {
+        let images: Vec<PlanarImage> = self
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| synth_image(s.planes, s.rows, s.cols, pattern, self.seed + i as u64))
+            .collect();
+        self.requests
+            .iter()
+            .map(|p| {
+                let mut req = ConvRequest::new(p.id, images[p.shape].clone());
+                req = match &p.graph {
+                    Some(stages) => req.with_graph(GraphSpec::chain(stages.clone())),
+                    None => req.with_kernel(p.kernel),
+                };
+                if p.deadline_ms > 0 {
+                    req = req.with_deadline(Duration::from_millis(p.deadline_ms));
+                }
+                req
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_scale_is_bitwise_identical() {
+        let mix = MixConfig::default();
+        let a = RequestPlan::generate(&mix, 3).unwrap();
+        let b = RequestPlan::generate(&mix, 3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = RequestPlan::generate(&MixConfig::default(), 2).unwrap();
+        let mix_b = MixConfig { seed: 99, ..MixConfig::default() };
+        let b = RequestPlan::generate(&mix_b, 2).unwrap();
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn scale_maps_linearly_to_volume_and_rate() {
+        let mix = MixConfig::default();
+        for scale in [1usize, 2, 5] {
+            let plan = RequestPlan::generate(&mix, scale).unwrap();
+            assert_eq!(plan.issued(), mix.requests_per_scale * scale);
+            assert_eq!(plan.rate_per_s, mix.rate_per_s * scale as f64);
+            assert_eq!(plan.workers, (mix.workers_base + scale).min(16));
+        }
+    }
+
+    #[test]
+    fn shape_set_is_stable_across_scales() {
+        let mix = MixConfig::default();
+        let a = RequestPlan::generate(&mix, 1).unwrap();
+        let b = RequestPlan::generate(&mix, 5).unwrap();
+        assert_eq!(a.shapes, b.shapes);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn zipf_weights_are_a_distribution() {
+        for (n, s) in [(5usize, 1.1), (3, 0.0), (8, 2.5), (1, 1.0)] {
+            let w = zipf_weights(n, s);
+            assert_eq!(w.len(), n);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "n={n} s={s}");
+            for pair in w.windows(2) {
+                assert!(pair[0] >= pair[1] - 1e-15, "weights must be non-increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing() {
+        let plan = RequestPlan::generate(&MixConfig::default(), 2).unwrap();
+        for pair in plan.requests.windows(2) {
+            assert!(pair[0].arrival_us <= pair[1].arrival_us);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_mixes() {
+        let even = MixConfig { widths: vec![4], ..MixConfig::default() };
+        assert!(even.validate().is_err());
+        let inverted = MixConfig { min_size: 100, max_size: 50, ..MixConfig::default() };
+        assert!(inverted.validate().is_err());
+        let frac = MixConfig { graph_fraction: 1.5, ..MixConfig::default() };
+        assert!(frac.validate().is_err());
+        assert!(RequestPlan::generate(&MixConfig::default(), 0).is_err());
+    }
+
+    #[test]
+    fn realize_carries_the_plan_onto_requests() {
+        let mix = MixConfig { requests_per_scale: 16, ..MixConfig::default() };
+        let plan = RequestPlan::generate(&mix, 1).unwrap();
+        let reqs = plan.realize(Pattern::Noise);
+        assert_eq!(reqs.len(), plan.issued());
+        for (req, p) in reqs.iter().zip(&plan.requests) {
+            assert_eq!(req.id, p.id);
+            let shape = plan.shapes[p.shape];
+            assert_eq!(
+                (req.image.planes, req.image.rows, req.image.cols),
+                (shape.planes, shape.rows, shape.cols)
+            );
+            match &p.graph {
+                Some(stages) => {
+                    let g = req.graph.as_ref().expect("graph request");
+                    assert_eq!(g.stages.len(), stages.len());
+                }
+                None => assert_eq!(req.kernel, Some(p.kernel)),
+            }
+            assert!(req.deadline.is_some(), "default mix sets deadlines");
+        }
+    }
+}

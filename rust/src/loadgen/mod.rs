@@ -1,0 +1,32 @@
+//! Scale-factor load harness: deterministic traffic mixes driving the
+//! real coordinator end-to-end, with latency-SLO reporting.
+//!
+//! The paper measures kernels in isolation; a serving system earns its
+//! claims under traffic. This module turns a single integer — the
+//! *scale factor* — into a reproducible production-shaped workload
+//! (clickgraph-style planning: every knob is `scale × constant`):
+//!
+//! * [`MixConfig`] — the traffic model: a Zipf-skewed shape set,
+//!   kernel-width distribution, graph-request fraction, deadlines,
+//!   arrival rate. All deterministic from a seed.
+//! * [`RequestPlan`] — the materialised schedule for one
+//!   `(mix, scale)` pair; [`RequestPlan::digest`] is the regression
+//!   handle for "same seed ⇒ same schedule".
+//! * [`run_scales`]/[`run_mode`] — drive a fresh [`Coordinator`]
+//!   (open-loop Poisson pacing or closed-loop workers), classify every
+//!   request as served / shed / expired, and snapshot the
+//!   coordinator's queue/batch/plan-decision counters.
+//! * [`report_table`]/[`results_json`] — the per-scale p50/p95/p99
+//!   table and the `BENCH_load.json` document.
+//!
+//! Consumers: `phi-conv load`, `benches/loadgen.rs`,
+//! `tests/loadgen.rs` (tier-1), and the mixed-traffic leg of
+//! `tests/queue_stress.rs`.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+mod drive;
+mod mix;
+
+pub use drive::{report_table, result_json, results_json, run_mode, run_scales, LoadResult, Mode};
+pub use mix::{default_sigma, zipf_weights, MixConfig, PlannedRequest, RequestPlan, Shape};

@@ -7,6 +7,7 @@
 //!   graph        run a multi-stage filter chain (streamed vs materialized)
 //!   validate     cross-check PJRT artifacts vs the native engines
 //!   serve        start the coordinator and push a synthetic workload
+//!   load         scale-factor load harness: deterministic traffic mix + SLO table
 //!   info         artifact manifest + configuration summary
 //!
 //! Examples:
@@ -21,6 +22,8 @@
 //!   phi-conv graph --stages blur:5,blur:9 --sweep    # per-edge policies
 //!   phi-conv validate
 //!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
+//!   phi-conv load --scale 1,5                        # SLO curve + BENCH_load.json
+//!   phi-conv load --scale 2 --mode closed --load BENCH_costmodel.json
 //!   phi-conv info
 
 use phi_conv::{bail, ensure, Context, Result};
@@ -33,6 +36,7 @@ use phi_conv::image::{gaussian_kernel, synth_image, PlanarImage};
 use phi_conv::metrics::{time_reps, SampleSet, Table};
 use phi_conv::plan::{FilterGraph, KernelSpec, ScratchArena};
 use phi_conv::runtime::Manifest;
+use phi_conv::util::cli::Cli;
 use phi_conv::util::prng::Prng;
 
 fn main() {
@@ -62,6 +66,11 @@ fn run() -> Result<()> {
         .flag("explain", "graph: print the per-stage traffic breakdown")
         .flag("check", "graph: fail unless streamed == materialized bitwise")
         .flag("sweep", "graph: sweep per-edge streaming policies (Gaussian stages only)")
+        .opt("scale", "1", "load: comma-separated scale factors, e.g. 1,2,5")
+        .opt("mode", "both", "load: driver model — open|closed|both")
+        .opt("rate", "", "load: open-loop arrival rate per scale unit in req/s (default 200)")
+        .opt("per-scale", "", "load: requests issued per scale unit (default 32)")
+        .opt("out", "BENCH_load.json", "load: JSON artifact path (empty = don't write)")
         .parse(args)?;
 
     let cfg = RunConfig::resolve(&cli)?;
@@ -107,10 +116,11 @@ fn run() -> Result<()> {
             !cli.is_set("no-pjrt"),
             cli.str_of("load")?,
         )?,
+        "load" => load_cmd(&cfg, &cli)?,
         "info" => info(&cfg)?,
         _ => {
             println!(
-                "usage: phi-conv <simulate|measure|tune|graph|validate|serve|info> [options]"
+                "usage: phi-conv <simulate|measure|tune|graph|validate|serve|load|info> [options]"
             );
             println!("       phi-conv --help        for the option list");
         }
@@ -142,8 +152,7 @@ fn tune(cfg: &RunConfig, format: &str, save: &str, load: &str, predict: bool) ->
     let loaded = if load.is_empty() {
         None
     } else {
-        let mut cm = CostModel::load(std::path::Path::new(load))?;
-        cm.set_r2_min(cfg.r2_min);
+        let cm = CostModel::load_with_gate(std::path::Path::new(load), cfg.r2_min)?;
         eprintln!(
             "loaded cost model {load}: {} samples, {} of {} groups usable at r2_min {}",
             cm.samples().len(),
@@ -567,17 +576,15 @@ fn serve(
         Err(e) => return Err(e),
     };
     if !load.is_empty() {
-        let mut cm = phi_conv::costmodel::CostModel::load(std::path::Path::new(load))?;
-        cm.set_r2_min(cfg.r2_min);
+        let cm =
+            phi_conv::costmodel::CostModel::load_with_gate(std::path::Path::new(load), cfg.r2_min)?;
         eprintln!(
             "loaded cost model {load}: {} of {} groups usable at r2_min {}",
             cm.usable_groups(),
             cm.groups().len(),
             cfg.r2_min
         );
-        let mut tuning = phi_conv::autotune::TuningTable::new();
-        tuning.set_cost_model(cm);
-        coord.set_tuning(tuning);
+        coord.set_tuning(phi_conv::autotune::TuningTable::from_cost_model(cm));
     }
     println!(
         "coordinator up: {} executors, policy {policy:?}, pjrt={}",
@@ -643,6 +650,71 @@ fn serve(
         stats.expired,
         refused
     );
+    Ok(())
+}
+
+/// The scale-factor load harness: deterministic traffic mixes against
+/// a fresh coordinator per (scale, mode), reported as the per-scale
+/// SLO table (p50/p95/p99, served/shed/expired, depth peak, batch and
+/// plan-decision mixes) plus the `BENCH_load.json` document.
+fn load_cmd(cfg: &RunConfig, cli: &Cli) -> Result<()> {
+    use phi_conv::loadgen::{report_table, results_json, run_scales, MixConfig, Mode};
+
+    let scales = cli.usize_list_of("scale")?;
+    let modes = Mode::parse(cli.str_of("mode")?)?;
+    let executors = cli.usize_of("executors")?;
+
+    // the harness exists to exercise plan-keyed batching: unless the
+    // operator pinned --batch-max, coalesce up to 8 jobs per dispatch
+    let mut cfg = cfg.clone();
+    if cli.get("batch-max").unwrap_or("").is_empty() {
+        cfg.batch_max = 8;
+    }
+
+    let mut mix = MixConfig { seed: cfg.seed, planes: cfg.planes, ..MixConfig::default() };
+    if cfg.deadline_ms > 0 {
+        mix.deadline_ms = cfg.deadline_ms;
+    }
+    if let Some(v) = cli.get("rate") {
+        if !v.is_empty() {
+            mix.rate_per_s = v.parse()?;
+        }
+    }
+    if let Some(v) = cli.get("per-scale") {
+        if !v.is_empty() {
+            mix.requests_per_scale = v.parse()?;
+        }
+    }
+
+    let load = cli.str_of("load")?;
+    let cm = if load.is_empty() {
+        None
+    } else {
+        let cm =
+            phi_conv::costmodel::CostModel::load_with_gate(std::path::Path::new(load), cfg.r2_min)?;
+        eprintln!(
+            "loaded cost model {load}: {} of {} groups usable at r2_min {}",
+            cm.usable_groups(),
+            cm.groups().len(),
+            cfg.r2_min
+        );
+        Some(cm)
+    };
+
+    eprintln!(
+        "load harness: scales {scales:?}, {} requests + {} req/s per scale unit, \
+         {executors} executors, batch_max {}, deadline {} ms, seed {}",
+        mix.requests_per_scale, mix.rate_per_s, cfg.batch_max, mix.deadline_ms, mix.seed
+    );
+    let results = run_scales(&cfg, &mix, &scales, &modes, executors, cm.as_ref())?;
+    print_table(&report_table(&results), cli.str_of("format")?);
+
+    let out = cli.str_of("out")?;
+    if !out.is_empty() {
+        let json = results_json(&mix, &cfg, executors, &results);
+        std::fs::write(out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote {out}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,290 @@
+//! Log-bucketed latency histogram for the load harness.
+//!
+//! [`SampleSet`](super::SampleSet) keeps every sample and computes exact
+//! percentiles by sorting — fine for bench reps, wrong for a load run
+//! that may record hundreds of thousands of latencies. `Histogram`
+//! spends fixed memory (one `u64` per bucket) and answers percentile
+//! queries with bounded relative error instead: buckets are spaced
+//! geometrically ([`BUCKETS_PER_DECADE`] per power of ten, covering
+//! 1e-4 ms .. 1e5 ms), so any reported quantile is within
+//! [`Histogram::relative_resolution`] (~7.5%) of the exact value.
+//!
+//! Reported percentiles are the geometric midpoint of the selected
+//! bucket, clamped to the observed `[min, max]` — which makes a
+//! single-sample histogram exact and keeps every quantile inside the
+//! recorded range.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Geometric bucket density. 32/decade ⇒ bucket edges grow by
+/// 10^(1/32) ≈ 7.46% — the quantile error bound.
+const BUCKETS_PER_DECADE: usize = 32;
+/// Smallest representable latency: 10^LO_EXP ms (0.1 µs).
+const LO_EXP: f64 = -4.0;
+/// Decades covered above `LO_EXP` (up to 1e5 ms ≈ 100 s).
+const DECADES: usize = 9;
+const NUM_BUCKETS: usize = DECADES * BUCKETS_PER_DECADE;
+
+/// Fixed-memory latency histogram (milliseconds by convention).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NUM_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one latency. Non-finite values have no bucket and are
+    /// dropped (they would otherwise poison min/max/sum); negative
+    /// values clamp to the lowest bucket.
+    pub fn record(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let v = ms.max(0.0);
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 10f64.powf(LO_EXP) {
+            return 0;
+        }
+        let idx = ((v.log10() - LO_EXP) * BUCKETS_PER_DECADE as f64).floor() as isize;
+        idx.clamp(0, NUM_BUCKETS as isize - 1) as usize
+    }
+
+    /// Geometric midpoint of bucket `i` (the reported quantile value).
+    fn bucket_mid(i: usize) -> f64 {
+        10f64.powf(LO_EXP + (i as f64 + 0.5) / BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        (self.total > 0).then(|| self.sum / self.total as f64)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        (self.total > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        (self.total > 0).then_some(self.max)
+    }
+
+    /// Nearest-rank percentile, `q ∈ [0, 100]`: the midpoint of the
+    /// bucket holding the ⌈q/100·n⌉-th smallest sample, clamped to the
+    /// observed `[min, max]`. `None` when the histogram is empty — an
+    /// empty load run has no latency distribution, and a NaN here
+    /// would silently order as "less than" everything in SLO checks.
+    ///
+    /// Monotone in `q` by construction (cumulative counts only grow),
+    /// so p50 ≤ p95 ≤ p99 always holds.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(Self::bucket_mid(i).clamp(self.min, self.max));
+            }
+        }
+        // cum == total ≥ rank, so the loop always returns; guard anyway
+        Some(self.max)
+    }
+
+    /// Worst-case relative error of a reported percentile vs the exact
+    /// sample value: one bucket's half-width, 10^(1/32) − 1 ≈ 7.46%.
+    pub fn relative_resolution() -> f64 {
+        10f64.powf(1.0 / BUCKETS_PER_DECADE as f64) - 1.0
+    }
+
+    /// Fold another histogram in (per-run aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.total == 0 {
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Summary as JSON: `n` plus nullable p50/p95/p99/mean/min/max
+    /// (null when empty — RFC 8259 has no NaN).
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| match v {
+            Some(x) if x.is_finite() => Json::Num(x),
+            _ => Json::Null,
+        };
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(self.total as f64));
+        obj.insert("p50".to_string(), opt(self.percentile(50.0)));
+        obj.insert("p95".to_string(), opt(self.percentile(95.0)));
+        obj.insert("p99".to_string(), opt(self.percentile(99.0)));
+        obj.insert("mean".to_string(), opt(self.mean()));
+        obj.insert("min".to_string(), opt(self.min()));
+        obj.insert("max".to_string(), opt(self.max()));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SampleSet;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn empty_histogram_has_no_percentiles() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.min(), None);
+        assert_eq!(h.max(), None);
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_every_quantile() {
+        // min == max == the sample, so the midpoint clamp collapses
+        // every percentile to the exact value
+        let mut h = Histogram::new();
+        h.record(7.25);
+        for q in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(q), Some(7.25), "q={q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), Some(7.25));
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut h = Histogram::new();
+        let mut rng = Prng::new(42);
+        for _ in 0..500 {
+            h.record(rng.f32() as f64 * 20.0 + 0.01);
+        }
+        let (p50, p95, p99) =
+            (h.percentile(50.0).unwrap(), h.percentile(95.0).unwrap(), h.percentile(99.0).unwrap());
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(h.min().unwrap() <= p50 && p99 <= h.max().unwrap());
+    }
+
+    #[test]
+    fn histogram_matches_exact_percentiles_within_resolution() {
+        // seeded log-uniform sample spanning three decades: the
+        // histogram quantile must stay within one bucket's relative
+        // resolution of the exact sorted-sample quantile
+        let mut h = Histogram::new();
+        let mut exact = SampleSet::new();
+        let mut rng = Prng::new(0x1517);
+        for _ in 0..1000 {
+            let v = 10f64.powf(rng.f32() as f64 * 3.0 - 1.0); // 0.1 .. 100 ms
+            h.record(v);
+            exact.push(v);
+        }
+        let tol = Histogram::relative_resolution();
+        for q in [50.0, 90.0, 95.0, 99.0] {
+            let want = exact.percentile(q);
+            let got = h.percentile(q).unwrap();
+            let rel = (got - want).abs() / want;
+            assert!(rel <= tol, "q={q}: hist {got:.4} vs exact {want:.4} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_and_negatives_clamp() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert!(h.is_empty());
+        h.record(-3.0); // clamps to 0 in the lowest bucket
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), Some(0.0));
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_into_one() {
+        let mut rng = Prng::new(9);
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 0..200 {
+            let v = rng.f32() as f64 * 50.0;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [50.0, 95.0, 99.0] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+    }
+
+    #[test]
+    fn out_of_range_values_land_in_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record(1e-9); // below the lowest edge
+        h.record(1e9); // above the highest edge
+        assert_eq!(h.count(), 2);
+        // clamped to observed min/max, so quantiles stay in range
+        let p99 = h.percentile(99.0).unwrap();
+        assert!(p99 <= 1e9 && p99 >= 1e-9);
+    }
+
+    #[test]
+    fn json_summary_is_valid_and_nullable() {
+        let dumped = Histogram::new().to_json().to_string();
+        let parsed = Json::parse(&dumped).expect("empty histogram dumps valid JSON");
+        assert_eq!(parsed.req_usize("n").unwrap(), 0);
+        assert_eq!(parsed.get("p99"), &Json::Null);
+        let mut h = Histogram::new();
+        h.record(2.0);
+        let parsed = Json::parse(&h.to_json().to_string()).unwrap();
+        assert!((parsed.req_f64("p50").unwrap() - 2.0).abs() < 1e-12);
+    }
+}

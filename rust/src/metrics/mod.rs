@@ -1,7 +1,10 @@
-//! Timing statistics and paper-style table rendering.
+//! Timing statistics, latency histograms and paper-style table
+//! rendering.
 
+mod histogram;
 mod stats;
 mod table;
 
+pub use histogram::Histogram;
 pub use stats::{time_reps, SampleSet, Stopwatch};
 pub use table::{ms, speedup, Table};

@@ -82,6 +82,15 @@ impl SampleSet {
         }
     }
 
+    /// Percentile with a structured empty-set result: `None` when
+    /// there are no samples, where [`SampleSet::percentile`] returns
+    /// NaN. SLO reporting uses this so an empty latency set shows up
+    /// as "no data" instead of a NaN that compares false to every
+    /// threshold.
+    pub fn percentile_checked(&self, q: f64) -> Option<f64> {
+        (!self.samples.is_empty()).then(|| self.percentile(q))
+    }
+
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
@@ -197,6 +206,48 @@ mod tests {
         let s = SampleSet::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_exact_on_known_samples() {
+        // 1..5: pos = q/100·(n−1), linear interpolation between ranks
+        let s = SampleSet::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert!((s.percentile(95.0) - 4.8).abs() < 1e-12);
+        assert!((s.percentile(99.0) - 4.96).abs() < 1e-12);
+        assert_eq!(s.percentile(100.0), 5.0);
+        // order of insertion must not matter
+        let shuffled = SampleSet::from_vec(vec![4.0, 1.0, 5.0, 3.0, 2.0]);
+        assert_eq!(shuffled.percentile(50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_checked_structures_the_edge_cases() {
+        // n=0: structured None (the raw query is NaN, no panic)
+        let empty = SampleSet::new();
+        assert_eq!(empty.percentile_checked(50.0), None);
+        assert_eq!(empty.percentile_checked(99.0), None);
+        // n=1: every quantile is the lone sample
+        let one = SampleSet::from_vec(vec![7.0]);
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(one.percentile_checked(q), Some(7.0), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut s = SampleSet::new();
+        let mut x = 1u64;
+        for _ in 0..257 {
+            // deterministic scramble (splitmix-style) — no RNG import
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            s.push((x >> 40) as f64 / 1e3);
+        }
+        let (p50, p95, p99) =
+            (s.percentile(50.0), s.percentile(95.0), s.percentile(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(s.min() <= p50 && p99 <= s.max());
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Load-harness suite (tier-1, wired into scripts/verify.sh): the
+//! scale-factor traffic generator driving the real coordinator end to
+//! end, in both driver models —
+//!
+//! * accounting: every issued request resolves to exactly one of
+//!   served / shed / expired, refusals are structured (`failed == 0`),
+//!   and the coordinator's own counters agree with the driver's tally,
+//! * SLO quoting: p50 ≤ p95 ≤ p99, finite, inside `[min, max]`,
+//! * batching: a Zipf-skewed hot shape must actually coalesce
+//!   (batch sizes > 1) — the mix exists to exercise plan-keyed
+//!   batching, not defeat it,
+//! * determinism: the same seed reproduces the schedule bitwise; the
+//!   result carries the plan digest as the regression handle.
+//!
+//! Image sizes are kept small so the suite stays fast at
+//! `PHI_THREADS=1` — correctness here is about accounting, not
+//! throughput (the `loadgen` bench quotes the real curves).
+
+use phi_conv::config::RunConfig;
+use phi_conv::loadgen::{run_mode, run_scales, MixConfig, Mode, RequestPlan};
+use phi_conv::models::test_threads;
+
+/// Small, fast mix: generous deadlines and ample queue capacity so a
+/// healthy run serves everything — shed/expired legs live in the
+/// queue_stress suite where overload is constructed deliberately.
+fn fast_mix() -> MixConfig {
+    MixConfig {
+        min_size: 24,
+        max_size: 48,
+        widths: vec![3, 5],
+        deadline_ms: 60_000,
+        requests_per_scale: 24,
+        rate_per_s: 2000.0,
+        ..MixConfig::default()
+    }
+}
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        threads: test_threads(2),
+        queue_capacity: 512,
+        batch_max: 4,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn every_issued_request_is_accounted_for_in_both_modes() {
+    let mix = fast_mix();
+    let results = run_scales(&cfg(), &mix, &[1, 2], &[Mode::Open, Mode::Closed], 2, None).unwrap();
+    assert_eq!(results.len(), 4, "two scales x two modes");
+    for r in &results {
+        let plan = RequestPlan::generate(&mix, r.scale).unwrap();
+        assert_eq!(r.issued, plan.issued());
+        assert_eq!(
+            r.resolved() as usize,
+            r.issued,
+            "scale {} {}: served+shed+expired+failed must equal issued",
+            r.scale,
+            r.mode.label()
+        );
+        assert_eq!(r.failed, 0, "refusals must be structured");
+        // generous deadlines + capacity far beyond the plan: a healthy
+        // run serves everything, so the identity is exact
+        assert_eq!((r.shed, r.expired), (0, 0), "scale {} {}", r.scale, r.mode.label());
+        assert_eq!(r.served as usize, r.issued);
+        // the coordinator's own counters must agree with the tally
+        assert_eq!(r.stats.served, r.served);
+        assert_eq!(r.stats.errors, 0);
+        assert_eq!(r.hist.count(), r.served);
+        assert_eq!(r.latency.len() as u64, r.served);
+        // graph requests route through the DAG path...
+        assert_eq!(r.stats.graphs_served as usize, plan.graph_count());
+        // ...and everything else resolves a tuning decision: with no
+        // cost model installed they all land on `default`
+        assert_eq!(
+            (r.stats.plans_predicted + r.stats.plans_swept + r.stats.plans_default) as usize,
+            plan.issued() - plan.graph_count(),
+            "decision counters must cover every non-graph request"
+        );
+        assert_eq!(r.stats.plans_predicted, 0, "untuned run cannot predict");
+    }
+}
+
+#[test]
+fn quoted_percentiles_are_finite_ordered_and_in_range() {
+    let mix = fast_mix();
+    let r = {
+        let plan = RequestPlan::generate(&mix, 2).unwrap();
+        run_mode(&cfg(), &plan, Mode::Open, 2, None).unwrap()
+    };
+    assert!(r.served > 0);
+    let p50 = r.hist.percentile(50.0).expect("non-empty run has a p50");
+    let p95 = r.hist.percentile(95.0).unwrap();
+    let p99 = r.hist.percentile(99.0).unwrap();
+    assert!(p50.is_finite() && p95.is_finite() && p99.is_finite());
+    assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+    assert!(r.hist.min().unwrap() <= p50 && p99 <= r.hist.max().unwrap());
+    // the exact SampleSet agrees on ordering (it is the same data)
+    let e50 = r.latency.percentile_checked(50.0).unwrap();
+    let e99 = r.latency.percentile_checked(99.0).unwrap();
+    assert!(e50 <= e99);
+    assert!(r.wall_ms > 0.0);
+    assert!(r.throughput_rps() > 0.0);
+}
+
+#[test]
+fn hot_shape_skew_coalesces_into_batches() {
+    // sharp skew, one kernel width, no graphs: ~89% of requests share
+    // one PlanKey. Open loop at a rate far beyond one executor's
+    // service rate piles them up in the queue, so the executor must
+    // coalesce same-key neighbours when it comes free.
+    let mix = MixConfig {
+        shape_count: 2,
+        zipf_s: 3.0,
+        min_size: 48,
+        max_size: 64,
+        widths: vec![5],
+        graph_fraction: 0.0,
+        deadline_ms: 0,
+        requests_per_scale: 128,
+        rate_per_s: 1e6,
+        ..MixConfig::default()
+    };
+    let plan = RequestPlan::generate(&mix, 1).unwrap();
+    let counts = plan.shape_counts();
+    assert!(
+        counts[0] > plan.issued() / 2,
+        "zipf_s=3 over 2 shapes must make shape 0 hot, got {counts:?}"
+    );
+    let cfg = RunConfig { batch_max: 8, ..cfg() };
+    let r = run_mode(&cfg, &plan, Mode::Open, 1, None).unwrap();
+    assert_eq!(r.resolved() as usize, r.issued);
+    assert_eq!(r.failed, 0);
+    assert!(!r.stats.batch_sizes.is_empty());
+    assert!(
+        r.stats.batch_sizes.max() >= 2.0,
+        "hot-shape flood into one executor must coalesce, max batch {}",
+        r.stats.batch_sizes.max()
+    );
+}
+
+#[test]
+fn same_seed_reproduces_the_schedule_bitwise() {
+    let mix = fast_mix();
+    let a = RequestPlan::generate(&mix, 3).unwrap();
+    let b = RequestPlan::generate(&mix, 3).unwrap();
+    assert_eq!(a, b, "same (seed, scale) must yield an identical schedule");
+    assert_eq!(a.digest(), b.digest());
+
+    let other = MixConfig { seed: mix.seed + 1, ..mix.clone() };
+    let c = RequestPlan::generate(&other, 3).unwrap();
+    assert_ne!(a.digest(), c.digest(), "a different seed must change the schedule");
+
+    // the digest rides into the result — two runs of the same plan
+    // report the same regression handle even though latencies differ
+    let r1 = run_mode(&cfg(), &a, Mode::Closed, 1, None).unwrap();
+    let r2 = run_mode(&cfg(), &b, Mode::Closed, 1, None).unwrap();
+    assert_eq!(r1.plan_digest, a.digest());
+    assert_eq!(r1.plan_digest, r2.plan_digest);
+    assert_eq!(r1.issued, r2.issued);
+    assert_eq!(r1.served, r2.served);
+}

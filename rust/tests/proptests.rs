@@ -604,6 +604,98 @@ fn prop_random_chains_match_staged_reference() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// loadgen: the traffic-mix generator is a valid probability model
+// ---------------------------------------------------------------------------
+
+/// Random mix knobs: every generated schedule stays inside the model it
+/// claims to draw from — shapes within bounds, widths odd and from the
+/// mix's set, graph chains that pass GraphBuilder validation *and*
+/// build into executable plans, nondecreasing arrivals, Zipf weights
+/// forming a distribution, and a hot-shape empirical frequency that
+/// tracks the nominal weight.
+#[test]
+fn prop_loadgen_mix_is_a_valid_probability_model() {
+    use phi_conv::coordinator::GraphSpec;
+    use phi_conv::loadgen::{MixConfig, RequestPlan};
+
+    let mut rng = Prng::new(0x10AD);
+    for case in 0..25 {
+        let min_size = rng.range(24, 48);
+        let mix = MixConfig {
+            seed: rng.below(1 << 31) as u64,
+            shape_count: rng.range(2, 6),
+            min_size,
+            max_size: min_size + rng.range(16, 64),
+            zipf_s: rng.range(5, 25) as f64 / 10.0,
+            graph_fraction: rng.range(0, 4) as f64 / 10.0,
+            requests_per_scale: 64,
+            ..MixConfig::default()
+        };
+        let scale = rng.range(2, 5);
+        let plan = RequestPlan::generate(&mix, scale)
+            .unwrap_or_else(|e| panic!("case {case}: valid knobs must generate: {e:#}"));
+        assert_eq!(plan.issued(), 64 * scale, "case {case}");
+        assert_eq!(plan.shapes.len(), mix.shape_count, "case {case}");
+        for s in &plan.shapes {
+            assert_eq!(s.planes, mix.planes, "case {case}");
+            assert!(
+                (mix.min_size..=mix.max_size).contains(&s.rows)
+                    && (mix.min_size..=mix.max_size).contains(&s.cols),
+                "case {case}: shape {} outside [{}, {}]",
+                s.label(),
+                mix.min_size,
+                mix.max_size
+            );
+        }
+        // weights form a non-increasing distribution; index 0 is hot
+        assert_eq!(plan.weights.len(), mix.shape_count);
+        assert!((plan.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9, "case {case}");
+        for pair in plan.weights.windows(2) {
+            assert!(pair[0] >= pair[1] - 1e-15, "case {case}: weights must be non-increasing");
+        }
+        let mut prev_arrival = 0u64;
+        for r in &plan.requests {
+            assert!(r.shape < plan.shapes.len(), "case {case}: shape index in bounds");
+            let w = r.kernel.width;
+            assert!(w % 2 == 1 && mix.widths.contains(&w), "case {case}: width {w}");
+            if let Some(stages) = &r.graph {
+                assert!(
+                    (2..=3).contains(&stages.len()),
+                    "case {case}: graph chains are 2-3 stages, got {}",
+                    stages.len()
+                );
+                for k in stages {
+                    assert!(
+                        k.width % 2 == 1 && mix.widths.contains(&k.width),
+                        "case {case}: graph stage width {}",
+                        k.width
+                    );
+                }
+                // the chain must survive the real GraphBuilder, and
+                // build into an executable graph at the target shape
+                let spec = GraphSpec::chain(stages.clone());
+                spec.validate()
+                    .unwrap_or_else(|e| panic!("case {case}: chain must validate: {e:#}"));
+                let shape = plan.shapes[r.shape];
+                spec.build(shape.planes, shape.rows, shape.cols, Variant::Simd, Layout::PerPlane)
+                    .unwrap_or_else(|e| panic!("case {case}: chain must build: {e:#}"));
+            }
+            assert!(r.arrival_us >= prev_arrival, "case {case}: arrivals nondecreasing");
+            prev_arrival = r.arrival_us;
+            assert_eq!(r.deadline_ms, mix.deadline_ms, "case {case}");
+        }
+        // the hot shape's empirical frequency tracks its Zipf weight
+        // (n >= 128, so 0.15 is many binomial standard deviations)
+        let hot = plan.shape_counts()[0] as f64 / plan.issued() as f64;
+        assert!(
+            (hot - plan.weights[0]).abs() < 0.15,
+            "case {case}: hot-shape frequency {hot:.3} vs weight {:.3}",
+            plan.weights[0]
+        );
+    }
+}
+
 /// Convolution energy property across random inputs: a normalised
 /// Gaussian never increases the max-abs pixel value of the interior.
 #[test]

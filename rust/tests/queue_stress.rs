@@ -17,6 +17,7 @@ use std::time::Duration;
 use phi_conv::config::RunConfig;
 use phi_conv::coordinator::{Backend, ConvRequest, Coordinator, RoutePolicy};
 use phi_conv::image::{synth_image, Pattern, PlanarImage};
+use phi_conv::loadgen::{run_mode, MixConfig, Mode, RequestPlan};
 use phi_conv::ErrorKind;
 
 fn cfg(queue_capacity: usize) -> RunConfig {
@@ -211,6 +212,103 @@ fn batched_responses_bitwise_equal_singly_served() {
         max_batch = max_batch.max(resp.batch_len);
     }
     assert!(max_batch >= 2, "the six queued same-key jobs must coalesce, got {max_batch}");
+}
+
+#[test]
+fn load_mix_slo_violations_are_structured_shed_and_expiry() {
+    // the loadgen overload leg: a realistic mixed-traffic plan (hot
+    // shapes, mixed widths, a graph fraction) fired effectively all at
+    // once into an undersized queue with deadlines far below the
+    // service time. Admission must shed (QueueFull), whatever queues
+    // behind the busy executor must expire (DeadlineExceeded), and
+    // nothing may land in the unstructured `failed` bucket — the
+    // accounting identity holds even when almost everything is refused.
+    let mix = MixConfig {
+        min_size: 192,
+        max_size: 224,
+        deadline_ms: 1,
+        requests_per_scale: 64,
+        rate_per_s: 1e6,
+        ..MixConfig::default()
+    };
+    let plan = RequestPlan::generate(&mix, 3).unwrap();
+    let r = run_mode(&cfg(2), &plan, Mode::Open, 1, None).unwrap();
+    assert_eq!(r.issued, 192);
+    assert_eq!(
+        r.resolved() as usize,
+        r.issued,
+        "overload must not lose requests: served {} shed {} expired {} failed {}",
+        r.served,
+        r.shed,
+        r.expired,
+        r.failed
+    );
+    assert_eq!(r.failed, 0, "every refusal must carry a structured kind");
+    assert!(r.shed > 0, "192 near-instant arrivals into capacity 2 must shed");
+    assert!(
+        r.expired > 0,
+        "a 1 ms TTL behind a 192x224-class convolution must lapse in the queue"
+    );
+    // coordinator counters saw the same story
+    assert_eq!(r.stats.shed, r.shed);
+    assert_eq!(r.stats.expired, r.expired);
+    assert!(r.stats.depth_peak <= 2, "capacity 2 bounds the queue");
+}
+
+#[test]
+fn load_plan_drain_after_drop_resolves_every_reply() {
+    // submit a whole realized plan, then drop the coordinator while
+    // replies are outstanding: the drain must resolve every admitted
+    // reply to a response or a structured kind — never a hang (the
+    // recv_timeout below converts the old hang-forever failure mode
+    // into a loud test failure)
+    let mix = MixConfig {
+        min_size: 128,
+        max_size: 160,
+        deadline_ms: 5,
+        requests_per_scale: 32,
+        rate_per_s: 1e6,
+        ..MixConfig::default()
+    };
+    let plan = RequestPlan::generate(&mix, 1).unwrap();
+    let coord = Coordinator::new(&cfg(4), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false)
+        .unwrap();
+    let mut pending = Vec::new();
+    let mut refused = 0usize;
+    for req in plan.realize(Pattern::Noise) {
+        match coord.try_submit(req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e.kind(), ErrorKind::QueueFull | ErrorKind::DeadlineExceeded),
+                    "admission refusals are structured: {e:#}"
+                );
+                refused += 1;
+            }
+        }
+    }
+    drop(coord);
+    let mut resolved = 0usize;
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(resp)) => {
+                assert!(resp.service_ms >= 0.0);
+                resolved += 1;
+            }
+            Ok(Err(e)) => {
+                assert!(
+                    matches!(
+                        e.kind(),
+                        ErrorKind::Shutdown | ErrorKind::DeadlineExceeded | ErrorKind::QueueFull
+                    ),
+                    "drain refusals are structured: {e:#}"
+                );
+                resolved += 1;
+            }
+            Err(_) => panic!("reply channel hung or dangled after shutdown"),
+        }
+    }
+    assert_eq!(resolved + refused, plan.issued(), "every planned request accounted for");
 }
 
 #[test]

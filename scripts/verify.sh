@@ -42,6 +42,19 @@ echo "== cargo test -q --test graph_suite (streamed chains ≡ materialized + gr
 # graph regression is named in the output
 cargo test -q --test graph_suite
 
+echo "== cargo test -q --test loadgen_suite (load harness end to end)"
+# tier-1 by policy: an accounting bug in the load harness (a request
+# that resolves to nothing, or an unstructured refusal) silently
+# invalidates every SLO number the repo quotes; re-run standalone so a
+# harness regression is named in the output
+cargo test -q --test loadgen_suite
+
+echo "== phi-conv load --scale 1 (traffic mix smoke, tiny plan, no artifact)"
+# end-to-end CLI smoke: generate a deterministic mix, drive the real
+# coordinator in both loop modes, print the SLO table; --out "" skips
+# the artifact write (CI's bench smoke owns BENCH_load.json)
+cargo run --release --bin phi-conv -- load --scale 1 --per-scale 12 --rate 2000 --out ""
+
 echo "== phi-conv graph --check (2-stage streamed vs materialized, bitwise)"
 # end-to-end CLI smoke on a tiny image: generic widths share every
 # accumulation expression, so --check demands bitwise equality
