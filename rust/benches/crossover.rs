@@ -1,0 +1,138 @@
+//! Bench: the direct-2D vs FFT kernel-class crossover.
+//!
+//! Sweeps odd kernel widths 3..=63 on one image size, timing the banded
+//! direct 2-D engine against the radix-2 FFT convolver, and reports the
+//! first width where the FFT wins — the measured crossover the learned
+//! cost model is expected to place on its own. Emits the sweep as
+//! `BENCH_crossover.json` so future perf PRs have a trajectory file for
+//! both engines.
+//!
+//! Correctness is asserted, timing is only reported: at every width the
+//! two classes must agree within 1e-4 (the FFT runs f64 internally, the
+//! direct engines accumulate f32), and the separable two-pass output
+//! anchors the direct engine within 1e-6. Which width wins is a column
+//! to read, not a test to fail — the crossover moves with the host.
+//!
+//! `cargo bench --bench crossover` — env overrides:
+//!   PHI_BENCH_SIZES=256 (last entry is used)  PHI_BENCH_REPS=5
+//!   PHI_BENCH_THREADS=8  PHI_CROSSOVER_JSON=BENCH_crossover.json (empty = skip)
+
+use phi_conv::config::{default_threads, RunConfig};
+use phi_conv::image::synth_image;
+use phi_conv::metrics::{time_reps, Table};
+use phi_conv::models::OpenMpModel;
+use phi_conv::plan::{ConvPlan, KernelClass, KernelSpec, ScratchArena};
+use phi_conv::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let threads = env_usize("PHI_BENCH_THREADS", default_threads());
+    let reps = env_usize("PHI_BENCH_REPS", 5);
+    let cfg = RunConfig { threads, reps, ..RunConfig::default() };
+    let size = std::env::var("PHI_BENCH_SIZES")
+        .ok()
+        .and_then(|v| v.split(',').last().and_then(|s| s.trim().parse().ok()))
+        .unwrap_or(256usize);
+
+    let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+    let model = OpenMpModel::new(threads);
+    let mut arena = ScratchArena::new();
+    let build = |width: usize, class: KernelClass| {
+        let sigma = (width as f64 / 5.0).max(0.5);
+        ConvPlan::builder()
+            .kernel(KernelSpec::new(width, sigma))
+            .kernel_class(class)
+            .shape(cfg.planes, size, size)
+            .build()
+            .expect("crossover plan")
+    };
+
+    let mut t = Table::new(
+        format!(
+            "kernel-class crossover: {}x{size}x{size}, {threads} threads, median of {reps}",
+            cfg.planes
+        ),
+        &["Width", "direct2d ms", "fft ms", "winner"],
+    );
+    let mut sweep = Vec::new();
+    let mut crossover: Option<usize> = None;
+    for width in (3..=63usize).step_by(4) {
+        if width >= size {
+            break;
+        }
+        let direct = build(width, KernelClass::Direct2d);
+        let fft = build(width, KernelClass::Fft);
+        let sep = {
+            let sigma = (width as f64 / 5.0).max(0.5);
+            ConvPlan::builder()
+                .kernel(KernelSpec::new(width, sigma))
+                .shape(cfg.planes, size, size)
+                .build()
+                .expect("separable plan")
+        };
+
+        let mut got_d = direct.execute_on(&model, &img, &mut arena).expect("direct2d");
+        let mut got_f = fft.execute_on(&model, &img, &mut arena).expect("fft");
+        let want = sep.execute(&img, &mut arena).expect("two-pass");
+        let d = got_d.max_abs_diff(&want);
+        assert!(d < 1e-6, "width {width}: direct2d vs two-pass diff {d:e}");
+        let f = got_f.max_abs_diff(&got_d);
+        assert!(f < 1e-4, "width {width}: fft vs direct2d diff {f:e}");
+
+        let t_d = time_reps(
+            || got_d = direct.execute_on(&model, &img, &mut arena).expect("direct2d"),
+            cfg.warmup,
+            reps,
+        )
+        .median();
+        let t_f = time_reps(
+            || got_f = fft.execute_on(&model, &img, &mut arena).expect("fft"),
+            cfg.warmup,
+            reps,
+        )
+        .median();
+        if crossover.is_none() && t_f < t_d {
+            crossover = Some(width);
+        }
+        t.row(vec![
+            width.to_string(),
+            format!("{t_d:.3}"),
+            format!("{t_f:.3}"),
+            if t_f < t_d { "fft" } else { "direct2d" }.to_string(),
+        ]);
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("width".to_string(), Json::Num(width as f64));
+        row.insert("direct_ms".to_string(), Json::Num(t_d));
+        row.insert("fft_ms".to_string(), Json::Num(t_f));
+        sweep.push(Json::Obj(row));
+    }
+    println!("{}", t.to_text());
+    match crossover {
+        Some(w) => println!("measured crossover width: {w}"),
+        None => println!("measured crossover width: none within the sweep"),
+    }
+
+    let path =
+        std::env::var("PHI_CROSSOVER_JSON").unwrap_or_else(|_| "BENCH_crossover.json".to_string());
+    if !path.is_empty() {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("crossover".to_string()));
+        root.insert("provenance".to_string(), Json::Str("measured".to_string()));
+        root.insert("threads".to_string(), Json::Num(threads as f64));
+        root.insert("planes".to_string(), Json::Num(cfg.planes as f64));
+        root.insert("size".to_string(), Json::Num(size as f64));
+        root.insert("reps".to_string(), Json::Num(reps as f64));
+        root.insert(
+            "crossover_width".to_string(),
+            crossover.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+        );
+        root.insert("sweep".to_string(), Json::Arr(sweep));
+        let json = Json::Obj(root);
+        std::fs::write(&path, format!("{json}\n"))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

@@ -48,13 +48,16 @@ use crate::costmodel::{dispatch_units, CostModel, Prediction, Sample};
 use crate::image::synth_image;
 use crate::metrics::{time_reps, Table};
 use crate::models::{ExecutionModel, GprmModel, OpenClModel, OpenMpModel, TileSpec};
-use crate::plan::{ConvPlan, EdgePolicy, FilterGraph, KernelSpec, ScratchArena};
+use crate::plan::{ConvPlan, EdgePolicy, FilterGraph, KernelClass, KernelSpec, ScratchArena};
 
-/// One execution configuration the tuner evaluates: a tile
-/// decomposition (or untiled row bands), a GPRM agglomeration factor,
-/// and whether the two-pass pipeline is fused (`--fuse`).
+/// One execution configuration the tuner evaluates: a kernel class
+/// (separable ladder, direct 2-D, or FFT), a tile decomposition (or
+/// untiled row bands), a GPRM agglomeration factor, and whether the
+/// two-pass pipeline is fused (`--fuse`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Candidate {
+    /// Which convolver family executes the plan.
+    pub class: KernelClass,
     /// `None` = the untiled row-partition baseline.
     pub tile: Option<TileSpec>,
     /// Tiles fused per task instance (GPRM only; 1 elsewhere).
@@ -64,15 +67,20 @@ pub struct Candidate {
 }
 
 impl Candidate {
-    /// The untiled, unfused row-partition baseline every sweep starts
-    /// from.
+    /// The untiled, unfused, separable row-partition baseline every
+    /// sweep starts from.
     pub fn untiled() -> Self {
-        Self { tile: None, agglomeration: 1, fused: false }
+        Self { class: KernelClass::Separable, tile: None, agglomeration: 1, fused: false }
     }
 
     /// The fused twin of a candidate.
     pub fn fused_twin(self) -> Self {
         Self { fused: true, ..self }
+    }
+
+    /// The same candidate under a different kernel class.
+    pub fn with_class(self, class: KernelClass) -> Self {
+        Self { class, ..self }
     }
 
     pub fn label(&self) -> String {
@@ -86,12 +94,16 @@ impl Candidate {
         if self.fused {
             s.push_str(" fused");
         }
+        if self.class != KernelClass::Separable {
+            s.push_str(&format!(" [{}]", self.class.label()));
+        }
         s
     }
 }
 
 /// Default candidate set for a `rows`-tall image: the untiled-unfused
-/// baseline, its fused twin, full-width stripes (fused and unfused),
+/// separable baseline, its fused twin, the direct-2D and FFT
+/// kernel-class alternatives, full-width stripes (fused and unfused),
 /// squares, and (when `gprm`) agglomerated variants of the finer
 /// decompositions. Shapes that don't fit the image are dropped rather
 /// than clamped so the sweep never measures duplicates. The baseline is
@@ -99,7 +111,15 @@ impl Candidate {
 /// construction.
 pub fn default_candidates(rows: usize, gprm: bool) -> Vec<Candidate> {
     let mut out = vec![Candidate::untiled(), Candidate::untiled().fused_twin()];
+    // kernel-class alternatives, swept untiled: the direct-2D engines
+    // (which also serve as the separable classes' small-kernel rival)
+    // and the transform route (which tiling cannot apply to). The cost
+    // model fits each class separately, so these rows are what teach it
+    // where the crossover sits.
+    out.push(Candidate::untiled().with_class(KernelClass::Direct2d));
+    out.push(Candidate::untiled().with_class(KernelClass::Fft));
     let tiled = |rows: usize, cols: usize, agg: usize| Candidate {
+        class: KernelClass::Separable,
         tile: Some(TileSpec::new(rows, cols)),
         agglomeration: agg,
         fused: false,
@@ -477,6 +497,7 @@ pub fn sweep_shape_sampled(
             };
             let plan = ConvPlan::builder()
                 .kernel(kernel)
+                .kernel_class(cand.class)
                 .tile_opt(cand.tile)
                 .fuse(cand.fused)
                 .shape(cfg.planes, size, size)
@@ -500,6 +521,7 @@ pub fn sweep_shape_sampled(
                 rows: size,
                 cols: size,
                 kernel_width: cfg.kernel_width,
+                class: cand.class.label().to_string(),
                 tile: cand.tile,
                 fused: cand.fused,
                 agglomeration: cand.agglomeration,
@@ -562,11 +584,25 @@ mod tests {
             assert_eq!(has_agglomerated, gprm, "agglomeration is the GPRM knob");
             assert!(c.iter().any(|x| x.fused && x.tile.is_none()), "fused row bands swept");
             assert!(c.iter().any(|x| x.fused && x.tile.is_some()), "fused stripes swept");
+            assert!(
+                c.iter().any(|x| x.class == KernelClass::Direct2d),
+                "direct-2D class swept"
+            );
+            assert!(c.iter().any(|x| x.class == KernelClass::Fft), "fft class swept");
         }
         // tiny images keep only the shapes that fit (plus the fused twin
-        // of the baseline, which fits whenever the baseline does)
+        // of the baseline and the class alternatives, which fit whenever
+        // the baseline does)
         let c = default_candidates(8, true);
-        assert_eq!(c, vec![Candidate::untiled(), Candidate::untiled().fused_twin()]);
+        assert_eq!(
+            c,
+            vec![
+                Candidate::untiled(),
+                Candidate::untiled().fused_twin(),
+                Candidate::untiled().with_class(KernelClass::Direct2d),
+                Candidate::untiled().with_class(KernelClass::Fft),
+            ]
+        );
     }
 
     #[test]
@@ -601,14 +637,28 @@ mod tests {
         assert_eq!(Candidate::untiled().label(), "rows (untiled)");
         assert_eq!(Candidate::untiled().fused_twin().label(), "rows (untiled) fused");
         let c = Candidate {
+            class: KernelClass::Separable,
             tile: Some(TileSpec::new(16, usize::MAX)),
             agglomeration: 1,
             fused: false,
         };
         assert_eq!(c.label(), "16xfull");
         assert_eq!(c.fused_twin().label(), "16xfull fused");
-        let c = Candidate { tile: Some(TileSpec::new(32, 32)), agglomeration: 4, fused: false };
+        let c = Candidate {
+            class: KernelClass::Separable,
+            tile: Some(TileSpec::new(32, 32)),
+            agglomeration: 4,
+            fused: false,
+        };
         assert_eq!(c.label(), "32x32 agg=4");
+        assert_eq!(
+            Candidate::untiled().with_class(KernelClass::Fft).label(),
+            "rows (untiled) [fft]"
+        );
+        assert_eq!(
+            Candidate::untiled().with_class(KernelClass::Direct2d).label(),
+            "rows (untiled) [direct2d]"
+        );
     }
 
     #[test]
@@ -673,6 +723,11 @@ mod tests {
         for model in ["OpenMP", "OpenCL", "GPRM"] {
             assert!(samples.iter().any(|s| s.model == model && s.tile.is_none() && !s.fused));
         }
+        // every kernel class gets measured, so the fitted cost model can
+        // place the direct-vs-fft crossover
+        for class in ["separable", "direct2d", "fft"] {
+            assert!(samples.iter().any(|s| s.class == class), "class {class} sampled");
+        }
     }
 
     #[test]
@@ -710,6 +765,7 @@ mod tests {
                             rows,
                             cols,
                             kernel_width: width,
+                            class: "separable".to_string(),
                             tile,
                             fused,
                             agglomeration: 1,

@@ -589,5 +589,10 @@ mod tests {
             .unwrap();
         let e = RunConfig::resolve(&cli).unwrap_err();
         assert!(format!("{e:#}").contains("odd"), "got: {e:#}");
+        assert_eq!(
+            e.kind(),
+            crate::util::error::ErrorKind::InvalidKernel,
+            "kernel refusals carry their structured kind through the CLI entry point"
+        );
     }
 }

@@ -1,0 +1,416 @@
+//! Direct 2-D convolution engines for arbitrary (non-separable)
+//! odd×odd kernels — the generic-kernel siblings of the single-pass
+//! functions in [`super::band`] and [`super::tile`].
+//!
+//! The separable engines factor a `w×w` kernel into two `w`-tap passes;
+//! these engines take the full `krows×kcols` tap matrix and accumulate
+//! it directly, so they accept kernels with no rank-1 structure (edge
+//! detectors, rotated anisotropic blurs, learned taps). The banding and
+//! tiling contracts are identical to the separable engines': band
+//! functions compute output rows `[r0, r1) ∩ [hr, rows−hr)` into a
+//! `dst_band` of exactly `(r1−r0)·cols` elements, tile functions write
+//! through a [`TileCells`] accessor clamped to the interior, and both
+//! guard degenerate planes (kernel taller/wider than the plane) by
+//! writing nothing.
+//!
+//! Accumulation orders mirror the separable single-pass engines exactly
+//! — 4-nested-loop for naive, per-kernel-row subtotals for scalar,
+//! `dotw` window sweeps for simd — so for a *square* kernel the scalar
+//! and simd shapes here are bitwise-identical to
+//! [`super::band::singlepass_band_scalar_w`] /
+//! [`super::band::singlepass_band_simd_w`] with the same taps (asserted
+//! below), and tiled sweeps are bitwise-comparable to banded ones.
+
+use super::band::dotw;
+use crate::models::pool::TileCells;
+use crate::models::Tile;
+
+#[inline]
+fn band_range(rows: usize, h: usize, r0: usize, r1: usize) -> (usize, usize) {
+    (r0.max(h), r1.min(rows.saturating_sub(h)))
+}
+
+/// Clamp a tile to the rectangular-halo interior
+/// `[hr, rows−hr) × [hc, cols−hc)`; `None` when nothing survives.
+#[inline]
+fn interior(
+    rows: usize,
+    cols: usize,
+    hr: usize,
+    hc: usize,
+    t: Tile,
+) -> Option<(usize, usize, usize, usize)> {
+    if 2 * hr >= rows || 2 * hc >= cols {
+        return None; // no interior (also guards the `- h` arithmetic)
+    }
+    let (a, b) = (t.r0.max(hr), t.r1.min(rows - hr));
+    let (ja, jb) = (t.c0.max(hc), t.c1.min(cols - hc));
+    if a >= b || ja >= jb {
+        return None;
+    }
+    Some((a, b, ja, jb))
+}
+
+/// Naive direct 2-D band: 2 image loops × 2 kernel loops, indexed
+/// loads (the paper's Opt-0 shape, generalised to rectangular kernels).
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_band_naive(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    if 2 * hr >= rows || 2 * hc >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, hr, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in hc..cols - hc {
+            let mut s = 0.0f32;
+            for u in 0..krows {
+                for v in 0..kcols {
+                    s += src[(i + u - hr) * cols + (j + v - hc)] * k2d[u * kcols + v];
+                }
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Direct 2-D band, scalar shape: per-pixel indexed arithmetic with
+/// per-kernel-row subtotals (the re-rolled Eq. 3 shape).
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_band_scalar(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    if 2 * hr >= rows || 2 * hc >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, hr, r0, r1);
+    for i in a..b {
+        let out = &mut dst_band[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in hc..cols - hc {
+            let mut s = 0.0f32;
+            for u in 0..krows {
+                let base = (i + u - hr) * cols + j - hc;
+                let ku = &k2d[u * kcols..(u + 1) * kcols];
+                let mut row_s = 0.0f32;
+                for (v, &kv) in ku.iter().enumerate() {
+                    row_s += src[base + v] * kv;
+                }
+                s += row_s;
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// Direct 2-D band, SIMD shape: per kernel row, sweep a `kcols`-window
+/// dot product across the output row and accumulate.
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_band_simd(
+    src: &[f32],
+    dst_band: &mut [f32],
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(dst_band.len(), (r1 - r0) * cols);
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    if 2 * hr >= rows || 2 * hc >= cols {
+        return;
+    }
+    let (a, b) = band_range(rows, hr, r0, r1);
+    let w = cols - 2 * hc;
+    for i in a..b {
+        let start = (i - r0) * cols + hc;
+        let out = &mut dst_band[start..start + w];
+        let row0 = &src[(i - hr) * cols..(i - hr) * cols + cols];
+        for (o, win) in out.iter_mut().zip(row0.windows(kcols)) {
+            *o = dotw(win, &k2d[0..kcols]);
+        }
+        for u in 1..krows {
+            let row = &src[(i + u - hr) * cols..(i + u - hr) * cols + cols];
+            let ku = &k2d[u * kcols..(u + 1) * kcols];
+            for (o, win) in out.iter_mut().zip(row.windows(kcols)) {
+                *o += dotw(win, ku);
+            }
+        }
+    }
+}
+
+/// Naive direct 2-D over one tile.
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_tile_naive(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    let Some((a, b, ja, jb)) = interior(rows, cols, hr, hc, t) else { return };
+    for i in a..b {
+        // SAFETY: [ja, jb) ⊆ this tile's columns, i ∈ this tile's rows;
+        // dispatch2d covers are disjoint tiles (property-tested).
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let mut s = 0.0f32;
+            for u in 0..krows {
+                for v in 0..kcols {
+                    s += src[(i + u - hr) * cols + (j + v - hc)] * k2d[u * kcols + v];
+                }
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Direct 2-D over one tile, scalar shape (per-kernel-row subtotals).
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_tile_scalar(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    let Some((a, b, ja, jb)) = interior(rows, cols, hr, hc, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        for (o, j) in out_row.iter_mut().zip(ja..jb) {
+            let mut s = 0.0f32;
+            for u in 0..krows {
+                let base = (i + u - hr) * cols + j - hc;
+                let ku = &k2d[u * kcols..(u + 1) * kcols];
+                let mut row_s = 0.0f32;
+                for (v, &kv) in ku.iter().enumerate() {
+                    row_s += src[base + v] * kv;
+                }
+                s += row_s;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Direct 2-D over one tile, SIMD shape: per kernel row, a
+/// `kcols`-window dot-product sweep across the tile's columns.
+#[allow(clippy::too_many_arguments)]
+pub fn direct2d_tile_simd(
+    src: &[f32],
+    out: &TileCells,
+    rows: usize,
+    cols: usize,
+    k2d: &[f32],
+    krows: usize,
+    kcols: usize,
+    t: Tile,
+) {
+    debug_assert_eq!(k2d.len(), krows * kcols);
+    let (hr, hc) = (krows / 2, kcols / 2);
+    let Some((a, b, ja, jb)) = interior(rows, cols, hr, hc, t) else { return };
+    for i in a..b {
+        // SAFETY: segment inside this tile; tiles are disjoint.
+        let out_row = unsafe { out.row_seg(i, ja, jb) };
+        let row0 = &src[(i - hr) * cols + ja - hc..(i - hr) * cols + jb + hc];
+        for (o, win) in out_row.iter_mut().zip(row0.windows(kcols)) {
+            *o = dotw(win, &k2d[0..kcols]);
+        }
+        for u in 1..krows {
+            let row = &src[(i + u - hr) * cols + ja - hc..(i + u - hr) * cols + jb + hc];
+            let ku = &k2d[u * kcols..(u + 1) * kcols];
+            for (o, win) in out_row.iter_mut().zip(row.windows(kcols)) {
+                *o += dotw(win, ku);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::band;
+    use crate::image::{gaussian_kernel, gaussian_kernel2d};
+    use crate::models::{TileGrid, TileSpec};
+    use crate::util::prng::Prng;
+
+    const R: usize = 26;
+    const C: usize = 22;
+
+    fn noise(seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..R * C).map(|_| p.normal()).collect()
+    }
+
+    fn random_kernel(seed: u64, krows: usize, kcols: usize) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..krows * kcols).map(|_| p.normal()).collect()
+    }
+
+    fn sweep_tiles(spec: TileSpec, dst: &mut [f32], f: impl Fn(&TileCells, Tile)) {
+        let grid = TileGrid::new(R, C, spec);
+        let cells = TileCells::new(dst, R, C);
+        for i in 0..grid.len() {
+            f(&cells, grid.tile(i));
+        }
+    }
+
+    #[test]
+    fn square_kernel_matches_separable_singlepass_bitwise() {
+        // same accumulation orders as the separable single-pass engines
+        // means a square direct 2-D kernel is bitwise-identical to them
+        let src = noise(1);
+        for width in [5usize, 7] {
+            let k2 = gaussian_kernel2d(&gaussian_kernel(width, 1.2));
+            let mut want = src.clone();
+            band::singlepass_band_scalar_w(&src, &mut want, R, C, &k2, width, 0, R);
+            let mut got = src.clone();
+            direct2d_band_scalar(&src, &mut got, R, C, &k2, width, width, 0, R);
+            assert_eq!(want, got, "scalar w{width}");
+
+            let mut want = src.clone();
+            band::singlepass_band_simd_w(&src, &mut want, R, C, &k2, width, 0, R);
+            let mut got = src.clone();
+            direct2d_band_simd(&src, &mut got, R, C, &k2, width, width, 0, R);
+            assert_eq!(want, got, "simd w{width}");
+
+            let mut want = src.clone();
+            band::singlepass_naive_band(&src, &mut want, R, C, &k2, width, 0, R);
+            let mut got = src.clone();
+            direct2d_band_naive(&src, &mut got, R, C, &k2, width, width, 0, R);
+            assert_eq!(want, got, "naive w{width}");
+        }
+    }
+
+    #[test]
+    fn rectangular_shapes_agree_with_naive_reference() {
+        let src = noise(2);
+        for (krows, kcols) in [(3usize, 7usize), (7, 3), (5, 9), (1, 5), (5, 1)] {
+            let k = random_kernel(10 + krows as u64 * kcols as u64, krows, kcols);
+            let mut want = vec![0f32; R * C];
+            direct2d_band_naive(&src, &mut want, R, C, &k, krows, kcols, 0, R);
+            for simd in [false, true] {
+                let mut got = vec![0f32; R * C];
+                if simd {
+                    direct2d_band_simd(&src, &mut got, R, C, &k, krows, kcols, 0, R);
+                } else {
+                    direct2d_band_scalar(&src, &mut got, R, C, &k, krows, kcols, 0, R);
+                }
+                for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        (w - g).abs() <= 1e-5,
+                        "{krows}x{kcols} simd={simd} cell {i}: {w} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_partition_composes_to_full_sweep() {
+        // arbitrary band splits cover exactly the full-plane result
+        let src = noise(3);
+        let k = random_kernel(77, 5, 7);
+        let mut want = vec![0f32; R * C];
+        direct2d_band_simd(&src, &mut want, R, C, &k, 5, 7, 0, R);
+        let mut got = vec![0f32; R * C];
+        for (r0, r1) in [(0usize, 4usize), (4, 9), (9, 20), (20, R)] {
+            let mut band = vec![0f32; (r1 - r0) * C];
+            // seed the band with the full-plane rows so untouched border
+            // cells compare equal
+            band.copy_from_slice(&want[r0 * C..r1 * C]);
+            direct2d_band_simd(&src, &mut band, R, C, &k, 5, 7, r0, r1);
+            got[r0 * C..r1 * C].copy_from_slice(&band);
+        }
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn tiled_matches_banded() {
+        let src = noise(4);
+        for (krows, kcols) in [(5usize, 5usize), (3, 7), (7, 3)] {
+            let k = random_kernel(5 + krows as u64, krows, kcols);
+            for spec in [TileSpec::new(5, 7), TileSpec::new(100, 3), TileSpec::new(4, 100)] {
+                let mut want = src.clone();
+                direct2d_band_simd(&src, &mut want, R, C, &k, krows, kcols, 0, R);
+                let mut got = src.clone();
+                sweep_tiles(spec, &mut got, |cells, t| {
+                    direct2d_tile_simd(&src, cells, R, C, &k, krows, kcols, t)
+                });
+                assert_eq!(want, got, "simd {krows}x{kcols} {}", spec.label());
+
+                let mut want = src.clone();
+                direct2d_band_scalar(&src, &mut want, R, C, &k, krows, kcols, 0, R);
+                let mut got = src.clone();
+                sweep_tiles(spec, &mut got, |cells, t| {
+                    direct2d_tile_scalar(&src, cells, R, C, &k, krows, kcols, t)
+                });
+                assert_eq!(want, got, "scalar {krows}x{kcols} {}", spec.label());
+
+                let mut want = src.clone();
+                direct2d_band_naive(&src, &mut want, R, C, &k, krows, kcols, 0, R);
+                let mut got = src.clone();
+                sweep_tiles(spec, &mut got, |cells, t| {
+                    direct2d_tile_naive(&src, cells, R, C, &k, krows, kcols, t)
+                });
+                assert_eq!(want, got, "naive {krows}x{kcols} {}", spec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_planes_and_border_tiles_are_noops() {
+        let src = noise(5);
+        let k = random_kernel(6, 9, 9);
+        // kernel taller/wider than the plane: nothing written
+        let mut dst = vec![5f32; 8 * 7];
+        direct2d_band_simd(&src[..56], &mut dst, 8, 7, &k, 9, 9, 0, 8);
+        direct2d_band_scalar(&src[..56], &mut dst, 8, 7, &k, 9, 9, 0, 8);
+        assert!(dst.iter().all(|&v| v == 5.0));
+        // border-only tiles: nothing written
+        let k5 = random_kernel(7, 5, 5);
+        let mut dst = vec![9f32; R * C];
+        {
+            let cells = TileCells::new(&mut dst, R, C);
+            direct2d_tile_simd(&src, &cells, R, C, &k5, 5, 5, Tile { r0: 0, r1: 2, c0: 0, c1: C });
+            direct2d_tile_scalar(&src, &cells, R, C, &k5, 5, 5, Tile { r0: 0, r1: R, c0: 0, c1: 2 });
+        }
+        assert!(dst.iter().all(|&v| v == 9.0));
+    }
+}

@@ -1,0 +1,350 @@
+//! Zero-dependency radix-2 FFT convolver — the large-kernel class.
+//!
+//! Direct 2-D convolution costs `O(rows·cols·krows·kcols)`; past a
+//! machine-dependent kernel width the `O(n log n)` transform route wins
+//! (Kepner's fast-convolver crossover, PAPERS.md). This module supplies
+//! that route without touching crates.io: an iterative radix-2
+//! Cooley–Tukey transform over in-tree `f64` buffers, run row-wise then
+//! column-wise (strided, no transpose) over a zero-padded
+//! next-power-of-two plane.
+//!
+//! [`FftPlan`] is the plan-cached half: built once per
+//! `(rows, cols, kernel)` it holds the per-axis twiddle tables and the
+//! forward spectrum of the *reversed* kernel. The engines here compute
+//! correlation (like every direct engine in this crate:
+//! `out[i,j] = Σ k[u,v]·src[i+u−hr, j+v−hc]`), and correlation by `k`
+//! is circular convolution by the both-axes-reversed kernel, shifted by
+//! the halo: `corr[i,j] = circ[i+hr, j+hc]`. Padding each axis to
+//! `next_pow2(n + k − 1)` leaves the wraparound outside the region we
+//! read back, so edge semantics match the direct reference on the
+//! interior `[hr, rows−hr) × [hc, cols−hc)` (differentially asserted
+//! ≤ 1e-4; in practice f64 transforms land within f32 rounding).
+//!
+//! Execution scratch is two `f64` planes of [`FftPlan::scratch_len`]
+//! elements (real + imaginary), leased from the plan arena's `f64` pool
+//! by the pipeline — this module itself has no arena dependency.
+
+/// Smallest power of two ≥ `n` (and ≥ 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Forward twiddle table for transform length `n`: `n/2` roots
+/// `w_k = e^{−2πik/n}` as `(cos, −sin)` pairs.
+fn twiddles(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let half = n / 2;
+    let mut re = Vec::with_capacity(half);
+    let mut im = Vec::with_capacity(half);
+    for k in 0..half {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        re.push(ang.cos());
+        im.push(ang.sin());
+    }
+    (re, im)
+}
+
+/// In-place iterative radix-2 transform of the length-`n` sequence at
+/// `off, off+stride, …` in `(re, im)`. `inverse` conjugates the
+/// twiddles; no scaling is applied (the caller folds the single
+/// `1/(nr·nc)` factor into the read-back).
+#[allow(clippy::too_many_arguments)]
+fn fft_strided(
+    re: &mut [f64],
+    im: &mut [f64],
+    off: usize,
+    stride: usize,
+    n: usize,
+    twr: &[f64],
+    twi: &[f64],
+    inverse: bool,
+) {
+    debug_assert!(n.is_power_of_two());
+    debug_assert_eq!(twr.len(), n / 2);
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 0..n {
+        if i < j {
+            re.swap(off + i * stride, off + j * stride);
+            im.swap(off + i * stride, off + j * stride);
+        }
+        let mut bit = n >> 1;
+        while bit > 0 && j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+    }
+    // butterflies
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        let step = n / len; // twiddle stride for this stage
+        let mut start = 0;
+        while start < n {
+            for k in 0..half {
+                let wr = twr[k * step];
+                let wi = if inverse { -twi[k * step] } else { twi[k * step] };
+                let ia = off + (start + k) * stride;
+                let ib = off + (start + k + half) * stride;
+                let tr = re[ib] * wr - im[ib] * wi;
+                let ti = re[ib] * wi + im[ib] * wr;
+                re[ib] = re[ia] - tr;
+                im[ib] = im[ia] - ti;
+                re[ia] += tr;
+                im[ia] += ti;
+            }
+            start += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// 2-D transform of the `nr × nc` complex plane in `(re, im)`:
+/// row transforms (unit stride) then column transforms (stride `nc`).
+#[allow(clippy::too_many_arguments)]
+fn fft2d(
+    re: &mut [f64],
+    im: &mut [f64],
+    nr: usize,
+    nc: usize,
+    twr_c: &[f64],
+    twi_c: &[f64],
+    twr_r: &[f64],
+    twi_r: &[f64],
+    inverse: bool,
+) {
+    for r in 0..nr {
+        fft_strided(re, im, r * nc, 1, nc, twr_c, twi_c, inverse);
+    }
+    for c in 0..nc {
+        fft_strided(re, im, c, nc, nr, twr_r, twi_r, inverse);
+    }
+}
+
+/// Plan-cached state for one `(rows, cols, kernel)` FFT convolution:
+/// padded extents, per-axis twiddle tables, and the forward spectrum of
+/// the reversed kernel. Build once, call
+/// [`FftPlan::convolve_into`] per plane.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    rows: usize,
+    cols: usize,
+    krows: usize,
+    kcols: usize,
+    /// Padded extents: `next_pow2(rows + krows − 1)` × `next_pow2(cols + kcols − 1)`.
+    nr: usize,
+    nc: usize,
+    /// Forward twiddles for the column-length (`nc`) and row-length
+    /// (`nr`) transforms.
+    twr_c: Vec<f64>,
+    twi_c: Vec<f64>,
+    twr_r: Vec<f64>,
+    twi_r: Vec<f64>,
+    /// Forward spectrum of the both-axes-reversed, zero-padded kernel.
+    kre: Vec<f64>,
+    kim: Vec<f64>,
+}
+
+impl FftPlan {
+    /// Build the plan for an `rows × cols` plane and a `krows × kcols`
+    /// tap matrix (row-major, odd extents enforced upstream by
+    /// `KernelSpec`/`Kernel2d` validation).
+    pub fn new(rows: usize, cols: usize, k2d: &[f32], krows: usize, kcols: usize) -> Self {
+        debug_assert_eq!(k2d.len(), krows * kcols);
+        let nr = next_pow2(rows + krows - 1);
+        let nc = next_pow2(cols + kcols - 1);
+        let (twr_c, twi_c) = twiddles(nc);
+        let (twr_r, twi_r) = twiddles(nr);
+        // correlation by k == circular convolution by the reversed
+        // kernel; pad it at the origin and take its forward spectrum
+        let mut kre = vec![0f64; nr * nc];
+        let mut kim = vec![0f64; nr * nc];
+        for u in 0..krows {
+            for v in 0..kcols {
+                kre[u * nc + v] = k2d[(krows - 1 - u) * kcols + (kcols - 1 - v)] as f64;
+            }
+        }
+        fft2d(&mut kre, &mut kim, nr, nc, &twr_c, &twi_c, &twr_r, &twi_r, false);
+        Self { rows, cols, krows, kcols, nr, nc, twr_c, twi_c, twr_r, twi_r, kre, kim }
+    }
+
+    /// Length of each of the two `f64` scratch planes (real and
+    /// imaginary) that [`FftPlan::convolve_into`] requires.
+    pub fn scratch_len(&self) -> usize {
+        self.nr * self.nc
+    }
+
+    /// Padded extents `(nr, nc)` — exposed for traffic estimation.
+    pub fn padded(&self) -> (usize, usize) {
+        (self.nr, self.nc)
+    }
+
+    /// Convolve one plane: `dst[i,j] = Σ k[u,v]·src[i+u−hr, j+v−hc]`
+    /// over the interior `[hr, rows−hr) × [hc, cols−hc)`; border cells
+    /// of `dst` are left untouched (the caller pre-loads them, exactly
+    /// as for the direct engines). `re`/`im` are caller-leased scratch
+    /// of [`FftPlan::scratch_len`] elements each. A kernel taller or
+    /// wider than the plane writes nothing.
+    pub fn convolve_into(&self, src: &[f32], dst: &mut [f32], re: &mut [f64], im: &mut [f64]) {
+        let (rows, cols) = (self.rows, self.cols);
+        debug_assert_eq!(src.len(), rows * cols);
+        debug_assert_eq!(dst.len(), rows * cols);
+        assert_eq!(re.len(), self.scratch_len(), "real scratch length");
+        assert_eq!(im.len(), self.scratch_len(), "imaginary scratch length");
+        let (hr, hc) = (self.krows / 2, self.kcols / 2);
+        if 2 * hr >= rows || 2 * hc >= cols {
+            return;
+        }
+        let (nr, nc) = (self.nr, self.nc);
+        re.fill(0.0);
+        im.fill(0.0);
+        for i in 0..rows {
+            for (pad, &s) in re[i * nc..i * nc + cols].iter_mut().zip(&src[i * cols..]) {
+                *pad = s as f64;
+            }
+        }
+        fft2d(re, im, nr, nc, &self.twr_c, &self.twi_c, &self.twr_r, &self.twi_r, false);
+        for ((r, i), (kr, ki)) in
+            re.iter_mut().zip(im.iter_mut()).zip(self.kre.iter().zip(&self.kim))
+        {
+            let (a, b) = (*r, *i);
+            *r = a * kr - b * ki;
+            *i = a * ki + b * kr;
+        }
+        fft2d(re, im, nr, nc, &self.twr_c, &self.twi_c, &self.twr_r, &self.twi_r, true);
+        // corr[i,j] = circ[i+hr, j+hc]; one global inverse scale
+        let scale = 1.0 / (nr * nc) as f64;
+        for i in hr..rows - hr {
+            let circ = &re[(i + hr) * nc + hc..];
+            for (d, c) in dst[i * cols + hc..i * cols + cols - hc].iter_mut().zip(circ) {
+                *d = (c * scale) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct2d::direct2d_band_naive;
+    use crate::image::{gaussian_kernel, gaussian_kernel2d};
+    use crate::util::prng::Prng;
+
+    const R: usize = 26;
+    const C: usize = 22;
+
+    fn noise(seed: u64, n: usize) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n).map(|_| p.normal()).collect()
+    }
+
+    fn run_fft(src: &[f32], rows: usize, cols: usize, k: &[f32], kr: usize, kc: usize) -> Vec<f32> {
+        let plan = FftPlan::new(rows, cols, k, kr, kc);
+        let mut re = vec![0f64; plan.scratch_len()];
+        let mut im = vec![0f64; plan.scratch_len()];
+        let mut dst = src.to_vec();
+        plan.convolve_into(src, &mut dst, &mut re, &mut im);
+        dst
+    }
+
+    #[test]
+    fn next_pow2_rounds_up() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(33), 64);
+        assert_eq!(next_pow2(64), 64);
+    }
+
+    #[test]
+    fn matches_direct_reference_on_random_kernels() {
+        let src = noise(1, R * C);
+        for (kr, kc) in [(1usize, 1usize), (3, 3), (5, 7), (7, 3), (9, 9), (1, 5)] {
+            let mut p = Prng::new(40 + (kr * 10 + kc) as u64);
+            let k: Vec<f32> = (0..kr * kc).map(|_| p.normal()).collect();
+            let mut want = src.clone();
+            direct2d_band_naive(&src, &mut want, R, C, &k, kr, kc, 0, R);
+            let got = run_fft(&src, R, C, &k, kr, kc);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!((w - g).abs() <= 1e-4, "{kr}x{kc} cell {i}: {w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_direct_on_separable_gaussian() {
+        let src = noise(2, R * C);
+        for width in [3usize, 7, 13] {
+            let k2 = gaussian_kernel2d(&gaussian_kernel(width, 1.5));
+            let mut want = src.clone();
+            direct2d_band_naive(&src, &mut want, R, C, &k2, width, width, 0, R);
+            let got = run_fft(&src, R, C, &k2, width, width);
+            for (w, g) in want.iter().zip(&got) {
+                assert!((w - g).abs() <= 1e-4, "w{width}: {w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn borders_are_left_untouched() {
+        let src = noise(3, R * C);
+        let k = gaussian_kernel2d(&gaussian_kernel(5, 1.0));
+        let plan = FftPlan::new(R, C, &k, 5, 5);
+        let mut re = vec![0f64; plan.scratch_len()];
+        let mut im = vec![0f64; plan.scratch_len()];
+        let mut dst = vec![7f32; R * C];
+        plan.convolve_into(&src, &mut dst, &mut re, &mut im);
+        let h = 2;
+        for i in 0..R {
+            for j in 0..C {
+                let border = i < h || i >= R - h || j < h || j >= C - h;
+                if border {
+                    assert_eq!(dst[i * C + j], 7.0, "border cell ({i},{j}) written");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_reusable_across_planes() {
+        let a = noise(4, R * C);
+        let b = noise(5, R * C);
+        let k = noise(6, 7 * 7);
+        let plan = FftPlan::new(R, C, &k, 7, 7);
+        let mut re = vec![0f64; plan.scratch_len()];
+        let mut im = vec![0f64; plan.scratch_len()];
+        let mut got_a = a.clone();
+        plan.convolve_into(&a, &mut got_a, &mut re, &mut im);
+        let mut got_b = b.clone();
+        plan.convolve_into(&b, &mut got_b, &mut re, &mut im);
+        // scratch reuse must not leak plane A into plane B
+        let fresh_b = run_fft(&b, R, C, &k, 7, 7);
+        assert_eq!(got_b, fresh_b);
+        // and a second pass over A reproduces the first exactly
+        let mut again_a = a.clone();
+        plan.convolve_into(&a, &mut again_a, &mut re, &mut im);
+        assert_eq!(got_a, again_a);
+    }
+
+    #[test]
+    fn degenerate_plane_is_a_noop() {
+        let src = noise(7, 8 * 7);
+        let k = noise(8, 9 * 9);
+        let plan = FftPlan::new(8, 7, &k, 9, 9);
+        let mut re = vec![0f64; plan.scratch_len()];
+        let mut im = vec![0f64; plan.scratch_len()];
+        let mut dst = vec![5f32; 8 * 7];
+        plan.convolve_into(&src, &mut dst, &mut re, &mut im);
+        assert!(dst.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn padding_covers_linear_extent() {
+        let plan = FftPlan::new(100, 60, &[1.0; 9], 3, 3);
+        let (nr, nc) = plan.padded();
+        assert!(nr >= 100 + 3 - 1 && nr.is_power_of_two());
+        assert!(nc >= 60 + 3 - 1 && nc.is_power_of_two());
+        assert_eq!(plan.scratch_len(), nr * nc);
+    }
+}

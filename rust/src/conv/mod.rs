@@ -46,8 +46,19 @@
 //! row-by-row through cascaded rings, crossing memory twice instead of
 //! 2k times (driven by `plan::FilterGraph`).
 
+//! Beyond the separable ladder entirely, two further *kernel classes*
+//! serve workloads the paper's scope excludes: [`direct2d`] convolves
+//! arbitrary (non-separable) odd×odd tap matrices directly, with the
+//! same band/tile contracts and scalar/simd shapes as the single-pass
+//! engines, and [`fft`] carries an in-tree radix-2 transform convolver
+//! for the large kernels where `O(n log n)` beats direct arithmetic
+//! (Kepner's crossover). Class selection is a plan dimension
+//! (`plan::KernelClass`), picked by the cost model when not pinned.
+
 pub mod band;
 pub mod chain;
+pub mod direct2d;
+pub mod fft;
 pub mod plane;
 pub mod tile;
 

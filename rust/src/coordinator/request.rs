@@ -7,7 +7,7 @@ use std::time::Duration;
 use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::models::Layout;
-use crate::plan::{FilterGraph, KernelSpec, TileSpec};
+use crate::plan::{FilterGraph, Kernel2d, KernelClass, KernelSpec, TileSpec};
 use crate::util::error::Result;
 
 use super::router::Backend;
@@ -110,6 +110,17 @@ pub struct ConvRequest {
     /// may carry its own Gaussian spec; executors cache one plan per
     /// distinct `(algorithm, variant, layout, shape, kernel)` key.
     pub kernel: Option<KernelSpec>,
+    /// `Some` carries an explicit (possibly non-separable) tap matrix
+    /// instead of a Gaussian spec; takes precedence over `kernel` and
+    /// defaults the class to [`KernelClass::Direct2d`] unless
+    /// `kernel_class` pins it. Validated at intake (odd extents, finite
+    /// taps) with a structured `InvalidKernel` refusal.
+    pub kernel2d: Option<Kernel2d>,
+    /// `None` → the tuning tier picks the class per shape (cost-model
+    /// crossover: large kernels route to FFT by prediction) and
+    /// otherwise the source's natural class. `Some` pins the class and
+    /// skips class selection.
+    pub kernel_class: Option<KernelClass>,
     /// `None` → the coordinator's tuning tier (swept winner or
     /// cost-model prediction, when installed via
     /// `Coordinator::set_tuning`) and otherwise its configured tile
@@ -150,6 +161,8 @@ impl ConvRequest {
             backend: None,
             layout: None,
             kernel: None,
+            kernel2d: None,
+            kernel_class: None,
             tile: None,
             fuse: None,
             deadline: None,
@@ -180,6 +193,20 @@ impl ConvRequest {
     /// Carry a per-request kernel (width + sigma); validated at intake.
     pub fn with_kernel(mut self, spec: KernelSpec) -> Self {
         self.kernel = Some(spec);
+        self
+    }
+
+    /// Carry an explicit (possibly non-separable) 2-D tap matrix;
+    /// validated at intake. Takes precedence over `with_kernel`.
+    pub fn with_kernel2d(mut self, k: Kernel2d) -> Self {
+        self.kernel2d = Some(k);
+        self
+    }
+
+    /// Pin the kernel class (separable / direct2d / fft), bypassing the
+    /// tuning tier's class selection.
+    pub fn with_kernel_class(mut self, class: KernelClass) -> Self {
+        self.kernel_class = Some(class);
         self
     }
 
@@ -230,6 +257,9 @@ pub struct ConvResponse {
     /// that produced this response (`1` = served singly, which is the
     /// default until `--batch-max` is raised)
     pub batch_len: usize,
+    /// which kernel class the admitted plan ran (pinned by the request,
+    /// or picked by the tuning tier's measured/predicted crossover)
+    pub kernel_class: KernelClass,
 }
 
 impl ConvResponse {
@@ -254,7 +284,8 @@ mod tests {
             .with_kernel(KernelSpec::new(7, 2.0))
             .with_tile(TileSpec::new(16, 32))
             .with_fuse(true)
-            .with_deadline(Duration::from_millis(250));
+            .with_deadline(Duration::from_millis(250))
+            .with_kernel_class(KernelClass::Separable);
         assert_eq!(r.id, 7);
         assert_eq!(r.algorithm, Algorithm::SinglePassNoCopy);
         assert_eq!(r.variant, Variant::Scalar);
@@ -264,6 +295,18 @@ mod tests {
         assert_eq!(r.tile, Some(TileSpec::new(16, 32)));
         assert_eq!(r.fuse, Some(true));
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.kernel_class, Some(KernelClass::Separable));
+    }
+
+    #[test]
+    fn kernel2d_rides_along_with_a_pinned_class() {
+        let img = synth_image(1, 16, 16, Pattern::Noise, 0);
+        let lap = Kernel2d::new(vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0], 3, 3).unwrap();
+        let r = ConvRequest::new(2, img)
+            .with_kernel2d(lap.clone())
+            .with_kernel_class(KernelClass::Fft);
+        assert_eq!(r.kernel2d.as_ref().map(|k| k.digest()), Some(lap.digest()));
+        assert_eq!(r.kernel_class, Some(KernelClass::Fft));
     }
 
     #[test]
@@ -273,6 +316,8 @@ mod tests {
         assert!(r.backend.is_none());
         assert!(r.layout.is_none());
         assert!(r.kernel.is_none());
+        assert!(r.kernel2d.is_none());
+        assert!(r.kernel_class.is_none());
         assert!(r.tile.is_none());
         assert!(r.fuse.is_none());
         assert!(r.deadline.is_none());

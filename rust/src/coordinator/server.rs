@@ -52,7 +52,7 @@ use crate::conv::{Algorithm, Variant};
 use crate::image::PlanarImage;
 use crate::metrics::SampleSet;
 use crate::models::{ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel};
-use crate::plan::{ConvPlan, FilterGraph, KernelSpec, ScratchArena, TileSpec};
+use crate::plan::{ConvPlan, FilterGraph, KernelClass, KernelSpec, ScratchArena, TileSpec};
 use crate::runtime::{Manifest, PjrtHandle};
 
 use super::affinity;
@@ -73,6 +73,9 @@ struct Job {
     backend: Backend,
     layout: Layout,
     kernel: KernelSpec,
+    /// resolved kernel class: pinned by the request, implied by explicit
+    /// 2-D taps, or picked by the tuning tier's crossover policy
+    class: KernelClass,
     tile: Option<TileSpec>,
     fuse: bool,
     key: PlanKey,
@@ -250,6 +253,11 @@ struct PlanKey {
     rows: usize,
     cols: usize,
     kernel: (usize, u64),
+    /// resolved kernel class — part of plan identity, since each class
+    /// lowers to different passes (separable two-pass, direct 2-D, FFT)
+    class: KernelClass,
+    /// digest of an explicit 2-D tap matrix (`None` = separable spec)
+    k2d: Option<u64>,
     /// tile decomposition (`None` = untiled row bands)
     tile: Option<(usize, usize)>,
     /// two-pass fusion (always false for single-pass algorithms)
@@ -487,35 +495,75 @@ impl Coordinator {
         // plans only, so graph requests fall back like unservable
         // shapes; the adaptive native choice takes over
         let graph_digest = req.graph.as_ref().map(|g| g.digest());
+        // PJRT executes the separable reference artifacts only, so a
+        // request wanting a non-separable class (pinned, or implied by
+        // explicit 2-D taps) falls back natively like unservable shapes
+        let wants_nonseparable = req.kernel2d.is_some()
+            || req.kernel_class.is_some_and(|c| c != KernelClass::Separable);
         let mut pjrt_fell_back = false;
         if backend == Backend::Pjrt
-            && (graph_digest.is_some() || !pjrt_can_serve(inner, &req, layout))
+            && (graph_digest.is_some()
+                || wants_nonseparable
+                || !pjrt_can_serve(inner, &req, layout))
         {
             pjrt_fell_back = true;
             let (b, l) = RoutePolicy::paper_default().route(req.image.rows, 0);
             backend = b;
             layout = l;
         }
+        // Kernel class resolves alongside tile/fusion. A pinned class
+        // (or explicit 2-D taps, whose natural class is direct2d) skips
+        // the tuning tier; otherwise the tier's chosen candidate carries
+        // the class, which is where the measured direct-vs-FFT crossover
+        // routes never-swept large kernels to the transform.
+        let pinned_class = match (req.kernel_class, &req.kernel2d) {
+            (Some(c), _) => Some(c),
+            (None, Some(_)) => Some(KernelClass::Direct2d),
+            (None, None) => None,
+        };
         // Tile/fusion resolve after the backend so the tuning tier can
         // key on the resolved execution model. Precedence: a request's
-        // explicit tile/fuse always wins; then a swept or predicted
-        // tuning decision; then the configured defaults. Graph requests
-        // skip all of it — the chain's own stages and edge policies are
-        // the plan, so single-plan knobs normalise out of the key.
-        let tuned = if graph_digest.is_none() && req.tile.is_none() && req.fuse.is_none() {
+        // explicit class/tile/fuse always wins; then a swept or
+        // predicted tuning decision; then the configured defaults. Graph
+        // requests skip all of it — the chain's own stages and edge
+        // policies are the plan, so single-plan knobs normalise out of
+        // the key.
+        let tuned = if graph_digest.is_none()
+            && pinned_class.is_none()
+            && req.tile.is_none()
+            && req.fuse.is_none()
+        {
             self.tuned_decision(&req, backend, &kernel)
         } else {
             None
         };
-        let (tile, fuse) = match tuned {
+        let (tile, fuse, class) = match tuned {
             Some(decision) => decision,
-            None => (req.tile.or(inner.tile), req.fuse.unwrap_or(inner.fuse)),
+            None => (
+                req.tile.or(inner.tile),
+                req.fuse.unwrap_or(inner.fuse),
+                if graph_digest.is_some() {
+                    KernelClass::Separable
+                } else {
+                    pinned_class.unwrap_or_default()
+                },
+            ),
         };
-        // fusion only applies to the two-pass algorithm; a fused serving
-        // default must not refuse single-pass traffic, so it is silently
-        // inapplicable there rather than a build error
-        let fuse = fuse && req.algorithm == Algorithm::TwoPass && graph_digest.is_none();
-        let tile = if graph_digest.is_some() { None } else { tile };
+        // fusion only applies to the separable two-pass algorithm; a
+        // fused serving default must not refuse single-pass or
+        // non-separable traffic, so it is silently inapplicable there
+        // rather than a build error. FFT plans are untiled by contract.
+        let fuse = fuse
+            && req.algorithm == Algorithm::TwoPass
+            && graph_digest.is_none()
+            && class == KernelClass::Separable;
+        let tile =
+            if graph_digest.is_some() || class == KernelClass::Fft { None } else { tile };
+        let k2d = if graph_digest.is_some() {
+            None
+        } else {
+            req.kernel2d.as_ref().map(|k| k.digest())
+        };
         let key = PlanKey {
             algorithm: req.algorithm,
             variant: req.variant,
@@ -524,6 +572,8 @@ impl Coordinator {
             rows: req.image.rows,
             cols: req.image.cols,
             kernel: kernel.cache_key(),
+            class,
+            k2d,
             tile: tile.map(|t| t.cache_key()),
             fused: fuse,
             graph: graph_digest,
@@ -534,6 +584,7 @@ impl Coordinator {
             backend,
             layout,
             kernel,
+            class,
             tile,
             fuse,
             key,
@@ -551,15 +602,15 @@ impl Coordinator {
     /// artifacts and other algorithm/variant mixes keep the configured
     /// defaults without touching the counters. A swept candidate's GPRM
     /// agglomeration factor is a model-level knob (the serving pool is
-    /// built once from config), so only its tile and fusion apply here.
-    /// Returns the (tile, fuse) to build with, or `None` to fall
-    /// through to the config defaults.
+    /// built once from config), so only its tile, fusion and kernel
+    /// class apply here. Returns the (tile, fuse, class) to build with,
+    /// or `None` to fall through to the config defaults.
     fn tuned_decision(
         &self,
         req: &ConvRequest,
         backend: Backend,
         kernel: &KernelSpec,
-    ) -> Option<(Option<TileSpec>, bool)> {
+    ) -> Option<(Option<TileSpec>, bool, KernelClass)> {
         let table = self.tuning.as_ref()?;
         if backend == Backend::Pjrt
             || req.algorithm != Algorithm::TwoPass
@@ -584,11 +635,11 @@ impl Coordinator {
         ) {
             Some(PlanDecision::Swept(t)) => {
                 self.plans_swept.fetch_add(1, Ordering::Relaxed);
-                Some((t.candidate.tile, t.candidate.fused))
+                Some((t.candidate.tile, t.candidate.fused, t.candidate.class))
             }
             Some(PlanDecision::Predicted(p)) => {
                 self.plans_predicted.fetch_add(1, Ordering::Relaxed);
-                Some((p.candidate.tile, p.candidate.fused))
+                Some((p.candidate.tile, p.candidate.fused, p.candidate.class))
             }
             None => {
                 self.plans_default.fetch_add(1, Ordering::Relaxed);
@@ -880,6 +931,7 @@ fn serve_batch(
                     queue_ms: q,
                     service_ms: service_each,
                     batch_len: n,
+                    kernel_class: job.class,
                 };
                 let _ = job.reply.send(Ok(resp)); // receiver may have gone away
             }
@@ -932,17 +984,21 @@ fn execute_batch_jobs(
                     .context("invalid request graph")
                     .map(CachedExec::Graph)
                 }
-                None => ConvPlan::builder()
-                    .algorithm(head.req.algorithm)
-                    .variant(head.req.variant)
-                    .layout(head.layout)
-                    .kernel(head.kernel)
-                    .tile_opt(head.tile)
-                    .fuse(head.fuse)
-                    .shape(head.req.image.planes, head.req.image.rows, head.req.image.cols)
-                    .build()
-                    .context("invalid request plan")
-                    .map(CachedExec::Single),
+                None => {
+                    let mut b = ConvPlan::builder()
+                        .algorithm(head.req.algorithm)
+                        .variant(head.req.variant)
+                        .layout(head.layout)
+                        .kernel(head.kernel)
+                        .kernel_class(head.class)
+                        .tile_opt(head.tile)
+                        .fuse(head.fuse)
+                        .shape(head.req.image.planes, head.req.image.rows, head.req.image.cols);
+                    if let Some(k) = &head.req.kernel2d {
+                        b = b.kernel2d(k.clone());
+                    }
+                    b.build().context("invalid request plan").map(CachedExec::Single)
+                }
             })?;
             let images = match exec {
                 CachedExec::Single(plan) => {
@@ -1069,6 +1125,7 @@ mod tests {
         let spec = GraphSpec::chain(vec![KernelSpec::new(4, 1.0)]); // even width
         let e = c.serve(ConvRequest::new(1, img).with_graph(spec)).unwrap_err();
         assert!(format!("{e:#}").contains("invalid request graph"), "{e:#}");
+        assert_eq!(e.kind(), ErrorKind::InvalidKernel, "kernel kind survives the graph path");
         assert_eq!(c.stats().errors, 1);
         assert_eq!(c.stats().graphs_served, 0);
     }
@@ -1313,7 +1370,7 @@ mod tests {
             .serve(ConvRequest::new(1, img.clone()).with_kernel(KernelSpec::new(4, 1.0)))
             .unwrap_err();
         assert!(format!("{err:#}").contains("odd"), "got: {err:#}");
-        assert_eq!(err.kind(), ErrorKind::Other, "execution errors are not refusals");
+        assert_eq!(err.kind(), ErrorKind::InvalidKernel, "structured kernel refusal");
         // the coordinator keeps serving and counts the error
         assert!(c.serve(ConvRequest::new(2, img)).is_ok());
         let st = c.stats();
@@ -1386,6 +1443,7 @@ mod tests {
                         };
                         out.push(Sample {
                             model: model.to_string(),
+                            class: "separable".to_string(),
                             planes: 3,
                             rows,
                             cols,
@@ -1440,6 +1498,110 @@ mod tests {
         assert_eq!((st.plans_swept, st.plans_default), (0, 0));
         assert_eq!(st.plans_built, 1, "one plan, built once, no sweep");
         assert_eq!((st.served, st.errors), (1, 0));
+    }
+
+    /// Per-class training rows: direct-arithmetic classes scale with
+    /// pixels·width while the FFT class is flat in width, so the fitted
+    /// crossover routes large kernels to the transform.
+    fn class_samples(model: &str, workers: usize) -> Vec<crate::costmodel::Sample> {
+        use crate::costmodel::Sample;
+        let mut out = Vec::new();
+        for (rows, cols) in [(64, 64), (96, 96), (128, 128), (160, 160), (192, 192), (128, 192)] {
+            for width in [3usize, 7, 15, 31, 61] {
+                let pixels = (3 * rows * cols) as f64;
+                for (class, ms) in [
+                    ("separable", 0.1 + 1.0e-6 * pixels * width as f64),
+                    ("fft", 0.4 + 6.0e-6 * pixels),
+                ] {
+                    out.push(Sample {
+                        model: model.to_string(),
+                        class: class.to_string(),
+                        planes: 3,
+                        rows,
+                        cols,
+                        kernel_width: width,
+                        tile: None,
+                        fused: false,
+                        agglomeration: 1,
+                        units: workers,
+                        workers,
+                        ms,
+                        reps: 3,
+                        warmup: 1,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn predicted_crossover_routes_large_kernel_to_fft() {
+        use crate::costmodel::CostModel;
+        let mut c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let mut table = TuningTable::new();
+        table.set_cost_model(CostModel::fit(class_samples("OpenMP", 4), 0.8));
+        c.set_tuning(table);
+        // a 61-wide kernel on a shape no sweep ever measured: admission
+        // must pick the FFT class purely from the fitted prediction
+        let img = synth_image(1, 96, 96, Pattern::Noise, 61);
+        let spec = KernelSpec::new(61, 8.0);
+        let direct = ConvPlan::builder()
+            .kernel(spec)
+            .kernel_class(KernelClass::Direct2d)
+            .shape(1, 96, 96)
+            .build()
+            .unwrap();
+        let mut arena = ScratchArena::new();
+        let want = direct.execute(&img, &mut arena).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img.clone()).with_kernel(spec)).unwrap();
+        assert_eq!(resp.kernel_class, KernelClass::Fft, "large kernel routes to the transform");
+        assert!(
+            resp.image.max_abs_diff(&want) <= 1e-4,
+            "fft pixels match direct arithmetic: {}",
+            resp.image.max_abs_diff(&want)
+        );
+        // a small kernel under the same model stays on the separable ladder
+        let resp5 = c.serve(ConvRequest::new(2, img).with_kernel(KernelSpec::new(5, 1.0))).unwrap();
+        assert_eq!(resp5.kernel_class, KernelClass::Separable);
+        let st = c.stats();
+        assert_eq!(st.plans_predicted, 2, "both classes came from the fitted crossover");
+        assert_eq!((st.plans_swept, st.plans_default), (0, 0));
+        assert_eq!((st.served, st.errors), (2, 0));
+    }
+
+    #[test]
+    fn kernel2d_request_serves_nonseparable_taps() {
+        let c =
+            Coordinator::new(&cfg(), RoutePolicy::Fixed(Backend::NativeOpenMp), 1, false).unwrap();
+        let img = synth_image(2, 28, 26, Pattern::Noise, 77);
+        let lap = crate::plan::Kernel2d::new(
+            vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0],
+            3,
+            3,
+        )
+        .unwrap();
+        let plan =
+            ConvPlan::builder().kernel2d(lap.clone()).shape(2, 28, 26).build().unwrap();
+        let mut arena = ScratchArena::new();
+        let want = plan.execute(&img, &mut arena).unwrap();
+        let resp = c.serve(ConvRequest::new(1, img.clone()).with_kernel2d(lap.clone())).unwrap();
+        assert_eq!(resp.kernel_class, KernelClass::Direct2d, "explicit taps imply direct2d");
+        assert!(resp.image.max_abs_diff(&want) <= 1e-6);
+        // pinning fft on the same taps serves the same pixels
+        let resp_fft = c
+            .serve(
+                ConvRequest::new(2, img)
+                    .with_kernel2d(lap)
+                    .with_kernel_class(KernelClass::Fft),
+            )
+            .unwrap();
+        assert_eq!(resp_fft.kernel_class, KernelClass::Fft);
+        assert!(resp_fft.image.max_abs_diff(&want) <= 1e-4);
+        let st = c.stats();
+        assert_eq!((st.served, st.errors), (2, 0));
+        assert_eq!(st.plans_built, 2, "direct and fft are distinct plan keys");
     }
 
     #[test]
@@ -1627,6 +1789,8 @@ mod tests {
             rows,
             cols: 16,
             kernel: KernelSpec::new(5, 1.0).cache_key(),
+            class: KernelClass::Separable,
+            k2d: None,
             tile: None,
             fused: false,
             graph: None,

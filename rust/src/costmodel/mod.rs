@@ -10,12 +10,16 @@
 //! * [`Sample`] — one (model, shape, kernel, candidate) timing
 //!   observation, self-describing (repeats, warmup, worker count ride
 //!   along) so persisted sample sets can be audited and re-fit.
-//! * [`CostModel`] — groups samples by (model, fused, tiled), fits one
-//!   [`fit::LinearModel`] per group (`predicted_ms = c0 + c1·pixels +
-//!   c2·width + c3·pixels·width + c4·units`), and answers
-//!   [`CostModel::choose`]: the predicted-cheapest tile/fusion candidate
-//!   for a *never-before-seen* shape, with the untiled baseline always
-//!   in the comparison set. Groups whose fit fails or whose R² is below
+//! * [`CostModel`] — groups samples by (model, class, fused, tiled),
+//!   fits one [`fit::LinearModel`] per group (`predicted_ms = c0 +
+//!   c1·pixels + c2·width + c3·pixels·width + c4·units`), and answers
+//!   [`CostModel::choose`]: the predicted-cheapest class/tile/fusion
+//!   candidate for a *never-before-seen* shape, with the separable
+//!   untiled baseline always in the comparison set. Because the fits
+//!   are per kernel class, the direct-vs-FFT crossover falls out of the
+//!   regression: FFT groups are near-flat in kernel width while direct
+//!   groups grow with `pixels·width`, so large kernels route to the
+//!   transform without ever having been swept. Groups whose fit fails or whose R² is below
 //!   `r2_min` are unusable; a shape whose baseline group is unusable
 //!   yields `None`, which routes the caller back to empirical sweeping.
 //! * JSON persistence ([`CostModel::save`] / [`CostModel::load`])
@@ -53,6 +57,9 @@ pub use fit::{LinearModel, FEATURE_NAMES, NFEATURES};
 pub struct Sample {
     /// execution-model name ("OpenMP" / "OpenCL" / "GPRM")
     pub model: String,
+    /// kernel-class label ("separable" / "direct2d" / "fft") — the plan
+    /// dimension the crossover policy selects over.
+    pub class: String,
     pub planes: usize,
     pub rows: usize,
     pub cols: usize,
@@ -99,12 +106,14 @@ pub fn features(
     [pixels, width, pixels * width, units as f64]
 }
 
-/// One fitted (model, fused, tiled) group. `fit: None` is the
+/// One fitted (model, class, fused, tiled) group. `fit: None` is the
 /// structured low-rank/degenerate outcome; a present fit can still be
 /// unusable if its R² misses the acceptance threshold.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GroupFit {
     pub model: String,
+    /// kernel-class label ("separable" / "direct2d" / "fft")
+    pub class: String,
     pub fused: bool,
     pub tiled: bool,
     pub n_samples: usize,
@@ -139,22 +148,23 @@ pub struct CostModel {
 }
 
 impl CostModel {
-    /// Fit one linear model per (model, fused, tiled) group. Grouping
-    /// is a `BTreeMap` so group order — and therefore artifact bytes —
-    /// is deterministic.
+    /// Fit one linear model per (model, class, fused, tiled) group.
+    /// Grouping is a `BTreeMap` so group order — and therefore artifact
+    /// bytes — is deterministic.
     pub fn fit(samples: Vec<Sample>, r2_min: f64) -> Self {
-        let mut grouped: BTreeMap<(String, bool, bool), (Vec<[f64; NFEATURES]>, Vec<f64>)> =
+        let mut grouped: BTreeMap<(String, String, bool, bool), (Vec<[f64; NFEATURES]>, Vec<f64>)> =
             BTreeMap::new();
         for s in &samples {
-            let key = (s.model.clone(), s.fused, s.tile.is_some());
+            let key = (s.model.clone(), s.class.clone(), s.fused, s.tile.is_some());
             let entry = grouped.entry(key).or_default();
             entry.0.push(features(s.planes, s.rows, s.cols, s.kernel_width, s.units));
             entry.1.push(s.ms);
         }
         let groups = grouped
             .into_iter()
-            .map(|((model, fused, tiled), (xs, ys))| GroupFit {
+            .map(|((model, class, fused, tiled), (xs, ys))| GroupFit {
                 model,
+                class,
                 fused,
                 tiled,
                 n_samples: xs.len(),
@@ -187,14 +197,15 @@ impl CostModel {
         self.groups.iter().filter(|g| g.usable(self.r2_min)).count()
     }
 
-    fn group(&self, model: &str, fused: bool, tiled: bool) -> Option<&GroupFit> {
-        self.groups
-            .iter()
-            .find(|g| g.model == model && g.fused == fused && g.tiled == tiled)
+    fn group(&self, model: &str, class: &str, fused: bool, tiled: bool) -> Option<&GroupFit> {
+        self.groups.iter().find(|g| {
+            g.model == model && g.class == class && g.fused == fused && g.tiled == tiled
+        })
     }
 
-    /// Predicted milliseconds for one concrete configuration, or `None`
-    /// when the matching group is missing or fails the R² gate.
+    /// Predicted milliseconds for one concrete *separable* configuration
+    /// (the pre-class signature, kept for the dominant call sites), or
+    /// `None` when the matching group is missing or fails the R² gate.
     #[allow(clippy::too_many_arguments)]
     pub fn predict_ms(
         &self,
@@ -207,7 +218,38 @@ impl CostModel {
         kernel_width: usize,
         workers: usize,
     ) -> Option<f64> {
-        let g = self.group(model, fused, tile.is_some())?;
+        self.predict_class_ms(
+            model,
+            "separable",
+            fused,
+            tile,
+            planes,
+            rows,
+            cols,
+            kernel_width,
+            workers,
+        )
+    }
+
+    /// Per-class twin of [`CostModel::predict_ms`]: `class` is a
+    /// [`crate::plan::KernelClass`] label ("separable" / "direct2d" /
+    /// "fft"). For FFT groups `kernel_width` still feeds the feature
+    /// vector — the fit learns its near-zero weight from the samples
+    /// rather than having it hard-coded away.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_class_ms(
+        &self,
+        model: &str,
+        class: &str,
+        fused: bool,
+        tile: Option<TileSpec>,
+        planes: usize,
+        rows: usize,
+        cols: usize,
+        kernel_width: usize,
+        workers: usize,
+    ) -> Option<f64> {
+        let g = self.group(model, class, fused, tile.is_some())?;
         if !g.usable(self.r2_min) {
             return None;
         }
@@ -241,12 +283,15 @@ impl CostModel {
     }
 
     /// The predicted-cheapest candidate for a shape, over the same
-    /// candidate set the empirical sweep uses (baseline always index
-    /// 0). `None` — fall back to sweeping — when the untiled baseline
-    /// group itself is unpredictable; candidates whose group is
-    /// unusable are skipped rather than guessed at. Deterministic:
-    /// candidates are scanned in order with a strict `<`, so ties keep
-    /// the earlier (coarser/baseline-first) candidate.
+    /// candidate set the empirical sweep uses (separable untiled
+    /// baseline always index 0, kernel-class alternatives included).
+    /// `None` — fall back to sweeping — when the untiled baseline group
+    /// itself is unpredictable; candidates whose group is unusable are
+    /// skipped rather than guessed at. Deterministic: candidates are
+    /// scanned in order with a strict `<`, so ties keep the earlier
+    /// (coarser/baseline-first) candidate. This is where the measured
+    /// crossover policy lives: a never-swept large kernel routes to the
+    /// FFT class purely because its fitted group predicts cheaper.
     pub fn choose(
         &self,
         model: &str,
@@ -260,8 +305,9 @@ impl CostModel {
             self.predict_ms(model, false, None, planes, rows, cols, kernel_width, workers)?;
         let mut best = (Candidate::untiled(), baseline_ms);
         for cand in default_candidates(rows, model == "GPRM") {
-            let Some(ms) = self.predict_ms(
+            let Some(ms) = self.predict_class_ms(
                 model,
+                cand.class.label(),
                 cand.fused,
                 cand.tile,
                 planes,
@@ -366,11 +412,11 @@ impl CostModel {
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(
             format!(
-                "Cost model: per-(model, fused, tiled) linear fits over {} samples (R² gate {})",
+                "Cost model: per-(model, class, fused, tiled) linear fits over {} samples (R² gate {})",
                 self.samples.len(),
                 self.r2_min
             ),
-            &["Model", "Fused", "Tiled", "Samples", "R²", "Status"],
+            &["Model", "Class", "Fused", "Tiled", "Samples", "R²", "Status"],
         );
         for g in &self.groups {
             let (r2, status) = match &g.fit {
@@ -383,6 +429,7 @@ impl CostModel {
             };
             t.row(vec![
                 g.model.clone(),
+                g.class.clone(),
                 g.fused.to_string(),
                 g.tiled.to_string(),
                 g.n_samples.to_string(),
@@ -408,6 +455,7 @@ fn tile_dim_from_json(v: &Json) -> Result<usize> {
 fn sample_to_json(s: &Sample) -> Json {
     let mut m = BTreeMap::new();
     m.insert("model".into(), Json::Str(s.model.clone()));
+    m.insert("class".into(), Json::Str(s.class.clone()));
     m.insert("planes".into(), Json::Num(s.planes as f64));
     m.insert("rows".into(), Json::Num(s.rows as f64));
     m.insert("cols".into(), Json::Num(s.cols as f64));
@@ -439,6 +487,9 @@ fn sample_from_json(v: &Json) -> Result<Sample> {
     };
     Ok(Sample {
         model: v.req_str("model")?.to_string(),
+        // pre-class artifacts carry no class field; everything they
+        // measured was the separable ladder.
+        class: v.get("class").as_str().unwrap_or("separable").to_string(),
         planes: v.req_usize("planes")?,
         rows: v.req_usize("rows")?,
         cols: v.req_usize("cols")?,
@@ -457,6 +508,7 @@ fn sample_from_json(v: &Json) -> Result<Sample> {
 fn group_to_json(g: &GroupFit) -> Json {
     let mut m = BTreeMap::new();
     m.insert("model".into(), Json::Str(g.model.clone()));
+    m.insert("class".into(), Json::Str(g.class.clone()));
     m.insert("fused".into(), Json::Bool(g.fused));
     m.insert("tiled".into(), Json::Bool(g.tiled));
     m.insert("n_samples".into(), Json::Num(g.n_samples as f64));
@@ -497,6 +549,7 @@ fn group_from_json(v: &Json) -> Result<GroupFit> {
     };
     Ok(GroupFit {
         model: v.req_str("model")?.to_string(),
+        class: v.get("class").as_str().unwrap_or("separable").to_string(),
         fused: v.req_bool("fused")?,
         tiled: v.req_bool("tiled")?,
         n_samples: v.req_usize("n_samples")?,
@@ -562,6 +615,7 @@ pub fn accuracy_table(cfg: &RunConfig, cm: &CostModel, sizes: &[usize]) -> Resul
             };
             let plan = ConvPlan::builder()
                 .kernel(kernel)
+                .kernel_class(cand.class)
                 .tile_opt(cand.tile)
                 .fuse(cand.fused)
                 .shape(cfg.planes, size, size)
@@ -590,6 +644,7 @@ pub fn accuracy_table(cfg: &RunConfig, cm: &CostModel, sizes: &[usize]) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::plan::KernelClass;
 
     fn sample(
         model: &str,
@@ -600,9 +655,24 @@ mod tests {
         fused: bool,
         ms: f64,
     ) -> Sample {
+        class_sample(model, "separable", rows, cols, width, tile, fused, ms)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn class_sample(
+        model: &str,
+        class: &str,
+        rows: usize,
+        cols: usize,
+        width: usize,
+        tile: Option<TileSpec>,
+        fused: bool,
+        ms: f64,
+    ) -> Sample {
         let workers = 4;
         Sample {
             model: model.to_string(),
+            class: class.to_string(),
             planes: 3,
             rows,
             cols,
@@ -718,6 +788,49 @@ mod tests {
         // the fits exist but are gated — to_table names the fallback
         let text = cm.to_table().to_text();
         assert!(text.contains("fallback"), "table: {text}");
+    }
+
+    #[test]
+    fn per_class_fits_route_large_kernels_to_fft() {
+        // Direct-arithmetic classes cost ∝ pixels·width; the transform
+        // class is flat in width. The fitted groups must reproduce the
+        // crossover so a never-swept large kernel routes to FFT.
+        let mut samples = Vec::new();
+        for (rows, cols) in [(64, 64), (96, 96), (128, 128), (160, 160), (192, 192), (128, 192)] {
+            for width in [3usize, 7, 15, 31, 61] {
+                let f = features(3, rows, cols, width, 4);
+                samples.push(class_sample(
+                    "OpenMP", "separable", rows, cols, width, None, false,
+                    0.1 + 1.0e-6 * f[2],
+                ));
+                samples.push(class_sample(
+                    "OpenMP", "direct2d", rows, cols, width, None, false,
+                    0.1 + 2.0e-6 * f[2],
+                ));
+                samples.push(class_sample(
+                    "OpenMP", "fft", rows, cols, width, None, false,
+                    0.4 + 6.0e-6 * f[0],
+                ));
+            }
+        }
+        let cm = CostModel::fit(samples, 0.8);
+        // small kernel on a held-out shape: the separable baseline wins
+        let p = cm.choose("OpenMP", 3, 100, 100, 3, 4).expect("predictable");
+        assert_eq!(p.candidate.class, KernelClass::Separable, "small kernel: {:?}", p.candidate);
+        // large never-seen kernel: the fft group predicts cheaper
+        let p = cm.choose("OpenMP", 3, 100, 100, 63, 4).expect("predictable");
+        assert_eq!(p.candidate.class, KernelClass::Fft, "large kernel: {:?}", p.candidate);
+        assert!(p.ms < p.baseline_ms, "{} !< {}", p.ms, p.baseline_ms);
+        // choose() compared exactly what the per-class twin predicts
+        let fft_ms = cm
+            .predict_class_ms("OpenMP", "fft", false, None, 3, 100, 100, 63, 4)
+            .expect("fft group usable");
+        assert_eq!(p.ms.to_bits(), fft_ms.to_bits());
+        // the legacy signature still means the separable class
+        let sep = cm.predict_ms("OpenMP", false, None, 3, 100, 100, 63, 4).unwrap();
+        let sep_explicit =
+            cm.predict_class_ms("OpenMP", "separable", false, None, 3, 100, 100, 63, 4).unwrap();
+        assert_eq!(sep.to_bits(), sep_explicit.to_bits());
     }
 
     #[test]

@@ -360,6 +360,12 @@ pub fn results_json(
         "widths".to_string(),
         Json::Arr(mix.widths.iter().map(|&w| Json::Num(w as f64)).collect()),
     );
+    m.insert(
+        "tail_widths".to_string(),
+        Json::Arr(mix.tail_widths.iter().map(|&w| Json::Num(w as f64)).collect()),
+    );
+    m.insert("tail_fraction".to_string(), Json::Num(mix.tail_fraction));
+    m.insert("direct2d_fraction".to_string(), Json::Num(mix.direct2d_fraction));
     m.insert("graph_fraction".to_string(), Json::Num(mix.graph_fraction));
     m.insert("deadline_ms".to_string(), Json::Num(mix.deadline_ms as f64));
     m.insert("requests_per_scale".to_string(), Json::Num(mix.requests_per_scale as f64));

@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use crate::coordinator::{ConvRequest, GraphSpec};
 use crate::image::{synth_image, Pattern, PlanarImage};
-use crate::plan::KernelSpec;
+use crate::plan::{KernelClass, KernelSpec};
 use crate::util::error::Result;
 use crate::util::prng::Prng;
 
@@ -49,6 +49,15 @@ pub struct MixConfig {
     pub zipf_s: f64,
     /// candidate kernel widths (odd, ≥ 3).
     pub widths: Vec<usize>,
+    /// large-kernel tail widths (odd, ≥ 3, < min_size) — drawn instead
+    /// of `widths` for `tail_fraction` of requests, so the serving path
+    /// exercises the direct-vs-FFT crossover on realistic traffic.
+    pub tail_widths: Vec<usize>,
+    /// fraction of requests drawing their width from the tail.
+    pub tail_fraction: f64,
+    /// fraction of single-kernel requests pinned to the direct 2-D
+    /// class (exercises the generic-kernel engines under load).
+    pub direct2d_fraction: f64,
     /// fraction of requests carrying a 2–3 stage graph chain.
     pub graph_fraction: f64,
     /// per-request deadline (0 = no deadline).
@@ -71,6 +80,9 @@ impl Default for MixConfig {
             max_size: 160,
             zipf_s: 1.1,
             widths: vec![3, 5, 7, 9],
+            tail_widths: vec![11, 17, 25],
+            tail_fraction: 0.1,
+            direct2d_fraction: 0.1,
             graph_fraction: 0.15,
             deadline_ms: 1000,
             requests_per_scale: 32,
@@ -91,10 +103,24 @@ impl MixConfig {
             self.max_size
         );
         ensure!(!self.widths.is_empty(), "mix: widths is empty");
-        for &w in &self.widths {
+        for &w in self.widths.iter().chain(&self.tail_widths) {
             ensure!(w % 2 == 1 && w >= 3, "mix: kernel width {w} must be odd and >= 3");
             ensure!(w < self.min_size, "mix: kernel width {w} exceeds min_size {}", self.min_size);
         }
+        ensure!(
+            (0.0..=1.0).contains(&self.tail_fraction),
+            "mix: tail_fraction must be in [0, 1], got {}",
+            self.tail_fraction
+        );
+        ensure!(
+            self.tail_fraction == 0.0 || !self.tail_widths.is_empty(),
+            "mix: tail_fraction > 0 needs tail_widths"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.direct2d_fraction),
+            "mix: direct2d_fraction must be in [0, 1], got {}",
+            self.direct2d_fraction
+        );
         ensure!(
             self.zipf_s.is_finite() && self.zipf_s >= 0.0,
             "mix: zipf_s must be finite and >= 0"
@@ -192,6 +218,9 @@ pub struct PlannedRequest {
     pub shape: usize,
     /// single-stage kernel (ignored when `graph` is set).
     pub kernel: KernelSpec,
+    /// pinned kernel class for single-stage requests (`None` lets the
+    /// coordinator's tuning tier pick the class per shape).
+    pub kernel_class: Option<KernelClass>,
     /// multi-stage chain for graph requests.
     pub graph: Option<Vec<KernelSpec>>,
     pub deadline_ms: u64,
@@ -238,7 +267,10 @@ impl RequestPlan {
         for id in 0..n as u64 {
             let u = rng.f32() as f64;
             let shape = cum.iter().position(|&c| u < c).unwrap_or(shapes.len() - 1);
-            let width = *rng.pick(&mix.widths);
+            let tail =
+                !mix.tail_widths.is_empty() && (rng.f32() as f64) < mix.tail_fraction;
+            let width =
+                if tail { *rng.pick(&mix.tail_widths) } else { *rng.pick(&mix.widths) };
             let kernel = KernelSpec::new(width, default_sigma(width));
             let graph = if (rng.f32() as f64) < mix.graph_fraction {
                 let stages = rng.range(2, 3);
@@ -253,6 +285,13 @@ impl RequestPlan {
             } else {
                 None
             };
+            // class pinning only applies to single-stage requests
+            // (graph stages are separable chains by construction); the
+            // draw happens unconditionally so skipping it for graph
+            // requests does not shift every later request's stream
+            let pin = (rng.f32() as f64) < mix.direct2d_fraction;
+            let kernel_class =
+                if pin && graph.is_none() { Some(KernelClass::Direct2d) } else { None };
             // Poisson arrivals: exponential inter-arrival gaps,
             // −ln(1−u)·mean with u ∈ [0,1) so the log argument is
             // in (0,1] and the gap is finite and ≥ 0
@@ -262,6 +301,7 @@ impl RequestPlan {
                 id,
                 shape,
                 kernel,
+                kernel_class,
                 graph,
                 deadline_ms: mix.deadline_ms,
                 arrival_us: arrival as u64,
@@ -296,6 +336,19 @@ impl RequestPlan {
         self.requests.iter().filter(|r| r.graph.is_some()).count()
     }
 
+    /// Requests pinned to the direct 2-D kernel class.
+    pub fn direct2d_count(&self) -> usize {
+        self.requests.iter().filter(|r| r.kernel_class == Some(KernelClass::Direct2d)).count()
+    }
+
+    /// Requests whose width came from the large-kernel tail.
+    pub fn tail_count(&self, mix: &MixConfig) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| r.graph.is_none() && mix.tail_widths.contains(&r.kernel.width))
+            .count()
+    }
+
     /// Stable identity of the schedule: same `(mix, scale)` ⇒ same
     /// digest, any drift in the generator changes it. (DefaultHasher
     /// uses fixed keys, so this is stable across processes — the same
@@ -311,6 +364,7 @@ impl RequestPlan {
             r.id.hash(&mut h);
             r.shape.hash(&mut h);
             r.kernel.cache_key().hash(&mut h);
+            r.kernel_class.map(|c| c.label()).hash(&mut h);
             match &r.graph {
                 Some(stages) => {
                     true.hash(&mut h);
@@ -345,6 +399,9 @@ impl RequestPlan {
                     Some(stages) => req.with_graph(GraphSpec::chain(stages.clone())),
                     None => req.with_kernel(p.kernel),
                 };
+                if let Some(c) = p.kernel_class {
+                    req = req.with_kernel_class(c);
+                }
                 if p.deadline_ms > 0 {
                     req = req.with_deadline(Duration::from_millis(p.deadline_ms));
                 }
@@ -423,6 +480,17 @@ mod tests {
         assert!(inverted.validate().is_err());
         let frac = MixConfig { graph_fraction: 1.5, ..MixConfig::default() };
         assert!(frac.validate().is_err());
+        let tail_even = MixConfig { tail_widths: vec![12], ..MixConfig::default() };
+        assert!(tail_even.validate().is_err(), "tail widths obey the same odd/size rules");
+        let tail_huge = MixConfig { tail_widths: vec![49], ..MixConfig::default() };
+        assert!(tail_huge.validate().is_err(), "tail widths must fit the smallest shape");
+        let tail_frac = MixConfig { tail_fraction: -0.1, ..MixConfig::default() };
+        assert!(tail_frac.validate().is_err());
+        let tail_empty =
+            MixConfig { tail_widths: vec![], tail_fraction: 0.2, ..MixConfig::default() };
+        assert!(tail_empty.validate().is_err(), "a nonzero tail fraction needs tail widths");
+        let d2d = MixConfig { direct2d_fraction: 2.0, ..MixConfig::default() };
+        assert!(d2d.validate().is_err());
         assert!(RequestPlan::generate(&MixConfig::default(), 0).is_err());
     }
 
@@ -446,7 +514,31 @@ mod tests {
                 }
                 None => assert_eq!(req.kernel, Some(p.kernel)),
             }
+            assert_eq!(req.kernel_class, p.kernel_class, "class pins ride the request");
             assert!(req.deadline.is_some(), "default mix sets deadlines");
         }
+    }
+
+    #[test]
+    fn default_mix_draws_tail_widths_and_class_pins() {
+        let mix = MixConfig::default();
+        let plan = RequestPlan::generate(&mix, 4).unwrap();
+        let n = plan.issued();
+        let tails = plan.tail_count(&mix);
+        let pins = plan.direct2d_count();
+        assert!(tails > 0 && tails < n / 2, "tail draws present but a minority ({tails}/{n})");
+        assert!(pins > 0 && pins < n / 2, "class pins present but a minority ({pins}/{n})");
+        for r in &plan.requests {
+            assert!(
+                r.kernel_class.is_none() || r.graph.is_none(),
+                "graph requests never pin a kernel class"
+            );
+        }
+        // the new dimensions are part of the schedule's identity
+        let flat = MixConfig { tail_fraction: 0.0, direct2d_fraction: 0.0, ..mix.clone() };
+        let flat_plan = RequestPlan::generate(&flat, 4).unwrap();
+        assert_eq!(flat_plan.direct2d_count(), 0);
+        assert_eq!(flat_plan.tail_count(&flat), 0);
+        assert_ne!(plan.digest(), flat_plan.digest());
     }
 }

@@ -5,6 +5,7 @@
 //!   measure      run the same exhibit measured on this host
 //!   tune         sweep tile shapes + agglomeration factors per model
 //!   graph        run a multi-stage filter chain (streamed vs materialized)
+//!   crossover    direct-2D vs FFT width sweep + measured crossover width
 //!   validate     cross-check PJRT artifacts vs the native engines
 //!   serve        start the coordinator and push a synthetic workload
 //!   load         scale-factor load harness: deterministic traffic mix + SLO table
@@ -20,6 +21,8 @@
 //!   phi-conv graph --stages blur:9,sharpen:5,edge:3 --explain
 //!   phi-conv graph --exhibit dog                     # fan-out exhibit
 //!   phi-conv graph --stages blur:5,blur:9 --sweep    # per-edge policies
+//!   phi-conv crossover --sizes 256 --reps 5            # BENCH_crossover.json
+//!   phi-conv crossover --check --sizes 64 --reps 1     # differential smoke
 //!   phi-conv validate
 //!   phi-conv serve --requests 40 --executors 2 --tile-rows 16
 //!   phi-conv load --scale 1,5                        # SLO curve + BENCH_load.json
@@ -64,13 +67,22 @@ fn run() -> Result<()> {
         .flag("predict", "tune: print predicted-vs-measured error for --sizes (needs --load)")
         .opt("stages", "", "graph: kind:width chain, e.g. blur:9,sharpen:5,edge:3")
         .flag("explain", "graph: print the per-stage traffic breakdown")
-        .flag("check", "graph: fail unless streamed == materialized bitwise")
+        .flag(
+            "check",
+            "graph: fail unless streamed == materialized bitwise; \
+             crossover: differential-check fft vs direct at every width",
+        )
         .flag("sweep", "graph: sweep per-edge streaming policies (Gaussian stages only)")
         .opt("scale", "1", "load: comma-separated scale factors, e.g. 1,2,5")
         .opt("mode", "both", "load: driver model — open|closed|both")
         .opt("rate", "", "load: open-loop arrival rate per scale unit in req/s (default 200)")
         .opt("per-scale", "", "load: requests issued per scale unit (default 32)")
-        .opt("out", "BENCH_load.json", "load: JSON artifact path (empty = don't write)")
+        .opt(
+            "out",
+            "",
+            "load/crossover: JSON artifact path (default BENCH_load.json / \
+             BENCH_crossover.json; pass none to skip the write)",
+        )
         .parse(args)?;
 
     let cfg = RunConfig::resolve(&cli)?;
@@ -107,6 +119,7 @@ fn run() -> Result<()> {
             cli.is_set("check"),
             cli.is_set("sweep"),
         )?,
+        "crossover" => crossover_cmd(&cfg, &cli)?,
         "validate" => validate(&cfg)?,
         "serve" => serve(
             &cfg,
@@ -120,12 +133,22 @@ fn run() -> Result<()> {
         "info" => info(&cfg)?,
         _ => {
             println!(
-                "usage: phi-conv <simulate|measure|tune|graph|validate|serve|load|info> [options]"
+                "usage: phi-conv <simulate|measure|tune|graph|crossover|validate|serve|load|info> [options]"
             );
             println!("       phi-conv --help        for the option list");
         }
     }
     Ok(())
+}
+
+/// Resolve `--out`: empty = the command's default artifact, the
+/// literal `none` = skip the write.
+fn artifact_out(raw: &str, default: &str) -> Option<String> {
+    match raw {
+        "" => Some(default.to_string()),
+        "none" => None,
+        other => Some(other.to_string()),
+    }
 }
 
 fn print_table(t: &phi_conv::metrics::Table, format: &str) {
@@ -486,6 +509,140 @@ fn graph_exhibit(
     Ok(())
 }
 
+/// The kernel-class crossover exhibit: sweep odd kernel widths on the
+/// largest configured size, timing the banded direct 2-D engine against
+/// the FFT convolver, and report the first width where FFT wins — the
+/// measured crossover the cost model is expected to learn. Ends with a
+/// 3-image RGB batch through the FFT plan (`execute_batch`). `--check`
+/// differential-checks every width (fft vs direct ≤ 1e-4, direct vs
+/// separable two-pass ≤ 1e-6) — the verify.sh smoke. Writes
+/// `BENCH_crossover.json` unless `--out none`.
+fn crossover_cmd(cfg: &RunConfig, cli: &Cli) -> Result<()> {
+    use phi_conv::plan::{ConvPlan, KernelClass};
+    use phi_conv::util::json::Json;
+
+    let format = cli.str_of("format")?;
+    let check = cli.is_set("check");
+    let size = *cfg.sizes.last().context("no sizes configured")?;
+    let img = synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed);
+    let model = phi_conv::models::OpenMpModel::new(cfg.threads);
+    let mut arena = ScratchArena::new();
+
+    let build = |width: usize, class: KernelClass| {
+        ConvPlan::builder()
+            .variant(Variant::Simd)
+            .kernel(KernelSpec::new(width, stage_sigma(width)))
+            .kernel_class(class)
+            .shape(cfg.planes, size, size)
+            .build()
+    };
+
+    let mut t = Table::new(
+        format!(
+            "kernel-class crossover: {}x{size}x{size}, {} threads, median of {} reps",
+            cfg.planes, cfg.threads, cfg.reps
+        ),
+        &["Width", "direct2d ms", "fft ms", "winner", "fft speedup"],
+    );
+    let mut sweep = Vec::new();
+    let mut crossover: Option<usize> = None;
+    let mut last_width = 0usize;
+    for width in (3..=63usize).step_by(4) {
+        if width >= size {
+            eprintln!("  (sweep clipped at width {last_width}: size {size} is too small)");
+            break;
+        }
+        last_width = width;
+        let direct = build(width, KernelClass::Direct2d)?;
+        let fft = build(width, KernelClass::Fft)?;
+        let mut got_d = direct.execute_on(&model, &img, &mut arena)?;
+        let mut got_f = fft.execute_on(&model, &img, &mut arena)?;
+        if check {
+            let sep = ConvPlan::builder()
+                .variant(Variant::Simd)
+                .kernel(KernelSpec::new(width, stage_sigma(width)))
+                .shape(cfg.planes, size, size)
+                .build()?;
+            let want = sep.execute(&img, &mut arena)?;
+            let d = got_d.max_abs_diff(&want);
+            ensure!(d < 1e-6, "width {width}: direct2d vs separable two-pass diff {d:e}");
+            let f = got_f.max_abs_diff(&got_d);
+            ensure!(f < 1e-4, "width {width}: fft vs direct2d diff {f:e}");
+        }
+        let t_d = time_reps(
+            || got_d = direct.execute_on(&model, &img, &mut arena).expect("direct2d plan"),
+            cfg.warmup,
+            cfg.reps,
+        )
+        .median();
+        let t_f = time_reps(
+            || got_f = fft.execute_on(&model, &img, &mut arena).expect("fft plan"),
+            cfg.warmup,
+            cfg.reps,
+        )
+        .median();
+        if crossover.is_none() && t_f < t_d {
+            crossover = Some(width);
+        }
+        t.row(vec![
+            width.to_string(),
+            format!("{t_d:.3}"),
+            format!("{t_f:.3}"),
+            if t_f < t_d { "fft" } else { "direct2d" }.to_string(),
+            format!("{:.2}x", t_d / t_f),
+        ]);
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("width".to_string(), Json::Num(width as f64));
+        row.insert("direct_ms".to_string(), Json::Num(t_d));
+        row.insert("fft_ms".to_string(), Json::Num(t_f));
+        sweep.push(Json::Obj(row));
+    }
+    print_table(&t, format);
+    match crossover {
+        Some(w) => println!("measured crossover width: {w} (FFT wins at and beyond)"),
+        None => println!("measured crossover width: none within the sweep (direct2d wins)"),
+    }
+
+    // the RGB leg: three channel-planes batched through one FFT plan —
+    // the multi-image entry point the coordinator's batching uses
+    ensure!(last_width >= 3, "size {size} leaves no width to sweep (need > 3)");
+    let fft = build(last_width, KernelClass::Fft)?;
+    let batch: Vec<PlanarImage> = (0..3u64)
+        .map(|c| synth_image(cfg.planes, size, size, cfg.pattern, cfg.seed + 100 + c))
+        .collect();
+    let mut outs = Vec::new();
+    let t_b = time_reps(
+        || outs = fft.execute_batch(Some(&model), &batch, &mut arena).expect("rgb batch"),
+        cfg.warmup,
+        cfg.reps,
+    )
+    .median();
+    ensure!(outs.len() == 3, "RGB batch must return one image per channel");
+    println!("RGB batch (3 images, width {last_width}, fft): {t_b:.3} ms");
+
+    if let Some(out) = artifact_out(cli.str_of("out")?, "BENCH_crossover.json") {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("crossover".to_string()));
+        root.insert("provenance".to_string(), Json::Str("measured".to_string()));
+        root.insert("threads".to_string(), Json::Num(cfg.threads as f64));
+        root.insert("planes".to_string(), Json::Num(cfg.planes as f64));
+        root.insert("size".to_string(), Json::Num(size as f64));
+        root.insert("reps".to_string(), Json::Num(cfg.reps as f64));
+        root.insert("warmup".to_string(), Json::Num(cfg.warmup as f64));
+        root.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+        root.insert(
+            "crossover_width".to_string(),
+            crossover.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+        );
+        root.insert("rgb_batch_ms".to_string(), Json::Num(t_b));
+        root.insert("sweep".to_string(), Json::Arr(sweep));
+        let json = Json::Obj(root);
+        std::fs::write(&out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
 /// Cross-check every full/agg/ablation artifact against the native
 /// engines at its own shape.
 fn validate(cfg: &RunConfig) -> Result<()> {
@@ -709,10 +866,9 @@ fn load_cmd(cfg: &RunConfig, cli: &Cli) -> Result<()> {
     let results = run_scales(&cfg, &mix, &scales, &modes, executors, cm.as_ref())?;
     print_table(&report_table(&results), cli.str_of("format")?);
 
-    let out = cli.str_of("out")?;
-    if !out.is_empty() {
+    if let Some(out) = artifact_out(cli.str_of("out")?, "BENCH_load.json") {
         let json = results_json(&mix, &cfg, executors, &results);
-        std::fs::write(out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+        std::fs::write(&out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
         eprintln!("wrote {out}");
     }
     Ok(())

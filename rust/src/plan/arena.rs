@@ -22,6 +22,10 @@ use std::sync::{Mutex, PoisonError};
 pub struct ScratchArena {
     /// length → stack of free buffers of exactly that length
     pools: HashMap<usize, Vec<Vec<f32>>>,
+    /// length → stack of free f64 buffers (the FFT convolver's padded
+    /// spectral scratch; kept apart from the f32 planes so neither pool
+    /// pollutes the other's size classes)
+    pools_f64: HashMap<usize, Vec<Vec<f64>>>,
     /// recycled free-slot index stores for [`RingLease`]s, so fused
     /// executions allocate nothing after warm-up (the `Vec<f32>` data
     /// itself recycles through `pools`)
@@ -53,19 +57,39 @@ impl ScratchArena {
         self.pools.entry(buf.len()).or_default().push(buf);
     }
 
+    /// Borrow an `f64` buffer of exactly `len` elements — the FFT
+    /// convolver's spectral scratch lease. Same discipline as
+    /// [`ScratchArena::take`]: recycled when pooled, fresh (and counted
+    /// in [`ScratchArena::allocations`]) otherwise, contents
+    /// unspecified.
+    pub fn take_f64(&mut self, len: usize) -> Vec<f64> {
+        if let Some(buf) = self.pools_f64.get_mut(&len).and_then(|pool| pool.pop()) {
+            return buf;
+        }
+        self.allocations += 1;
+        vec![0.0; len]
+    }
+
+    /// Return a buffer taken with [`ScratchArena::take_f64`].
+    pub fn put_f64(&mut self, buf: Vec<f64>) {
+        self.pools_f64.entry(buf.len()).or_default().push(buf);
+    }
+
     /// Fresh allocations performed so far (never decreases).
     pub fn allocations(&self) -> usize {
         self.allocations
     }
 
-    /// Buffers currently pooled (across all sizes).
+    /// Buffers currently pooled (across all sizes, f32 and f64).
     pub fn pooled(&self) -> usize {
-        self.pools.values().map(Vec::len).sum()
+        self.pools.values().map(Vec::len).sum::<usize>()
+            + self.pools_f64.values().map(Vec::len).sum::<usize>()
     }
 
     /// Drop every pooled buffer (e.g. after a shape-mix change).
     pub fn clear(&mut self) {
         self.pools.clear();
+        self.pools_f64.clear();
         self.ring_indices.clear();
     }
 
@@ -327,6 +351,34 @@ mod tests {
         assert!(slot.buf().is_empty());
         drop(slot);
         a.put_rings(lease);
+    }
+
+    #[test]
+    fn f64_pool_recycles_without_allocating() {
+        // the FFT spectral-scratch lease type: same no-growth contract
+        // as the f32 planes, pooled separately
+        let mut a = ScratchArena::new();
+        let re = a.take_f64(256);
+        let im = a.take_f64(256);
+        assert_eq!((re.len(), im.len()), (256, 256));
+        assert_eq!(a.allocations(), 2);
+        a.put_f64(re);
+        a.put_f64(im);
+        assert_eq!(a.pooled(), 2, "f64 buffers count as pooled");
+        for _ in 0..50 {
+            let re = a.take_f64(256);
+            let im = a.take_f64(256);
+            a.put_f64(re);
+            a.put_f64(im);
+        }
+        assert_eq!(a.allocations(), 2, "steady state is allocation-free");
+        // f32 and f64 pools are disjoint even at equal lengths
+        let _ = a.take(256);
+        assert_eq!(a.allocations(), 3, "an f32 take never raids the f64 pool");
+        a.clear();
+        assert_eq!(a.pooled(), 0);
+        let _ = a.take_f64(256);
+        assert_eq!(a.allocations(), 4, "clear() drops the f64 pool too");
     }
 
     #[test]

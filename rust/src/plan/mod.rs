@@ -71,9 +71,21 @@
 //! multi-stage DAGs whose streamed edges hand rows between stages
 //! through cascaded rings ([`graph`] module docs) — a k-stage chain
 //! crosses memory twice, not 2k times.
+//!
+//! **Kernel classes.** [`KernelClass`] is a first-class plan dimension:
+//! `Separable` is the paper's two-pass/single-pass ladder (Gaussian or
+//! rank-1 taps only — a non-separable [`Kernel2d`] is *refused* with a
+//! structured [`ErrorKind::InvalidKernel`]), `Direct2d` convolves any
+//! odd×odd tap matrix with the banded/tiled direct engines
+//! ([`crate::conv::direct2d`]), and `Fft` routes through the in-tree
+//! radix-2 transform convolver ([`crate::conv::fft`]) whose
+//! `O(n log n)` arithmetic wins past a measured kernel-width crossover
+//! (`phi-conv crossover`). When a request pins no class, the cost model
+//! picks one per (shape, kernel extent) — [`crate::costmodel`].
 
-use crate::util::error::Result;
+use crate::util::error::{Error, ErrorKind, Result};
 
+use crate::conv::fft::FftPlan;
 use crate::conv::{Algorithm, Variant};
 use crate::image::{gaussian_kernel, gaussian_kernel2d, PlanarImage};
 use crate::models::{ExecutionModel, Layout};
@@ -106,10 +118,23 @@ impl KernelSpec {
     }
 
     /// Structured validation — every public entry point (CLI, coordinator
-    /// request intake, harness) funnels kernel parameters through here.
+    /// request intake, graph stage validation, harness) funnels kernel
+    /// parameters through here. Failures carry
+    /// [`ErrorKind::InvalidKernel`] so callers can dispatch on the
+    /// refusal (vs. execution errors, which stay [`ErrorKind::Other`]).
     pub fn validate(&self) -> Result<()> {
-        ensure!(self.width % 2 == 1, "kernel width must be odd, got {}", self.width);
-        ensure!(self.sigma > 0.0, "kernel sigma must be positive, got {}", self.sigma);
+        if self.width % 2 != 1 {
+            return Err(Error::with_kind(
+                ErrorKind::InvalidKernel,
+                format!("kernel width must be odd, got {}", self.width),
+            ));
+        }
+        if !(self.sigma > 0.0) {
+            return Err(Error::with_kind(
+                ErrorKind::InvalidKernel,
+                format!("kernel sigma must be positive, got {}", self.sigma),
+            ));
+        }
         Ok(())
     }
 
@@ -117,6 +142,13 @@ impl KernelSpec {
     pub fn taps(&self) -> Result<Vec<f32>> {
         self.validate()?;
         Ok(gaussian_kernel(self.width, self.sigma))
+    }
+
+    /// Materialise the full 2-D tap matrix (the outer product of the 1-D
+    /// taps) — what the direct-2D and FFT classes consume.
+    pub fn taps2d(&self) -> Result<Kernel2d> {
+        let taps = self.taps()?;
+        Kernel2d::from_separable(&taps)
     }
 
     /// Stable hash-map key for plan caches (`f64` is not `Eq`/`Hash`;
@@ -133,9 +165,166 @@ impl Default for KernelSpec {
     }
 }
 
+/// Which convolver family a plan executes with — a first-class plan
+/// dimension, swept by the autotuner and predicted by the cost model
+/// when a request does not pin it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelClass {
+    /// The paper's separable ladder (two-pass or single-pass over the
+    /// outer-product kernel). Requires rank-1 taps; `O(n·w)` per pixel.
+    #[default]
+    Separable,
+    /// Direct 2-D accumulation of an arbitrary odd×odd tap matrix
+    /// ([`crate::conv::direct2d`]); `O(n·w²)` per pixel, wins small
+    /// kernels.
+    Direct2d,
+    /// Radix-2 transform convolution ([`crate::conv::fft`]);
+    /// `O(n log n)` regardless of kernel extent, wins past the measured
+    /// crossover width.
+    Fft,
+}
+
+impl KernelClass {
+    /// Every class, in sweep order.
+    pub const ALL: [KernelClass; 3] = [KernelClass::Separable, KernelClass::Direct2d, KernelClass::Fft];
+
+    /// Stable lowercase label (CLI values, JSON artifacts, cost-model
+    /// grouping keys).
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelClass::Separable => "separable",
+            KernelClass::Direct2d => "direct2d",
+            KernelClass::Fft => "fft",
+        }
+    }
+
+    /// Parse a [`KernelClass::label`] (CLI / config / JSON).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "separable" => Ok(KernelClass::Separable),
+            "direct2d" | "direct" => Ok(KernelClass::Direct2d),
+            "fft" => Ok(KernelClass::Fft),
+            other => Err(Error::with_kind(
+                ErrorKind::InvalidKernel,
+                format!("unknown kernel class {other:?} (expected separable, direct2d or fft)"),
+            )),
+        }
+    }
+}
+
+/// An explicit 2-D tap matrix with validated odd extents — the kernel
+/// form the `Direct2d` and `Fft` classes consume, and the input to the
+/// separability (rank-1) check that gates the `Separable` class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel2d {
+    taps: Vec<f32>,
+    krows: usize,
+    kcols: usize,
+}
+
+impl Kernel2d {
+    /// Validate and wrap a row-major `krows × kcols` tap matrix. Even or
+    /// zero extents, a tap count that disagrees with them, and
+    /// non-finite taps are refused with [`ErrorKind::InvalidKernel`].
+    pub fn new(taps: Vec<f32>, krows: usize, kcols: usize) -> Result<Self> {
+        let invalid = |msg: String| Err(Error::with_kind(ErrorKind::InvalidKernel, msg));
+        if krows % 2 != 1 || kcols % 2 != 1 {
+            return invalid(format!("kernel extents must be odd and non-zero, got {krows}x{kcols}"));
+        }
+        if taps.len() != krows * kcols {
+            return invalid(format!(
+                "kernel taps length {} does not match extents {krows}x{kcols}",
+                taps.len()
+            ));
+        }
+        if let Some(bad) = taps.iter().find(|t| !t.is_finite()) {
+            return invalid(format!("kernel taps must be finite, got {bad}"));
+        }
+        Ok(Self { taps, krows, kcols })
+    }
+
+    /// The outer product of a separable tap vector with itself (odd
+    /// length enforced).
+    pub fn from_separable(taps: &[f32]) -> Result<Self> {
+        if taps.is_empty() || taps.len() % 2 != 1 {
+            return Err(Error::with_kind(
+                ErrorKind::InvalidKernel,
+                format!("kernel width must be odd, got {}", taps.len()),
+            ));
+        }
+        let w = taps.len();
+        Self::new(gaussian_kernel2d(taps), w, w)
+    }
+
+    pub fn krows(&self) -> usize {
+        self.krows
+    }
+
+    pub fn kcols(&self) -> usize {
+        self.kcols
+    }
+
+    /// Row-major taps, `krows × kcols`.
+    pub fn taps(&self) -> &[f32] {
+        &self.taps
+    }
+
+    /// Rank-1 (separability) check: if the matrix is the outer product
+    /// of some vector `f` with itself — the only form the crate's
+    /// two-pass pipeline can serve, which applies one tap vector on both
+    /// axes — return `f`. Tolerance is relative to the largest tap
+    /// magnitude. Non-square matrices are never separable here.
+    pub fn separable_factors(&self, tol: f32) -> Option<Vec<f32>> {
+        if self.krows != self.kcols {
+            return None;
+        }
+        let w = self.kcols;
+        // pivot on the largest diagonal element: k = f⊗f makes every
+        // diagonal k[j][j] = f[j]² ≥ 0, with at least one positive
+        // unless the kernel is all-zero
+        let j = (0..w).max_by(|&a, &b| {
+            self.taps[a * w + a].abs().partial_cmp(&self.taps[b * w + b].abs()).unwrap()
+        })?;
+        let pivot = self.taps[j * w + j];
+        if pivot <= 0.0 {
+            return None;
+        }
+        let root = pivot.sqrt();
+        let f: Vec<f32> = (0..w).map(|u| self.taps[u * w + j] / root).collect();
+        let scale = self.taps.iter().fold(1f32, |m, t| m.max(t.abs()));
+        for u in 0..w {
+            for v in 0..w {
+                if (self.taps[u * w + v] - f[u] * f[v]).abs() > tol * scale {
+                    return None;
+                }
+            }
+        }
+        Some(f)
+    }
+
+    /// Stable content digest (FNV-1a over extents and tap bits) — the
+    /// plan-cache / batching key component for explicit 2-D kernels.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u64| {
+            for byte in v.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        mix(self.krows as u64);
+        mix(self.kcols as u64);
+        for t in &self.taps {
+            mix(t.to_bits() as u64);
+        }
+        h
+    }
+}
+
 enum KernelSource {
     Spec(KernelSpec),
     Taps(Vec<f32>),
+    Taps2d(Kernel2d),
 }
 
 /// Validating builder for [`ConvPlan`] — see the module docs for the
@@ -145,6 +334,7 @@ pub struct PlanBuilder {
     variant: Variant,
     layout: Layout,
     kernel: KernelSource,
+    class: Option<KernelClass>,
     shape: Option<(usize, usize, usize)>,
     force_generic: bool,
     tile: Option<TileSpec>,
@@ -158,6 +348,7 @@ impl PlanBuilder {
             variant: Variant::Simd,
             layout: Layout::PerPlane,
             kernel: KernelSource::Spec(KernelSpec::default()),
+            class: None,
             shape: None,
             force_generic: false,
             tile: None,
@@ -189,6 +380,25 @@ impl PlanBuilder {
     /// Kernel by explicit separable taps (length = width, must be odd).
     pub fn kernel_taps(mut self, taps: Vec<f32>) -> Self {
         self.kernel = KernelSource::Taps(taps);
+        self
+    }
+
+    /// Kernel by explicit 2-D tap matrix (validated [`Kernel2d`]). With
+    /// no explicit class this selects [`KernelClass::Direct2d`]; the
+    /// `Separable` class additionally requires the matrix to pass the
+    /// rank-1 check ([`Kernel2d::separable_factors`]) and refuses
+    /// otherwise with [`ErrorKind::InvalidKernel`].
+    pub fn kernel2d(mut self, k: Kernel2d) -> Self {
+        self.kernel = KernelSource::Taps2d(k);
+        self
+    }
+
+    /// Pin the convolver class ([`KernelClass`]). Defaults to
+    /// `Separable` for 1-D kernel sources and `Direct2d` for explicit
+    /// 2-D matrices. `Fft` rejects tiling and fusion; `Direct2d` rejects
+    /// fusion; `Separable` rejects non-rank-1 taps — all at `build()`.
+    pub fn kernel_class(mut self, c: KernelClass) -> Self {
+        self.class = Some(c);
         self
     }
 
@@ -248,62 +458,142 @@ impl PlanBuilder {
             planes >= 1 && rows >= 1 && cols >= 1,
             "plan shape must be non-empty, got {planes}x{rows}x{cols}"
         );
-        let taps = match self.kernel {
-            KernelSource::Spec(spec) => spec.taps()?,
+        // resolve the kernel source into 1-D taps and/or a 2-D matrix
+        let (taps_1d, kernel2d) = match self.kernel {
+            KernelSource::Spec(spec) => (Some(spec.taps()?), None),
             KernelSource::Taps(taps) => {
-                ensure!(!taps.is_empty(), "kernel taps must be non-empty");
-                ensure!(taps.len() % 2 == 1, "kernel width must be odd, got {}", taps.len());
-                taps
+                if taps.is_empty() || taps.len() % 2 != 1 {
+                    return Err(Error::with_kind(
+                        ErrorKind::InvalidKernel,
+                        format!("kernel width must be odd, got {}", taps.len()),
+                    ));
+                }
+                (Some(taps), None)
             }
+            KernelSource::Taps2d(k) => (None, Some(k)),
         };
-        let width = taps.len();
-        if self.algorithm == Algorithm::TwoPass && self.variant == Variant::Naive {
-            bail!("the paper's naive rung is single-pass only (Opt-0)");
-        }
-        if self.fuse && self.algorithm != Algorithm::TwoPass {
-            bail!(
-                "fusion applies to the separable two-pass algorithm only, got {:?}",
-                self.algorithm
-            );
-        }
+        let class = self.class.unwrap_or(if kernel2d.is_some() {
+            KernelClass::Direct2d
+        } else {
+            KernelClass::Separable
+        });
         if let Some(tile) = self.tile {
             tile.validate()?;
         }
-        // tiled pipelines run the generic-width tile primitives, so the
-        // fast-path flag is only truthful for untiled plans
-        let fast_path = width == 5
-            && self.variant != Variant::Naive
-            && !self.force_generic
-            && self.tile.is_none();
-        let passes = match (self.algorithm, self.fuse) {
-            (Algorithm::TwoPass, true) => vec![PassKind::Fused],
-            (Algorithm::TwoPass, false) => vec![PassKind::Horiz, PassKind::Vert],
-            (Algorithm::SinglePassNoCopy, _) => vec![PassKind::SinglePass],
-            (Algorithm::SinglePassCopyBack, _) => {
-                vec![PassKind::SinglePass, PassKind::CopyBack]
+        if class == KernelClass::Separable {
+            // the paper's ladder — exactly the pre-class behaviour
+            let taps = match taps_1d {
+                Some(taps) => taps,
+                None => {
+                    let k = kernel2d.as_ref().expect("2-D source when no 1-D taps");
+                    k.separable_factors(1e-5).ok_or_else(|| {
+                        Error::with_kind(
+                            ErrorKind::InvalidKernel,
+                            format!(
+                                "{}x{} taps are not separable (rank-1 check failed); \
+                                 use kernel class direct2d or fft",
+                                k.krows(),
+                                k.kcols()
+                            ),
+                        )
+                    })?
+                }
+            };
+            let width = taps.len();
+            if self.algorithm == Algorithm::TwoPass && self.variant == Variant::Naive {
+                bail!("the paper's naive rung is single-pass only (Opt-0)");
             }
+            if self.fuse && self.algorithm != Algorithm::TwoPass {
+                bail!(
+                    "fusion applies to the separable two-pass algorithm only, got {:?}",
+                    self.algorithm
+                );
+            }
+            // tiled pipelines run the generic-width tile primitives, so the
+            // fast-path flag is only truthful for untiled plans
+            let fast_path = width == 5
+                && self.variant != Variant::Naive
+                && !self.force_generic
+                && self.tile.is_none();
+            let passes = match (self.algorithm, self.fuse) {
+                (Algorithm::TwoPass, true) => vec![PassKind::Fused],
+                (Algorithm::TwoPass, false) => vec![PassKind::Horiz, PassKind::Vert],
+                (Algorithm::SinglePassNoCopy, _) => vec![PassKind::SinglePass],
+                (Algorithm::SinglePassCopyBack, _) => {
+                    vec![PassKind::SinglePass, PassKind::CopyBack]
+                }
+            };
+            // only the direct single-pass engines read the 2-D kernel; the
+            // separable passes use the 1-D taps alone
+            let k2d = if passes.contains(&PassKind::SinglePass) {
+                gaussian_kernel2d(&taps)
+            } else {
+                Vec::new()
+            };
+            return Ok(ConvPlan {
+                algorithm: self.algorithm,
+                variant: self.variant,
+                layout: self.layout,
+                class,
+                planes,
+                rows,
+                cols,
+                taps,
+                k2d,
+                width,
+                krows: width,
+                kcols: width,
+                passes,
+                fast_path,
+                tile: self.tile,
+                fused: self.fuse,
+                fft: None,
+            });
+        }
+        // the direct-2D / FFT classes: arbitrary odd×odd tap matrices,
+        // one resolved pass, algorithm knob inert (there is no separable
+        // ladder to pick a rung from)
+        if self.fuse {
+            bail!("fusion applies to the separable class only, got {}", class.label());
+        }
+        let kernel = match kernel2d {
+            Some(k) => k,
+            None => Kernel2d::from_separable(&taps_1d.expect("1-D source when no 2-D matrix"))?,
         };
-        // only the direct single-pass engines read the 2-D kernel; the
-        // separable passes use the 1-D taps alone
-        let k2d = if passes.contains(&PassKind::SinglePass) {
-            gaussian_kernel2d(&taps)
-        } else {
-            Vec::new()
+        let (krows, kcols) = (kernel.krows(), kernel.kcols());
+        let (passes, fft) = match class {
+            KernelClass::Direct2d => (vec![PassKind::Direct2d], None),
+            KernelClass::Fft => {
+                if self.tile.is_some() {
+                    bail!("the fft class runs whole-plane transforms and cannot be tiled");
+                }
+                let cols_eff = match self.layout {
+                    Layout::PerPlane => cols,
+                    Layout::Agglomerated => planes * cols,
+                };
+                let plan = FftPlan::new(rows, cols_eff, kernel.taps(), krows, kcols);
+                (vec![PassKind::Fft], Some(plan))
+            }
+            KernelClass::Separable => unreachable!("handled above"),
         };
         Ok(ConvPlan {
             algorithm: self.algorithm,
             variant: self.variant,
             layout: self.layout,
+            class,
             planes,
             rows,
             cols,
-            taps,
-            k2d,
-            width,
+            taps: Vec::new(),
+            k2d: kernel.taps,
+            width: krows.max(kcols),
+            krows,
+            kcols,
             passes,
-            fast_path,
+            fast_path: false,
             tile: self.tile,
-            fused: self.fuse,
+            fused: false,
+            fft,
         })
     }
 }
@@ -314,16 +604,20 @@ pub struct ConvPlan {
     algorithm: Algorithm,
     variant: Variant,
     layout: Layout,
+    class: KernelClass,
     planes: usize,
     rows: usize,
     cols: usize,
     taps: Vec<f32>,
     k2d: Vec<f32>,
     width: usize,
+    krows: usize,
+    kcols: usize,
     passes: Vec<PassKind>,
     fast_path: bool,
     tile: Option<TileSpec>,
     fused: bool,
+    fft: Option<FftPlan>,
 }
 
 /// Estimated main-memory traffic of one plan execution — see
@@ -380,12 +674,26 @@ impl ConvPlan {
         (self.planes, self.rows, self.cols)
     }
 
-    /// Kernel width (odd).
+    /// Kernel width (odd). For rectangular direct-2D/FFT kernels this is
+    /// the larger extent; see [`ConvPlan::kernel_extent`].
     pub fn width(&self) -> usize {
         self.width
     }
 
-    /// Kernel halo (`width / 2`).
+    /// The convolver class the plan resolved to.
+    pub fn class(&self) -> KernelClass {
+        self.class
+    }
+
+    /// Kernel extents `(krows, kcols)` — equal to `(width, width)` for
+    /// separable plans.
+    pub fn kernel_extent(&self) -> (usize, usize) {
+        (self.krows, self.kcols)
+    }
+
+    /// Kernel halo: `max(krows, kcols) / 2` — the border-ring depth the
+    /// pass-through contract preserves (equals `width / 2` for
+    /// separable plans).
     pub fn halo(&self) -> usize {
         self.width / 2
     }
@@ -466,12 +774,58 @@ impl ConvPlan {
                 PassKind::Horiz | PassKind::Vert | PassKind::SinglePass | PassKind::Fused => {
                     (plane, interior)
                 }
+                PassKind::Direct2d => (plane, interior),
+                PassKind::Fft => {
+                    // the padded complex plane (two f64 halves) crosses
+                    // memory once per transform stage: forward,
+                    // pointwise spectrum multiply, inverse — kernel-size
+                    // independent, which is the whole crossover argument
+                    let (nr, nc) = self.fft.as_ref().map(FftPlan::padded).unwrap_or((rows, cols));
+                    let padded = nr * nc * std::mem::size_of::<f64>() * 2;
+                    (3 * padded, 3 * padded)
+                }
                 PassKind::CopyBack => (plane, plane),
             };
             read += r;
             written += w;
         }
         Traffic { read_bytes: planes_eff * read, write_bytes: planes_eff * written }
+    }
+
+    /// Human-readable one-stop description of what the plan resolved to:
+    /// class, engine rung, layout, kernel extent, pass pipeline, tiling
+    /// and fusion state, and the traffic estimate. The CLI's plan
+    /// provenance line and the crossover exhibit print this.
+    pub fn explain(&self) -> String {
+        let mut s = format!(
+            "class={} algorithm={:?} variant={:?} layout={:?} kernel={}x{} shape={}x{}x{}",
+            self.class.label(),
+            self.algorithm,
+            self.variant,
+            self.layout,
+            self.krows,
+            self.kcols,
+            self.planes,
+            self.rows,
+            self.cols,
+        );
+        let passes: Vec<String> = self.passes.iter().map(|p| format!("{p:?}")).collect();
+        s.push_str(&format!(" passes=[{}]", passes.join(",")));
+        if let Some(t) = self.tile {
+            s.push_str(&format!(" tile={}", t.label()));
+        }
+        if self.fused {
+            s.push_str(" fused");
+        }
+        if self.fast_path {
+            s.push_str(" fast-path");
+        }
+        if let Some(fft) = &self.fft {
+            let (nr, nc) = fft.padded();
+            s.push_str(&format!(" padded={nr}x{nc}"));
+        }
+        s.push_str(&format!(" traffic={:.2}MiB", self.traffic_estimate().total_mb()));
+        s
     }
 
     // -- whole-image execution -------------------------------------------
@@ -659,8 +1013,9 @@ impl ConvPlan {
 
     fn result_home(&self) -> ResultHome {
         // the fused pipeline is a single A→B pass, so like no-copy its
-        // result lives in B (whose border ring carries the pass-through)
-        if self.fused {
+        // result lives in B (whose border ring carries the pass-through);
+        // direct-2D and FFT plans are likewise single A→B passes
+        if self.fused || self.class != KernelClass::Separable {
             return ResultHome::B;
         }
         match self.algorithm {
@@ -1193,5 +1548,235 @@ mod tests {
         assert_eq!(KernelSpec::default(), KernelSpec::new(5, 1.0));
         assert_eq!(KernelSpec::new(5, 1.0).cache_key(), KernelSpec::default().cache_key());
         assert_ne!(KernelSpec::new(5, 2.0).cache_key(), KernelSpec::default().cache_key());
+    }
+
+    #[test]
+    fn kernel_refusals_carry_invalid_kernel_kind() {
+        use crate::util::error::ErrorKind;
+        // every structural kernel refusal is machine-matchable
+        assert_eq!(KernelSpec::new(4, 1.0).validate().unwrap_err().kind(), ErrorKind::InvalidKernel);
+        assert_eq!(KernelSpec::new(0, 1.0).validate().unwrap_err().kind(), ErrorKind::InvalidKernel);
+        assert_eq!(KernelSpec::new(5, 0.0).validate().unwrap_err().kind(), ErrorKind::InvalidKernel);
+        let e = KernelSpec::new(4, 1.0).validate().unwrap_err();
+        assert!(format!("{e:#}").contains("odd"), "message still names the rule: {e:#}");
+        // 2-D extents: even, zero, length mismatch, non-finite taps
+        for (taps, kr, kc) in [
+            (vec![0.0; 6], 2usize, 3usize),
+            (vec![0.0; 3], 3, 0),
+            (vec![0.0; 8], 3, 3),
+            (vec![f32::NAN; 9], 3, 3),
+        ] {
+            let e = Kernel2d::new(taps, kr, kc).unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::InvalidKernel, "{kr}x{kc}");
+        }
+        // builder entry points propagate the kind
+        let e = ConvPlan::builder().kernel_taps(vec![0.5; 4]).shape(1, 16, 16).build().unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::InvalidKernel);
+        let e = ConvPlan::builder()
+            .kernel(KernelSpec::new(6, 1.0))
+            .shape(1, 16, 16)
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::InvalidKernel);
+    }
+
+    #[test]
+    fn kernel_class_labels_parse_round_trip() {
+        for c in KernelClass::ALL {
+            assert_eq!(KernelClass::parse(c.label()).unwrap(), c);
+        }
+        assert_eq!(KernelClass::parse("direct").unwrap(), KernelClass::Direct2d);
+        let e = KernelClass::parse("wavelet").unwrap_err();
+        assert_eq!(e.kind(), crate::util::error::ErrorKind::InvalidKernel);
+        assert_eq!(KernelClass::default(), KernelClass::Separable);
+    }
+
+    #[test]
+    fn separability_check_accepts_rank_one_rejects_others() {
+        // a Gaussian outer product factors back into (±) its taps
+        let taps = gaussian_kernel(7, 1.3);
+        let k = Kernel2d::from_separable(&taps).unwrap();
+        let f = k.separable_factors(1e-5).expect("gaussian outer product is rank-1");
+        for (a, b) in f.iter().zip(&taps) {
+            assert!((a.abs() - b.abs()).abs() <= 1e-5, "{a} vs {b}");
+        }
+        // the discrete Laplacian is the canonical non-separable kernel
+        let lap = Kernel2d::new(vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0], 3, 3).unwrap();
+        assert!(lap.separable_factors(1e-4).is_none());
+        // rectangular matrices are never separable for this pipeline
+        let rect = Kernel2d::new(vec![1.0; 15], 3, 5).unwrap();
+        assert!(rect.separable_factors(1e-4).is_none());
+        // digest distinguishes contents and extents
+        assert_ne!(lap.digest(), rect.digest());
+        assert_eq!(lap.digest(), lap.clone().digest());
+    }
+
+    #[test]
+    fn class_builder_contract() {
+        let lap = Kernel2d::new(vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0], 3, 3).unwrap();
+        // explicit 2-D taps default to the direct-2D class
+        let p = ConvPlan::builder().kernel2d(lap.clone()).shape(1, 24, 24).build().unwrap();
+        assert_eq!(p.class(), KernelClass::Direct2d);
+        assert_eq!(p.kernel_extent(), (3, 3));
+        assert_eq!(p.passes(), &[PassKind::Direct2d]);
+        assert!(!p.is_fast_path());
+        // separable class refuses non-rank-1 taps with the structured kind
+        let e = ConvPlan::builder()
+            .kernel2d(lap.clone())
+            .kernel_class(KernelClass::Separable)
+            .shape(1, 24, 24)
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), crate::util::error::ErrorKind::InvalidKernel);
+        // ...but accepts a rank-1 matrix and runs the ordinary ladder
+        let g = KernelSpec::new(5, 1.0).taps2d().unwrap();
+        let p = ConvPlan::builder()
+            .kernel2d(g)
+            .kernel_class(KernelClass::Separable)
+            .shape(1, 24, 24)
+            .build()
+            .unwrap();
+        assert_eq!(p.class(), KernelClass::Separable);
+        assert_eq!(p.passes(), &[PassKind::Horiz, PassKind::Vert]);
+        // fft rejects tiling; non-separable classes reject fusion
+        assert!(ConvPlan::builder()
+            .kernel_class(KernelClass::Fft)
+            .tile(TileSpec::new(8, 8))
+            .shape(1, 24, 24)
+            .build()
+            .is_err());
+        for class in [KernelClass::Direct2d, KernelClass::Fft] {
+            assert!(
+                ConvPlan::builder().kernel_class(class).fuse(true).shape(1, 24, 24).build().is_err(),
+                "{class:?} must reject fusion"
+            );
+        }
+        // direct2d composes with tiling
+        let p = ConvPlan::builder()
+            .kernel_class(KernelClass::Direct2d)
+            .tile(TileSpec::new(8, 8))
+            .shape(1, 24, 24)
+            .build()
+            .unwrap();
+        assert_eq!(p.tile(), Some(TileSpec::new(8, 8)));
+        // a Gaussian spec under fft resolves the transform pass
+        let p = ConvPlan::builder()
+            .kernel(KernelSpec::new(9, 2.0))
+            .kernel_class(KernelClass::Fft)
+            .shape(1, 32, 32)
+            .build()
+            .unwrap();
+        assert_eq!(p.passes(), &[PassKind::Fft]);
+        assert!(p.explain().contains("class=fft"), "{}", p.explain());
+        assert!(p.explain().contains("padded="), "{}", p.explain());
+    }
+
+    #[test]
+    fn direct2d_plan_matches_separable_ladder() {
+        let image = img(3, 30, 26);
+        let model = OpenMpModel::new(4);
+        let mut arena = ScratchArena::new();
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            let sep = ConvPlan::builder()
+                .kernel(KernelSpec::new(7, 1.2))
+                .layout(layout)
+                .shape(3, 30, 26)
+                .build()
+                .unwrap();
+            let d2 = ConvPlan::builder()
+                .kernel(KernelSpec::new(7, 1.2))
+                .kernel_class(KernelClass::Direct2d)
+                .layout(layout)
+                .shape(3, 30, 26)
+                .build()
+                .unwrap();
+            let want = sep.execute(&image, &mut arena).unwrap();
+            let seq = d2.execute(&image, &mut arena).unwrap();
+            let par = d2.execute_on(&model, &image, &mut arena).unwrap();
+            assert!(seq.max_abs_diff(&want) <= 1e-6, "{layout:?} seq");
+            assert!(par.max_abs_diff(&want) <= 1e-6, "{layout:?} par");
+        }
+    }
+
+    #[test]
+    fn fft_plan_matches_direct_within_tolerance() {
+        let image = img(3, 30, 26);
+        let mut arena = ScratchArena::new();
+        let lap = Kernel2d::new(vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0], 3, 3).unwrap();
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            let d2 = ConvPlan::builder()
+                .kernel2d(lap.clone())
+                .layout(layout)
+                .shape(3, 30, 26)
+                .build()
+                .unwrap();
+            let fft = ConvPlan::builder()
+                .kernel2d(lap.clone())
+                .kernel_class(KernelClass::Fft)
+                .layout(layout)
+                .shape(3, 30, 26)
+                .build()
+                .unwrap();
+            let want = d2.execute(&image, &mut arena).unwrap();
+            let got = fft.execute(&image, &mut arena).unwrap();
+            assert!(got.max_abs_diff(&want) <= 1e-4, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn fft_arena_stops_allocating_after_warmup() {
+        let image = img(3, 32, 28);
+        let plan = ConvPlan::builder()
+            .kernel(KernelSpec::new(9, 2.0))
+            .kernel_class(KernelClass::Fft)
+            .shape(3, 32, 28)
+            .build()
+            .unwrap();
+        let mut arena = ScratchArena::new();
+        plan.execute(&image, &mut arena).unwrap();
+        let warm = arena.allocations();
+        for _ in 0..10 {
+            plan.execute(&image, &mut arena).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm, "fft f64 leases must recycle");
+    }
+
+    #[test]
+    fn nonseparable_degenerate_shapes_pass_through() {
+        let mut arena = ScratchArena::new();
+        let lap = Kernel2d::new(vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0], 3, 3).unwrap();
+        for (rows, cols) in [(1usize, 1usize), (3, 1), (1, 3), (2, 16)] {
+            let image = synth_image(2, rows, cols, Pattern::Noise, 9);
+            for class in [KernelClass::Direct2d, KernelClass::Fft] {
+                let plan = ConvPlan::builder()
+                    .kernel2d(lap.clone())
+                    .kernel_class(class)
+                    .shape(2, rows, cols)
+                    .build()
+                    .unwrap();
+                let out = plan.execute(&image, &mut arena).unwrap();
+                assert_eq!(out, image, "{rows}x{cols} {class:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_estimate_covers_new_classes() {
+        let d2 = ConvPlan::builder()
+            .kernel(KernelSpec::new(9, 2.0))
+            .kernel_class(KernelClass::Direct2d)
+            .shape(1, 256, 256)
+            .build()
+            .unwrap();
+        let fft = ConvPlan::builder()
+            .kernel(KernelSpec::new(9, 2.0))
+            .kernel_class(KernelClass::Fft)
+            .shape(1, 256, 256)
+            .build()
+            .unwrap();
+        assert!(d2.traffic_estimate().total_bytes() > 0);
+        // the padded complex f64 planes make the transform route move
+        // strictly more bytes than one direct pass at this shape
+        assert!(fft.traffic_estimate().total_bytes() > d2.traffic_estimate().total_bytes());
     }
 }

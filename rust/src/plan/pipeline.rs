@@ -9,7 +9,7 @@
 //! row-band parallel sweep formerly private to `models::convolve`).
 
 use crate::conv::Variant;
-use crate::conv::{band, tile};
+use crate::conv::{band, direct2d, tile};
 use crate::models::pool::{RowBands, TileCells};
 use crate::models::{ExecutionModel, Tile, TileGrid, TileSpec};
 
@@ -31,6 +31,13 @@ pub enum PassKind {
     SinglePass,
     /// copy B back over A (the paper's copy-back epilogue)
     CopyBack,
+    /// direct 2-D accumulation of an arbitrary odd×odd tap matrix
+    /// (`KernelClass::Direct2d` — [`crate::conv::direct2d`])
+    Direct2d,
+    /// radix-2 transform convolution (`KernelClass::Fft` —
+    /// [`crate::conv::fft`]); runs whole-plane, outside the banded
+    /// dispatch
+    Fft,
 }
 
 /// Where the pipeline's result lands (the paper's A/B buffer discipline).
@@ -167,6 +174,30 @@ impl ConvPlan {
         cols: usize,
         arena: Option<&mut ScratchArena>,
     ) {
+        if let Some(fft) = &self.fft {
+            // the transform route runs whole-plane (its parallelism unit
+            // is the transform itself, not a row band), so `exec` is
+            // deliberately unused here; scratch is the two f64 planes,
+            // leased from the arena's f64 pool on the serving path and
+            // allocated fresh on the arena-less expert path
+            let _ = exec;
+            let len = fft.scratch_len();
+            match arena {
+                Some(arena) => {
+                    let mut re = arena.take_f64(len);
+                    let mut im = arena.take_f64(len);
+                    fft.convolve_into(a, b, &mut re, &mut im);
+                    arena.put_f64(re);
+                    arena.put_f64(im);
+                }
+                None => {
+                    let mut re = vec![0f64; len];
+                    let mut im = vec![0f64; len];
+                    fft.convolve_into(a, b, &mut re, &mut im);
+                }
+            }
+            return;
+        }
         if self.fused {
             let slots = match exec {
                 Exec::Seq => 1,
@@ -266,8 +297,21 @@ impl ConvPlan {
             return;
         }
         let w = self.width;
+        let (kr, kc) = (self.krows, self.kcols);
         match kind {
             PassKind::Fused => unreachable!("fused plans run through run_pass_fused"),
+            PassKind::Fft => unreachable!("fft plans run through the transform path"),
+            PassKind::Direct2d => match self.variant {
+                Variant::Naive => run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                    direct2d::direct2d_band_naive(s, d, rows, cols, &self.k2d, kr, kc, r0, r1)
+                }),
+                Variant::Scalar => run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                    direct2d::direct2d_band_scalar(s, d, rows, cols, &self.k2d, kr, kc, r0, r1)
+                }),
+                Variant::Simd => run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
+                    direct2d::direct2d_band_simd(s, d, rows, cols, &self.k2d, kr, kc, r0, r1)
+                }),
+            },
             PassKind::SinglePass => match (self.variant, self.fast_path) {
                 (Variant::Naive, _) => {
                     run_banded(exec, rows, cols, src, dst, &|s, d, r0, r1| {
@@ -377,9 +421,22 @@ impl ConvPlan {
         spec: TileSpec,
     ) {
         let w = self.width;
+        let (kr, kc) = (self.krows, self.kcols);
         let cells = TileCells::new(dst, rows, cols);
         match kind {
             PassKind::Fused => unreachable!("fused plans run through run_pass_fused"),
+            PassKind::Fft => unreachable!("fft plans are untiled (rejected at build)"),
+            PassKind::Direct2d => match self.variant {
+                Variant::Naive => run_tiled(exec, rows, cols, spec, &|t| {
+                    direct2d::direct2d_tile_naive(src, &cells, rows, cols, &self.k2d, kr, kc, t)
+                }),
+                Variant::Scalar => run_tiled(exec, rows, cols, spec, &|t| {
+                    direct2d::direct2d_tile_scalar(src, &cells, rows, cols, &self.k2d, kr, kc, t)
+                }),
+                Variant::Simd => run_tiled(exec, rows, cols, spec, &|t| {
+                    direct2d::direct2d_tile_simd(src, &cells, rows, cols, &self.k2d, kr, kc, t)
+                }),
+            },
             PassKind::SinglePass => match self.variant {
                 Variant::Naive => run_tiled(exec, rows, cols, spec, &|t| {
                     tile::singlepass_tile_naive(src, &cells, rows, cols, &self.k2d, w, t)

@@ -47,6 +47,12 @@ pub enum ErrorKind {
     DeadlineExceeded,
     /// The service is shutting down (or already shut down).
     Shutdown,
+    /// A kernel specification was structurally invalid: even or zero
+    /// extents, a tap count that disagrees with them, or non-finite
+    /// taps. Every kernel entry point (CLI config validation,
+    /// coordinator intake, graph stage validation, plan building)
+    /// refuses with this kind so callers can dispatch on it.
+    InvalidKernel,
 }
 
 /// An error: a non-empty chain of context frames, outermost first.

@@ -43,6 +43,7 @@ fn synthetic_samples(model: &str, workers: usize) -> Vec<Sample> {
                     let pixels = (3 * size * size) as f64;
                     out.push(Sample {
                         model: model.to_string(),
+                        class: "separable".to_string(),
                         planes: 3,
                         rows: size,
                         cols: size,
@@ -218,6 +219,11 @@ fn real_sweep_samples_train_a_model_end_to_end() {
         assert_eq!((s.reps, s.warmup), (cfg.reps, cfg.warmup), "samples carry their protocol");
         assert!(s.workers >= 1 && s.units >= 1 && s.ms >= 0.0);
         assert_eq!(s.units, dispatch_units(s.rows, s.cols, s.tile, s.workers));
+    }
+    // the sweep measures every kernel class, so the fitted model can
+    // place the direct-vs-fft crossover
+    for class in ["separable", "direct2d", "fft"] {
+        assert!(samples.iter().any(|s| s.class == class), "class {class} sampled");
     }
     let cm = CostModel::fit(samples, cfg.r2_min);
     assert_eq!(

@@ -1,0 +1,174 @@
+//! Integration: cross-class differentials through the public plan API.
+//!
+//! The kernel-class planner adds two execution paths next to the
+//! separable two-pass engines — banded direct 2-D and the radix-2 FFT
+//! convolver — and the repo's rule is that every new path is
+//! differential-tested against an existing one. Here:
+//!
+//! * FFT ≡ direct 2-D within 1e-4 for random non-separable kernels,
+//!   across layouts and all three execution models;
+//! * direct 2-D on a separable (Gaussian) kernel ≡ the separable
+//!   two-pass engines within 1e-6, tiled and untiled;
+//! * the FFT scratch leases reach allocation steady state (the arena
+//!   no-growth invariant extends to the new f64 lease types).
+
+use phi_conv::image::{synth_image, Pattern};
+use phi_conv::models::{ExecutionModel, GprmModel, Layout, OpenClModel, OpenMpModel, TileSpec};
+use phi_conv::plan::{ConvPlan, Kernel2d, KernelClass, KernelSpec, ScratchArena};
+use phi_conv::util::prng::Prng;
+
+fn models() -> Vec<Box<dyn ExecutionModel>> {
+    vec![
+        Box::new(OpenMpModel::new(3)),
+        Box::new(OpenClModel::new(2, 4)),
+        Box::new(GprmModel::new(3, 12)),
+    ]
+}
+
+/// A random kernel normalised to Σ|t| = 1 (keeps outputs O(input), so
+/// absolute tolerances stay meaningful). Random taps are effectively
+/// never rank-1, so these exercise the genuinely non-separable path.
+fn random_kernel2d(rng: &mut Prng, krows: usize, kcols: usize) -> Kernel2d {
+    let mut taps: Vec<f32> = (0..krows * kcols).map(|_| rng.f32() - 0.5).collect();
+    let norm: f32 = taps.iter().map(|v| v.abs()).sum::<f32>().max(1e-6);
+    for v in &mut taps {
+        *v /= norm;
+    }
+    Kernel2d::new(taps, krows, kcols).unwrap()
+}
+
+#[test]
+fn fft_matches_direct2d_for_random_kernels_across_models_and_layouts() {
+    let mut rng = Prng::new(0xFF7_C0DE);
+    let odd = [3usize, 5, 7];
+    for case in 0..8 {
+        let krows = *rng.pick(&odd);
+        let kcols = *rng.pick(&odd);
+        let k = random_kernel2d(&mut rng, krows, kcols);
+        let planes = rng.range(1, 3);
+        let rows = rng.range(24, 40);
+        let cols = rng.range(24, 40);
+        let img = synth_image(planes, rows, cols, Pattern::Noise, 0xA11 + case as u64);
+        let mut arena = ScratchArena::new();
+
+        for layout in [Layout::PerPlane, Layout::Agglomerated] {
+            // the reference is per layout: agglomerated planes sit side
+            // by side and legitimately read across plane seams, so its
+            // pixels differ from PerPlane near seam columns
+            let direct = ConvPlan::builder()
+                .layout(layout)
+                .kernel2d(k.clone())
+                .kernel_class(KernelClass::Direct2d)
+                .shape(planes, rows, cols)
+                .build()
+                .unwrap();
+            let base = direct.execute(&img, &mut arena).unwrap();
+
+            for model in models() {
+                for tile in [None, Some(TileSpec::new(8, usize::MAX))] {
+                    let plan = ConvPlan::builder()
+                        .layout(layout)
+                        .kernel2d(k.clone())
+                        .kernel_class(KernelClass::Direct2d)
+                        .tile_opt(tile)
+                        .shape(planes, rows, cols)
+                        .build()
+                        .unwrap();
+                    let got = plan.execute_on(model.as_ref(), &img, &mut arena).unwrap();
+                    let d = got.max_abs_diff(&base);
+                    assert!(
+                        d < 1e-5,
+                        "case {case}: direct2d {} {layout:?} tiled={} diverged by {d:e} \
+                         ({krows}x{kcols} kernel, {planes}x{rows}x{cols})",
+                        model.name(),
+                        tile.is_some()
+                    );
+                }
+                let fft = ConvPlan::builder()
+                    .layout(layout)
+                    .kernel2d(k.clone())
+                    .kernel_class(KernelClass::Fft)
+                    .shape(planes, rows, cols)
+                    .build()
+                    .unwrap();
+                let got = fft.execute_on(model.as_ref(), &img, &mut arena).unwrap();
+                let d = got.max_abs_diff(&base);
+                assert!(
+                    d < 1e-4,
+                    "case {case}: fft {} {layout:?} diverged by {d:e} from direct2d \
+                     ({krows}x{kcols} kernel, {planes}x{rows}x{cols})",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn direct2d_on_separable_kernels_matches_the_two_pass_engines() {
+    let mut rng = Prng::new(0x5E9A_12B1);
+    for case in 0..8 {
+        let width = *rng.pick(&[3usize, 5, 9]);
+        let planes = rng.range(1, 3);
+        let rows = rng.range(20, 40);
+        let cols = rng.range(20, 40);
+        let spec = KernelSpec::new(width, (width as f64 / 5.0).max(0.5));
+        let img = synth_image(planes, rows, cols, Pattern::Gradient, 7 + case as u64);
+        let mut arena = ScratchArena::new();
+
+        let sep = ConvPlan::builder()
+            .kernel(spec)
+            .shape(planes, rows, cols)
+            .build()
+            .unwrap();
+        assert_eq!(sep.class(), KernelClass::Separable, "Gaussian specs stay separable");
+        let want = sep.execute(&img, &mut arena).unwrap();
+
+        for model in models() {
+            for tile in [None, Some(TileSpec::new(8, usize::MAX))] {
+                let direct = ConvPlan::builder()
+                    .kernel(spec)
+                    .kernel_class(KernelClass::Direct2d)
+                    .tile_opt(tile)
+                    .shape(planes, rows, cols)
+                    .build()
+                    .unwrap();
+                assert_eq!(direct.class(), KernelClass::Direct2d);
+                let got = direct.execute_on(model.as_ref(), &img, &mut arena).unwrap();
+                let d = got.max_abs_diff(&want);
+                assert!(
+                    d < 1e-6,
+                    "case {case}: direct2d({}) tiled={} vs two-pass diff {d:e} \
+                     (w{width}, {planes}x{rows}x{cols})",
+                    model.name(),
+                    tile.is_some()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fft_scratch_reaches_allocation_steady_state() {
+    let img = synth_image(2, 40, 36, Pattern::Noise, 99);
+    let mut arena = ScratchArena::new();
+    let plan = ConvPlan::builder()
+        .kernel(KernelSpec::new(9, 1.8))
+        .kernel_class(KernelClass::Fft)
+        .shape(2, 40, 36)
+        .build()
+        .unwrap();
+    let warm = plan.execute(&img, &mut arena).unwrap();
+    let allocs = arena.allocations();
+    assert!(allocs > 0, "the FFT path leases scratch through the arena");
+    for _ in 0..10 {
+        let again = plan.execute(&img, &mut arena).unwrap();
+        assert_eq!(again.data.len(), warm.data.len());
+    }
+    assert_eq!(
+        arena.allocations(),
+        allocs,
+        "steady-state FFT execution must recycle every lease, not allocate"
+    );
+    assert!(arena.pooled() > 0, "leases return to the pool between runs");
+}

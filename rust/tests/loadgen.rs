@@ -28,6 +28,8 @@ fn fast_mix() -> MixConfig {
         min_size: 24,
         max_size: 48,
         widths: vec![3, 5],
+        // default tail widths reach 25, which doesn't fit min_size 24
+        tail_widths: vec![11, 17],
         deadline_ms: 60_000,
         requests_per_scale: 24,
         rate_per_s: 2000.0,
@@ -106,10 +108,10 @@ fn quoted_percentiles_are_finite_ordered_and_in_range() {
 
 #[test]
 fn hot_shape_skew_coalesces_into_batches() {
-    // sharp skew, one kernel width, no graphs: ~89% of requests share
-    // one PlanKey. Open loop at a rate far beyond one executor's
-    // service rate piles them up in the queue, so the executor must
-    // coalesce same-key neighbours when it comes free.
+    // sharp skew, one kernel width, no graphs, no tail draws or class
+    // pins: ~89% of requests share one PlanKey. Open loop at a rate far
+    // beyond one executor's service rate piles them up in the queue, so
+    // the executor must coalesce same-key neighbours when it comes free.
     let mix = MixConfig {
         shape_count: 2,
         zipf_s: 3.0,
@@ -117,6 +119,8 @@ fn hot_shape_skew_coalesces_into_batches() {
         max_size: 64,
         widths: vec![5],
         graph_fraction: 0.0,
+        tail_fraction: 0.0,
+        direct2d_fraction: 0.0,
         deadline_ms: 0,
         requests_per_scale: 128,
         rate_per_s: 1e6,

@@ -610,18 +610,23 @@ fn prop_random_chains_match_staged_reference() {
 
 /// Random mix knobs: every generated schedule stays inside the model it
 /// claims to draw from — shapes within bounds, widths odd and from the
-/// mix's set, graph chains that pass GraphBuilder validation *and*
-/// build into executable plans, nondecreasing arrivals, Zipf weights
-/// forming a distribution, and a hot-shape empirical frequency that
-/// tracks the nominal weight.
+/// mix's set (main or tail), class pins only on single-stage requests,
+/// graph chains that pass GraphBuilder validation *and* build into
+/// executable plans, nondecreasing arrivals, Zipf weights forming a
+/// distribution, and a hot-shape empirical frequency that tracks the
+/// nominal weight.
 #[test]
 fn prop_loadgen_mix_is_a_valid_probability_model() {
     use phi_conv::coordinator::GraphSpec;
     use phi_conv::loadgen::{MixConfig, RequestPlan};
+    use phi_conv::plan::KernelClass;
 
     let mut rng = Prng::new(0x10AD);
     for case in 0..25 {
         let min_size = rng.range(24, 48);
+        // tail widths must stay odd and below the smallest shape edge
+        let tail_widths: Vec<usize> =
+            [11usize, 17, 25].iter().copied().filter(|&w| w < min_size).collect();
         let mix = MixConfig {
             seed: rng.below(1 << 31) as u64,
             shape_count: rng.range(2, 6),
@@ -629,6 +634,9 @@ fn prop_loadgen_mix_is_a_valid_probability_model() {
             max_size: min_size + rng.range(16, 64),
             zipf_s: rng.range(5, 25) as f64 / 10.0,
             graph_fraction: rng.range(0, 4) as f64 / 10.0,
+            tail_widths,
+            tail_fraction: rng.range(0, 3) as f64 / 10.0,
+            direct2d_fraction: rng.range(0, 4) as f64 / 10.0,
             requests_per_scale: 64,
             ..MixConfig::default()
         };
@@ -658,7 +666,17 @@ fn prop_loadgen_mix_is_a_valid_probability_model() {
         for r in &plan.requests {
             assert!(r.shape < plan.shapes.len(), "case {case}: shape index in bounds");
             let w = r.kernel.width;
-            assert!(w % 2 == 1 && mix.widths.contains(&w), "case {case}: width {w}");
+            assert!(
+                w % 2 == 1 && (mix.widths.contains(&w) || mix.tail_widths.contains(&w)),
+                "case {case}: width {w}"
+            );
+            match r.kernel_class {
+                None => {}
+                Some(KernelClass::Direct2d) => {
+                    assert!(r.graph.is_none(), "case {case}: class pins never ride graph requests")
+                }
+                Some(c) => panic!("case {case}: the mix only pins Direct2d, got {c:?}"),
+            }
             if let Some(stages) = &r.graph {
                 assert!(
                     (2..=3).contains(&stages.len()),

@@ -49,16 +49,29 @@ echo "== cargo test -q --test loadgen_suite (load harness end to end)"
 # harness regression is named in the output
 cargo test -q --test loadgen_suite
 
+echo "== cargo test -q --test crossover_suite (cross-class differentials)"
+# tier-1 by policy: the direct-2D and FFT convolvers are whole new
+# execution paths — a divergence from the separable engines corrupts
+# pixels silently; re-run standalone so a class regression is named
+cargo test -q --test crossover_suite
+
 echo "== phi-conv load --scale 1 (traffic mix smoke, tiny plan, no artifact)"
 # end-to-end CLI smoke: generate a deterministic mix, drive the real
-# coordinator in both loop modes, print the SLO table; --out "" skips
+# coordinator in both loop modes, print the SLO table; --out none skips
 # the artifact write (CI's bench smoke owns BENCH_load.json)
-cargo run --release --bin phi-conv -- load --scale 1 --per-scale 12 --rate 2000 --out ""
+cargo run --release --bin phi-conv -- load --scale 1 --per-scale 12 --rate 2000 --out none
 
 echo "== phi-conv graph --check (2-stage streamed vs materialized, bitwise)"
 # end-to-end CLI smoke on a tiny image: generic widths share every
 # accumulation expression, so --check demands bitwise equality
 cargo run --release --bin phi-conv -- graph --stages blur:3,blur:7 --sizes 48 --reps 2 --check
+
+echo "== phi-conv crossover --check (direct2d vs fft vs two-pass differentials)"
+# end-to-end CLI smoke on a tiny image: every swept width is
+# differential-checked (fft vs direct <= 1e-4, direct vs separable
+# two-pass <= 1e-6) before timing; --out none skips the artifact write
+# (CI's bench smoke owns BENCH_crossover.json)
+cargo run --release --bin phi-conv -- crossover --check --sizes 64 --reps 1 --out none
 
 echo "== cargo build --benches"
 cargo build --benches
